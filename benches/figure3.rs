@@ -1,0 +1,39 @@
+//! Regenerates paper Figure 3: total runtime (cost-model units) vs batch
+//! size for vanilla, ApproxDP+TC, ApproxDP+MC and Chen's algorithm, on
+//! each zoo network, under the paper's 11.4 GB device memory.
+//!
+//! Also prints the §5.2 headline claims: max-batch expansion and the
+//! ResNet152 @2×-max-vanilla-batch ours-vs-Chen runtime ratio.
+//!
+//! ```sh
+//! cargo bench --bench figure3
+//! ```
+
+use recompute::bench::tables::{self, DEVICE_BYTES};
+
+fn main() {
+    for e in tables::zoo() {
+        let batches = tables::default_batches(e);
+        println!("{}", tables::render_figure3(e, &batches, DEVICE_BYTES));
+        let series = tables::figure3_network(e, &batches, DEVICE_BYTES);
+        let max_feasible = |idx: usize| {
+            series[idx].points.iter().filter(|p| p.feasible).map(|p| p.batch).max().unwrap_or(0)
+        };
+        let (v, tc) = (max_feasible(0), max_feasible(1));
+        println!("  max batch: vanilla {v} → ours {tc}\n");
+
+        // §5.2: ResNet152 at 2× max vanilla batch — ours vs Chen runtime.
+        if e.name == "ResNet152" && v > 0 {
+            let target = 2 * v;
+            let ours = series[1].points.iter().find(|p| p.batch >= target && p.feasible);
+            let chen = series[3].points.iter().find(|p| p.batch >= target && p.feasible);
+            if let (Some(o), Some(c)) = (ours, chen) {
+                println!(
+                    "  §5.2 check — ResNet152 @ batch {}: ours/chen runtime = {:.2} (paper: ours 1.16× faster)\n",
+                    o.batch,
+                    c.runtime_units as f64 / o.runtime_units as f64
+                );
+            }
+        }
+    }
+}

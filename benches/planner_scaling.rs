@@ -1,0 +1,43 @@
+//! §5.1 planner-runtime reproduction: ExactDP vs ApproxDP wall-clock on
+//! the zoo (paper: ExactDP >80 s on GoogLeNet/PSPNet, ApproxDP <1 s on
+//! everything), plus DP-cost scaling on synthetic chains.
+//!
+//! ```sh
+//! cargo bench --bench planner_scaling
+//! ```
+
+use recompute::bench::{bench, time_once};
+use recompute::graph::{GraphBuilder, NodeId, OpKind};
+use recompute::models::zoo;
+use recompute::planner::{build_context, Family, Objective};
+
+fn main() {
+    println!("== §5.1: ExactDP vs ApproxDP wall-clock on the zoo ==\n");
+    println!("{}", recompute::bench::tables::planner_timing(zoo::TABLE1));
+
+    println!("== ApproxDP scaling on synthetic chains (O(T(V)·#V²)) ==");
+    for n in [64u32, 128, 256, 512, 1024] {
+        let mut b = GraphBuilder::new(format!("chain{n}"), 1);
+        let mut prev: Option<NodeId> = None;
+        for i in 0..n {
+            let inputs: Vec<NodeId> = prev.into_iter().collect();
+            prev = Some(b.add_raw(format!("n{i}"), OpKind::Conv, 1000 + (i as u64 % 7), 10, &inputs));
+        }
+        let g = b.build();
+        let stats = bench(&format!("approx_dp_chain_{n}"), 1, 5, || {
+            let ctx = build_context(&g, Family::Approx);
+            let b = ctx.min_feasible_budget();
+            ctx.solve(b, Objective::MinOverhead)
+        });
+        println!("{}", stats.summary());
+    }
+
+    println!("\n== one-pass minimax B* vs binary search (perf §opt) ==");
+    let g = zoo::resnet50(8, 224);
+    let ctx = build_context(&g, Family::Approx);
+    let (b1, d1) = time_once(|| ctx.min_feasible_budget());
+    let (b2, d2) = time_once(|| ctx.min_feasible_budget_by_search());
+    assert_eq!(b1, b2);
+    println!("minimax-DP: {d1:.2?}   binary-search: {d2:.2?}   speedup {:.1}×",
+        d2.as_secs_f64() / d1.as_secs_f64());
+}

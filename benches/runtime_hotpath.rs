@@ -1,0 +1,82 @@
+//! Micro-benchmarks of the hot paths: bitset algebra, boundary/frontier
+//! computation, DP solve, trace generation + liveness measurement, and —
+//! when artifacts are present — the real PJRT training step.
+//!
+//! ```sh
+//! cargo bench --bench runtime_hotpath
+//! ```
+
+use std::path::PathBuf;
+
+use recompute::bench::bench;
+use recompute::exec::{ChainSchedule, TowerTrainer, TrainConfig};
+use recompute::models::{mlp_tower, zoo};
+use recompute::planner::{build_context, Family, Objective};
+use recompute::sim::{canonical_trace, measure, SimOptions};
+
+fn main() {
+    let g = zoo::resnet50(32, 224);
+    let full = recompute::graph::NodeSet::full(g.len());
+    let half = {
+        let mut s = recompute::graph::NodeSet::empty(g.len());
+        for &v in g.topo_order().iter().take(g.len() as usize / 2) {
+            s.insert(v);
+        }
+        s
+    };
+
+    println!("{}", bench("nodeset_union_500", 10, 50, || {
+        let mut acc = recompute::graph::NodeSet::empty(g.len());
+        for _ in 0..500 {
+            acc.union_with(&half);
+            acc.intersect_with(&full);
+        }
+        acc
+    }).summary());
+
+    println!("{}", bench("graph_boundary_resnet50", 10, 50, || g.boundary(&half)).summary());
+    println!("{}", bench("graph_frontier_resnet50", 10, 50, || g.frontier(&half)).summary());
+
+    println!("{}", bench("approx_ctx_build_resnet50", 2, 10, || {
+        build_context(&g, Family::Approx).family_len()
+    }).summary());
+
+    let ctx = build_context(&g, Family::Approx);
+    let b_star = ctx.min_feasible_budget();
+    println!("{}", bench("approx_solve_resnet50", 2, 10, || {
+        ctx.solve(b_star, Objective::MinOverhead)
+    }).summary());
+    println!("{}", bench("minimax_budget_resnet50", 2, 10, || ctx.min_feasible_budget()).summary());
+
+    let plan = ctx.solve(b_star, Objective::MinOverhead).unwrap();
+    println!("{}", bench("trace_gen_resnet50", 2, 10, || canonical_trace(&g, &plan.chain)).summary());
+    let tr = canonical_trace(&g, &plan.chain);
+    println!("{}", bench("liveness_measure_resnet50", 2, 10, || {
+        measure(&g, &tr, SimOptions::default())
+    }).summary());
+
+    // Real executor step (needs artifacts).
+    let dir = PathBuf::from("artifacts");
+    if dir.join("manifest.json").exists() {
+        let cfg = TrainConfig { layers: 12, steps: 1, lr: 0.05, seed: 1, log_every: 0 };
+        if let Ok(mut t) = TowerTrainer::new(&dir, &cfg) {
+            let tower = mlp_tower(12, t.width() as u32, t.batch() as u64);
+            let tctx = build_context(&tower, Family::Exact);
+            let sol = tctx.solve(tctx.min_feasible_budget(), Objective::MinOverhead).unwrap();
+            let sched = ChainSchedule::from_chain(&tower, &sol.chain).unwrap();
+            let vsched = ChainSchedule::vanilla(13);
+            let mut task = recompute::exec::SyntheticTask::new(t.batch(), t.width(), 3);
+            let (xv, yv) = task.next_batch();
+            let x = recompute::runtime::literal_f32(&xv, &[t.batch(), t.width()]).unwrap();
+            let y = recompute::runtime::literal_f32(&yv, &[t.batch(), t.width()]).unwrap();
+            println!("{}", bench("executor_step_vanilla_12L", 2, 10, || {
+                t.step(&vsched, &x, &y, 0.0).unwrap()
+            }).summary());
+            println!("{}", bench("executor_step_recompute_12L", 2, 10, || {
+                t.step(&sched, &x, &y, 0.0).unwrap()
+            }).summary());
+        }
+    } else {
+        println!("(artifacts/ missing — skipping executor step benches; run `make artifacts`)");
+    }
+}

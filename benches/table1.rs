@@ -1,0 +1,23 @@
+//! Regenerates paper Table 1: peak memory (liveness analysis ON) for
+//! {ApproxDP, ExactDP} × {MC, TC}, Chen's algorithm, and vanilla across
+//! the seven-network zoo at the paper's batch sizes.
+//!
+//! ```sh
+//! cargo bench --bench table1
+//! ```
+
+use recompute::bench::tables;
+
+fn main() {
+    println!("== Paper Table 1 — peak memory WITH liveness analysis ==\n");
+    let (rendered, rows) = tables::render_table(true, tables::zoo());
+    println!("{rendered}");
+    println!("paper row order & values (GB): see models::zoo::TABLE1 PaperRow");
+    println!("\nplanner wall-clock (context + B* + 2 solves):");
+    for r in &rows {
+        println!(
+            "  {:<12} exactDP {:>9.2?}  approxDP {:>9.2?}",
+            r.name, r.exact_time, r.approx_time
+        );
+    }
+}

@@ -1,0 +1,17 @@
+//! Regenerates paper Table 2 (Appendix C): the same sweep as Table 1 but
+//! WITHOUT liveness analysis — buffers are freed only at the points the
+//! canonical strategy mandates.
+//!
+//! ```sh
+//! cargo bench --bench table2
+//! ```
+
+use recompute::bench::tables;
+
+fn main() {
+    println!("== Paper Table 2 — peak memory WITHOUT liveness analysis ==\n");
+    let (rendered, _) = tables::render_table(false, tables::zoo());
+    println!("{rendered}");
+    println!("expect: every method worse than its Table-1 value; Chen hit hardest");
+    println!("(the paper reports Chen ≥ device memory on U-Net/GoogLeNet here).");
+}

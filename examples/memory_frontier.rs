@@ -1,0 +1,36 @@
+//! The budget ↔ overhead tradeoff frontier: sweep the memory budget from
+//! B* to vanilla scale and plot (textually) the minimal recomputation
+//! overhead at each point — the tradeoff the general recomputation
+//! problem (§3) formalizes.
+//!
+//! ```sh
+//! cargo run --release --example memory_frontier -- [network]
+//! ```
+
+use recompute::fmt_bytes;
+use recompute::models::zoo;
+use recompute::planner::{build_context, Family, Objective};
+
+fn main() -> anyhow::Result<()> {
+    let name = std::env::args().nth(1).unwrap_or_else(|| "ResNet50".into());
+    let e = zoo::find(&name).ok_or_else(|| anyhow::anyhow!("unknown network {name}"))?;
+    let g = e.build_paper();
+    let ctx = build_context(&g, Family::Approx);
+    let b_star = ctx.min_feasible_budget();
+    let fwd = g.total_time() as f64;
+    println!("== {} — overhead vs budget frontier (B* = {}) ==", e.name, fmt_bytes(b_star));
+    println!("{:>12} {:>10} {:>8}  bar", "budget", "overhead", "+fwd%");
+    for pct in [100u64, 110, 125, 150, 200, 300, 400, 600, 800] {
+        let budget = b_star * pct / 100;
+        let sol = ctx.solve(budget, Objective::MinOverhead).unwrap();
+        let frac = sol.overhead as f64 / fwd;
+        let bar = "#".repeat((frac * 50.0) as usize);
+        println!(
+            "{:>12} {:>10} {:>7.0}%  {bar}",
+            fmt_bytes(budget),
+            sol.overhead,
+            frac * 100.0
+        );
+    }
+    Ok(())
+}

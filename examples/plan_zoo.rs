@@ -1,0 +1,48 @@
+//! Plan every Table-1 network with the fast planner and print a
+//! Table-1-shaped summary (ApproxDP MC/TC vs Chen vs vanilla).
+//!
+//! ```sh
+//! cargo run --release --example plan_zoo
+//! ```
+
+use recompute::bench::tables;
+use recompute::fmt_bytes;
+use recompute::models::zoo::TABLE1;
+use recompute::planner::{build_context, chen_plan, Family, Objective};
+use recompute::sim::{simulate, simulate_vanilla, SimOptions};
+use recompute::util::table::Table;
+
+fn main() -> anyhow::Result<()> {
+    let mut t =
+        Table::new(&["Network", "ApproxDP+MC", "ApproxDP+TC", "Chen's", "Vanilla", "paper MC"])
+            .numeric();
+    for e in TABLE1 {
+        let g = e.build_paper();
+        let opts = SimOptions::default();
+        let vanilla = simulate_vanilla(&g, opts).peak_total;
+        let ctx = build_context(&g, Family::Approx);
+        let b = ctx.min_feasible_budget();
+        let cell = |obj| {
+            let sol = ctx.solve(b, obj).unwrap();
+            let p = simulate(&g, &sol.chain, opts).peak_total;
+            format!("{} (-{:.0}%)", fmt_bytes(p), 100.0 * (1.0 - p as f64 / vanilla as f64))
+        };
+        let chen = {
+            let plan = chen_plan(&g, |c| simulate(&g, c, opts).peak_total).unwrap();
+            let p = simulate(&g, &plan.chain, opts).peak_total;
+            format!("{} (-{:.0}%)", fmt_bytes(p), 100.0 * (1.0 - p as f64 / vanilla as f64))
+        };
+        t.row(vec![
+            e.name.to_string(),
+            cell(Objective::MaxOverhead),
+            cell(Objective::MinOverhead),
+            chen,
+            fmt_bytes(vanilla),
+            format!("{} GB (-{:.0}%)", e.paper.approx_mc_gb,
+                100.0 * (1.0 - e.paper.approx_mc_gb / e.paper.vanilla_gb)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(device reference: {})", fmt_bytes(tables::DEVICE_BYTES));
+    Ok(())
+}

@@ -1,0 +1,46 @@
+//! Quickstart: plan recomputation for ResNet-50 and inspect the tradeoff.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use recompute::fmt_bytes;
+use recompute::models::zoo;
+use recompute::planner::{build_context, Family, Objective};
+use recompute::sim::{simulate, simulate_vanilla, SimOptions};
+
+fn main() -> anyhow::Result<()> {
+    // 1. Build the computation graph of ResNet-50 at batch 32, 224×224.
+    let g = zoo::resnet50(32, 224);
+    println!(
+        "ResNet-50 @ batch 32: #V={} activations={} params={}",
+        g.len(),
+        fmt_bytes(g.total_mem()),
+        fmt_bytes(g.total_param_bytes())
+    );
+
+    // 2. Baseline: vanilla training memory.
+    let vanilla = simulate_vanilla(&g, SimOptions::default());
+    println!("vanilla peak: {}", fmt_bytes(vanilla.peak_total));
+
+    // 3. Plan at the minimal feasible budget (the paper's Table-1 setup).
+    let ctx = build_context(&g, Family::Approx);
+    let budget = ctx.min_feasible_budget();
+    println!("minimal feasible budget B* = {}", fmt_bytes(budget));
+
+    // 4. Time-centric vs memory-centric strategies.
+    for (label, obj) in
+        [("time-centric", Objective::MinOverhead), ("memory-centric", Objective::MaxOverhead)]
+    {
+        let sol = ctx.solve(budget, obj).expect("B* is feasible by construction");
+        let measured = simulate(&g, &sol.chain, SimOptions::default());
+        println!(
+            "{label:<14} k={:<3} overhead=+{:.0}% of fwd  peak={} (-{:.0}% vs vanilla)",
+            sol.chain.k(),
+            100.0 * sol.overhead as f64 / g.total_time() as f64,
+            fmt_bytes(measured.peak_total),
+            100.0 * (1.0 - measured.peak_total as f64 / vanilla.peak_total as f64)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,55 @@
+//! Regression check for the PJRT input-buffer leak (EXPERIMENTS §Perf-L3-2).
+//!
+//! The published `xla` crate's `execute` C shim leaks every input buffer
+//! (`BufferFromHostLiteral(..).release()` with no matching free). The
+//! runtime works around it with caller-owned buffers + `execute_b`; this
+//! example hammers an artifact for 300 iterations and asserts RSS stays
+//! flat.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example runtime_leak_check
+//! ```
+
+use recompute::runtime::{literal_f32, ArtifactSet};
+
+fn rss_mb() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/status").unwrap();
+    let line = s.lines().find(|l| l.starts_with("VmRSS")).unwrap();
+    line.split_whitespace().nth(1).unwrap().parse::<f64>().unwrap() / 1024.0
+}
+
+fn main() {
+    let arts = ArtifactSet::load(std::path::Path::new("artifacts")).unwrap();
+    let w = arts.width;
+    let wm = vec![1.0f32; w * w];
+    let gm = vec![0.1f32; w * w];
+    let baseline = {
+        // Warm up allocator + executable caches first.
+        let mut cur = literal_f32(&wm, &[w, w]).unwrap();
+        for _ in 0..20 {
+            let g = literal_f32(&gm, &[w, w]).unwrap();
+            let lr = literal_f32(&[0.01], &[]).unwrap();
+            cur = arts.run("sgd_mat", &[cur, g, lr]).unwrap().pop().unwrap();
+        }
+        rss_mb()
+    };
+    let mut cur = literal_f32(&wm, &[w, w]).unwrap();
+    for i in 0..300 {
+        let g = literal_f32(&gm, &[w, w]).unwrap();
+        let lr = literal_f32(&[0.01], &[]).unwrap();
+        cur = arts.run("sgd_mat", &[cur, g, lr]).unwrap().pop().unwrap();
+        if i % 100 == 0 {
+            println!("iter {i:>3}  rss {:.1} MB", rss_mb());
+        }
+    }
+    drop(cur);
+    let end = rss_mb();
+    println!("baseline {baseline:.1} MB → end {end:.1} MB");
+    let mat_mb = (w * w * 4) as f64 / 1e6;
+    assert!(
+        end - baseline < 40.0 * mat_mb.max(1.0),
+        "RSS grew by {:.1} MB over 300 iters — input buffers are leaking again",
+        end - baseline
+    );
+    println!("runtime_leak_check OK");
+}

@@ -1,0 +1,91 @@
+"""AOT lowering: JAX/Pallas → HLO text artifacts + manifest.
+
+Runs once at build time (`make artifacts`); the Rust runtime loads the
+HLO text with `HloModuleProto::from_text_file`, compiles it on the PJRT
+CPU client and executes it on the training path. HLO *text* (not
+serialized proto) is the interchange format: jax >= 0.5 emits protos with
+64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+reassigns ids and round-trips cleanly.
+
+Artifacts are parameterized by (batch, width): every tower layer shares
+one compiled executable per direction, which is what lets the Rust
+executor treat "layer" as the unit of caching and recomputation.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts --batch 64 --width 512
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(fn, *specs) -> str:
+    """Lower a jax function to XLA HLO text with a tuple root."""
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs(batch: int, width: int):
+    """Name → (function, input specs, output arity)."""
+    b, w = batch, width
+    return {
+        "layer_fwd": (model.layer_fwd, [f32(b, w), f32(w, w), f32(w)], 1),
+        "layer_bwd": (model.layer_bwd, [f32(b, w), f32(w, w), f32(w), f32(b, w)], 3),
+        "loss_head": (model.loss_head, [f32(b, w), f32(w, w), f32(w), f32(b, w)], 1),
+        "loss_head_bwd": (
+            model.loss_head_bwd,
+            [f32(b, w), f32(w, w), f32(w), f32(b, w)],
+            4,
+        ),
+        "sgd_mat": (model.sgd_mat, [f32(w, w), f32(w, w), f32()], 1),
+        "sgd_vec": (model.sgd_vec, [f32(w), f32(w), f32()], 1),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=64)
+    ap.add_argument("--width", type=int, default=512)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest = {
+        "batch": args.batch,
+        "width": args.width,
+        "dtype": "f32",
+        "artifacts": {},
+    }
+    for name, (fn, specs, n_out) in artifact_specs(args.batch, args.width).items():
+        text = to_hlo_text(fn, *specs)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": [list(s.shape) for s in specs],
+            "outputs": n_out,
+        }
+        print(f"  {name}: {len(text)} chars, inputs {[list(s.shape) for s in specs]}")
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote manifest + {len(manifest['artifacts'])} artifacts to {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernels: fused dense layer (matmul + bias + GELU).
+
+The execution engine's compute hot-spot is the per-layer forward and
+backward of the MLP/transformer towers it trains. Both directions are
+written as Pallas kernels so the whole layer is one fused kernel instead
+of a matmul + bias-add + activation chain.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation):
+
+- the forward kernel is tiled for the 128x128 MXU systolic array: the
+  grid walks (batch/bm, width/bn) output tiles with the full contraction
+  dimension resident in VMEM; block sizes are clamped to the actual array
+  sizes so small problems still lower;
+- VMEM footprint per grid cell is (bm*K + K*bn + bm*bn + bn) * 4 bytes,
+  kept under the ~16 MiB VMEM budget by the default bm = bn = 128 and the
+  K <= 8192 widths this repo trains;
+- `interpret=True` everywhere: the CPU PJRT plugin cannot execute Mosaic
+  custom-calls, so kernels run through the Pallas interpreter (bitwise
+  the same math), and real-TPU efficiency is estimated statically in
+  EXPERIMENTS.md §Perf.
+
+Correctness is pinned against the pure-jnp oracle in `ref.py` by
+`python/tests/test_kernel.py` (hypothesis sweeps shapes and dtypes).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x):
+    # tanh-approximation GELU, matching jax.nn.gelu's default.
+    return jax.nn.gelu(x, approximate=True)
+
+
+def _fwd_kernel(x_ref, w_ref, b_ref, o_ref):
+    """One (bm, bn) output tile: o = gelu(x @ w + b)."""
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] = _gelu(acc + b[None, :]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_m", "block_n"))
+def fused_dense_fwd(x, w, b, *, block_m: int = 128, block_n: int = 128):
+    """Forward: ``gelu(x @ w + b)`` with an MXU-tiled Pallas kernel.
+
+    Args:
+      x: ``[B, K]`` activations.
+      w: ``[K, N]`` weights.
+      b: ``[N]`` bias.
+    Returns:
+      ``[B, N]`` activations.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    assert b.shape == (n,)
+    bm = min(block_m, m)
+    bn = min(block_n, n)
+    # Pad-free tiling only: fall back to one block when not divisible.
+    if m % bm or n % bn:
+        bm, bn = m, n
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        _fwd_kernel,
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, bn), lambda i, j: (0, j)),
+            pl.BlockSpec((bn,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        interpret=True,
+    )(x, w, b)
+
+
+def _bwd_kernel(x_ref, w_ref, b_ref, gh_ref, gx_ref, gw_ref, gb_ref):
+    """Full backward of the fused layer in one kernel.
+
+    Recomputes the pre-activation (cheap vs caching it — this is the
+    paper's recomputation idea applied *inside* the layer), then produces
+    all three gradients. Runs as a single grid cell: the towers trained
+    here keep B, K, N <= 2048 so all operands fit VMEM on a real TPU; a
+    production multi-tile variant would privatize gw/gb per tile and
+    reduce, which does not change the math checked against the oracle.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    b = b_ref[...]
+    gh = gh_ref[...]
+    pre = jnp.dot(x, w, preferred_element_type=jnp.float32) + b[None, :]
+    # d/dpre gelu(pre), tanh approximation (matches jax.nn.gelu).
+    c = jnp.sqrt(2.0 / jnp.pi).astype(jnp.float32)
+    t = jnp.tanh(c * (pre + 0.044715 * pre**3))
+    dgelu = 0.5 * (1.0 + t) + 0.5 * pre * (1.0 - t**2) * c * (1.0 + 3 * 0.044715 * pre**2)
+    dpre = gh * dgelu.astype(gh.dtype)
+    gx_ref[...] = jnp.dot(dpre, w.T, preferred_element_type=jnp.float32).astype(gx_ref.dtype)
+    gw_ref[...] = jnp.dot(x.T, dpre, preferred_element_type=jnp.float32).astype(gw_ref.dtype)
+    gb_ref[...] = jnp.sum(dpre, axis=0).astype(gb_ref.dtype)
+
+
+@jax.jit
+def fused_dense_bwd(x, w, b, gh):
+    """Backward: gradients of ``gelu(x @ w + b)`` w.r.t. x, w, b.
+
+    Args:
+      x: ``[B, K]`` layer input (cached or recomputed by the L3 plan).
+      w: ``[K, N]`` weights, b: ``[N]`` bias.
+      gh: ``[B, N]`` gradient w.r.t. the layer output.
+    Returns:
+      ``(gx [B,K], gw [K,N], gb [N])``.
+    """
+    m, k = x.shape
+    _, n = w.shape
+    return pl.pallas_call(
+        _bwd_kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((m, k), x.dtype),
+            jax.ShapeDtypeStruct((k, n), w.dtype),
+            jax.ShapeDtypeStruct((n,), b.dtype),
+        ),
+        interpret=True,
+    )(x, w, b, gh)

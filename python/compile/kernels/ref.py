@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the single source of mathematical truth: the kernels in
+`fused_dense.py` must match them to float tolerance for every shape the
+tests sweep, and the L2 model composes *these* in its own unit tests so a
+kernel bug cannot hide behind a model bug.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+def dense_fwd_ref(x, w, b):
+    """gelu(x @ w + b)."""
+    return gelu(x @ w + b[None, :])
+
+
+def dense_bwd_ref(x, w, b, gh):
+    """Gradients of dense_fwd_ref via jax autodiff (the gold standard)."""
+    _, vjp = jax.vjp(lambda x_, w_, b_: dense_fwd_ref(x_, w_, b_), x, w, b)
+    return vjp(gh)
+
+
+def loss_fwd_ref(h, w, b, y):
+    """MSE regression head: mean((h @ w + b - y)^2)."""
+    pred = h @ w + b[None, :]
+    return jnp.mean((pred - y) ** 2)
+
+
+def loss_bwd_ref(h, w, b, y):
+    """(loss, gh, gw, gb) of the regression head."""
+    loss, vjp = jax.vjp(lambda h_, w_, b_: loss_fwd_ref(h_, w_, b_, y), h, w, b)
+    gh, gw, gb = vjp(jnp.ones_like(loss))
+    return loss, gh, gw, gb

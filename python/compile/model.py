@@ -1,0 +1,87 @@
+"""Layer-2 JAX model: the compute graphs the Rust executor trains.
+
+Each function here is one AOT artifact: the L3 coordinator sequences them
+according to a recomputation plan, so the *unit of caching/recomputation*
+(one tower layer) is exactly the unit of compilation. Layer forward /
+backward call the Layer-1 Pallas kernels; the loss head and SGD updates
+are small pure-jnp graphs.
+
+Python never runs at training time — `aot.py` lowers everything in this
+file to HLO text once, and the Rust side loads the artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fused_dense as kernels
+from .kernels import ref
+
+
+def layer_fwd(x, w, b):
+    """One fused dense layer: gelu(x @ w + b) (Pallas kernel)."""
+    return (kernels.fused_dense_fwd(x, w, b),)
+
+
+def layer_bwd(x, w, b, gh):
+    """Backward of one layer: (gx, gw, gb) (Pallas kernel)."""
+    return kernels.fused_dense_bwd(x, w, b, gh)
+
+
+def loss_head(h, w, b, y):
+    """Forward of the MSE regression head: scalar loss."""
+    return (ref.loss_fwd_ref(h, w, b, y),)
+
+
+def loss_head_bwd(h, w, b, y):
+    """Loss + gradients of the head in one artifact: (loss, gh, gw, gb).
+
+    Fusing the loss value into the backward artifact means the training
+    loop gets its loss curve for free — no extra forward execution.
+    """
+    return ref.loss_bwd_ref(h, w, b, y)
+
+
+def sgd_mat(w, gw, lr):
+    """SGD update for a weight matrix; lr is a scalar operand so one
+    artifact serves any schedule."""
+    return (w - lr * gw,)
+
+
+def sgd_vec(b, gb, lr):
+    """SGD update for a bias vector."""
+    return (b - lr * gb,)
+
+
+def tower_reference_step(params, x, y, lr):
+    """Whole-step reference: full forward + backward + SGD for an
+    n-layer tower, in one jax graph (no recomputation).
+
+    Not exported as an artifact — used by tests to verify that the Rust
+    executor's layer-by-layer orchestration computes the same loss and
+    the same updated parameters as monolithic JAX autodiff.
+    """
+
+    def loss_fn(ps):
+        # ref.dense_fwd_ref is the verified twin of the Pallas kernel
+        # (pallas_call is not differentiable; the kernel-vs-ref tests pin
+        # them to float tolerance, so autodiff through the ref is exact).
+        h = x
+        for (w, b) in ps[:-1]:
+            h = ref.dense_fwd_ref(h, w, b)
+        w_out, b_out = ps[-1]
+        return ref.loss_fwd_ref(h, w_out, b_out, y)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params = [(w - lr * gw, b - lr * gb) for (w, b), (gw, gb) in zip(params, grads)]
+    return loss, new_params
+
+
+def init_tower(key, layers: int, width: int):
+    """He-initialized tower parameters: `layers` hidden + 1 head."""
+    params = []
+    for _ in range(layers + 1):
+        key, k1 = jax.random.split(key)
+        w = jax.random.normal(k1, (width, width), jnp.float32) * jnp.sqrt(2.0 / width)
+        b = jnp.zeros((width,), jnp.float32)
+        params.append((w, b))
+    return params

@@ -1,0 +1,85 @@
+//! Minimal timing harness (no `criterion` available offline).
+//!
+//! Warmup + N timed iterations, reporting min/median/mean/max. Used by the
+//! `benches/` binaries and the CLI's `timing` subcommand.
+
+use std::time::{Duration, Instant};
+
+/// Timing statistics over a set of iterations.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    pub max: Duration,
+}
+
+impl BenchStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<40} iters={:<3} min={:>10.3?} median={:>10.3?} mean={:>10.3?} max={:>10.3?}",
+            self.name, self.iters, self.min, self.median, self.mean, self.max
+        )
+    }
+}
+
+/// Run `f` for `iters` timed iterations after `warmup` untimed ones.
+/// The closure's return value is passed through `std::hint::black_box` so
+/// the work is not optimized away.
+pub fn bench<T>(name: &str, warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> BenchStats {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort();
+    let mean = samples.iter().sum::<Duration>() / iters as u32;
+    BenchStats {
+        name: name.to_string(),
+        iters,
+        min: samples[0],
+        median: samples[iters / 2],
+        mean,
+        max: samples[iters - 1],
+    }
+}
+
+/// Time a single run (for expensive planners where one run is the bench).
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let v = f();
+    (v, t0.elapsed())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_ordered() {
+        let s = bench("spin", 1, 5, || {
+            let mut x = 0u64;
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+            x
+        });
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert_eq!(s.iters, 5);
+        assert!(s.summary().contains("spin"));
+    }
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, d) = time_once(|| 42);
+        assert_eq!(v, 42);
+        assert!(d.as_nanos() > 0);
+    }
+}

@@ -1,0 +1,7 @@
+//! Benchmark harnesses: timing utilities and the table/figure generators
+//! for the paper's evaluation section.
+
+pub mod harness;
+pub mod tables;
+
+pub use harness::{bench, time_once, BenchStats};

@@ -1,0 +1,169 @@
+//! `repro train` — CLI front-end of the training coordinator.
+//!
+//! Runs the real PJRT executor on the MLP tower under one or more
+//! schedules and prints the measured peak / step-time / loss evidence.
+//!
+//! Flags:
+//!   --artifacts DIR   artifact directory (default: artifacts)
+//!   --layers N        hidden layers (default 16)
+//!   --steps N         training steps (default 50)
+//!   --lr F            learning rate (default 0.05)
+//!   --mode M          vanilla | tc | mc | all (default all)
+//!   --budget-frac F   activation budget as a fraction of vanilla (tc/mc
+//!                     default: minimal feasible)
+//!   --report FILE     write a JSON report
+//!   --quiet           suppress per-step loss logging
+
+use std::path::PathBuf;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::exec::{ChainSchedule, TowerTrainer, TrainConfig};
+use crate::fmt_bytes;
+use crate::models::mlp_tower;
+use crate::planner::{build_context, Family, Objective};
+use crate::util::json::Json;
+
+use super::report::{loss_summary, report_json};
+
+struct TrainArgs {
+    artifacts: PathBuf,
+    layers: usize,
+    steps: usize,
+    lr: f32,
+    mode: String,
+    budget_frac: Option<f64>,
+    report: Option<PathBuf>,
+    quiet: bool,
+}
+
+fn parse_args(args: &[String]) -> Result<TrainArgs> {
+    let mut out = TrainArgs {
+        artifacts: PathBuf::from("artifacts"),
+        layers: 16,
+        steps: 50,
+        lr: 0.05,
+        mode: "all".into(),
+        budget_frac: None,
+        report: None,
+        quiet: false,
+    };
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        let mut val = || it.next().ok_or_else(|| anyhow!("missing value for {a}"));
+        match a.as_str() {
+            "--artifacts" => out.artifacts = PathBuf::from(val()?),
+            "--layers" => out.layers = val()?.parse()?,
+            "--steps" => out.steps = val()?.parse()?,
+            "--lr" => out.lr = val()?.parse()?,
+            "--mode" => out.mode = val()?.clone(),
+            "--budget-frac" => out.budget_frac = Some(val()?.parse()?),
+            "--report" => out.report = Some(PathBuf::from(val()?)),
+            "--quiet" => out.quiet = true,
+            "--help" | "-h" => {
+                bail!("see module docs: repro train [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--budget-frac F] [--report FILE] [--quiet]")
+            }
+            other => bail!("unknown train flag {other}"),
+        }
+    }
+    Ok(out)
+}
+
+/// Entry point for `repro train`.
+pub fn cmd_train(args: &[String]) -> Result<()> {
+    let a = parse_args(args)?;
+    let cfg = TrainConfig {
+        layers: a.layers,
+        steps: a.steps,
+        lr: a.lr,
+        seed: 17,
+        log_every: if a.quiet { 0 } else { (a.steps / 5).max(1) },
+    };
+
+    // One trainer per schedule: training mutates parameters, and the
+    // schedules must see identical initial conditions for the bitwise
+    // loss comparison.
+    let mut results: Vec<(String, crate::exec::TrainReport)> = Vec::new();
+    let modes: Vec<&str> = match a.mode.as_str() {
+        "all" => vec!["vanilla", "tc", "mc"],
+        m @ ("vanilla" | "tc" | "mc") => vec![m],
+        m => bail!("bad --mode {m}"),
+    };
+
+    for mode in modes {
+        let mut trainer = TowerTrainer::new(&a.artifacts, &cfg)?;
+        let batch = trainer.batch() as u64;
+        let width = trainer.width() as u32;
+        let g = mlp_tower(a.layers as u32, width, batch);
+        let sched = match mode {
+            "vanilla" => ChainSchedule::vanilla(a.layers + 1),
+            tc_or_mc => {
+                let ctx = build_context(&g, Family::Exact);
+                let min_b = ctx.min_feasible_budget();
+                let budget = match a.budget_frac {
+                    Some(f) => {
+                        let vanilla_acts = g.total_mem();
+                        ((vanilla_acts as f64 * f) as u64).max(min_b)
+                    }
+                    None => min_b,
+                };
+                let obj = if tc_or_mc == "tc" {
+                    Objective::MinOverhead
+                } else {
+                    Objective::MaxOverhead
+                };
+                let sol = ctx
+                    .solve(budget, obj)
+                    .ok_or_else(|| anyhow!("budget {} infeasible", fmt_bytes(budget)))?;
+                ChainSchedule::from_chain(&g, &sol.chain)?
+            }
+        };
+        if !a.quiet {
+            eprintln!("== mode {mode}: k={} segments ==", sched.segments.len());
+        }
+        let report = trainer.train(&sched, &cfg)?;
+        println!(
+            "{mode:<8} k={:<3} peak_act={:<10} (+params {:<9}) step={:.1}ms recompute/step={} {}",
+            report.k,
+            fmt_bytes(report.peak_bytes),
+            fmt_bytes(report.param_bytes),
+            report.mean_step_ms,
+            report.recomputes_per_step,
+            loss_summary(&report),
+        );
+        results.push((mode.to_string(), report));
+    }
+
+    // Cross-schedule invariants worth asserting out loud.
+    if results.len() > 1 {
+        let v = results.iter().find(|(m, _)| m == "vanilla");
+        let tc = results.iter().find(|(m, _)| m == "tc");
+        if let (Some((_, v)), Some((_, t))) = (v, tc) {
+            let same = v
+                .losses
+                .iter()
+                .zip(&t.losses)
+                .all(|(a, b)| (a - b).abs() <= 1e-6 * a.abs().max(1.0));
+            println!(
+                "loss trajectory vanilla vs tc: {} (recomputation must not alter outputs)",
+                if same { "IDENTICAL ✓" } else { "DIVERGED ✗" }
+            );
+            println!(
+                "peak activation memory: vanilla {} → tc {} ({:.0}% reduction)",
+                fmt_bytes(v.peak_bytes),
+                fmt_bytes(t.peak_bytes),
+                100.0 * (1.0 - t.peak_bytes as f64 / v.peak_bytes as f64)
+            );
+            if !same {
+                bail!("recomputation changed the training trajectory");
+            }
+        }
+    }
+
+    if let Some(path) = a.report {
+        let arr: Vec<Json> = results.iter().map(|(m, r)| report_json(m, r)).collect();
+        std::fs::write(&path, Json::Arr(arr).to_string_pretty())?;
+        println!("report written to {}", path.display());
+    }
+    Ok(())
+}

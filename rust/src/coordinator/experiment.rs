@@ -1,0 +1,291 @@
+//! Declarative experiment runner: a JSON config describes a set of
+//! planner comparisons, the runner executes them and emits both the
+//! human-readable table and machine-readable CSV — the workflow a team
+//! would use to evaluate recomputation before enabling it in production.
+//!
+//! Config format:
+//! ```json
+//! {
+//!   "name": "ablation-chains",
+//!   "device_gb": 11.4,
+//!   "liveness": true,
+//!   "runs": [
+//!     {"network": "ResNet18", "batch": 128, "methods": ["approx_tc", "approx_mc", "chen", "vanilla"]},
+//!     {"network": "MobileNetV1", "methods": ["approx_mc", "chen", "vanilla"]}
+//!   ]
+//! }
+//! ```
+//! Omitted fields default (batch = zoo default, methods = all).
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::fmt_bytes;
+use crate::graph::Graph;
+use crate::models::zoo;
+use crate::planner::{build_context, chen_plan, DpContext, Family, Objective};
+use crate::sim::{simulate, simulate_vanilla, SimOptions};
+use crate::util::json::Json;
+use crate::util::table::Table;
+
+/// One requested run.
+#[derive(Clone, Debug)]
+pub struct RunSpec {
+    pub network: String,
+    pub batch: Option<u64>,
+    pub methods: Vec<Method>,
+}
+
+/// Planner method selector.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Method {
+    ApproxTc,
+    ApproxMc,
+    ExactTc,
+    ExactMc,
+    Chen,
+    Vanilla,
+}
+
+impl Method {
+    pub fn parse(s: &str) -> Result<Method> {
+        Ok(match s {
+            "approx_tc" => Method::ApproxTc,
+            "approx_mc" => Method::ApproxMc,
+            "exact_tc" => Method::ExactTc,
+            "exact_mc" => Method::ExactMc,
+            "chen" => Method::Chen,
+            "vanilla" => Method::Vanilla,
+            other => bail!("unknown method '{other}'"),
+        })
+    }
+
+    pub fn label(self) -> &'static str {
+        match self {
+            Method::ApproxTc => "ApproxDP+TC",
+            Method::ApproxMc => "ApproxDP+MC",
+            Method::ExactTc => "ExactDP+TC",
+            Method::ExactMc => "ExactDP+MC",
+            Method::Chen => "Chen's",
+            Method::Vanilla => "Vanilla",
+        }
+    }
+
+    pub const ALL: [Method; 6] = [
+        Method::ApproxTc,
+        Method::ApproxMc,
+        Method::ExactTc,
+        Method::ExactMc,
+        Method::Chen,
+        Method::Vanilla,
+    ];
+}
+
+/// Whole experiment definition.
+#[derive(Clone, Debug)]
+pub struct Experiment {
+    pub name: String,
+    pub liveness: bool,
+    pub runs: Vec<RunSpec>,
+}
+
+impl Experiment {
+    /// Parse the JSON config format documented at module level.
+    pub fn from_json(text: &str) -> Result<Experiment> {
+        let v = Json::parse(text).context("parsing experiment config")?;
+        let name = v.get("name").as_str().unwrap_or("experiment").to_string();
+        let liveness = v.get("liveness").as_bool().unwrap_or(true);
+        let runs_json = v.get("runs").as_arr().context("config: missing 'runs' array")?;
+        let mut runs = Vec::new();
+        for (i, rj) in runs_json.iter().enumerate() {
+            let network = rj
+                .get("network")
+                .as_str()
+                .with_context(|| format!("run {i}: missing network"))?
+                .to_string();
+            if zoo::find(&network).is_none() {
+                bail!("run {i}: unknown network '{network}'");
+            }
+            let batch = rj.get("batch").as_u64();
+            let methods = match rj.get("methods").as_arr() {
+                None => Method::ALL.to_vec(),
+                Some(ms) => ms
+                    .iter()
+                    .map(|m| {
+                        m.as_str()
+                            .ok_or_else(|| anyhow!("run {i}: method must be a string"))
+                            .and_then(Method::parse)
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            };
+            runs.push(RunSpec { network, batch, methods });
+        }
+        Ok(Experiment { name, liveness, runs })
+    }
+}
+
+/// One measured result row.
+#[derive(Clone, Debug)]
+pub struct RunResult {
+    pub network: String,
+    pub batch: u64,
+    pub method: Method,
+    pub peak_total: u64,
+    pub overhead: u64,
+    pub k: usize,
+    pub reduction_pct: f64,
+}
+
+/// Execute the experiment; returns all rows.
+pub fn run_experiment(exp: &Experiment) -> Result<Vec<RunResult>> {
+    let mut out = Vec::new();
+    for spec in &exp.runs {
+        let entry = zoo::find(&spec.network).expect("validated at parse");
+        let batch = spec.batch.unwrap_or(entry.batch);
+        let g: Graph = entry.build_batch(batch);
+        let opts = SimOptions { liveness: exp.liveness, include_params: true };
+        let vanilla_peak =
+            simulate_vanilla(&g, SimOptions { liveness: true, include_params: true }).peak_total;
+
+        // Contexts built lazily, once per family.
+        let mut approx_ctx: Option<DpContext> = None;
+        let mut exact_ctx: Option<DpContext> = None;
+
+        for &method in &spec.methods {
+            let (peak, overhead, k) = match method {
+                Method::Vanilla => {
+                    // Vanilla keeps its framework-native eager freeing
+                    // regardless of the liveness toggle (Appendix C).
+                    (vanilla_peak, 0u64, g.len() as usize)
+                }
+                Method::Chen => {
+                    let plan = chen_plan(&g, |c| simulate(&g, c, opts).peak_total)?;
+                    let r = simulate(&g, &plan.chain, opts);
+                    (r.peak_total, r.overhead_time, plan.chain.k())
+                }
+                m => {
+                    let (ctx_slot, obj) = match m {
+                        Method::ApproxTc => (&mut approx_ctx, Objective::MinOverhead),
+                        Method::ApproxMc => (&mut approx_ctx, Objective::MaxOverhead),
+                        Method::ExactTc => (&mut exact_ctx, Objective::MinOverhead),
+                        Method::ExactMc => (&mut exact_ctx, Objective::MaxOverhead),
+                        _ => unreachable!(),
+                    };
+                    if ctx_slot.is_none() {
+                        let family = if matches!(m, Method::ExactTc | Method::ExactMc) {
+                            Family::Exact
+                        } else {
+                            Family::Approx
+                        };
+                        *ctx_slot = Some(build_context(&g, family));
+                    }
+                    let ctx = ctx_slot.as_ref().unwrap();
+                    let b = ctx.min_feasible_budget();
+                    let sol = ctx
+                        .solve(b, obj)
+                        .ok_or_else(|| anyhow!("{}: B* infeasible?!", spec.network))?;
+                    let r = simulate(&g, &sol.chain, opts);
+                    (r.peak_total, sol.overhead, sol.chain.k())
+                }
+            };
+            out.push(RunResult {
+                network: spec.network.clone(),
+                batch,
+                method,
+                peak_total: peak,
+                overhead,
+                k,
+                reduction_pct: 100.0 * (1.0 - peak as f64 / vanilla_peak as f64),
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Render results as a text table.
+pub fn render(results: &[RunResult]) -> String {
+    let mut t =
+        Table::new(&["Network", "Batch", "Method", "Peak", "Reduction", "Overhead", "k"]).numeric();
+    for r in results {
+        t.row(vec![
+            r.network.clone(),
+            r.batch.to_string(),
+            r.method.label().to_string(),
+            fmt_bytes(r.peak_total),
+            format!("{:.0}%", -r.reduction_pct),
+            r.overhead.to_string(),
+            r.k.to_string(),
+        ]);
+    }
+    t.render()
+}
+
+/// Render results as CSV (for plotting).
+pub fn to_csv(results: &[RunResult]) -> String {
+    let mut s = String::from("network,batch,method,peak_bytes,reduction_pct,overhead,k\n");
+    for r in results {
+        s.push_str(&format!(
+            "{},{},{},{},{:.2},{},{}\n",
+            r.network,
+            r.batch,
+            r.method.label(),
+            r.peak_total,
+            r.reduction_pct,
+            r.overhead,
+            r.k
+        ));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const CFG: &str = r#"{
+        "name": "mini",
+        "liveness": true,
+        "runs": [
+            {"network": "VGG19", "batch": 4,
+             "methods": ["approx_tc", "approx_mc", "chen", "vanilla"]}
+        ]
+    }"#;
+
+    #[test]
+    fn parse_and_run() {
+        let exp = Experiment::from_json(CFG).unwrap();
+        assert_eq!(exp.name, "mini");
+        assert_eq!(exp.runs.len(), 1);
+        let results = run_experiment(&exp).unwrap();
+        assert_eq!(results.len(), 4);
+        let vanilla = results.iter().find(|r| r.method == Method::Vanilla).unwrap();
+        let mc = results.iter().find(|r| r.method == Method::ApproxMc).unwrap();
+        assert!(mc.peak_total < vanilla.peak_total);
+        assert!(mc.reduction_pct > 0.0);
+        // Render paths.
+        assert!(render(&results).contains("ApproxDP+MC"));
+        let csv = to_csv(&results);
+        assert_eq!(csv.lines().count(), 5);
+        assert!(csv.starts_with("network,batch"));
+    }
+
+    #[test]
+    fn rejects_unknown_network_and_method() {
+        assert!(Experiment::from_json(
+            r#"{"runs": [{"network": "NopeNet"}]}"#
+        )
+        .is_err());
+        assert!(Experiment::from_json(
+            r#"{"runs": [{"network": "VGG19", "methods": ["magic"]}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let exp =
+            Experiment::from_json(r#"{"runs": [{"network": "ResNet18"}]}"#).unwrap();
+        assert_eq!(exp.runs[0].methods.len(), 6);
+        assert!(exp.liveness);
+        assert!(exp.runs[0].batch.is_none());
+    }
+}

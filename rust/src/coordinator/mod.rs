@@ -1,0 +1,11 @@
+//! Training coordinator: configuration, launcher CLI, and run reports for
+//! the real PJRT training executor.
+//!
+//! The coordinator is deliberately thin — the paper's contribution is the
+//! planner (L3 `planner`) and the plan-following executor (`exec`); this
+//! module wires them to a command line, compares schedules side by side,
+//! and emits machine-readable reports for EXPERIMENTS.md.
+
+pub mod cli;
+pub mod experiment;
+pub mod report;

@@ -1,0 +1,47 @@
+//! JSON run reports (loss curve, measured peaks, timings).
+
+use crate::exec::TrainReport;
+use crate::util::json::Json;
+
+/// Serialize a training report for EXPERIMENTS.md / plotting.
+pub fn report_json(label: &str, r: &TrainReport) -> Json {
+    Json::obj()
+        .set("label", label.into())
+        .set("k_segments", (r.k as u64).into())
+        .set("peak_bytes", r.peak_bytes.into())
+        .set("param_bytes", r.param_bytes.into())
+        .set("mean_step_ms", r.mean_step_ms.into())
+        .set("recomputes_per_step", (r.recomputes_per_step as u64).into())
+        .set(
+            "losses",
+            Json::Arr(r.losses.iter().map(|&l| Json::Num(l as f64)).collect()),
+        )
+}
+
+/// First/last loss summary line.
+pub fn loss_summary(r: &TrainReport) -> String {
+    let first = r.losses.first().copied().unwrap_or(f32::NAN);
+    let last = r.losses.last().copied().unwrap_or(f32::NAN);
+    format!("loss {first:.4} → {last:.4} over {} steps", r.losses.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_roundtrips() {
+        let r = TrainReport {
+            losses: vec![1.0, 0.5],
+            peak_bytes: 1234,
+            param_bytes: 99,
+            mean_step_ms: 1.5,
+            recomputes_per_step: 7,
+            k: 3,
+        };
+        let j = report_json("tc", &r);
+        assert_eq!(j.get("peak_bytes").as_u64(), Some(1234));
+        assert_eq!(j.get("losses").as_arr().unwrap().len(), 2);
+        assert!(loss_summary(&r).contains("1.0000 → 0.5000"));
+    }
+}

@@ -1,0 +1,125 @@
+//! Translation of a lower-set chain over a tower graph into an executable
+//! layer schedule.
+//!
+//! Tower graphs (`models::mlp_tower`) are chains `input → layer_0 → … →
+//! layer_{n-1} → loss_head`, so every lower set of the graph is a prefix
+//! and a plan is exactly a list of cut points. The schedule records, per
+//! segment, which layer range it covers and which activation the strategy
+//! caches at its end (the segment's boundary node).
+
+use anyhow::{bail, Result};
+
+use crate::graph::Graph;
+use crate::planner::LowerSetChain;
+
+/// One executable segment: layers `[start, end)` (indices into the tower,
+/// where index `n_layers` is the loss head).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Segment {
+    pub start: usize,
+    pub end: usize,
+}
+
+/// The full schedule: segments in forward order.
+#[derive(Clone, Debug)]
+pub struct ChainSchedule {
+    pub segments: Vec<Segment>,
+    /// Total number of compute layers including the loss head.
+    pub n_layers: usize,
+}
+
+impl ChainSchedule {
+    /// Build from a plan over a tower graph. Validates that the graph is a
+    /// chain and that the plan's lower sets are prefixes.
+    pub fn from_chain(g: &Graph, chain: &LowerSetChain) -> Result<ChainSchedule> {
+        // Tower graphs: node 0 is the input stub; nodes 1..n are layers in
+        // topo order (graph construction guarantees id order = topo order).
+        for (v, _) in g.nodes() {
+            if g.preds(v).len() > 1 {
+                bail!("executor only schedules chain graphs (towers)");
+            }
+        }
+        let n_layers = g.len() as usize - 1; // minus input stub
+        let mut segments = Vec::new();
+        let mut prev_end = 0usize; // layer index
+        for l in chain.lower_sets() {
+            // The lower set is a prefix {0..=k} of node ids; layers are
+            // node id − 1.
+            let size = l.len() as usize;
+            // Number of layers inside: size − 1 if input included, else size.
+            let covered = if l.contains(crate::graph::NodeId(0)) { size - 1 } else { size };
+            if covered < prev_end {
+                bail!("plan lower sets are not increasing prefixes");
+            }
+            // Verify prefix-ness: all member ids < size.
+            for v in l.iter() {
+                if (v.0 as usize) >= size {
+                    bail!("plan lower set is not a prefix — not a tower plan");
+                }
+            }
+            if covered > prev_end {
+                segments.push(Segment { start: prev_end, end: covered });
+                prev_end = covered;
+            }
+        }
+        if prev_end != n_layers {
+            bail!("plan does not cover all {n_layers} layers (got {prev_end})");
+        }
+        Ok(ChainSchedule { segments, n_layers })
+    }
+
+    /// The vanilla schedule: one segment per layer (cache everything).
+    pub fn vanilla(n_layers: usize) -> ChainSchedule {
+        ChainSchedule {
+            segments: (0..n_layers).map(|i| Segment { start: i, end: i + 1 }).collect(),
+            n_layers,
+        }
+    }
+
+    /// Activation indices cached at segment ends: activation `i` is the
+    /// *input* of layer `i` (activation 0 = the batch input, always held).
+    /// The canonical strategy caches each segment's boundary = the output
+    /// of its last layer = activation `end`.
+    pub fn checkpoints(&self) -> Vec<usize> {
+        self.segments.iter().map(|s| s.end).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::mlp_tower;
+    use crate::planner::{plan_at_min_budget, Family, Objective};
+
+    #[test]
+    fn vanilla_schedule_shape() {
+        let s = ChainSchedule::vanilla(4);
+        assert_eq!(s.segments.len(), 4);
+        assert_eq!(s.checkpoints(), vec![1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn plan_to_schedule_roundtrip() {
+        let g = mlp_tower(15, 64, 8); // 15 layers + head = 16 compute nodes
+        let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+        let sched = ChainSchedule::from_chain(&g, &plan.chain).unwrap();
+        assert_eq!(sched.n_layers, 16);
+        // Segments partition [0, 17).
+        let mut pos = 0;
+        for s in &sched.segments {
+            assert_eq!(s.start, pos);
+            assert!(s.end > s.start);
+            pos = s.end;
+        }
+        assert_eq!(pos, 16);
+        // A min-budget plan on a long chain must cut several times.
+        assert!(sched.segments.len() >= 3, "k = {}", sched.segments.len());
+    }
+
+    #[test]
+    fn rejects_non_chain_graphs() {
+        let g = crate::models::transformer_tower(2, 32, 8, 4); // has residual fan-out
+        let plan = plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap();
+        assert!(ChainSchedule::from_chain(&g, &plan.chain).is_err());
+    }
+}

@@ -1,0 +1,360 @@
+//! The tower trainer: real training steps through the PJRT artifacts,
+//! following a [`ChainSchedule`].
+//!
+//! Memory protocol per step (the canonical strategy of §3, specialized to
+//! chains):
+//!
+//! - **forward**: run segments in order; inside a segment activations flow
+//!   layer to layer and intermediates are dropped immediately; at the end
+//!   of each segment its boundary activation is cached;
+//! - **backward**: walk segments in reverse; recompute the segment's
+//!   interior activations from the checkpoint below it, backprop each
+//!   layer (Pallas backward kernel), apply SGD immediately (gradients die
+//!   young), and drop the segment's activations before moving down.
+//!
+//! Every allocate/drop updates the live-byte counter; `peak_bytes` is the
+//! measured maximum — the executor-side analogue of the simulator's
+//! number, and the end-to-end evidence for the paper's claim.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::runtime::{literal_bytes, literal_f32, to_vec_f32, ArtifactSet};
+use crate::util::rng::Pcg32;
+
+use super::schedule::ChainSchedule;
+
+/// Training configuration.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Hidden layers (excluding the loss head).
+    pub layers: usize,
+    pub steps: usize,
+    pub lr: f32,
+    pub seed: u64,
+    /// Log every n steps (0 = silent).
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig { layers: 16, steps: 50, lr: 0.05, seed: 17, log_every: 10 }
+    }
+}
+
+/// Synthetic regression task: y = sin of a fixed random projection of x,
+/// mapped through the width — learnable by the tower, loss visibly
+/// decreasing within tens of steps.
+pub struct SyntheticTask {
+    batch: usize,
+    width: usize,
+    rng: Pcg32,
+}
+
+impl SyntheticTask {
+    pub fn new(batch: usize, width: usize, seed: u64) -> Self {
+        SyntheticTask { batch, width, rng: Pcg32::seeded(seed) }
+    }
+
+    /// Next (x, y) batch as flat f32 vectors.
+    pub fn next_batch(&mut self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.batch * self.width;
+        let x: Vec<f32> = (0..n).map(|_| self.rng.normal() as f32).collect();
+        // Deterministic target: smooth function of the input.
+        let y: Vec<f32> = x.iter().map(|v| (1.7 * v).sin()).collect();
+        (x, y)
+    }
+}
+
+/// Measured results of a training run.
+#[derive(Clone, Debug)]
+pub struct TrainReport {
+    pub losses: Vec<f32>,
+    /// Peak live activation bytes over all steps (params excluded).
+    pub peak_bytes: u64,
+    /// Parameter bytes (constant).
+    pub param_bytes: u64,
+    /// Mean per-step wall-clock in milliseconds.
+    pub mean_step_ms: f64,
+    /// Forward recomputations performed per step.
+    pub recomputes_per_step: usize,
+    /// Number of segments in the schedule.
+    pub k: usize,
+}
+
+/// The trainer: parameters + compiled artifacts + live-byte accounting.
+pub struct TowerTrainer {
+    arts: ArtifactSet,
+    /// (w, b) per layer; `layers + 1` entries (last = loss head).
+    params: Vec<(xla::Literal, xla::Literal)>,
+    live_bytes: u64,
+    peak_bytes: u64,
+}
+
+impl TowerTrainer {
+    /// Load artifacts from `dir` and He-initialize a tower with
+    /// `cfg.layers` hidden layers (+1 head) at the artifact width.
+    pub fn new(dir: &Path, cfg: &TrainConfig) -> Result<TowerTrainer> {
+        let arts = ArtifactSet::load(dir)?;
+        let width = arts.width;
+        let mut rng = Pcg32::seeded(cfg.seed);
+        let scale = (2.0 / width as f64).sqrt();
+        let mut params = Vec::with_capacity(cfg.layers + 1);
+        for _ in 0..cfg.layers + 1 {
+            let w: Vec<f32> =
+                (0..width * width).map(|_| (rng.normal() * scale) as f32).collect();
+            let b = vec![0f32; width];
+            params.push((
+                literal_f32(&w, &[width, width])?,
+                literal_f32(&b, &[width])?,
+            ));
+        }
+        Ok(TowerTrainer { arts, params, live_bytes: 0, peak_bytes: 0 })
+    }
+
+    pub fn batch(&self) -> usize {
+        self.arts.batch
+    }
+
+    pub fn width(&self) -> usize {
+        self.arts.width
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.params.iter().map(|(w, b)| literal_bytes(w) + literal_bytes(b)).sum()
+    }
+
+    fn alloc(&mut self, bytes: u64) {
+        self.live_bytes += bytes;
+        self.peak_bytes = self.peak_bytes.max(self.live_bytes);
+    }
+
+    fn free(&mut self, bytes: u64) {
+        debug_assert!(self.live_bytes >= bytes);
+        self.live_bytes -= bytes;
+    }
+
+    /// One training step under `sched`. Returns (loss, recompute_count).
+    ///
+    /// `x`/`y` are the batch input/target literals (always live; their
+    /// bytes are excluded like the paper excludes input nodes).
+    pub fn step(
+        &mut self,
+        sched: &ChainSchedule,
+        x: &xla::Literal,
+        y: &xla::Literal,
+        lr: f32,
+    ) -> Result<(f32, usize)> {
+        let n = sched.n_layers; // includes loss head at index n-1
+        let lr_lit = literal_f32(&[lr], &[])?;
+        let act_bytes = (self.arts.batch * self.arts.width * 4) as u64;
+        let mut recomputes = 0usize;
+
+        // --- forward: keep only checkpoint activations -------------------
+        // checkpoints[s] = activation index cached at end of segment s
+        // (activation i = input of layer i; activation 0 = x).
+        let mut ckpt: Vec<Option<xla::Literal>> = vec![None; n + 1];
+        let mut h: Option<xla::Literal> = None; // current activation (None = x)
+        for seg in &sched.segments {
+            for li in seg.start..seg.end.min(n - 1) {
+                let (w, b) = &self.params[li];
+                let inp = h.as_ref().unwrap_or(x);
+                let out = self
+                    .arts
+                    .run("layer_fwd", &[inp.clone(), w.clone(), b.clone()])?
+                    .pop()
+                    .context("layer_fwd output")?;
+                self.alloc(act_bytes);
+                if let Some(_old) = h.take() {
+                    self.free(act_bytes); // intermediate dropped
+                }
+                h = Some(out);
+            }
+            // Cache the boundary activation (input of layer seg.end).
+            if seg.end < n {
+                if let Some(ref hval) = h {
+                    ckpt[seg.end] = Some(hval.clone());
+                    self.alloc(act_bytes); // cached copy stays live
+                }
+            }
+            // The running activation beyond the boundary is dropped unless
+            // it is exactly the checkpoint we just stored; in a chain they
+            // coincide, so nothing extra to do. The loss head consumes the
+            // final activation inside the backward pass below.
+        }
+        // Forward ends with h = activation n-1 (input of the loss head)
+        // live only if the last segment ends at the head; the canonical
+        // strategy discards non-boundary values, so we drop it and let the
+        // backward pass recompute from the last checkpoint.
+        if let Some(_last) = h.take() {
+            self.free(act_bytes);
+        }
+
+        // --- backward: segments in reverse -------------------------------
+        let mut loss_val = f32::NAN;
+        let mut gh: Option<xla::Literal> = None; // gradient flowing down
+        for seg in sched.segments.iter().rev() {
+            // 1. Recompute the segment's interior input activations from
+            //    the checkpoint below it (or x for the first segment).
+            //    Backprop of layer li needs act[li] (its input); the
+            //    segment's boundary *output* act[seg.end] belongs to the
+            //    segment above, whose backward already ran — so only
+            //    layers seg.start .. seg.end-1 (exclusive) re-execute.
+            let base: Option<&xla::Literal> =
+                if seg.start == 0 { None } else { ckpt[seg.start].as_ref() };
+            let mut acts: Vec<xla::Literal> = Vec::with_capacity(seg.end - seg.start);
+            {
+                let mut cur: Option<xla::Literal> = base.cloned();
+                for li in seg.start..seg.end - 1 {
+                    let inp_owned;
+                    let inp = match &cur {
+                        Some(c) => c,
+                        None => {
+                            inp_owned = x.clone();
+                            &inp_owned
+                        }
+                    };
+                    acts.push(inp.clone()); // input activation of layer li
+                    let (w, b) = &self.params[li];
+                    let out = self
+                        .arts
+                        .run("layer_fwd", &[inp.clone(), w.clone(), b.clone()])?
+                        .pop()
+                        .context("recompute layer_fwd")?;
+                    self.alloc(act_bytes);
+                    recomputes += 1;
+                    cur = Some(out);
+                }
+                // Input of the segment's last layer.
+                match cur {
+                    Some(c) => acts.push(c),
+                    None => acts.push(x.clone()),
+                }
+            }
+            // acts[j] is the INPUT of layer seg.start + j; the first entry
+            // aliases the checkpoint/x (no new allocation), the rest were
+            // allocated in the loop above (one alloc per recompute).
+
+            // 2. Backprop layers of the segment in reverse.
+            for li in (seg.start..seg.end).rev() {
+                let a_in = &acts[li - seg.start];
+                let (w, b) = self.params[li].clone_pair();
+                if li == n - 1 {
+                    // Loss head: loss + gradients in one artifact.
+                    let outs = self.arts.run(
+                        "loss_head_bwd",
+                        &[a_in.clone(), w.clone(), b.clone(), y.clone()],
+                    )?;
+                    let [loss, ghead, gw, gb]: [xla::Literal; 4] =
+                        outs.try_into().ok().context("loss_head_bwd arity")?;
+                    loss_val = loss.to_vec::<f32>()?[0];
+                    self.alloc(act_bytes); // ghead
+                    gh = Some(ghead);
+                    self.apply_sgd(li, &gw, &gb, &lr_lit)?;
+                } else {
+                    let g_out = gh.take().context("missing upstream gradient")?;
+                    let outs = self.arts.run(
+                        "layer_bwd",
+                        &[a_in.clone(), w.clone(), b.clone(), g_out.clone()],
+                    )?;
+                    let [gx, gw, gb]: [xla::Literal; 3] =
+                        outs.try_into().ok().context("layer_bwd arity")?;
+                    drop(g_out);
+                    // gx replaces g_out: net zero on the counter.
+                    gh = Some(gx);
+                    self.apply_sgd(li, &gw, &gb, &lr_lit)?;
+                }
+            }
+            // 3. Drop this segment's recomputed activations and its
+            //    checkpoint — backward below no longer needs them.
+            let n_interior = acts.len().saturating_sub(1); // first aliases ckpt/x
+            drop(acts);
+            self.free(n_interior as u64 * act_bytes);
+            if seg.start > 0 {
+                if ckpt[seg.start].take().is_some() {
+                    self.free(act_bytes);
+                }
+            }
+        }
+        // The gradient flowing below layer 0 is w.r.t. the input — dropped.
+        if gh.take().is_some() {
+            self.free(act_bytes);
+        }
+        debug_assert_eq!(self.live_bytes, 0, "step leaked activation bytes");
+        Ok((loss_val, recomputes))
+    }
+
+    fn apply_sgd(
+        &mut self,
+        li: usize,
+        gw: &xla::Literal,
+        gb: &xla::Literal,
+        lr: &xla::Literal,
+    ) -> Result<()> {
+        let (w, b) = self.params[li].clone_pair();
+        let new_w = self
+            .arts
+            .run("sgd_mat", &[w, gw.clone(), lr.clone()])?
+            .pop()
+            .context("sgd_mat output")?;
+        let new_b = self
+            .arts
+            .run("sgd_vec", &[b, gb.clone(), lr.clone()])?
+            .pop()
+            .context("sgd_vec output")?;
+        self.params[li] = (new_w, new_b);
+        Ok(())
+    }
+
+    /// Train for `cfg.steps` steps on the synthetic task.
+    pub fn train(&mut self, sched: &ChainSchedule, cfg: &TrainConfig) -> Result<TrainReport> {
+        let mut task = SyntheticTask::new(self.arts.batch, self.arts.width, cfg.seed ^ 0xabcd);
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut recomputes = 0usize;
+        let t0 = Instant::now();
+        for step in 0..cfg.steps {
+            let (xv, yv) = task.next_batch();
+            let x = literal_f32(&xv, &[self.arts.batch, self.arts.width])?;
+            let y = literal_f32(&yv, &[self.arts.batch, self.arts.width])?;
+            let (loss, rec) = self.step(sched, &x, &y, cfg.lr)?;
+            recomputes = rec;
+            losses.push(loss);
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                eprintln!("step {step:>4}  loss {loss:.6}");
+            }
+        }
+        let elapsed = t0.elapsed();
+        Ok(TrainReport {
+            losses,
+            peak_bytes: self.peak_bytes,
+            param_bytes: self.param_bytes(),
+            mean_step_ms: elapsed.as_secs_f64() * 1000.0 / cfg.steps as f64,
+            recomputes_per_step: recomputes,
+            k: sched.segments.len(),
+        })
+    }
+
+    /// Reset the live/peak accounting (e.g. between schedules).
+    pub fn reset_accounting(&mut self) {
+        self.live_bytes = 0;
+        self.peak_bytes = 0;
+    }
+
+    /// Fetch the current loss-head weight row 0 (diagnostics).
+    pub fn probe_weights(&self) -> Result<Vec<f32>> {
+        let (w, _) = &self.params[self.params.len() - 1];
+        Ok(to_vec_f32(w)?[..8.min(self.arts.width)].to_vec())
+    }
+}
+
+trait ClonePair {
+    fn clone_pair(&self) -> (xla::Literal, xla::Literal);
+}
+
+impl ClonePair for (xla::Literal, xla::Literal) {
+    fn clone_pair(&self) -> (xla::Literal, xla::Literal) {
+        (self.0.clone(), self.1.clone())
+    }
+}

@@ -1,0 +1,191 @@
+//! Articulation points of the undirected skeleton of the DAG.
+//!
+//! Chen's algorithm (Appendix B of the paper) defines its candidate stage
+//! split points `C` as the nodes whose removal disconnects the computation
+//! graph — i.e. the articulation points of the underlying undirected graph.
+//! Classic Hopcroft–Tarjan low-link DFS, implemented iteratively so deep
+//! chains (ResNet152: 516 nodes) do not overflow the stack.
+
+use super::{Graph, NodeId};
+
+/// Articulation points of `g`'s undirected skeleton, in ascending id order.
+pub fn articulation_points(g: &Graph) -> Vec<NodeId> {
+    let n = g.len() as usize;
+    if n == 0 {
+        return Vec::new();
+    }
+    // Undirected adjacency.
+    let mut adj: Vec<Vec<u32>> = vec![Vec::new(); n];
+    for (v, _) in g.nodes() {
+        for &w in g.succs(v) {
+            adj[v.0 as usize].push(w.0);
+            adj[w.0 as usize].push(v.0);
+        }
+    }
+
+    let mut disc = vec![u32::MAX; n]; // discovery times
+    let mut low = vec![u32::MAX; n];
+    let mut is_art = vec![false; n];
+    let mut timer: u32 = 0;
+
+    // Iterative DFS. Frame: (node, parent, next-neighbor-index).
+    for root in 0..n {
+        if disc[root] != u32::MAX {
+            continue;
+        }
+        let mut root_children = 0usize;
+        let mut stack: Vec<(usize, usize, usize)> = vec![(root, usize::MAX, 0)];
+        disc[root] = timer;
+        low[root] = timer;
+        timer += 1;
+        while let Some(&mut (v, parent, ref mut idx)) = stack.last_mut() {
+            if *idx < adj[v].len() {
+                let w = adj[v][*idx] as usize;
+                *idx += 1;
+                if disc[w] == u32::MAX {
+                    if v == root {
+                        root_children += 1;
+                    }
+                    disc[w] = timer;
+                    low[w] = timer;
+                    timer += 1;
+                    stack.push((w, v, 0));
+                } else if w != parent {
+                    low[v] = low[v].min(disc[w]);
+                }
+            } else {
+                stack.pop();
+                if let Some(&mut (p, _, _)) = stack.last_mut() {
+                    low[p] = low[p].min(low[v]);
+                    if p != root && low[v] >= disc[p] {
+                        is_art[p] = true;
+                    }
+                }
+            }
+        }
+        if root_children > 1 {
+            is_art[root] = true;
+        }
+    }
+
+    (0..n as u32).map(NodeId).filter(|v| is_art[v.0 as usize]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Graph, Node, OpKind};
+    use super::*;
+
+    fn mk(n: u32, edges: &[(u32, u32)]) -> Graph {
+        let nodes = (0..n)
+            .map(|i| Node {
+                name: format!("n{i}"),
+                op: OpKind::Other,
+                mem: 1,
+                time: 1,
+                shape: vec![],
+                param_bytes: 0,
+            })
+            .collect();
+        let e: Vec<_> = edges.iter().map(|&(a, b)| (NodeId(a), NodeId(b))).collect();
+        Graph::new("t", nodes, &e)
+    }
+
+    #[test]
+    fn chain_interior_nodes_are_articulation_points() {
+        let g = mk(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let pts = articulation_points(&g);
+        assert_eq!(pts, vec![NodeId(1), NodeId(2), NodeId(3)]);
+    }
+
+    #[test]
+    fn diamond_has_only_endpoints_as_cuts() {
+        // 0→{1,2}→3 plus tails: t0→0, 3→t1. The diamond interior is
+        // biconnected; only 0 and 3 (and none of 1,2) separate the tails.
+        let g = mk(6, &[(4, 0), (0, 1), (0, 2), (1, 3), (2, 3), (3, 5)]);
+        let pts = articulation_points(&g);
+        assert_eq!(pts, vec![NodeId(0), NodeId(3)]);
+    }
+
+    #[test]
+    fn residual_block_skip_kills_interior_cuts() {
+        // 0→1→2→3 with skip 0→3 (a residual block): 1 and 2 are on a cycle
+        // in the skeleton, so only nothing separates — no articulation
+        // points except none.
+        let g = mk(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]);
+        assert!(articulation_points(&g).is_empty());
+    }
+
+    #[test]
+    fn two_blocks_share_a_cut() {
+        // Residual block 0..3 then residual block 3..6: node 3 is the only cut.
+        let g = mk(7, &[(0, 1), (1, 2), (2, 3), (0, 3), (3, 4), (4, 5), (5, 6), (3, 6)]);
+        assert_eq!(articulation_points(&g), vec![NodeId(3)]);
+    }
+
+    #[test]
+    fn empty_and_singleton() {
+        let g = mk(1, &[]);
+        assert!(articulation_points(&g).is_empty());
+    }
+
+    /// Brute-force cross-check: v is an articulation point iff removing it
+    /// increases the number of connected components of the skeleton.
+    #[test]
+    fn matches_bruteforce_on_random_dags() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(7);
+        for _ in 0..30 {
+            let n = rng.range(3, 14);
+            let mut edges = Vec::new();
+            for w in 1..n {
+                // Ensure weak connectivity: each node gets ≥1 predecessor.
+                let v = rng.below(w);
+                edges.push((v, w));
+                if rng.chance(0.4) {
+                    let v2 = rng.below(w);
+                    if v2 != v {
+                        edges.push((v2, w));
+                    }
+                }
+            }
+            let g = mk(n, &edges);
+            let fast: Vec<u32> = articulation_points(&g).iter().map(|v| v.0).collect();
+            let slow: Vec<u32> = (0..n).filter(|&v| is_cut_bruteforce(&g, v)).collect();
+            assert_eq!(fast, slow, "n={n} edges={edges:?}");
+        }
+    }
+
+    fn is_cut_bruteforce(g: &Graph, cut: u32) -> bool {
+        let n = g.len();
+        let mut adj = vec![Vec::new(); n as usize];
+        for (v, _) in g.nodes() {
+            for &w in g.succs(v) {
+                adj[v.0 as usize].push(w.0);
+                adj[w.0 as usize].push(v.0);
+            }
+        }
+        let comps = |skip: Option<u32>| -> usize {
+            let mut seen = vec![false; n as usize];
+            let mut count = 0;
+            for s in 0..n {
+                if Some(s) == skip || seen[s as usize] {
+                    continue;
+                }
+                count += 1;
+                let mut stack = vec![s];
+                seen[s as usize] = true;
+                while let Some(u) = stack.pop() {
+                    for &w in &adj[u as usize] {
+                        if Some(w) != skip && !seen[w as usize] {
+                            seen[w as usize] = true;
+                            stack.push(w);
+                        }
+                    }
+                }
+            }
+            count
+        };
+        comps(Some(cut)) > comps(None)
+    }
+}

@@ -1,0 +1,186 @@
+//! Incremental graph construction DSL.
+//!
+//! The network zoo ([`crate::models`]) builds each architecture by chaining
+//! `add_node` calls; the builder tracks shapes and computes `M_v` from the
+//! fp32 tensor volume at a given batch size, and `T_v` from the op kind
+//! (conv/dense = 10, everything else = 1, per §3 of the paper).
+
+use super::{Graph, Node, NodeId, OpKind};
+
+/// Bytes per element (the paper's experiments are fp32).
+pub const BYTES_PER_ELEM: u64 = 4;
+
+/// Mutable graph-under-construction.
+pub struct GraphBuilder {
+    name: String,
+    batch: u64,
+    nodes: Vec<Node>,
+    edges: Vec<(NodeId, NodeId)>,
+}
+
+impl GraphBuilder {
+    /// New builder. `batch` scales every node's activation memory.
+    pub fn new(name: impl Into<String>, batch: u64) -> Self {
+        GraphBuilder { name: name.into(), batch, nodes: Vec::new(), edges: Vec::new() }
+    }
+
+    pub fn batch(&self) -> u64 {
+        self.batch
+    }
+
+    pub fn len(&self) -> u32 {
+        self.nodes.len() as u32
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Output shape of a previously added node.
+    pub fn shape(&self, v: NodeId) -> &[u32] {
+        &self.nodes[v.0 as usize].shape
+    }
+
+    /// Add a node whose output tensor has `shape` (excluding batch), wired
+    /// from `inputs`. Memory is `batch · Π shape · 4` bytes; time is the op
+    /// default. Returns the new node's id.
+    pub fn add(
+        &mut self,
+        name: impl Into<String>,
+        op: OpKind,
+        shape: &[u32],
+        inputs: &[NodeId],
+    ) -> NodeId {
+        self.add_with(name, op, shape, inputs, 0)
+    }
+
+    /// Like [`Self::add`], with explicit parameter bytes (conv/dense/bn
+    /// weights owned by the node).
+    pub fn add_with(
+        &mut self,
+        name: impl Into<String>,
+        op: OpKind,
+        shape: &[u32],
+        inputs: &[NodeId],
+        param_bytes: u64,
+    ) -> NodeId {
+        let elems: u64 = shape.iter().map(|&d| d as u64).product::<u64>().max(1);
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node {
+            name: name.into(),
+            op,
+            mem: self.batch * elems * BYTES_PER_ELEM,
+            time: op.default_time_cost(),
+            shape: shape.to_vec(),
+            param_bytes,
+        });
+        for &src in inputs {
+            assert!(src.0 < id.0, "inputs must precede the node (got {} -> {})", src.0, id.0);
+            self.edges.push((src, id));
+        }
+        id
+    }
+
+    /// Add a node with explicit memory/time costs (for synthetic graphs and
+    /// tests that want exact numbers rather than shape-derived ones).
+    pub fn add_raw(
+        &mut self,
+        name: impl Into<String>,
+        op: OpKind,
+        mem: u64,
+        time: u64,
+        inputs: &[NodeId],
+    ) -> NodeId {
+        let id = NodeId(self.nodes.len() as u32);
+        self.nodes.push(Node {
+            name: name.into(),
+            op,
+            mem,
+            time,
+            shape: vec![],
+            param_bytes: 0,
+        });
+        for &src in inputs {
+            self.edges.push((src, id));
+        }
+        id
+    }
+
+    /// Finalize into an immutable [`Graph`]. Panics on cycles (impossible
+    /// if only `add*` was used, since inputs must precede nodes).
+    pub fn build(self) -> Graph {
+        Graph::new(self.name, self.nodes, &self.edges)
+    }
+}
+
+/// Convolution output spatial size for input `hw`, kernel `k`, stride `s`,
+/// padding `p`, dilation `d`.
+pub fn conv_out(hw: u32, k: u32, s: u32, p: u32, d: u32) -> u32 {
+    let eff = d * (k - 1) + 1;
+    (hw + 2 * p - eff) / s + 1
+}
+
+/// Conv parameter bytes: `cout·cin·k·k + cout` (weights + bias), fp32.
+pub fn conv_params(cin: u32, cout: u32, k: u32) -> u64 {
+    (cout as u64 * cin as u64 * (k as u64) * (k as u64) + cout as u64) * BYTES_PER_ELEM
+}
+
+/// Dense parameter bytes: `in·out + out`, fp32.
+pub fn dense_params(din: u64, dout: u64) -> u64 {
+    (din * dout + dout) * BYTES_PER_ELEM
+}
+
+/// BatchNorm parameter bytes: 4 vectors of length `c` (γ, β, μ, σ²).
+pub fn bn_params(c: u32) -> u64 {
+    4 * c as u64 * BYTES_PER_ELEM
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_derived_memory() {
+        let mut b = GraphBuilder::new("t", 8);
+        let x = b.add("conv", OpKind::Conv, &[64, 56, 56], &[]);
+        let g = b.build();
+        assert_eq!(g.node(x).mem, 8 * 64 * 56 * 56 * 4);
+        assert_eq!(g.node(x).time, 10, "conv costs 10");
+    }
+
+    #[test]
+    fn non_conv_costs_one() {
+        let mut b = GraphBuilder::new("t", 1);
+        let c = b.add("c", OpKind::Conv, &[1], &[]);
+        let r = b.add("r", OpKind::Activation, &[1], &[c]);
+        let p = b.add("p", OpKind::Pool, &[1], &[r]);
+        let d = b.add("d", OpKind::Dense, &[1], &[p]);
+        let g = b.build();
+        assert_eq!(g.node(c).time, 10);
+        assert_eq!(g.node(r).time, 1);
+        assert_eq!(g.node(p).time, 1);
+        assert_eq!(g.node(d).time, 10);
+    }
+
+    #[test]
+    fn wiring() {
+        let mut b = GraphBuilder::new("t", 1);
+        let a = b.add("a", OpKind::Conv, &[4], &[]);
+        let c = b.add("c", OpKind::Activation, &[4], &[a]);
+        let d = b.add("d", OpKind::Add, &[4], &[a, c]);
+        let g = b.build();
+        assert_eq!(g.preds(d), &[a, c]);
+        assert_eq!(g.succs(a), &[c, d]);
+        assert_eq!(g.topo_order(), &[a, c, d]);
+    }
+
+    #[test]
+    fn conv_arith() {
+        assert_eq!(conv_out(224, 7, 2, 3, 1), 112); // ResNet stem
+        assert_eq!(conv_out(56, 3, 1, 1, 1), 56); // 3x3 same
+        assert_eq!(conv_out(56, 1, 1, 0, 1), 56); // 1x1
+        assert_eq!(conv_out(112, 3, 2, 1, 1), 56); // stride-2 3x3
+        assert_eq!(conv_out(56, 3, 1, 2, 2), 56); // dilated same (PSPNet)
+        assert_eq!(conv_params(3, 64, 7), (64 * 3 * 49 + 64) * 4);
+    }
+}

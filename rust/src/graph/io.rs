@@ -1,0 +1,196 @@
+//! JSON (de)serialization of graphs.
+//!
+//! A stable interchange format so plans can be computed for graphs produced
+//! elsewhere (e.g. exported from a tracing frontend) and so the CLI can
+//! load user-supplied graphs: `repro plan --graph mynet.json --budget 2.5`.
+//!
+//! Format:
+//! ```json
+//! {
+//!   "name": "resnet50",
+//!   "nodes": [{"name":"conv1","op":"conv","mem":123,"time":10,
+//!              "shape":[64,112,112],"param_bytes":37632}, …],
+//!   "edges": [[0,1],[1,2], …]
+//! }
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::{Graph, Node, NodeId, OpKind};
+
+impl Graph {
+    /// Serialize to pretty JSON.
+    pub fn to_json(&self) -> String {
+        let nodes: Vec<Json> = self
+            .nodes()
+            .map(|(_, n)| {
+                Json::obj()
+                    .set("name", n.name.as_str().into())
+                    .set("op", n.op.as_str().into())
+                    .set("mem", n.mem.into())
+                    .set("time", n.time.into())
+                    .set("shape", n.shape.iter().map(|&d| Json::from(d)).collect::<Vec<_>>().into())
+                    .set("param_bytes", n.param_bytes.into())
+            })
+            .collect();
+        let edges: Vec<Json> = self
+            .nodes()
+            .flat_map(|(v, _)| {
+                self.succs(v)
+                    .iter()
+                    .map(move |w| Json::Arr(vec![v.0.into(), w.0.into()]))
+            })
+            .collect();
+        Json::obj()
+            .set("name", self.name.as_str().into())
+            .set("nodes", Json::Arr(nodes))
+            .set("edges", Json::Arr(edges))
+            .to_string_pretty()
+    }
+
+    /// Parse from JSON produced by [`Graph::to_json`] (or hand-written).
+    pub fn from_json(s: &str) -> Result<Graph> {
+        let v = Json::parse(s).context("parsing graph JSON")?;
+        let name = v.get("name").as_str().unwrap_or("unnamed").to_string();
+        let nodes_json = v.get("nodes").as_arr().context("graph JSON: missing 'nodes' array")?;
+        let mut nodes = Vec::with_capacity(nodes_json.len());
+        for (i, nj) in nodes_json.iter().enumerate() {
+            let shape = nj
+                .get("shape")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .map(|d| d.as_u64().map(|x| x as u32))
+                .collect::<Option<Vec<u32>>>()
+                .with_context(|| format!("node {i}: bad shape"))?;
+            nodes.push(Node {
+                name: nj
+                    .get("name")
+                    .as_str()
+                    .map(str::to_string)
+                    .unwrap_or_else(|| format!("n{i}")),
+                op: OpKind::from_str(nj.get("op").as_str().unwrap_or("other")),
+                mem: nj.get("mem").as_u64().with_context(|| format!("node {i}: missing mem"))?,
+                time: nj
+                    .get("time")
+                    .as_u64()
+                    .with_context(|| format!("node {i}: missing time"))?,
+                shape,
+                param_bytes: nj.get("param_bytes").as_u64().unwrap_or(0),
+            });
+        }
+        let n = nodes.len() as u32;
+        let edges_json = v.get("edges").as_arr().context("graph JSON: missing 'edges' array")?;
+        let mut edges = Vec::with_capacity(edges_json.len());
+        for (i, ej) in edges_json.iter().enumerate() {
+            let pair = ej.as_arr().with_context(|| format!("edge {i}: not a pair"))?;
+            if pair.len() != 2 {
+                bail!("edge {i}: expected [from,to]");
+            }
+            let a = pair[0].as_u64().with_context(|| format!("edge {i}: bad endpoint"))? as u32;
+            let b = pair[1].as_u64().with_context(|| format!("edge {i}: bad endpoint"))? as u32;
+            if a >= n || b >= n {
+                bail!("edge ({a},{b}) out of range (graph has {n} nodes)");
+            }
+            if a == b {
+                bail!("self-loop at node {a}");
+            }
+            edges.push((NodeId(a), NodeId(b)));
+        }
+        // Cycle check before Graph::new's panic path, to return Err instead.
+        let mut indeg = vec![0u32; n as usize];
+        let mut succs = vec![Vec::new(); n as usize];
+        for &(a, b) in &edges {
+            indeg[b.0 as usize] += 1;
+            succs[a.0 as usize].push(b);
+        }
+        let mut ready: Vec<NodeId> =
+            (0..n).map(NodeId).filter(|v| indeg[v.0 as usize] == 0).collect();
+        let mut seen = 0u32;
+        while let Some(v) = ready.pop() {
+            seen += 1;
+            for &w in &succs[v.0 as usize] {
+                indeg[w.0 as usize] -= 1;
+                if indeg[w.0 as usize] == 0 {
+                    ready.push(w);
+                }
+            }
+        }
+        if seen != n {
+            bail!("graph JSON contains a cycle");
+        }
+        Ok(Graph::new(name, nodes, &edges))
+    }
+
+    /// Load from a file path.
+    pub fn from_json_file(path: &std::path::Path) -> Result<Graph> {
+        let s = std::fs::read_to_string(path)
+            .with_context(|| format!("reading graph file {}", path.display()))?;
+        Graph::from_json(&s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{GraphBuilder, OpKind};
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut b = GraphBuilder::new("rt", 4);
+        let a = b.add("a", OpKind::Conv, &[16, 8, 8], &[]);
+        let c = b.add("c", OpKind::Activation, &[16, 8, 8], &[a]);
+        let _ = b.add("d", OpKind::Add, &[16, 8, 8], &[a, c]);
+        let g = b.build();
+        let g2 = Graph::from_json(&g.to_json()).unwrap();
+        assert_eq!(g2.len(), g.len());
+        assert_eq!(g2.edge_count(), g.edge_count());
+        assert_eq!(g2.total_mem(), g.total_mem());
+        assert_eq!(g2.topo_order(), g.topo_order());
+        assert_eq!(g2.name, "rt");
+        assert_eq!(g2.node(a).op, OpKind::Conv);
+        assert_eq!(g2.node(a).shape, vec![16, 8, 8]);
+    }
+
+    #[test]
+    fn rejects_cycle() {
+        let json = r#"{
+            "name": "bad", "edges": [[0,1],[1,0]],
+            "nodes": [
+                {"name":"a","op":"other","mem":1,"time":1},
+                {"name":"b","op":"other","mem":1,"time":1}
+            ]
+        }"#;
+        assert!(Graph::from_json(json).unwrap_err().to_string().contains("cycle"));
+    }
+
+    #[test]
+    fn rejects_out_of_range_edge() {
+        let json = r#"{
+            "name": "bad", "edges": [[0,5]],
+            "nodes": [{"name":"a","op":"other","mem":1,"time":1}]
+        }"#;
+        assert!(Graph::from_json(json).unwrap_err().to_string().contains("out of range"));
+    }
+
+    #[test]
+    fn op_kind_roundtrip() {
+        for op in [
+            OpKind::Conv,
+            OpKind::Dense,
+            OpKind::BatchNorm,
+            OpKind::Activation,
+            OpKind::Pool,
+            OpKind::Add,
+            OpKind::Concat,
+            OpKind::Upsample,
+            OpKind::Dropout,
+            OpKind::Softmax,
+            OpKind::Other,
+        ] {
+            assert_eq!(OpKind::from_str(op.as_str()), op);
+        }
+    }
+}

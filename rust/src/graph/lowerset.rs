@@ -1,0 +1,190 @@
+//! Lower-set (order-ideal) machinery.
+//!
+//! The exact DP (§4.2) searches over the full family `L_G` of lower sets;
+//! the approximate DP (§4.3) over the pruned family
+//! `L^Pruned = {L^v | v ∈ V}` of reachability closures. Both are produced
+//! here. `#L_G` can be exponential, so enumeration takes a limit and
+//! reports overflow instead of OOM-ing — the exact planner then falls back
+//! to the approximate family, which matches the paper's practical guidance.
+
+use std::collections::HashSet;
+
+use super::{Graph, NodeId, NodeSet};
+
+/// Cap on the number of lower sets the exhaustive enumeration will produce.
+#[derive(Clone, Copy, Debug)]
+pub struct EnumerationLimit {
+    /// Maximum number of distinct lower sets (including ∅ and V).
+    pub max_ideals: usize,
+}
+
+impl Default for EnumerationLimit {
+    fn default() -> Self {
+        // GoogLeNet-class graphs stay in the tens of thousands; this cap
+        // keeps the exact DP tractable while letting every zoo network
+        // that the paper ran ExactDP on complete.
+        EnumerationLimit { max_ideals: 2_000_000 }
+    }
+}
+
+/// Enumerate **all** lower sets of `g`, or `None` if there are more than
+/// `limit.max_ideals`.
+///
+/// BFS over the ideal lattice: from ideal `L`, every `v ∉ L` whose
+/// predecessors are all in `L` yields the successor ideal `L ∪ {v}`.
+/// Every ideal is reachable from ∅ this way (peel maximal elements).
+/// Results are returned sorted by cardinality then lexicographic word
+/// order, which is the iteration order the exact DP wants ("ascending set
+/// size", Algorithm 1 line 3).
+pub fn enumerate_lower_sets(g: &Graph, limit: EnumerationLimit) -> Option<Vec<NodeSet>> {
+    let n = g.len();
+    let empty = NodeSet::empty(n);
+    let mut seen: HashSet<NodeSet> = HashSet::new();
+    seen.insert(empty.clone());
+    let mut frontier = vec![empty];
+    let mut all: Vec<NodeSet> = Vec::new();
+    while let Some(l) = frontier.pop() {
+        all.push(l.clone());
+        if all.len() > limit.max_ideals {
+            return None;
+        }
+        // Addable nodes: v ∉ L with preds(v) ⊆ L.
+        for v in addable(g, &l).iter() {
+            let mut next = l.clone();
+            next.insert(v);
+            if seen.insert(next.clone()) {
+                frontier.push(next);
+            }
+        }
+    }
+    all.sort_by(|a, b| a.len().cmp(&b.len()).then_with(|| a.words().cmp(b.words())));
+    Some(all)
+}
+
+/// Nodes that can be appended to the ideal `l` (minimal elements of `V\L`).
+pub fn addable(g: &Graph, l: &NodeSet) -> NodeSet {
+    let mut out = NodeSet::empty(g.len());
+    for v in l.complement().iter() {
+        if g.pred_mask(v).is_subset(l) {
+            out.insert(v);
+        }
+    }
+    out
+}
+
+/// The paper's pruned family `L^Pruned = {L^v | v ∈ V} ∪ {∅}`, where
+/// `L^v = {w | v is reachable from w}` (ancestors of `v`, inclusive).
+///
+/// `#L^Pruned ≤ #V + 1`; duplicates (distinct `v` with identical closures)
+/// are collapsed. `V` itself is always included: for a single-sink graph it
+/// equals `L^sink`; for multi-sink graphs we add it explicitly so the DP
+/// can terminate at `opt[V, ·]`.
+pub fn pruned_lower_sets(g: &Graph) -> Vec<NodeSet> {
+    let n = g.len();
+    let mut seen: HashSet<NodeSet> = HashSet::new();
+    seen.insert(NodeSet::empty(n));
+    for v in 0..n {
+        seen.insert(g.ancestors_closure(NodeId(v)));
+    }
+    seen.insert(NodeSet::full(n));
+    let mut all: Vec<NodeSet> = seen.into_iter().collect();
+    all.sort_by(|a, b| a.len().cmp(&b.len()).then_with(|| a.words().cmp(b.words())));
+    all
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Graph, Node, OpKind};
+    use super::*;
+
+    fn mk(n: u32, edges: &[(u32, u32)]) -> Graph {
+        let nodes = (0..n)
+            .map(|i| Node {
+                name: format!("n{i}"),
+                op: OpKind::Other,
+                mem: 1,
+                time: 1,
+                shape: vec![],
+                param_bytes: 0,
+            })
+            .collect();
+        let e: Vec<_> = edges.iter().map(|&(a, b)| (NodeId(a), NodeId(b))).collect();
+        Graph::new("t", nodes, &e)
+    }
+
+    #[test]
+    fn chain_has_n_plus_one_ideals() {
+        let g = mk(5, &[(0, 1), (1, 2), (2, 3), (3, 4)]);
+        let ideals = enumerate_lower_sets(&g, EnumerationLimit::default()).unwrap();
+        assert_eq!(ideals.len(), 6); // ∅ plus 5 prefixes
+        for l in &ideals {
+            assert!(g.is_lower_set(l));
+        }
+    }
+
+    #[test]
+    fn antichain_has_2_pow_n_ideals() {
+        let g = mk(4, &[]); // 4 isolated nodes
+        let ideals = enumerate_lower_sets(&g, EnumerationLimit::default()).unwrap();
+        assert_eq!(ideals.len(), 16);
+    }
+
+    #[test]
+    fn respects_limit() {
+        let g = mk(10, &[]); // 2^10 ideals
+        assert!(enumerate_lower_sets(&g, EnumerationLimit { max_ideals: 100 }).is_none());
+    }
+
+    #[test]
+    fn sorted_by_size() {
+        let g = mk(4, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let ideals = enumerate_lower_sets(&g, EnumerationLimit::default()).unwrap();
+        for w in ideals.windows(2) {
+            assert!(w[0].len() <= w[1].len());
+        }
+        assert!(ideals.first().unwrap().is_empty());
+        assert_eq!(ideals.last().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn paper_cardinality_bounds() {
+        // #V ≤ #L_G ≤ 2^#V for any graph with at least one node (§2 counts
+        // non-empty lower sets; with ∅ included the lower bound still holds).
+        for (n, edges) in [
+            (5u32, vec![(0u32, 1u32), (1, 2), (2, 3), (3, 4)]),
+            (4, vec![(0, 1), (0, 2), (1, 3), (2, 3)]),
+            (6, vec![(0, 1), (1, 2), (0, 3), (3, 4), (2, 5), (4, 5)]),
+        ] {
+            let g = mk(n, &edges);
+            let count = enumerate_lower_sets(&g, EnumerationLimit::default()).unwrap().len();
+            assert!(count >= n as usize);
+            assert!(count <= 1 << n);
+        }
+    }
+
+    #[test]
+    fn pruned_family_members_are_lower_sets() {
+        let g = mk(6, &[(0, 1), (1, 2), (0, 3), (3, 4), (2, 5), (4, 5)]);
+        let pruned = pruned_lower_sets(&g);
+        assert!(pruned.len() <= 6 + 2);
+        for l in &pruned {
+            assert!(g.is_lower_set(l));
+        }
+        assert!(pruned.iter().any(|l| l.is_empty()));
+        assert!(pruned.iter().any(|l| l.len() == 6));
+        // Pruned ⊆ full family.
+        let all = enumerate_lower_sets(&g, EnumerationLimit::default()).unwrap();
+        for l in &pruned {
+            assert!(all.contains(l));
+        }
+    }
+
+    #[test]
+    fn addable_matches_definition() {
+        let g = mk(4, &[(0, 1), (0, 2), (1, 3), (2, 3)]);
+        let l = NodeSet::from_iter(4, [NodeId(0)]);
+        assert_eq!(addable(&g, &l), NodeSet::from_iter(4, [NodeId(1), NodeId(2)]));
+        let l2 = NodeSet::empty(4);
+        assert_eq!(addable(&g, &l2), NodeSet::from_iter(4, [NodeId(0)]));
+    }
+}

@@ -1,0 +1,467 @@
+//! Computation-graph substrate.
+//!
+//! The paper models a network as a DAG `G = (V, E)` over *intermediate*
+//! variables (inputs and parameters excluded), with a forward-compute cost
+//! `T_v > 0` and a memory cost `M_v > 0` per node. Everything the planners
+//! need — neighborhoods `δ±(S)`, lower sets `L ≺ V`, boundaries `∂(L)`,
+//! reachability closures, lower-set enumeration, articulation points — is
+//! implemented here on top of [`NodeSet`] bitsets.
+
+mod articulation;
+pub mod builder;
+mod io;
+mod lowerset;
+mod nodeset;
+mod topo;
+
+pub use articulation::articulation_points;
+pub use builder::GraphBuilder;
+pub use lowerset::{addable, enumerate_lower_sets, pruned_lower_sets, EnumerationLimit};
+pub use nodeset::NodeSet;
+pub use topo::{is_acyclic, topological_order};
+
+/// Index of a node in its [`Graph`]. Dense, `0..graph.len()`.
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Debug)]
+pub struct NodeId(pub u32);
+
+/// Operator kind, used for cost assignment and for the execution engine's
+/// artifact dispatch. The planner itself only reads `time`/`mem`.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum OpKind {
+    /// Convolution (the paper assigns these `T_v = 10`).
+    Conv,
+    /// Fully-connected / matmul (treated as conv-weight compute, `T_v = 10`).
+    Dense,
+    /// Batch normalization.
+    BatchNorm,
+    /// Elementwise activation (ReLU/GELU/…).
+    Activation,
+    /// Pooling (max/avg).
+    Pool,
+    /// Elementwise add (residual join).
+    Add,
+    /// Channel concatenation (DenseNet/U-Net/GoogLeNet joins).
+    Concat,
+    /// Upsampling / transposed conv.
+    Upsample,
+    /// Dropout.
+    Dropout,
+    /// Softmax / loss head.
+    Softmax,
+    /// Anything else.
+    Other,
+}
+
+impl OpKind {
+    /// The paper's relative forward-compute cost: conv-like nodes are 10,
+    /// everything else 1 (§3, last paragraph).
+    pub fn default_time_cost(self) -> u64 {
+        match self {
+            OpKind::Conv | OpKind::Dense => 10,
+            _ => 1,
+        }
+    }
+}
+
+impl OpKind {
+    /// Stable string name used in the JSON interchange format.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            OpKind::Conv => "conv",
+            OpKind::Dense => "dense",
+            OpKind::BatchNorm => "batch_norm",
+            OpKind::Activation => "activation",
+            OpKind::Pool => "pool",
+            OpKind::Add => "add",
+            OpKind::Concat => "concat",
+            OpKind::Upsample => "upsample",
+            OpKind::Dropout => "dropout",
+            OpKind::Softmax => "softmax",
+            OpKind::Other => "other",
+        }
+    }
+
+    /// Inverse of [`OpKind::as_str`]; unknown names map to `Other`.
+    pub fn from_str(s: &str) -> OpKind {
+        match s {
+            "conv" => OpKind::Conv,
+            "dense" => OpKind::Dense,
+            "batch_norm" => OpKind::BatchNorm,
+            "activation" => OpKind::Activation,
+            "pool" => OpKind::Pool,
+            "add" => OpKind::Add,
+            "concat" => OpKind::Concat,
+            "upsample" => OpKind::Upsample,
+            "dropout" => OpKind::Dropout,
+            "softmax" => OpKind::Softmax,
+            _ => OpKind::Other,
+        }
+    }
+}
+
+/// One intermediate variable of the network.
+#[derive(Clone, Debug)]
+pub struct Node {
+    /// Human-readable name (`conv2_3/bn`, `layer4/add`, …).
+    pub name: String,
+    /// Operator kind.
+    pub op: OpKind,
+    /// Memory cost `M_v` in bytes of the node's output.
+    pub mem: u64,
+    /// Forward compute cost `T_v` (relative units).
+    pub time: u64,
+    /// Output tensor shape excluding batch (for diagnostics / the executor).
+    pub shape: Vec<u32>,
+    /// Bytes of trainable parameters owned by this node (conv/dense/bn
+    /// weights). Not part of `M_v`; reported separately like the paper's
+    /// Table 1 which *includes* parameter memory in the totals.
+    pub param_bytes: u64,
+}
+
+/// Immutable computation DAG with per-node costs and bitset adjacency.
+///
+/// Edges `(v, w)` mean "`v` is directly required to compute `w`".
+#[derive(Clone, Debug)]
+pub struct Graph {
+    nodes: Vec<Node>,
+    preds: Vec<Vec<NodeId>>,
+    succs: Vec<Vec<NodeId>>,
+    pred_mask: Vec<NodeSet>,
+    succ_mask: Vec<NodeSet>,
+    topo: Vec<NodeId>,
+    /// Optional model-level name for reports.
+    pub name: String,
+}
+
+impl Graph {
+    /// Construct from nodes and an edge list. Panics if the edge list has
+    /// out-of-range endpoints or the graph is cyclic — graphs here are
+    /// always built by [`GraphBuilder`] or deserialized from trusted JSON.
+    pub fn new(name: impl Into<String>, nodes: Vec<Node>, edges: &[(NodeId, NodeId)]) -> Self {
+        let n = nodes.len() as u32;
+        let mut preds = vec![Vec::new(); n as usize];
+        let mut succs = vec![Vec::new(); n as usize];
+        let mut pred_mask = vec![NodeSet::empty(n); n as usize];
+        let mut succ_mask = vec![NodeSet::empty(n); n as usize];
+        for &(v, w) in edges {
+            assert!(v.0 < n && w.0 < n, "edge ({},{}) out of range", v.0, w.0);
+            assert_ne!(v, w, "self loop at {}", v.0);
+            if !pred_mask[w.0 as usize].contains(v) {
+                preds[w.0 as usize].push(v);
+                succs[v.0 as usize].push(w);
+                pred_mask[w.0 as usize].insert(v);
+                succ_mask[v.0 as usize].insert(w);
+            }
+        }
+        let mut g = Graph {
+            nodes,
+            preds,
+            succs,
+            pred_mask,
+            succ_mask,
+            topo: Vec::new(),
+            name: name.into(),
+        };
+        g.topo = topological_order(&g).expect("graph must be acyclic");
+        g
+    }
+
+    /// Number of nodes `#V`.
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.nodes.len() as u32
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    #[inline]
+    pub fn node(&self, v: NodeId) -> &Node {
+        &self.nodes[v.0 as usize]
+    }
+
+    #[inline]
+    pub fn nodes(&self) -> impl Iterator<Item = (NodeId, &Node)> {
+        self.nodes.iter().enumerate().map(|(i, n)| (NodeId(i as u32), n))
+    }
+
+    #[inline]
+    pub fn preds(&self, v: NodeId) -> &[NodeId] {
+        &self.preds[v.0 as usize]
+    }
+
+    #[inline]
+    pub fn succs(&self, v: NodeId) -> &[NodeId] {
+        &self.succs[v.0 as usize]
+    }
+
+    #[inline]
+    pub fn pred_mask(&self, v: NodeId) -> &NodeSet {
+        &self.pred_mask[v.0 as usize]
+    }
+
+    #[inline]
+    pub fn succ_mask(&self, v: NodeId) -> &NodeSet {
+        &self.succ_mask[v.0 as usize]
+    }
+
+    /// A cached topological order of all nodes.
+    #[inline]
+    pub fn topo_order(&self) -> &[NodeId] {
+        &self.topo
+    }
+
+    /// Total edge count.
+    pub fn edge_count(&self) -> usize {
+        self.succs.iter().map(|s| s.len()).sum()
+    }
+
+    /// `M(S) = Σ_{v∈S} M_v` in bytes.
+    pub fn mem_of(&self, s: &NodeSet) -> u64 {
+        s.iter().map(|v| self.node(v).mem).sum()
+    }
+
+    /// `T(S) = Σ_{v∈S} T_v`.
+    pub fn time_of(&self, s: &NodeSet) -> u64 {
+        s.iter().map(|v| self.node(v).time).sum()
+    }
+
+    /// `T(V)` — one full forward pass.
+    pub fn total_time(&self) -> u64 {
+        self.nodes.iter().map(|n| n.time).sum()
+    }
+
+    /// `M(V)` in bytes.
+    pub fn total_mem(&self) -> u64 {
+        self.nodes.iter().map(|n| n.mem).sum()
+    }
+
+    /// Total parameter bytes (weights), reported alongside activations.
+    pub fn total_param_bytes(&self) -> u64 {
+        self.nodes.iter().map(|n| n.param_bytes).sum()
+    }
+
+    /// `δ+(S)`: nodes with an incoming edge from `S` (may intersect `S`).
+    pub fn delta_plus(&self, s: &NodeSet) -> NodeSet {
+        let mut out = NodeSet::empty(self.len());
+        for v in s.iter() {
+            out.union_with(&self.succ_mask[v.0 as usize]);
+        }
+        out
+    }
+
+    /// `δ−(S)`: nodes with an outgoing edge into `S` (may intersect `S`).
+    pub fn delta_minus(&self, s: &NodeSet) -> NodeSet {
+        let mut out = NodeSet::empty(self.len());
+        for v in s.iter() {
+            out.union_with(&self.pred_mask[v.0 as usize]);
+        }
+        out
+    }
+
+    /// Is `L` a lower set, i.e. no edge from `V \ L` into `L`
+    /// (equivalently `δ−(L) ⊆ L`)?
+    pub fn is_lower_set(&self, l: &NodeSet) -> bool {
+        l.iter().all(|v| self.pred_mask[v.0 as usize].is_subset(l))
+    }
+
+    /// Boundary `∂(L) = δ−(V\L) ∩ L`: members of `L` with a successor
+    /// outside `L`. (Only meaningful when `L` is a lower set, but defined
+    /// for any set.)
+    pub fn boundary(&self, l: &NodeSet) -> NodeSet {
+        let mut out = NodeSet::empty(self.len());
+        for v in l.iter() {
+            if !self.succ_mask[v.0 as usize].is_subset(l) {
+                out.insert(v);
+            }
+        }
+        out
+    }
+
+    /// `δ+(L) \ L` — the forward frontier outside `L` (term (iii) of Eq. 2).
+    pub fn frontier(&self, l: &NodeSet) -> NodeSet {
+        let mut f = self.delta_plus(l);
+        f.subtract(l);
+        f
+    }
+
+    /// `δ−(δ+(L)) \ L` — co-inputs of the frontier (term (iv) of Eq. 2).
+    pub fn frontier_coinputs(&self, l: &NodeSet) -> NodeSet {
+        let mut c = self.delta_minus(&self.delta_plus(l));
+        c.subtract(l);
+        c
+    }
+
+    /// All nodes from which `v` is reachable, *including* `v` — the paper's
+    /// `L^v = {w | v reachable from w}`, always a lower set.
+    pub fn ancestors_closure(&self, v: NodeId) -> NodeSet {
+        let mut seen = NodeSet::empty(self.len());
+        let mut stack = vec![v];
+        seen.insert(v);
+        while let Some(u) = stack.pop() {
+            for &p in self.preds(u) {
+                if !seen.contains(p) {
+                    seen.insert(p);
+                    stack.push(p);
+                }
+            }
+        }
+        seen
+    }
+
+    /// All nodes reachable from `v`, including `v`.
+    pub fn descendants_closure(&self, v: NodeId) -> NodeSet {
+        let mut seen = NodeSet::empty(self.len());
+        let mut stack = vec![v];
+        seen.insert(v);
+        while let Some(u) = stack.pop() {
+            for &s in self.succs(u) {
+                if !seen.contains(s) {
+                    seen.insert(s);
+                    stack.push(s);
+                }
+            }
+        }
+        seen
+    }
+
+    /// Source nodes (no predecessors among intermediates).
+    pub fn sources(&self) -> Vec<NodeId> {
+        (0..self.len()).map(NodeId).filter(|&v| self.preds(v).is_empty()).collect()
+    }
+
+    /// Sink nodes (no successors).
+    pub fn sinks(&self) -> Vec<NodeId> {
+        (0..self.len()).map(NodeId).filter(|&v| self.succs(v).is_empty()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Diamond: 0 → {1,2} → 3.
+    pub(crate) fn diamond() -> Graph {
+        let nodes = (0..4)
+            .map(|i| Node {
+                name: format!("n{i}"),
+                op: OpKind::Other,
+                mem: 10 * (i + 1) as u64,
+                time: 1,
+                shape: vec![],
+                param_bytes: 0,
+            })
+            .collect();
+        Graph::new(
+            "diamond",
+            nodes,
+            &[
+                (NodeId(0), NodeId(1)),
+                (NodeId(0), NodeId(2)),
+                (NodeId(1), NodeId(3)),
+                (NodeId(2), NodeId(3)),
+            ],
+        )
+    }
+
+    #[test]
+    fn basic_shape() {
+        let g = diamond();
+        assert_eq!(g.len(), 4);
+        assert_eq!(g.edge_count(), 4);
+        assert_eq!(g.sources(), vec![NodeId(0)]);
+        assert_eq!(g.sinks(), vec![NodeId(3)]);
+        assert_eq!(g.total_mem(), 10 + 20 + 30 + 40);
+        assert_eq!(g.total_time(), 4);
+    }
+
+    #[test]
+    fn delta_and_boundary() {
+        let g = diamond();
+        let l = NodeSet::from_iter(4, [NodeId(0), NodeId(1)]);
+        assert!(g.is_lower_set(&l));
+        // δ+({0,1}) = {1,2,3}
+        let dp = g.delta_plus(&l);
+        assert_eq!(dp, NodeSet::from_iter(4, [NodeId(1), NodeId(2), NodeId(3)]));
+        // frontier = {2,3}
+        assert_eq!(g.frontier(&l), NodeSet::from_iter(4, [NodeId(2), NodeId(3)]));
+        // ∂({0,1}): 0 has succ 2 outside, 1 has succ 3 outside ⇒ both.
+        assert_eq!(g.boundary(&l), l);
+        // {1} is not a lower set (pred 0 missing).
+        let not_l = NodeSet::from_iter(4, [NodeId(1)]);
+        assert!(!g.is_lower_set(&not_l));
+    }
+
+    #[test]
+    fn frontier_coinputs_matches_paper_term() {
+        let g = diamond();
+        let l = NodeSet::from_iter(4, [NodeId(0), NodeId(1)]);
+        // δ+(L) = {1,2,3}; δ−({1,2,3}) = {0,1,2}; minus L = {2}.
+        assert_eq!(g.frontier_coinputs(&l), NodeSet::from_iter(4, [NodeId(2)]));
+    }
+
+    #[test]
+    fn closures() {
+        let g = diamond();
+        assert_eq!(
+            g.ancestors_closure(NodeId(3)),
+            NodeSet::full(4),
+            "everything reaches the sink"
+        );
+        assert_eq!(
+            g.ancestors_closure(NodeId(1)),
+            NodeSet::from_iter(4, [NodeId(0), NodeId(1)])
+        );
+        assert_eq!(
+            g.descendants_closure(NodeId(1)),
+            NodeSet::from_iter(4, [NodeId(1), NodeId(3)])
+        );
+        assert!(g.is_lower_set(&g.ancestors_closure(NodeId(2))));
+    }
+
+    #[test]
+    fn lower_set_count_bounds() {
+        // #V ≤ #L_G ≤ 2^#V (§2). For the diamond: ∅,{0},{0,1},{0,2},{0,1,2},V = 6.
+        let g = diamond();
+        let ideals =
+            enumerate_lower_sets(&g, EnumerationLimit::default()).expect("small graph");
+        assert_eq!(ideals.len(), 6);
+        for l in &ideals {
+            assert!(g.is_lower_set(l));
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "acyclic")]
+    fn rejects_cycles() {
+        let nodes = (0..2)
+            .map(|i| Node {
+                name: format!("n{i}"),
+                op: OpKind::Other,
+                mem: 1,
+                time: 1,
+                shape: vec![],
+                param_bytes: 0,
+            })
+            .collect();
+        Graph::new("cyc", nodes, &[(NodeId(0), NodeId(1)), (NodeId(1), NodeId(0))]);
+    }
+
+    #[test]
+    fn duplicate_edges_collapse() {
+        let nodes = (0..2)
+            .map(|i| Node {
+                name: format!("n{i}"),
+                op: OpKind::Other,
+                mem: 1,
+                time: 1,
+                shape: vec![],
+                param_bytes: 0,
+            })
+            .collect();
+        let g = Graph::new("dup", nodes, &[(NodeId(0), NodeId(1)), (NodeId(0), NodeId(1))]);
+        assert_eq!(g.edge_count(), 1);
+    }
+}

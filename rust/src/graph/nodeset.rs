@@ -1,0 +1,292 @@
+//! Fixed-width bitset over graph nodes.
+//!
+//! All set algebra in the planners (δ±, boundaries, lower-set transitions)
+//! runs on these bitsets; for the network zoo (`#V ≤ 1024`) every operation
+//! is a handful of word-wise instructions. Width is fixed per graph, so two
+//! sets from the same graph always have the same number of words.
+
+use std::fmt;
+use std::hash::{Hash, Hasher};
+
+use super::NodeId;
+
+/// A set of nodes of one particular [`super::Graph`], stored as a bitset.
+///
+/// Invariant: `words.len() == words_for(capacity)` and bits at positions
+/// `>= capacity` are always zero (operations re-normalize the tail word).
+#[derive(Clone, PartialEq, Eq)]
+pub struct NodeSet {
+    words: Vec<u64>,
+    capacity: u32,
+}
+
+#[inline]
+fn words_for(capacity: u32) -> usize {
+    ((capacity as usize) + 63) / 64
+}
+
+impl NodeSet {
+    /// The empty set over a universe of `capacity` nodes.
+    pub fn empty(capacity: u32) -> Self {
+        NodeSet { words: vec![0; words_for(capacity)], capacity }
+    }
+
+    /// The full set `{0, …, capacity-1}`.
+    pub fn full(capacity: u32) -> Self {
+        let mut s = NodeSet { words: vec![!0u64; words_for(capacity)], capacity };
+        s.normalize();
+        s
+    }
+
+    /// Build a set from an iterator of node ids.
+    pub fn from_iter<I: IntoIterator<Item = NodeId>>(capacity: u32, iter: I) -> Self {
+        let mut s = Self::empty(capacity);
+        for v in iter {
+            s.insert(v);
+        }
+        s
+    }
+
+    /// Number of nodes in the universe (not in the set).
+    #[inline]
+    pub fn capacity(&self) -> u32 {
+        self.capacity
+    }
+
+    /// Zero out any bits beyond `capacity`.
+    #[inline]
+    fn normalize(&mut self) {
+        let rem = (self.capacity as usize) % 64;
+        if rem != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << rem) - 1;
+            }
+        }
+    }
+
+    #[inline]
+    pub fn insert(&mut self, v: NodeId) {
+        debug_assert!(v.0 < self.capacity);
+        self.words[(v.0 / 64) as usize] |= 1u64 << (v.0 % 64);
+    }
+
+    #[inline]
+    pub fn remove(&mut self, v: NodeId) {
+        debug_assert!(v.0 < self.capacity);
+        self.words[(v.0 / 64) as usize] &= !(1u64 << (v.0 % 64));
+    }
+
+    #[inline]
+    pub fn contains(&self, v: NodeId) -> bool {
+        debug_assert!(v.0 < self.capacity);
+        self.words[(v.0 / 64) as usize] & (1u64 << (v.0 % 64)) != 0
+    }
+
+    /// Cardinality.
+    #[inline]
+    pub fn len(&self) -> u32 {
+        self.words.iter().map(|w| w.count_ones()).sum()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+
+    /// `self ⊆ other`.
+    #[inline]
+    pub fn is_subset(&self, other: &NodeSet) -> bool {
+        debug_assert_eq!(self.capacity, other.capacity);
+        self.words.iter().zip(&other.words).all(|(a, b)| a & !b == 0)
+    }
+
+    /// `self ⊊ other`.
+    #[inline]
+    pub fn is_strict_subset(&self, other: &NodeSet) -> bool {
+        self.is_subset(other) && self != other
+    }
+
+    /// `self ∩ other == ∅`.
+    #[inline]
+    pub fn is_disjoint(&self, other: &NodeSet) -> bool {
+        debug_assert_eq!(self.capacity, other.capacity);
+        self.words.iter().zip(&other.words).all(|(a, b)| a & b == 0)
+    }
+
+    /// In-place union.
+    #[inline]
+    pub fn union_with(&mut self, other: &NodeSet) {
+        debug_assert_eq!(self.capacity, other.capacity);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a |= b;
+        }
+    }
+
+    /// In-place intersection.
+    #[inline]
+    pub fn intersect_with(&mut self, other: &NodeSet) {
+        debug_assert_eq!(self.capacity, other.capacity);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= b;
+        }
+    }
+
+    /// In-place difference (`self \ other`).
+    #[inline]
+    pub fn subtract(&mut self, other: &NodeSet) {
+        debug_assert_eq!(self.capacity, other.capacity);
+        for (a, b) in self.words.iter_mut().zip(&other.words) {
+            *a &= !b;
+        }
+    }
+
+    /// `self ∪ other` as a new set.
+    #[inline]
+    pub fn union(&self, other: &NodeSet) -> NodeSet {
+        let mut s = self.clone();
+        s.union_with(other);
+        s
+    }
+
+    /// `self ∩ other` as a new set.
+    #[inline]
+    pub fn intersection(&self, other: &NodeSet) -> NodeSet {
+        let mut s = self.clone();
+        s.intersect_with(other);
+        s
+    }
+
+    /// `self \ other` as a new set.
+    #[inline]
+    pub fn difference(&self, other: &NodeSet) -> NodeSet {
+        let mut s = self.clone();
+        s.subtract(other);
+        s
+    }
+
+    /// Complement within the universe.
+    #[inline]
+    pub fn complement(&self) -> NodeSet {
+        let mut s = NodeSet {
+            words: self.words.iter().map(|w| !w).collect(),
+            capacity: self.capacity,
+        };
+        s.normalize();
+        s
+    }
+
+    /// Iterate over members in ascending id order.
+    pub fn iter(&self) -> impl Iterator<Item = NodeId> + '_ {
+        self.words.iter().enumerate().flat_map(|(wi, &w)| {
+            let mut w = w;
+            std::iter::from_fn(move || {
+                if w == 0 {
+                    None
+                } else {
+                    let bit = w.trailing_zeros();
+                    w &= w - 1;
+                    Some(NodeId(wi as u32 * 64 + bit))
+                }
+            })
+        })
+    }
+
+    /// Raw words — used by the ideal interner for hashing.
+    #[inline]
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+}
+
+impl Hash for NodeSet {
+    fn hash<H: Hasher>(&self, state: &mut H) {
+        self.words.hash(state);
+    }
+}
+
+impl fmt::Debug for NodeSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, v) in self.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            write!(f, "{}", v.0)?;
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ids(v: &[u32]) -> Vec<NodeId> {
+        v.iter().map(|&i| NodeId(i)).collect()
+    }
+
+    #[test]
+    fn empty_and_full() {
+        let e = NodeSet::empty(70);
+        assert!(e.is_empty());
+        assert_eq!(e.len(), 0);
+        let f = NodeSet::full(70);
+        assert_eq!(f.len(), 70);
+        assert!(e.is_subset(&f));
+        assert!(!f.is_subset(&e));
+        assert_eq!(f.complement(), e);
+        assert_eq!(e.complement(), f);
+    }
+
+    #[test]
+    fn insert_remove_contains() {
+        let mut s = NodeSet::empty(130);
+        for i in [0u32, 63, 64, 65, 127, 128, 129] {
+            assert!(!s.contains(NodeId(i)));
+            s.insert(NodeId(i));
+            assert!(s.contains(NodeId(i)));
+        }
+        assert_eq!(s.len(), 7);
+        s.remove(NodeId(64));
+        assert!(!s.contains(NodeId(64)));
+        assert_eq!(s.len(), 6);
+    }
+
+    #[test]
+    fn set_algebra() {
+        let a = NodeSet::from_iter(10, ids(&[1, 2, 3, 4]));
+        let b = NodeSet::from_iter(10, ids(&[3, 4, 5, 6]));
+        assert_eq!(a.union(&b), NodeSet::from_iter(10, ids(&[1, 2, 3, 4, 5, 6])));
+        assert_eq!(a.intersection(&b), NodeSet::from_iter(10, ids(&[3, 4])));
+        assert_eq!(a.difference(&b), NodeSet::from_iter(10, ids(&[1, 2])));
+        assert!(!a.is_disjoint(&b));
+        assert!(a.difference(&b).is_disjoint(&b));
+    }
+
+    #[test]
+    fn subset_relations() {
+        let a = NodeSet::from_iter(10, ids(&[1, 2]));
+        let b = NodeSet::from_iter(10, ids(&[1, 2, 3]));
+        assert!(a.is_subset(&b));
+        assert!(a.is_strict_subset(&b));
+        assert!(b.is_subset(&b));
+        assert!(!b.is_strict_subset(&b));
+        assert!(!b.is_subset(&a));
+    }
+
+    #[test]
+    fn iter_ascending() {
+        let s = NodeSet::from_iter(200, ids(&[199, 0, 64, 100]));
+        let got: Vec<u32> = s.iter().map(|v| v.0).collect();
+        assert_eq!(got, vec![0, 64, 100, 199]);
+    }
+
+    #[test]
+    fn complement_normalizes_tail() {
+        // capacity not a multiple of 64: complement must not set ghost bits.
+        let s = NodeSet::empty(65);
+        let c = s.complement();
+        assert_eq!(c.len(), 65);
+        assert_eq!(c.words()[1], 1); // only bit 64 set in the tail word
+    }
+}

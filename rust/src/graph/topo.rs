@@ -1,0 +1,98 @@
+//! Topological ordering and acyclicity checking (Kahn's algorithm).
+
+use super::{Graph, NodeId};
+
+/// Kahn's algorithm. Returns `None` if the graph has a cycle.
+///
+/// Ties are broken by node id, so the order is deterministic — the
+/// simulator and the executor both rely on a stable order for reproducible
+/// traces.
+pub fn topological_order(g: &Graph) -> Option<Vec<NodeId>> {
+    let n = g.len() as usize;
+    let mut indeg: Vec<u32> = (0..n).map(|v| g.preds(NodeId(v as u32)).len() as u32).collect();
+    // Binary-heap-free deterministic variant: scan a sorted ready list.
+    let mut ready: Vec<NodeId> =
+        (0..n as u32).map(NodeId).filter(|&v| indeg[v.0 as usize] == 0).collect();
+    ready.sort_unstable_by(|a, b| b.cmp(a)); // pop smallest from the back
+    let mut order = Vec::with_capacity(n);
+    while let Some(v) = ready.pop() {
+        order.push(v);
+        let mut newly = Vec::new();
+        for &w in g.succs(v) {
+            indeg[w.0 as usize] -= 1;
+            if indeg[w.0 as usize] == 0 {
+                newly.push(w);
+            }
+        }
+        // Keep `ready` sorted descending so pop() yields the smallest id.
+        for w in newly {
+            let pos = ready.partition_point(|x| x.0 > w.0);
+            ready.insert(pos, w);
+        }
+    }
+    if order.len() == n {
+        Some(order)
+    } else {
+        None
+    }
+}
+
+/// Convenience predicate.
+pub fn is_acyclic(g: &Graph) -> bool {
+    topological_order(g).is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{Graph, Node, NodeId, NodeSet, OpKind};
+
+    fn mk(n: u32, edges: &[(u32, u32)]) -> Graph {
+        let nodes = (0..n)
+            .map(|i| Node {
+                name: format!("n{i}"),
+                op: OpKind::Other,
+                mem: 1,
+                time: 1,
+                shape: vec![],
+                param_bytes: 0,
+            })
+            .collect();
+        let e: Vec<_> = edges.iter().map(|&(a, b)| (NodeId(a), NodeId(b))).collect();
+        Graph::new("t", nodes, &e)
+    }
+
+    #[test]
+    fn chain_order() {
+        let g = mk(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(g.topo_order(), &[NodeId(0), NodeId(1), NodeId(2), NodeId(3)]);
+    }
+
+    #[test]
+    fn order_respects_edges_and_is_deterministic() {
+        let g = mk(6, &[(0, 2), (1, 2), (2, 3), (2, 4), (3, 5), (4, 5)]);
+        let order = g.topo_order();
+        let pos: Vec<usize> =
+            (0..6).map(|v| order.iter().position(|&x| x.0 == v).unwrap()).collect();
+        for (v, n) in g.nodes() {
+            for &w in g.succs(v) {
+                assert!(pos[v.0 as usize] < pos[w.0 as usize], "{:?}", n.name);
+            }
+        }
+        // Deterministic: same graph twice gives same order.
+        let g2 = mk(6, &[(0, 2), (1, 2), (2, 3), (2, 4), (3, 5), (4, 5)]);
+        assert_eq!(g.topo_order(), g2.topo_order());
+        // Smallest-id tiebreak: 0 before 1, 3 before 4.
+        assert!(pos[0] < pos[1]);
+        assert!(pos[3] < pos[4]);
+    }
+
+    #[test]
+    fn every_topo_prefix_is_a_lower_set() {
+        let g = mk(7, &[(0, 1), (0, 2), (1, 3), (2, 3), (3, 4), (2, 5), (5, 6), (4, 6)]);
+        let mut prefix = NodeSet::empty(7);
+        for &v in g.topo_order() {
+            prefix.insert(v);
+            assert!(g.is_lower_set(&prefix));
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! # recompute — graph-theoretic recomputation for memory-efficient backprop
+//!
+//! A production reimplementation of *"A Graph Theoretic Framework of
+//! Recomputation Algorithms for Memory-Efficient Backpropagation"*
+//! (Kusumoto, Inoue, Watanabe, Akiba & Koyama, NeurIPS 2019).
+//!
+//! The library is organized bottom-up:
+//!
+//! - [`graph`] — the computation-DAG substrate: bitset node sets, lower
+//!   sets (order ideals), boundaries, δ±-neighborhoods, enumeration,
+//!   articulation points.
+//! - [`models`] — a network zoo (ResNet, VGG, DenseNet, GoogLeNet, U-Net,
+//!   PSPNet, MLP/transformer towers) with shape-propagated memory costs,
+//!   reproducing the graphs of the paper's evaluation.
+//! - [`planner`] — the paper's contribution: the general recomputation
+//!   problem, the exhaustive DFS oracle, the exact DP (Algorithm 1), the
+//!   approximate DP over `L^Pruned`, time-centric vs memory-centric
+//!   strategies, minimal-budget binary search, and Chen's √n checkpointing
+//!   baseline.
+//! - [`sim`] — an event-accurate execution simulator with liveness
+//!   analysis, measuring true peak memory of any strategy (Tables 1 & 2).
+//! - [`runtime`] — PJRT wrapper: loads AOT-compiled HLO-text artifacts
+//!   produced by the JAX/Pallas build path and executes them from Rust.
+//! - [`exec`] — the training executor: runs real forward/backward steps
+//!   following a recomputation plan, caching/discarding/recomputing
+//!   activations exactly as the canonical strategy prescribes.
+//! - [`coordinator`] — the training loop driver: config, metrics, logging.
+//! - [`bench`] — shared harness code regenerating every table/figure of
+//!   the paper's evaluation section.
+//!
+//! Quickstart (compile-checked here; executed as the `quickstart`
+//! example and the `plan_named_network` CLI test — rustdoc test binaries
+//! don't inherit the cargo rpath for `libxla_extension`):
+//!
+//! ```no_run
+//! use recompute::models::zoo;
+//! use recompute::planner::{self, Objective};
+//! use recompute::sim::{simulate, SimOptions};
+//!
+//! let g = zoo::resnet50(4, 224); // batch 4, 224×224 input
+//! let budget = g.total_mem(); // any feasible budget
+//! let plan = planner::approx_dp(&g, budget, Objective::MinOverhead).unwrap();
+//! let report = simulate(&g, &plan.chain, SimOptions::default());
+//! assert!(report.peak_bytes <= g.total_mem() * 3);
+//! ```
+
+pub mod bench;
+pub mod coordinator;
+pub mod exec;
+pub mod graph;
+pub mod models;
+pub mod planner;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+
+#[cfg(test)]
+pub mod testutil;
+
+pub use graph::{Graph, GraphBuilder, NodeId, NodeSet, OpKind};
+
+/// Human-readable byte formatting used across reports (GiB with 1 decimal
+/// for large values, MiB otherwise) — mirrors the paper's "2.7 GB" style.
+pub fn fmt_bytes(b: u64) -> String {
+    const GIB: f64 = 1024.0 * 1024.0 * 1024.0;
+    const MIB: f64 = 1024.0 * 1024.0;
+    let bf = b as f64;
+    if bf >= GIB {
+        format!("{:.1} GB", bf / GIB)
+    } else if bf >= MIB {
+        format!("{:.0} MB", bf / MIB)
+    } else {
+        format!("{b} B")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn fmt_bytes_bands() {
+        assert_eq!(super::fmt_bytes(512), "512 B");
+        assert_eq!(super::fmt_bytes(3 << 20), "3 MB");
+        assert_eq!(super::fmt_bytes((27 << 30) / 10), "2.7 GB");
+    }
+}

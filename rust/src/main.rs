@@ -1,0 +1,272 @@
+//! `repro` — the L3 coordinator / launcher CLI.
+//!
+//! Subcommands:
+//!
+//! - `table1` / `table2` — regenerate the paper's Tables 1 & 2 (peak
+//!   memory across the zoo, with/without liveness analysis).
+//! - `figure3 [--network NAME] [--device GB]` — the batch-vs-runtime
+//!   tradeoff sweeps of Figure 3.
+//! - `timing` — §5.1 ExactDP vs ApproxDP planner wall-clock.
+//! - `plan --network NAME [--batch N] [--budget GB] [--objective tc|mc]
+//!    [--family exact|approx]` — plan one network and print the schedule.
+//! - `plan --graph FILE.json …` — plan a user-supplied graph.
+//! - `train …` — run the real PJRT training executor (see `exec`);
+//!   `repro train --help` for its flags.
+//! - `export --network NAME --out FILE.json` — dump a zoo graph as JSON.
+
+use std::process::ExitCode;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use recompute::bench::tables;
+use recompute::coordinator;
+use recompute::fmt_bytes;
+use recompute::graph::Graph;
+use recompute::models::zoo;
+use recompute::planner::{
+    build_context, chen_plan, plan_with_context, Family, Objective, PlannerKind,
+};
+use recompute::sim::{simulate, simulate_vanilla, SimOptions};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs after the subcommand.
+struct Flags<'a> {
+    rest: &'a [String],
+}
+
+impl<'a> Flags<'a> {
+    fn get(&self, key: &str) -> Option<&'a str> {
+        self.rest
+            .iter()
+            .position(|a| a == key)
+            .and_then(|i| self.rest.get(i + 1))
+            .map(String::as_str)
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.rest.iter().any(|a| a == key)
+    }
+
+    fn parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(key) {
+            None => Ok(None),
+            Some(s) => {
+                s.parse::<T>().map(Some).map_err(|e| anyhow!("bad value for {key}: {e}"))
+            }
+        }
+    }
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let flags = Flags { rest: &args[1..] };
+    match cmd.as_str() {
+        "table1" => cmd_table(true),
+        "table2" => cmd_table(false),
+        "figure3" => cmd_figure3(&flags),
+        "timing" => {
+            println!("== §5.1 planner wall-clock (ExactDP vs ApproxDP) ==");
+            println!("{}", tables::planner_timing(tables::zoo()));
+            Ok(())
+        }
+        "plan" => cmd_plan(&flags),
+        "experiment" => cmd_experiment(&flags),
+        "export" => cmd_export(&flags),
+        "train" => coordinator::cli::cmd_train(&args[1..]),
+        "help" | "--help" | "-h" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown subcommand '{other}' (try 'repro help')"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "repro — graph-theoretic recomputation for memory-efficient backprop\n\
+         (Kusumoto et al., NeurIPS 2019)\n\n\
+         USAGE: repro <SUBCOMMAND> [flags]\n\n\
+         SUBCOMMANDS:\n\
+           table1                        regenerate paper Table 1 (with liveness)\n\
+           table2                        regenerate paper Table 2 (no liveness)\n\
+           figure3 [--network N] [--device GB]   batch-vs-runtime sweeps\n\
+           timing                        ExactDP vs ApproxDP planner runtime (§5.1)\n\
+           plan --network N [--batch B] [--budget GB]\n\
+                [--objective tc|mc] [--family exact|approx] [--chen]\n\
+           plan --graph FILE.json [...]  plan a user-supplied graph JSON\n\
+           experiment --config F.json [--csv out.csv]  declarative sweep runner\n\
+           export --network N --out F    dump a zoo graph as JSON\n\
+           train [flags]                 real PJRT training with a recompute plan\n\
+                                         (see 'repro train --help')"
+    );
+}
+
+fn cmd_table(liveness: bool) -> Result<()> {
+    let which = if liveness { "Table 1 (liveness analysis ON)" } else { "Table 2 (liveness OFF)" };
+    println!("== {which} ==");
+    println!("simulated peak incl. parameters; (−x%) = reduction vs vanilla\n");
+    let (rendered, rows) = tables::render_table(liveness, tables::zoo());
+    println!("{rendered}");
+    println!("planner wall-clock per network (context + budget search + 2 solves):");
+    for r in &rows {
+        println!(
+            "  {:<12} exactDP {:>8.2?}   approxDP {:>8.2?}",
+            r.name, r.exact_time, r.approx_time
+        );
+    }
+    Ok(())
+}
+
+fn cmd_figure3(flags: &Flags) -> Result<()> {
+    let device_gb: f64 = flags.parse::<f64>("--device")?.unwrap_or(11.4);
+    let device = (device_gb * (1u64 << 30) as f64) as u64;
+    let entries: Vec<&zoo::ZooEntry> = match flags.get("--network") {
+        Some(n) => vec![zoo::find(n).ok_or_else(|| anyhow!("unknown network {n}"))?],
+        None => tables::zoo().iter().collect(),
+    };
+    for e in entries {
+        let batches = tables::default_batches(e);
+        println!("{}", tables::render_figure3(e, &batches, device));
+        // §5.2 headline claims, where applicable.
+        summarize_figure3(e, &batches, device);
+    }
+    Ok(())
+}
+
+fn summarize_figure3(e: &zoo::ZooEntry, batches: &[u64], device: u64) {
+    let series = tables::figure3_network(e, batches, device);
+    let max_vanilla =
+        series[0].points.iter().filter(|p| p.feasible).map(|p| p.batch).max().unwrap_or(0);
+    let max_tc =
+        series[1].points.iter().filter(|p| p.feasible).map(|p| p.batch).max().unwrap_or(0);
+    println!(
+        "  max feasible batch: vanilla {} → ApproxDP+TC {} ({}×)\n",
+        max_vanilla,
+        max_tc,
+        if max_vanilla > 0 { max_tc / max_vanilla.max(1) } else { 0 },
+    );
+}
+
+fn cmd_plan(flags: &Flags) -> Result<()> {
+    let g: Graph = if let Some(path) = flags.get("--graph") {
+        Graph::from_json_file(std::path::Path::new(path))?
+    } else if let Some(name) = flags.get("--network") {
+        let e = zoo::find(name).ok_or_else(|| anyhow!("unknown network {name}"))?;
+        let batch = flags.parse::<u64>("--batch")?.unwrap_or(e.batch);
+        e.build_batch(batch)
+    } else {
+        bail!("plan needs --network NAME or --graph FILE.json");
+    };
+
+    let objective = match flags.get("--objective").unwrap_or("tc") {
+        "tc" => Objective::MinOverhead,
+        "mc" => Objective::MaxOverhead,
+        o => bail!("bad --objective {o} (tc|mc)"),
+    };
+    let family = match flags.get("--family").unwrap_or("approx") {
+        "exact" => Family::Exact,
+        "approx" => Family::Approx,
+        f => bail!("bad --family {f} (exact|approx)"),
+    };
+
+    println!(
+        "network {} — #V={} M(V)={} params={} T(V)={}",
+        g.name,
+        g.len(),
+        fmt_bytes(g.total_mem()),
+        fmt_bytes(g.total_param_bytes()),
+        g.total_time()
+    );
+    let vanilla = simulate_vanilla(&g, SimOptions::default());
+    println!("vanilla peak: {}", fmt_bytes(vanilla.peak_total));
+
+    if flags.has("--chen") {
+        let plan = chen_plan(&g, |c| simulate(&g, c, SimOptions::default()).peak_total)?;
+        let r = simulate(&g, &plan.chain, SimOptions::default());
+        println!(
+            "chen: k={} segment_budget={} peak={} (-{:.0}%) overhead={} (+{:.0}% of T(V))",
+            plan.chain.k(),
+            fmt_bytes(plan.segment_budget),
+            fmt_bytes(r.peak_total),
+            100.0 * (1.0 - r.peak_total as f64 / vanilla.peak_total as f64),
+            r.overhead_time,
+            100.0 * r.overhead_time as f64 / g.total_time() as f64,
+        );
+        return Ok(());
+    }
+
+    let ctx = build_context(&g, family);
+    let budget = match flags.parse::<f64>("--budget")? {
+        Some(gb) => (gb * (1u64 << 30) as f64) as u64,
+        None => {
+            let b = ctx.min_feasible_budget();
+            println!("minimal feasible budget B* = {} (activations)", fmt_bytes(b));
+            b
+        }
+    };
+    let kind =
+        if family == Family::Exact { PlannerKind::ExactDp } else { PlannerKind::ApproxDp };
+    let plan = plan_with_context(&g, &ctx, kind, budget, objective)
+        .with_context(|| format!("budget {} infeasible", fmt_bytes(budget)))?;
+    let r = simulate(&g, &plan.chain, SimOptions::default());
+    println!(
+        "{} plan: k={} segments, overhead={} (+{:.0}% of T(V))",
+        plan.kind.label(),
+        plan.chain.k(),
+        plan.overhead,
+        100.0 * plan.overhead as f64 / g.total_time() as f64
+    );
+    println!(
+        "peak: eq2={}  measured(liveness)={} (-{:.0}% vs vanilla)",
+        fmt_bytes(plan.peak_eq2 + g.total_param_bytes()),
+        fmt_bytes(r.peak_total),
+        100.0 * (1.0 - r.peak_total as f64 / vanilla.peak_total as f64)
+    );
+    if flags.has("--segments") {
+        for (i, l) in plan.chain.lower_sets().iter().enumerate() {
+            println!("  L{} — |L|={}", i + 1, l.len());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_experiment(flags: &Flags) -> Result<()> {
+    let path = flags.get("--config").ok_or_else(|| anyhow!("experiment needs --config"))?;
+    let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+    let exp = recompute::coordinator::experiment::Experiment::from_json(&text)?;
+    println!("== experiment: {} (liveness {}) ==", exp.name, exp.liveness);
+    let results = recompute::coordinator::experiment::run_experiment(&exp)?;
+    println!("{}", recompute::coordinator::experiment::render(&results));
+    if let Some(csv_path) = flags.get("--csv") {
+        std::fs::write(csv_path, recompute::coordinator::experiment::to_csv(&results))?;
+        println!("csv written to {csv_path}");
+    }
+    Ok(())
+}
+
+fn cmd_export(flags: &Flags) -> Result<()> {
+    let name = flags.get("--network").ok_or_else(|| anyhow!("export needs --network"))?;
+    let out = flags.get("--out").ok_or_else(|| anyhow!("export needs --out"))?;
+    let e = zoo::find(name).ok_or_else(|| anyhow!("unknown network {name}"))?;
+    let batch = flags.parse::<u64>("--batch")?.unwrap_or(e.batch);
+    let g = e.build_batch(batch);
+    std::fs::write(out, g.to_json()).with_context(|| format!("writing {out}"))?;
+    println!("wrote {} ({} nodes) to {out}", g.name, g.len());
+    Ok(())
+}

@@ -1,0 +1,206 @@
+//! Shared layer-emission helpers for the network zoo.
+//!
+//! Each helper appends the node(s) a framework like Chainer would record
+//! as distinct intermediate variables — conv, bn, relu, pool all produce
+//! separate cached outputs, which is exactly the granularity the paper's
+//! graphs use (e.g. ResNet50 = 176 intermediate nodes at this granularity).
+
+use crate::graph::builder::{bn_params, conv_out, conv_params};
+use crate::graph::{GraphBuilder, NodeId, OpKind};
+
+/// Tensor signature flowing between layers: channels + spatial size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Feat {
+    pub id: NodeId,
+    pub c: u32,
+    pub h: u32,
+    pub w: u32,
+}
+
+impl Feat {
+    pub fn shape(&self) -> [u32; 3] {
+        [self.c, self.h, self.w]
+    }
+}
+
+/// The network input. The paper *excludes* input nodes from `V` (§2), so
+/// this node carries a negligible 4-byte cost — it exists only so the
+/// first layer has a predecessor and shapes can propagate. The planner can
+/// "cache" it for free, which models "the input is always available".
+pub fn input(b: &mut GraphBuilder, c: u32, h: u32, w: u32) -> Feat {
+    let id = b.add_raw("input", OpKind::Other, 4, 1, &[]);
+    Feat { id, c, h, w }
+}
+
+/// 2-D convolution (+ implicit bias), dilation-aware.
+#[allow(clippy::too_many_arguments)]
+pub fn conv(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: Feat,
+    cout: u32,
+    k: u32,
+    s: u32,
+    p: u32,
+    d: u32,
+) -> Feat {
+    let h = conv_out(x.h, k, s, p, d);
+    let w = conv_out(x.w, k, s, p, d);
+    let id = b.add_with(name, OpKind::Conv, &[cout, h, w], &[x.id], conv_params(x.c, cout, k));
+    Feat { id, c: cout, h, w }
+}
+
+/// Batch normalization.
+pub fn bn(b: &mut GraphBuilder, name: &str, x: Feat) -> Feat {
+    let id = b.add_with(name, OpKind::BatchNorm, &[x.c, x.h, x.w], &[x.id], bn_params(x.c));
+    Feat { id, ..x }
+}
+
+/// ReLU (or any elementwise activation).
+pub fn relu(b: &mut GraphBuilder, name: &str, x: Feat) -> Feat {
+    let id = b.add(name, OpKind::Activation, &[x.c, x.h, x.w], &[x.id]);
+    Feat { id, ..x }
+}
+
+/// Max/avg pooling with kernel `k`, stride `s`, padding `p`.
+pub fn pool(b: &mut GraphBuilder, name: &str, x: Feat, k: u32, s: u32, p: u32) -> Feat {
+    let h = conv_out(x.h, k, s, p, 1);
+    let w = conv_out(x.w, k, s, p, 1);
+    let id = b.add(name, OpKind::Pool, &[x.c, h, w], &[x.id]);
+    Feat { id, c: x.c, h, w }
+}
+
+/// Global average pooling to 1×1.
+pub fn global_pool(b: &mut GraphBuilder, name: &str, x: Feat) -> Feat {
+    let id = b.add(name, OpKind::Pool, &[x.c, 1, 1], &[x.id]);
+    Feat { id, c: x.c, h: 1, w: 1 }
+}
+
+/// Adaptive average pooling to `out×out` (PSPNet pyramid levels).
+pub fn adaptive_pool(b: &mut GraphBuilder, name: &str, x: Feat, out: u32) -> Feat {
+    let id = b.add(name, OpKind::Pool, &[x.c, out, out], &[x.id]);
+    Feat { id, c: x.c, h: out, w: out }
+}
+
+/// Elementwise residual add (shapes must match).
+pub fn add(b: &mut GraphBuilder, name: &str, x: Feat, y: Feat) -> Feat {
+    assert_eq!((x.c, x.h, x.w), (y.c, y.h, y.w), "residual add shape mismatch at {name}");
+    let id = b.add(name, OpKind::Add, &[x.c, x.h, x.w], &[x.id, y.id]);
+    Feat { id, ..x }
+}
+
+/// Channel concatenation (spatial sizes must match).
+pub fn concat(b: &mut GraphBuilder, name: &str, inputs: &[Feat]) -> Feat {
+    assert!(!inputs.is_empty());
+    let (h, w) = (inputs[0].h, inputs[0].w);
+    for f in inputs {
+        assert_eq!((f.h, f.w), (h, w), "concat spatial mismatch at {name}");
+    }
+    let c: u32 = inputs.iter().map(|f| f.c).sum();
+    let ids: Vec<NodeId> = inputs.iter().map(|f| f.id).collect();
+    let id = b.add(name, OpKind::Concat, &[c, h, w], &ids);
+    Feat { id, c, h, w }
+}
+
+/// Bilinear upsampling (or transposed conv when `params` is true) to an
+/// explicit target size.
+pub fn upsample_to(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: Feat,
+    h: u32,
+    w: u32,
+    cout: u32,
+    learned: bool,
+) -> Feat {
+    let params = if learned { conv_params(x.c, cout, 2) } else { 0 };
+    let id = b.add_with(name, OpKind::Upsample, &[cout, h, w], &[x.id], params);
+    Feat { id, c: cout, h, w }
+}
+
+/// Fully-connected layer from a flattened feature.
+pub fn dense(b: &mut GraphBuilder, name: &str, x: Feat, out: u32) -> Feat {
+    let din = (x.c as u64) * (x.h as u64) * (x.w as u64);
+    let id = b.add_with(
+        name,
+        OpKind::Dense,
+        &[out],
+        &[x.id],
+        crate::graph::builder::dense_params(din, out as u64),
+    );
+    Feat { id, c: out, h: 1, w: 1 }
+}
+
+/// Dropout node.
+pub fn dropout(b: &mut GraphBuilder, name: &str, x: Feat) -> Feat {
+    let id = b.add(name, OpKind::Dropout, &[x.c, x.h, x.w], &[x.id]);
+    Feat { id, ..x }
+}
+
+/// Softmax / classification head output.
+pub fn softmax(b: &mut GraphBuilder, name: &str, x: Feat) -> Feat {
+    let id = b.add(name, OpKind::Softmax, &[x.c, x.h, x.w], &[x.id]);
+    Feat { id, ..x }
+}
+
+/// conv → bn → relu triple, the standard CNN block.
+pub fn conv_bn_relu(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: Feat,
+    cout: u32,
+    k: u32,
+    s: u32,
+    p: u32,
+    d: u32,
+) -> Feat {
+    let c = conv(b, &format!("{name}/conv"), x, cout, k, s, p, d);
+    let n = bn(b, &format!("{name}/bn"), c);
+    relu(b, &format!("{name}/relu"), n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shapes_and_params() {
+        let mut b = GraphBuilder::new("t", 2);
+        let x0 = b.add("input_stub", OpKind::Other, &[3, 224, 224], &[]);
+        let x = Feat { id: x0, c: 3, h: 224, w: 224 };
+        let c = conv(&mut b, "c1", x, 64, 7, 2, 3, 1);
+        assert_eq!((c.c, c.h, c.w), (64, 112, 112));
+        let p = pool(&mut b, "p1", c, 3, 2, 1);
+        assert_eq!((p.h, p.w), (56, 56));
+        let g = b.build();
+        assert_eq!(g.node(c.id).mem, 2 * 64 * 112 * 112 * 4);
+        assert_eq!(g.node(c.id).param_bytes, (64u64 * 3 * 49 + 64) * 4);
+    }
+
+    #[test]
+    fn concat_channels() {
+        let mut b = GraphBuilder::new("t", 1);
+        let a0 = b.add("a", OpKind::Other, &[8, 4, 4], &[]);
+        let b0 = b.add("b", OpKind::Other, &[16, 4, 4], &[]);
+        let f = concat(
+            &mut b,
+            "cat",
+            &[Feat { id: a0, c: 8, h: 4, w: 4 }, Feat { id: b0, c: 16, h: 4, w: 4 }],
+        );
+        assert_eq!(f.c, 24);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn add_checks_shapes() {
+        let mut b = GraphBuilder::new("t", 1);
+        let a0 = b.add("a", OpKind::Other, &[8, 4, 4], &[]);
+        let b0 = b.add("b", OpKind::Other, &[16, 4, 4], &[]);
+        add(
+            &mut b,
+            "bad",
+            Feat { id: a0, c: 8, h: 4, w: 4 },
+            Feat { id: b0, c: 16, h: 4, w: 4 },
+        );
+    }
+}

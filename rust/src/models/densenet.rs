@@ -1,0 +1,102 @@
+//! DenseNet (Huang et al., CVPR 2017).
+//!
+//! Dense connectivity is the stress test for recomputation planners: every
+//! layer's output feeds all later layers in its block through concats, so
+//! boundaries stay wide and naive segmentation (Chen's) has few useful cut
+//! points. The paper reports its largest reduction here (−81%).
+
+use crate::graph::{Graph, GraphBuilder};
+
+use super::common::*;
+
+/// One dense layer: BN→ReLU→1×1 conv (bottleneck 4k) → BN→ReLU→3×3 conv(k),
+/// then concat with its input. 7 nodes, matching the paper's granularity
+/// (DenseNet161 → 568 nodes).
+fn dense_layer(b: &mut GraphBuilder, name: &str, x: Feat, growth: u32) -> Feat {
+    let b1 = bn(b, &format!("{name}/bn1"), x);
+    let r1 = relu(b, &format!("{name}/relu1"), b1);
+    let c1 = conv(b, &format!("{name}/conv1"), r1, 4 * growth, 1, 1, 0, 1);
+    let b2 = bn(b, &format!("{name}/bn2"), c1);
+    let r2 = relu(b, &format!("{name}/relu2"), b2);
+    let c2 = conv(b, &format!("{name}/conv2"), r2, growth, 3, 1, 1, 1);
+    concat(b, &format!("{name}/concat"), &[x, c2])
+}
+
+/// Transition: BN→ReLU→1×1 conv (compress ×0.5) → 2×2 avg-pool.
+fn transition(b: &mut GraphBuilder, name: &str, x: Feat) -> Feat {
+    let b1 = bn(b, &format!("{name}/bn"), x);
+    let r1 = relu(b, &format!("{name}/relu"), b1);
+    let c1 = conv(b, &format!("{name}/conv"), r1, x.c / 2, 1, 1, 0, 1);
+    pool(b, &format!("{name}/pool"), c1, 2, 2, 0)
+}
+
+fn densenet(name: &str, batch: u64, input_hw: u32, init: u32, growth: u32, blocks: &[u32]) -> Graph {
+    let mut b = GraphBuilder::new(name, batch);
+    let x = input(&mut b, 3, input_hw, input_hw);
+    let c1 = conv(&mut b, "conv1", x, init, 7, 2, 3, 1);
+    let b1 = bn(&mut b, "bn1", c1);
+    let r1 = relu(&mut b, "relu1", b1);
+    let mut f = pool(&mut b, "maxpool", r1, 3, 2, 1);
+    for (bi, &layers) in blocks.iter().enumerate() {
+        for li in 0..layers {
+            f = dense_layer(&mut b, &format!("block{}/layer{}", bi + 1, li + 1), f, growth);
+        }
+        if bi + 1 < blocks.len() {
+            f = transition(&mut b, &format!("trans{}", bi + 1), f);
+        }
+    }
+    let bf = bn(&mut b, "bn_final", f);
+    let rf = relu(&mut b, "relu_final", bf);
+    let g = global_pool(&mut b, "avgpool", rf);
+    let fc = dense(&mut b, "fc", g, 1000);
+    softmax(&mut b, "softmax", fc);
+    b.build()
+}
+
+/// DenseNet-161: init 96, growth 48, blocks [6,12,36,24].
+pub fn densenet161(batch: u64, input_hw: u32) -> Graph {
+    densenet("densenet161", batch, input_hw, 96, 48, &[6, 12, 36, 24])
+}
+
+/// DenseNet-121 (extra zoo member): init 64, growth 32, blocks [6,12,24,16].
+pub fn densenet121(batch: u64, input_hw: u32) -> Graph {
+    densenet("densenet121", batch, input_hw, 64, 32, &[6, 12, 24, 16])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn densenet161_node_count_matches_paper_scale() {
+        let g = densenet161(1, 224);
+        // Paper: #V = 568. Ours: input+stem(4) + 78 layers × 7 +
+        // 3 transitions × 4 + tail(5) = 568.
+        assert!((560..=575).contains(&g.len()), "#V = {}", g.len());
+    }
+
+    #[test]
+    fn densenet161_params_near_28m() {
+        let g = densenet161(1, 224);
+        let params = g.total_param_bytes() / 4;
+        assert!((26_000_000..31_000_000).contains(&params), "params = {params}");
+    }
+
+    #[test]
+    fn channel_growth() {
+        // After block1 (6 layers, growth 48, init 96): 96 + 6·48 = 384;
+        // transition halves to 192.
+        let g = densenet161(1, 224);
+        let node = g
+            .nodes()
+            .find(|(_, n)| n.name == "block1/layer6/concat")
+            .map(|(_, n)| n.shape.clone())
+            .unwrap();
+        assert_eq!(node[0], 96 + 6 * 48);
+    }
+
+    #[test]
+    fn densenet121_smaller() {
+        assert!(densenet121(1, 224).len() < densenet161(1, 224).len());
+    }
+}

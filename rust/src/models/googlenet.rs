@@ -1,0 +1,127 @@
+//! GoogLeNet / Inception-v1 (Szegedy et al., CVPR 2015).
+//!
+//! Four parallel branches per inception module make the lower-set lattice
+//! genuinely multi-dimensional — this is the graph family where the exact
+//! DP's cost blows up (the paper reports >80 s) while the pruned family
+//! stays linear.
+
+use crate::graph::{Graph, GraphBuilder};
+
+use super::common::*;
+
+struct InceptionCfg {
+    c1: u32,      // 1×1 branch
+    c3r: u32,     // 3×3 reduce
+    c3: u32,      // 3×3 branch
+    c5r: u32,     // 5×5 reduce
+    c5: u32,      // 5×5 branch
+    pool_proj: u32,
+}
+
+/// One inception module: 13 nodes (4 branches + concat), Chainer-style
+/// granularity without per-branch BN (Inception-v1 predates BN).
+fn inception(b: &mut GraphBuilder, name: &str, x: Feat, cfg: &InceptionCfg) -> Feat {
+    let b1 = conv(b, &format!("{name}/1x1"), x, cfg.c1, 1, 1, 0, 1);
+    let b1 = relu(b, &format!("{name}/1x1/relu"), b1);
+    let b3 = conv(b, &format!("{name}/3x3_reduce"), x, cfg.c3r, 1, 1, 0, 1);
+    let b3 = relu(b, &format!("{name}/3x3_reduce/relu"), b3);
+    let b3 = conv(b, &format!("{name}/3x3"), b3, cfg.c3, 3, 1, 1, 1);
+    let b3 = relu(b, &format!("{name}/3x3/relu"), b3);
+    let b5 = conv(b, &format!("{name}/5x5_reduce"), x, cfg.c5r, 1, 1, 0, 1);
+    let b5 = relu(b, &format!("{name}/5x5_reduce/relu"), b5);
+    let b5 = conv(b, &format!("{name}/5x5"), b5, cfg.c5, 5, 1, 2, 1);
+    let b5 = relu(b, &format!("{name}/5x5/relu"), b5);
+    let bp = pool(b, &format!("{name}/pool"), x, 3, 1, 1);
+    let bp = conv(b, &format!("{name}/pool_proj"), bp, cfg.pool_proj, 1, 1, 0, 1);
+    let bp = relu(b, &format!("{name}/pool_proj/relu"), bp);
+    concat(b, &format!("{name}/concat"), &[b1, b3, b5, bp])
+}
+
+/// GoogLeNet main trunk (auxiliary classifiers are train-time-only heads
+/// the paper's Chainer model does not include in its graph; we follow).
+pub fn googlenet(batch: u64, input_hw: u32) -> Graph {
+    let mut b = GraphBuilder::new("googlenet", batch);
+    let x = input(&mut b, 3, input_hw, input_hw);
+    let mut f = conv(&mut b, "conv1", x, 64, 7, 2, 3, 1);
+    f = relu(&mut b, "conv1/relu", f);
+    f = pool(&mut b, "pool1", f, 3, 2, 1);
+    f = conv(&mut b, "conv2_reduce", f, 64, 1, 1, 0, 1);
+    f = relu(&mut b, "conv2_reduce/relu", f);
+    f = conv(&mut b, "conv2", f, 192, 3, 1, 1, 1);
+    f = relu(&mut b, "conv2/relu", f);
+    f = pool(&mut b, "pool2", f, 3, 2, 1);
+
+    let cfgs3 = [
+        InceptionCfg { c1: 64, c3r: 96, c3: 128, c5r: 16, c5: 32, pool_proj: 32 },
+        InceptionCfg { c1: 128, c3r: 128, c3: 192, c5r: 32, c5: 96, pool_proj: 64 },
+    ];
+    for (i, cfg) in cfgs3.iter().enumerate() {
+        f = inception(&mut b, &format!("inception3{}", (b'a' + i as u8) as char), f, cfg);
+    }
+    f = pool(&mut b, "pool3", f, 3, 2, 1);
+
+    let cfgs4 = [
+        InceptionCfg { c1: 192, c3r: 96, c3: 208, c5r: 16, c5: 48, pool_proj: 64 },
+        InceptionCfg { c1: 160, c3r: 112, c3: 224, c5r: 24, c5: 64, pool_proj: 64 },
+        InceptionCfg { c1: 128, c3r: 128, c3: 256, c5r: 24, c5: 64, pool_proj: 64 },
+        InceptionCfg { c1: 112, c3r: 144, c3: 288, c5r: 32, c5: 64, pool_proj: 64 },
+        InceptionCfg { c1: 256, c3r: 160, c3: 320, c5r: 32, c5: 128, pool_proj: 128 },
+    ];
+    for (i, cfg) in cfgs4.iter().enumerate() {
+        f = inception(&mut b, &format!("inception4{}", (b'a' + i as u8) as char), f, cfg);
+    }
+    f = pool(&mut b, "pool4", f, 3, 2, 1);
+
+    let cfgs5 = [
+        InceptionCfg { c1: 256, c3r: 160, c3: 320, c5r: 32, c5: 128, pool_proj: 128 },
+        InceptionCfg { c1: 384, c3r: 192, c3: 384, c5r: 48, c5: 128, pool_proj: 128 },
+    ];
+    for (i, cfg) in cfgs5.iter().enumerate() {
+        f = inception(&mut b, &format!("inception5{}", (b'a' + i as u8) as char), f, cfg);
+    }
+
+    let g = global_pool(&mut b, "avgpool", f);
+    let d = dropout(&mut b, "dropout", g);
+    let fc = dense(&mut b, "fc", d, 1000);
+    softmax(&mut b, "softmax", fc);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn googlenet_node_count_matches_paper_scale() {
+        let g = googlenet(1, 224);
+        // Paper: #V = 134. Ours: 9 modules × 14 + stem 8 + pools 2 + tail 4
+        // + input = 141 (+5%; the paper's Chainer port fuses a few relus).
+        assert!((128..=143).contains(&g.len()), "#V = {}", g.len());
+    }
+
+    #[test]
+    fn inception_concat_channels() {
+        let g = googlenet(1, 224);
+        let c = g
+            .nodes()
+            .find(|(_, n)| n.name == "inception3a/concat")
+            .map(|(_, n)| n.shape[0])
+            .unwrap();
+        assert_eq!(c, 64 + 128 + 32 + 32);
+    }
+
+    #[test]
+    fn googlenet_params_near_7m() {
+        let g = googlenet(1, 224);
+        let params = g.total_param_bytes() / 4;
+        assert!((5_500_000..8_000_000).contains(&params), "params = {params}");
+    }
+
+    #[test]
+    fn branch_structure_creates_parallel_paths() {
+        // Inception input nodes have 4 direct successors (one per branch).
+        let g = googlenet(1, 224);
+        let pool2 = g.nodes().find(|(_, n)| n.name == "pool2").map(|(v, _)| v).unwrap();
+        assert_eq!(g.succs(pool2).len(), 4);
+    }
+}

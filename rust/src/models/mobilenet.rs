@@ -1,0 +1,84 @@
+//! MobileNetV1 (Howard et al., 2017) — depthwise-separable chain.
+//!
+//! Not in the paper's Table 1; included as an extra zoo member because its
+//! pure-chain, low-channel structure is the opposite stress profile of
+//! DenseNet (cheap activations, many articulation points — Chen-friendly),
+//! which makes it a useful ablation point for planner comparisons.
+
+use crate::graph::builder::{bn_params, conv_out, BYTES_PER_ELEM};
+use crate::graph::{Graph, GraphBuilder, OpKind};
+
+use super::common::*;
+
+/// Depthwise 3×3 conv (per-channel) + pointwise 1×1, each with bn+relu.
+fn ds_block(b: &mut GraphBuilder, name: &str, x: Feat, cout: u32, stride: u32) -> Feat {
+    // Depthwise: params = c·3·3 (+c bias).
+    let h = conv_out(x.h, 3, stride, 1, 1);
+    let w = conv_out(x.w, 3, stride, 1, 1);
+    let dw_params = (x.c as u64 * 9 + x.c as u64) * BYTES_PER_ELEM;
+    let dw = b.add_with(format!("{name}/dw"), OpKind::Conv, &[x.c, h, w], &[x.id], dw_params);
+    let dwf = Feat { id: dw, c: x.c, h, w };
+    let b1 = bn(b, &format!("{name}/dw_bn"), dwf);
+    let r1 = relu(b, &format!("{name}/dw_relu"), b1);
+    let pw = conv(b, &format!("{name}/pw"), r1, cout, 1, 1, 0, 1);
+    let b2 = bn(b, &format!("{name}/pw_bn"), pw);
+    relu(b, &format!("{name}/pw_relu"), b2)
+}
+
+/// MobileNetV1 at width multiplier 1.0.
+pub fn mobilenet_v1(batch: u64, input_hw: u32) -> Graph {
+    let mut b = GraphBuilder::new("mobilenet_v1", batch);
+    let x = input(&mut b, 3, input_hw, input_hw);
+    let mut f = conv_bn_relu(&mut b, "stem", x, 32, 3, 2, 1, 1);
+    let cfg: &[(u32, u32)] = &[
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, &(c, s)) in cfg.iter().enumerate() {
+        f = ds_block(&mut b, &format!("ds{}", i + 1), f, c, s);
+    }
+    let g = global_pool(&mut b, "avgpool", f);
+    let fc = dense(&mut b, "fc", g, 1000);
+    softmax(&mut b, "softmax", fc);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::articulation_points;
+
+    #[test]
+    fn builds_and_is_chain_like() {
+        let g = mobilenet_v1(4, 224);
+        assert!(g.len() > 80, "#V = {}", g.len());
+        // Pure chain: every node ≤1 pred/succ ⇒ articulation-point dense.
+        let arts = articulation_points(&g).len() as f64 / g.len() as f64;
+        assert!(arts > 0.8, "{arts}");
+    }
+
+    #[test]
+    fn params_near_4m() {
+        let g = mobilenet_v1(1, 224);
+        let p = g.total_param_bytes() / 4;
+        assert!((3_500_000..5_500_000).contains(&p), "params {p}");
+    }
+
+    #[test]
+    fn final_resolution_7x7() {
+        let g = mobilenet_v1(1, 224);
+        let n = g.nodes().find(|(_, n)| n.name == "ds13/pw_relu").unwrap().1;
+        assert_eq!(n.shape, vec![1024, 7, 7]);
+    }
+}

@@ -1,0 +1,73 @@
+//! Network zoo with shape-propagated cost models.
+//!
+//! Each module builds the layer-level computation graph of one published
+//! architecture at arbitrary batch size and input resolution, with
+//! per-node memory `M_v = batch · C·H·W · 4` bytes (fp32) and compute cost
+//! `T_v = 10` for conv/dense nodes, `1` otherwise — exactly the paper's
+//! cost model (§3). Parameter bytes are tracked separately and added to
+//! reported totals the way Table 1 includes them.
+//!
+//! The [`zoo`] submodule pins the seven Table-1 networks at the paper's
+//! exact experimental configurations.
+
+pub mod common;
+mod densenet;
+mod googlenet;
+mod mobilenet;
+mod pspnet;
+mod resnet;
+mod towers;
+mod unet;
+mod vgg;
+pub mod zoo;
+
+pub use towers::{mlp_tower, transformer_tower};
+
+#[cfg(test)]
+mod tests {
+    use super::zoo::TABLE1;
+    use crate::graph::{articulation_points, pruned_lower_sets};
+
+    #[test]
+    fn zoo_graphs_are_well_formed() {
+        for e in TABLE1 {
+            let g = e.build_batch(1);
+            assert!(g.sources().len() == 1, "{}: one input", e.name);
+            assert!(!g.sinks().is_empty(), "{}", e.name);
+            assert!(g.total_mem() > 0);
+            assert!(g.total_time() > 0);
+            // Pruned family is well-defined and small.
+            let fam = pruned_lower_sets(&g);
+            assert!(fam.len() <= g.len() as usize + 2, "{}", e.name);
+        }
+    }
+
+    #[test]
+    fn conv_nodes_cost_ten() {
+        for e in TABLE1 {
+            let g = e.build_batch(1);
+            for (_, n) in g.nodes() {
+                match n.op {
+                    crate::graph::OpKind::Conv | crate::graph::OpKind::Dense => {
+                        assert_eq!(n.time, 10, "{}: {}", e.name, n.name)
+                    }
+                    _ => assert_eq!(n.time, 1, "{}: {}", e.name, n.name),
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn chain_like_nets_have_many_articulation_points_skip_nets_few() {
+        let vgg = zoo_graph("VGG19");
+        let unet = zoo_graph("U-Net");
+        let arts_vgg = articulation_points(&vgg).len() as f64 / vgg.len() as f64;
+        let arts_unet = articulation_points(&unet).len() as f64 / unet.len() as f64;
+        assert!(arts_vgg > 0.8, "VGG is a chain: {arts_vgg}");
+        assert!(arts_unet < 0.6, "U-Net skips suppress cuts: {arts_unet}");
+    }
+
+    fn zoo_graph(name: &str) -> crate::graph::Graph {
+        super::zoo::find(name).unwrap().build_batch(1)
+    }
+}

@@ -1,0 +1,207 @@
+//! ResNet (He et al., CVPR 2016) — bottleneck variants, plus the dilated
+//! backbone used by PSPNet.
+
+use crate::graph::{Graph, GraphBuilder};
+
+use super::common::*;
+
+/// One bottleneck block: 1×1 reduce → 3×3 → 1×1 expand, residual add,
+/// final relu. Emits 10 nodes (12 with a projection shortcut), matching
+/// the paper's counting (ResNet50 → 176 nodes).
+#[allow(clippy::too_many_arguments)]
+fn bottleneck(
+    b: &mut GraphBuilder,
+    name: &str,
+    x: Feat,
+    mid: u32,
+    out: u32,
+    stride: u32,
+    dilation: u32,
+) -> Feat {
+    let c1 = conv(b, &format!("{name}/conv1"), x, mid, 1, 1, 0, 1);
+    let b1 = bn(b, &format!("{name}/bn1"), c1);
+    let r1 = relu(b, &format!("{name}/relu1"), b1);
+    let c2 = conv(b, &format!("{name}/conv2"), r1, mid, 3, stride, dilation, dilation);
+    let b2 = bn(b, &format!("{name}/bn2"), c2);
+    let r2 = relu(b, &format!("{name}/relu2"), b2);
+    let c3 = conv(b, &format!("{name}/conv3"), r2, out, 1, 1, 0, 1);
+    let b3 = bn(b, &format!("{name}/bn3"), c3);
+    let shortcut = if x.c != out || stride != 1 {
+        let cs = conv(b, &format!("{name}/conv_ds"), x, out, 1, stride, 0, 1);
+        bn(b, &format!("{name}/bn_ds"), cs)
+    } else {
+        x
+    };
+    let s = add(b, &format!("{name}/add"), b3, shortcut);
+    relu(b, &format!("{name}/relu3"), s)
+}
+
+/// The stem + 4 stages shared by all bottleneck ResNets.
+///
+/// `dilations`/`strides` allow the PSPNet variant (stages 3/4 dilated,
+/// stride 1). Returns the final stage-4 feature map.
+pub fn resnet_backbone(
+    b: &mut GraphBuilder,
+    input_hw: u32,
+    blocks: [u32; 4],
+    strides: [u32; 4],
+    dilations: [u32; 4],
+) -> Feat {
+    let x = input(b, 3, input_hw, input_hw);
+    let c1 = conv(b, "conv1", x, 64, 7, 2, 3, 1);
+    let b1 = bn(b, "bn1", c1);
+    let r1 = relu(b, "relu1", b1);
+    let mut f = pool(b, "maxpool", r1, 3, 2, 1);
+    let mids = [64u32, 128, 256, 512];
+    for (stage, &nblocks) in blocks.iter().enumerate() {
+        let mid = mids[stage];
+        let out = mid * 4;
+        for blk in 0..nblocks {
+            let stride = if blk == 0 { strides[stage] } else { 1 };
+            f = bottleneck(
+                b,
+                &format!("layer{}/block{}", stage + 1, blk + 1),
+                f,
+                mid,
+                out,
+                stride,
+                dilations[stage],
+            );
+        }
+    }
+    f
+}
+
+fn resnet_classifier(b: &mut GraphBuilder, f: Feat, classes: u32) -> Feat {
+    let g = global_pool(b, "avgpool", f);
+    let fc = dense(b, "fc", g, classes);
+    softmax(b, "softmax", fc)
+}
+
+/// ResNet-50 (blocks [3,4,6,3]) at the paper's 224×224 (configurable).
+pub fn resnet50(batch: u64, input_hw: u32) -> Graph {
+    let mut b = GraphBuilder::new("resnet50", batch);
+    let f = resnet_backbone(&mut b, input_hw, [3, 4, 6, 3], [1, 2, 2, 2], [1, 1, 1, 1]);
+    resnet_classifier(&mut b, f, 1000);
+    b.build()
+}
+
+/// ResNet-101 (blocks [3,4,23,3]).
+pub fn resnet101(batch: u64, input_hw: u32) -> Graph {
+    let mut b = GraphBuilder::new("resnet101", batch);
+    let f = resnet_backbone(&mut b, input_hw, [3, 4, 23, 3], [1, 2, 2, 2], [1, 1, 1, 1]);
+    resnet_classifier(&mut b, f, 1000);
+    b.build()
+}
+
+/// ResNet-152 (blocks [3,8,36,3]).
+pub fn resnet152(batch: u64, input_hw: u32) -> Graph {
+    let mut b = GraphBuilder::new("resnet152", batch);
+    let f = resnet_backbone(&mut b, input_hw, [3, 8, 36, 3], [1, 2, 2, 2], [1, 1, 1, 1]);
+    resnet_classifier(&mut b, f, 1000);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet50_node_count_matches_paper_scale() {
+        let g = resnet50(1, 224);
+        // Paper: #V = 176. Our granularity: 178 (input stub + softmax).
+        assert!((170..=185).contains(&g.len()), "#V = {}", g.len());
+    }
+
+    #[test]
+    fn resnet152_node_count_matches_paper_scale() {
+        let g = resnet152(1, 224);
+        // Paper: #V = 516.
+        assert!((505..=525).contains(&g.len()), "#V = {}", g.len());
+    }
+
+    #[test]
+    fn resnet50_param_bytes_near_25m_params() {
+        let g = resnet50(1, 224);
+        let params = g.total_param_bytes() / 4;
+        // Torch reference: 25.6M parameters.
+        assert!((23_000_000..28_000_000).contains(&params), "params = {params}");
+    }
+
+    #[test]
+    fn memory_scales_linearly_with_batch() {
+        let g1 = resnet50(1, 224);
+        let g8 = resnet50(8, 224);
+        // Input stub is 4 bytes in both; everything else scales 8×.
+        assert_eq!(8 * (g1.total_mem() - 4), g8.total_mem() - 4);
+    }
+
+    #[test]
+    fn single_sink_single_source() {
+        let g = resnet152(2, 224);
+        assert_eq!(g.sources().len(), 1);
+        assert_eq!(g.sinks().len(), 1);
+    }
+
+    #[test]
+    fn dilated_backbone_keeps_resolution() {
+        // PSPNet variant: stages 3/4 stride 1, dilation 2/4 ⇒ final map is
+        // 1/8 of the input instead of 1/32.
+        let mut b = GraphBuilder::new("dilated", 1);
+        let f = resnet_backbone(&mut b, 224, [3, 4, 6, 3], [1, 2, 1, 1], [1, 1, 2, 4]);
+        assert_eq!((f.h, f.w), (28, 28));
+        let g = b.build();
+        assert!(g.len() > 100);
+    }
+}
+
+/// One basic block (ResNet-18/34): two 3×3 convs, residual add.
+fn basic_block(b: &mut GraphBuilder, name: &str, x: Feat, out: u32, stride: u32) -> Feat {
+    let c1 = conv(b, &format!("{name}/conv1"), x, out, 3, stride, 1, 1);
+    let b1 = bn(b, &format!("{name}/bn1"), c1);
+    let r1 = relu(b, &format!("{name}/relu1"), b1);
+    let c2 = conv(b, &format!("{name}/conv2"), r1, out, 3, 1, 1, 1);
+    let b2 = bn(b, &format!("{name}/bn2"), c2);
+    let shortcut = if x.c != out || stride != 1 {
+        let cs = conv(b, &format!("{name}/conv_ds"), x, out, 1, stride, 0, 1);
+        bn(b, &format!("{name}/bn_ds"), cs)
+    } else {
+        x
+    };
+    let s = add(b, &format!("{name}/add"), b2, shortcut);
+    relu(b, &format!("{name}/relu2"), s)
+}
+
+fn basic_resnet(name: &str, batch: u64, input_hw: u32, blocks: [u32; 4]) -> Graph {
+    let mut b = GraphBuilder::new(name, batch);
+    let x = input(&mut b, 3, input_hw, input_hw);
+    let c1 = conv(&mut b, "conv1", x, 64, 7, 2, 3, 1);
+    let b1 = bn(&mut b, "bn1", c1);
+    let r1 = relu(&mut b, "relu1", b1);
+    let mut f = pool(&mut b, "maxpool", r1, 3, 2, 1);
+    let chans = [64u32, 128, 256, 512];
+    for (stage, &n) in blocks.iter().enumerate() {
+        for blk in 0..n {
+            let stride = if blk == 0 && stage > 0 { 2 } else { 1 };
+            f = basic_block(
+                &mut b,
+                &format!("layer{}/block{}", stage + 1, blk + 1),
+                f,
+                chans[stage],
+                stride,
+            );
+        }
+    }
+    resnet_classifier(&mut b, f, 1000);
+    b.build()
+}
+
+/// ResNet-18 (basic blocks [2,2,2,2]) — extra zoo member for ablations.
+pub fn resnet18(batch: u64, input_hw: u32) -> Graph {
+    basic_resnet("resnet18", batch, input_hw, [2, 2, 2, 2])
+}
+
+/// ResNet-34 (basic blocks [3,4,6,3]).
+pub fn resnet34(batch: u64, input_hw: u32) -> Graph {
+    basic_resnet("resnet34", batch, input_hw, [3, 4, 6, 3])
+}

@@ -1,0 +1,123 @@
+//! Tower workloads for the real execution engine.
+//!
+//! These are the graphs the PJRT executor actually trains end-to-end
+//! (examples/train_mlp): a tower of fused dense layers (matmul + bias +
+//! GELU — one node per layer because Layer 1 compiles the whole layer as
+//! one Pallas kernel), and a transformer-block tower for the attention
+//! workload. Towers are chains, so plans map 1:1 onto executable segment
+//! schedules.
+
+use crate::graph::builder::dense_params;
+use crate::graph::{Graph, GraphBuilder, OpKind};
+
+/// A tower of `layers` fused dense layers of width `width`, trained with
+/// batch `batch`. One graph node per layer; the final node is the loss
+/// head (logits + scalar loss are tiny and folded into it).
+pub fn mlp_tower(layers: u32, width: u32, batch: u64) -> Graph {
+    assert!(layers >= 2);
+    let mut b = GraphBuilder::new(format!("mlp{layers}x{width}"), batch);
+    let mut prev = b.add_raw("input", OpKind::Other, 4, 1, &[]);
+    for i in 0..layers {
+        prev = b.add_with(
+            format!("layer{i}"),
+            OpKind::Dense,
+            &[width],
+            &[prev],
+            dense_params(width as u64, width as u64),
+        );
+    }
+    b.add_with(
+        "loss_head",
+        OpKind::Dense,
+        &[width],
+        &[prev],
+        dense_params(width as u64, width as u64),
+    );
+    b.build()
+}
+
+/// A tower of simplified transformer blocks: each block is
+/// attn (qkv+attention+proj) → add → mlp (fused dense ×2) → add,
+/// at hidden width `d`, sequence length `s`.
+pub fn transformer_tower(blocks: u32, d: u32, s: u32, batch: u64) -> Graph {
+    let mut b = GraphBuilder::new(format!("transformer{blocks}x{d}"), batch);
+    let x0 = b.add_raw("input", OpKind::Other, 4, 1, &[]);
+    let token_mem_shape: &[u32] = &[s, d];
+    let mut prev = b.add_with(
+        "embed",
+        OpKind::Dense,
+        token_mem_shape,
+        &[x0],
+        dense_params(d as u64, d as u64),
+    );
+    for i in 0..blocks {
+        let attn = b.add_with(
+            format!("block{i}/attn"),
+            OpKind::Dense,
+            token_mem_shape,
+            &[prev],
+            dense_params(d as u64, 4 * d as u64), // qkv + out projections
+        );
+        let add1 = b.add(format!("block{i}/add1"), OpKind::Add, token_mem_shape, &[prev, attn]);
+        let mlp = b.add_with(
+            format!("block{i}/mlp"),
+            OpKind::Dense,
+            token_mem_shape,
+            &[add1],
+            dense_params(d as u64, 8 * d as u64), // 2 dense layers, 4d hidden
+        );
+        let add2 = b.add(format!("block{i}/add2"), OpKind::Add, token_mem_shape, &[add1, mlp]);
+        prev = add2;
+    }
+    b.add_with(
+        "loss_head",
+        OpKind::Dense,
+        &[s, d],
+        &[prev],
+        dense_params(d as u64, d as u64),
+    );
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{plan_at_min_budget, Family, Objective};
+    use crate::sim::{simulate, simulate_vanilla, SimOptions};
+
+    #[test]
+    fn mlp_tower_is_a_chain() {
+        let g = mlp_tower(16, 1024, 32);
+        assert_eq!(g.len(), 18); // input + 16 layers + loss head
+        for (v, _) in g.nodes() {
+            assert!(g.preds(v).len() <= 1);
+        }
+        // Per-layer activation memory: batch × width × 4.
+        let (_, layer) = g.nodes().find(|(_, n)| n.name == "layer0").unwrap();
+        assert_eq!(layer.mem, 32 * 1024 * 4);
+        assert_eq!(layer.time, 10, "dense nodes carry conv-grade cost");
+    }
+
+    #[test]
+    fn tower_plans_reduce_memory() {
+        let g = mlp_tower(32, 512, 16);
+        let vanilla = simulate_vanilla(&g, SimOptions { liveness: true, include_params: false });
+        let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+        let ours =
+            simulate(&g, &plan.chain, SimOptions { liveness: true, include_params: false });
+        assert!(ours.peak_bytes * 2 < vanilla.peak_bytes);
+    }
+
+    #[test]
+    fn transformer_tower_residuals() {
+        let g = transformer_tower(4, 256, 64, 8);
+        // Each block's add1 feeds both mlp and add2 (residual).
+        let add1 = g.nodes().find(|(_, n)| n.name == "block0/add1").map(|(v, _)| v).unwrap();
+        assert_eq!(g.succs(add1).len(), 2);
+        // ~100M-param scale check at realistic sizes: 12 blocks × d=1024 →
+        // qkv+proj 4d² + mlp 8d² = 12d² per block ≈ 151M… we train smaller;
+        // here just assert params grow with blocks.
+        let g2 = transformer_tower(8, 256, 64, 8);
+        assert!(g2.total_param_bytes() > g.total_param_bytes());
+    }
+}

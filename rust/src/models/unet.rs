@@ -1,0 +1,101 @@
+//! U-Net (Ronneberger et al., MICCAI 2015) at the original 572×572 size.
+//!
+//! The long skip connections from each encoder stage to the matching
+//! decoder stage are the canonical example of a graph Chen's segmentation
+//! cannot cut (no articulation points across the U), while lower-set
+//! planning handles it natively — the paper reports −48% vs Chen's −18%.
+
+use crate::graph::{Graph, GraphBuilder};
+
+use super::common::*;
+
+/// Two unpadded 3×3 conv+relu pairs (the original U-Net uses valid convs,
+/// which is why 572 shrinks to 388 at the output).
+fn double_conv(b: &mut GraphBuilder, name: &str, x: Feat, c: u32) -> Feat {
+    let c1 = conv(b, &format!("{name}/conv1"), x, c, 3, 1, 0, 1);
+    let r1 = relu(b, &format!("{name}/relu1"), c1);
+    let c2 = conv(b, &format!("{name}/conv2"), r1, c, 3, 1, 0, 1);
+    relu(b, &format!("{name}/relu2"), c2)
+}
+
+/// Original U-Net: encoder 64→1024, decoder with transposed-conv
+/// upsampling and center-cropped skip concats.
+pub fn unet(batch: u64, input_hw: u32) -> Graph {
+    let mut b = GraphBuilder::new("unet", batch);
+    let x = input(&mut b, 1, input_hw, input_hw);
+
+    // Encoder.
+    let mut skips: Vec<Feat> = Vec::new();
+    let mut f = x;
+    for (i, c) in [64u32, 128, 256, 512].iter().enumerate() {
+        f = double_conv(&mut b, &format!("enc{}", i + 1), f, *c);
+        skips.push(f);
+        f = pool(&mut b, &format!("pool{}", i + 1), f, 2, 2, 0);
+    }
+    f = double_conv(&mut b, "bottleneck", f, 1024);
+
+    // Decoder. The encoder skip is center-cropped to the upsampled size;
+    // Chainer's `get_item` materializes the crop as a new variable, so it
+    // is a real node, as is the ReLU after each transposed conv.
+    for (i, c) in [512u32, 256, 128, 64].iter().enumerate() {
+        let up = upsample_to(
+            &mut b,
+            &format!("up{}", i + 1),
+            f,
+            f.h * 2,
+            f.w * 2,
+            *c,
+            true,
+        );
+        let up = relu(&mut b, &format!("up{}/relu", i + 1), up);
+        let skip = skips[3 - i];
+        let crop_id = b.add(
+            format!("crop{}", i + 1),
+            crate::graph::OpKind::Other,
+            &[skip.c, up.h, up.w],
+            &[skip.id],
+        );
+        let cropped = Feat { id: crop_id, c: skip.c, h: up.h, w: up.w };
+        let cat = concat(&mut b, &format!("cat{}", i + 1), &[cropped, up]);
+        f = double_conv(&mut b, &format!("dec{}", i + 1), cat, *c);
+    }
+    let out = conv(&mut b, "out_conv", f, 2, 1, 1, 0, 1);
+    softmax(&mut b, "softmax", out);
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unet_node_count_matches_paper_scale() {
+        let g = unet(1, 572);
+        // Paper: #V = 60. Ours: 9 double-convs × 4 + 4 pools + 4 ups with
+        // relus + 4 crops + 4 concats + out + softmax + input = 59.
+        assert!((56..=64).contains(&g.len()), "#V = {}", g.len());
+    }
+
+    #[test]
+    fn output_resolution_is_388() {
+        // The famous 572 → 388 shrinkage of valid convolutions.
+        let g = unet(1, 572);
+        let out = g.nodes().find(|(_, n)| n.name == "out_conv").map(|(_, n)| n.shape.clone());
+        assert_eq!(out.unwrap(), vec![2, 388, 388]);
+    }
+
+    #[test]
+    fn skip_connections_span_the_u() {
+        // enc4/relu2 feeds both pool4 and cat1 — a long-range skip.
+        let g = unet(1, 572);
+        let enc4 = g.nodes().find(|(_, n)| n.name == "enc4/relu2").map(|(v, _)| v).unwrap();
+        assert_eq!(g.succs(enc4).len(), 2);
+    }
+
+    #[test]
+    fn params_near_31m() {
+        let g = unet(1, 572);
+        let params = g.total_param_bytes() / 4;
+        assert!((28_000_000..35_000_000).contains(&params), "params = {params}");
+    }
+}

@@ -1,0 +1,86 @@
+//! VGG (Simonyan & Zisserman, ICLR 2015).
+
+use crate::graph::{Graph, GraphBuilder};
+
+use super::common::*;
+
+/// Generic VGG: `cfg` lists channel counts, `0` marks a max-pool.
+fn vgg(name: &str, batch: u64, input_hw: u32, cfg: &[u32]) -> Graph {
+    let mut b = GraphBuilder::new(name, batch);
+    let mut f = input(&mut b, 3, input_hw, input_hw);
+    let mut ci = 0;
+    for (i, &c) in cfg.iter().enumerate() {
+        if c == 0 {
+            f = pool(&mut b, &format!("pool{i}"), f, 2, 2, 0);
+        } else {
+            ci += 1;
+            f = conv(&mut b, &format!("conv{ci}"), f, c, 3, 1, 1, 1);
+            f = relu(&mut b, &format!("relu{ci}"), f);
+        }
+    }
+    // Classifier: fc6/fc7 with relu+dropout, fc8.
+    f = dense(&mut b, "fc6", f, 4096);
+    f = relu(&mut b, "relu_fc6", f);
+    f = dropout(&mut b, "drop6", f);
+    f = dense(&mut b, "fc7", f, 4096);
+    f = relu(&mut b, "relu_fc7", f);
+    f = dropout(&mut b, "drop7", f);
+    f = dense(&mut b, "fc8", f, 1000);
+    softmax(&mut b, "softmax", f);
+    b.build()
+}
+
+/// VGG-19: 16 conv layers (2,2,4,4,4) + 3 FC.
+pub fn vgg19(batch: u64, input_hw: u32) -> Graph {
+    vgg(
+        "vgg19",
+        batch,
+        input_hw,
+        &[64, 64, 0, 128, 128, 0, 256, 256, 256, 256, 0, 512, 512, 512, 512, 0, 512, 512, 512,
+          512, 0],
+    )
+}
+
+/// VGG-16 (extra zoo member for ablations).
+pub fn vgg16(batch: u64, input_hw: u32) -> Graph {
+    vgg(
+        "vgg16",
+        batch,
+        input_hw,
+        &[64, 64, 0, 128, 128, 0, 256, 256, 256, 0, 512, 512, 512, 0, 512, 512, 512, 0],
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vgg19_node_count_matches_paper_scale() {
+        let g = vgg19(1, 224);
+        // Paper: #V = 46. Ours: 16 conv + 16 relu + 5 pool + 3 fc + 2 relu
+        // + 2 dropout + softmax + input = 46.
+        assert!((44..=48).contains(&g.len()), "#V = {}", g.len());
+    }
+
+    #[test]
+    fn vgg19_is_a_pure_chain() {
+        let g = vgg19(1, 224);
+        for (v, _) in g.nodes() {
+            assert!(g.preds(v).len() <= 1);
+            assert!(g.succs(v).len() <= 1);
+        }
+    }
+
+    #[test]
+    fn vgg19_params_near_143m() {
+        let g = vgg19(1, 224);
+        let params = g.total_param_bytes() / 4;
+        assert!((138_000_000..148_000_000).contains(&params), "params = {params}");
+    }
+
+    #[test]
+    fn vgg16_smaller_than_vgg19() {
+        assert!(vgg16(1, 224).len() < vgg19(1, 224).len());
+    }
+}

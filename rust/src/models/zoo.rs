@@ -1,0 +1,274 @@
+//! The evaluation zoo: every network of the paper's Table 1 with its
+//! exact experimental configuration (batch size, input resolution), plus
+//! the paper's reported numbers for shape-comparison in the harnesses.
+
+use crate::graph::Graph;
+
+pub use super::densenet::{densenet121, densenet161};
+pub use super::googlenet::googlenet;
+pub use super::pspnet::pspnet;
+pub use super::mobilenet::mobilenet_v1;
+pub use super::resnet::{resnet101, resnet152, resnet18, resnet34, resnet50};
+pub use super::towers::{mlp_tower, transformer_tower};
+pub use super::unet::unet;
+pub use super::vgg::{vgg16, vgg19};
+
+/// Paper-reported Table 1 row (GB, and % reduction from vanilla), used by
+/// the harnesses to print paper-vs-measured comparisons.
+#[derive(Clone, Copy, Debug)]
+pub struct PaperRow {
+    pub approx_mc_gb: f64,
+    pub approx_tc_gb: f64,
+    pub exact_mc_gb: f64,
+    pub exact_tc_gb: f64,
+    pub chen_gb: f64,
+    pub vanilla_gb: f64,
+}
+
+/// One zoo entry: constructor + the paper's experimental configuration.
+#[derive(Clone, Copy)]
+pub struct ZooEntry {
+    pub name: &'static str,
+    /// Batch size used in Table 1.
+    pub batch: u64,
+    /// Input resolution (square).
+    pub input_hw: u32,
+    /// `#V` the paper reports.
+    pub paper_nodes: u32,
+    pub paper: PaperRow,
+    pub build: fn(u64, u32) -> Graph,
+}
+
+impl ZooEntry {
+    /// Build at the paper's configuration.
+    pub fn build_paper(&self) -> Graph {
+        (self.build)(self.batch, self.input_hw)
+    }
+
+    /// Build at an arbitrary batch size (Figure 3 sweeps).
+    pub fn build_batch(&self, batch: u64) -> Graph {
+        (self.build)(batch, self.input_hw)
+    }
+}
+
+/// The seven networks of Table 1, in the paper's row order.
+pub const TABLE1: &[ZooEntry] = &[
+    ZooEntry {
+        name: "PSPNet",
+        batch: 2,
+        input_hw: 713,
+        paper_nodes: 385,
+        paper: PaperRow {
+            approx_mc_gb: 2.7,
+            approx_tc_gb: 3.1,
+            exact_mc_gb: 2.8,
+            exact_tc_gb: 3.2,
+            chen_gb: 4.0,
+            vanilla_gb: 9.4,
+        },
+        build: pspnet,
+    },
+    ZooEntry {
+        name: "U-Net",
+        batch: 8,
+        input_hw: 572,
+        paper_nodes: 60,
+        paper: PaperRow {
+            approx_mc_gb: 5.0,
+            approx_tc_gb: 6.7,
+            exact_mc_gb: 4.7,
+            exact_tc_gb: 5.3,
+            chen_gb: 7.4,
+            vanilla_gb: 9.1,
+        },
+        build: unet,
+    },
+    ZooEntry {
+        name: "ResNet50",
+        batch: 96,
+        input_hw: 224,
+        paper_nodes: 176,
+        paper: PaperRow {
+            approx_mc_gb: 3.4,
+            approx_tc_gb: 4.4,
+            exact_mc_gb: 3.4,
+            exact_tc_gb: 4.3,
+            chen_gb: 3.7,
+            vanilla_gb: 8.9,
+        },
+        build: resnet50,
+    },
+    ZooEntry {
+        name: "ResNet152",
+        batch: 48,
+        input_hw: 224,
+        paper_nodes: 516,
+        paper: PaperRow {
+            approx_mc_gb: 2.3,
+            approx_tc_gb: 2.5,
+            exact_mc_gb: 2.3,
+            exact_tc_gb: 2.5,
+            chen_gb: 2.4,
+            vanilla_gb: 9.2,
+        },
+        build: resnet152,
+    },
+    ZooEntry {
+        name: "VGG19",
+        batch: 64,
+        input_hw: 224,
+        paper_nodes: 46,
+        paper: PaperRow {
+            approx_mc_gb: 4.5,
+            approx_tc_gb: 5.5,
+            exact_mc_gb: 4.5,
+            exact_tc_gb: 5.5,
+            chen_gb: 4.7,
+            vanilla_gb: 7.0,
+        },
+        build: vgg19,
+    },
+    ZooEntry {
+        name: "DenseNet161",
+        batch: 32,
+        input_hw: 224,
+        paper_nodes: 568,
+        paper: PaperRow {
+            approx_mc_gb: 1.6,
+            approx_tc_gb: 1.9,
+            exact_mc_gb: 1.7,
+            exact_tc_gb: 1.8,
+            chen_gb: 1.8,
+            vanilla_gb: 8.5,
+        },
+        build: densenet161,
+    },
+    ZooEntry {
+        name: "GoogLeNet",
+        batch: 256,
+        input_hw: 224,
+        paper_nodes: 134,
+        paper: PaperRow {
+            approx_mc_gb: 5.2,
+            approx_tc_gb: 5.5,
+            exact_mc_gb: 5.2,
+            exact_tc_gb: 5.9,
+            chen_gb: 6.5,
+            vanilla_gb: 8.5,
+        },
+        build: googlenet,
+    },
+];
+
+/// Extra zoo members beyond Table 1 (ablation points: chain-friendly
+/// architectures where Chen's heuristic is expected to do well). Paper
+/// rows are zeroed — the paper did not evaluate these.
+pub const EXTRAS: &[ZooEntry] = &[
+    ZooEntry {
+        name: "ResNet18",
+        batch: 128,
+        input_hw: 224,
+        paper_nodes: 0,
+        paper: NO_PAPER_ROW,
+        build: resnet18,
+    },
+    ZooEntry {
+        name: "ResNet34",
+        batch: 96,
+        input_hw: 224,
+        paper_nodes: 0,
+        paper: NO_PAPER_ROW,
+        build: resnet34,
+    },
+    ZooEntry {
+        name: "MobileNetV1",
+        batch: 256,
+        input_hw: 224,
+        paper_nodes: 0,
+        paper: NO_PAPER_ROW,
+        build: mobilenet_v1,
+    },
+    ZooEntry {
+        name: "VGG16",
+        batch: 64,
+        input_hw: 224,
+        paper_nodes: 0,
+        paper: NO_PAPER_ROW,
+        build: vgg16,
+    },
+    ZooEntry {
+        name: "DenseNet121",
+        batch: 48,
+        input_hw: 224,
+        paper_nodes: 0,
+        paper: NO_PAPER_ROW,
+        build: densenet121,
+    },
+];
+
+const NO_PAPER_ROW: PaperRow = PaperRow {
+    approx_mc_gb: 0.0,
+    approx_tc_gb: 0.0,
+    exact_mc_gb: 0.0,
+    exact_tc_gb: 0.0,
+    chen_gb: 0.0,
+    vanilla_gb: 0.0,
+};
+
+/// Look up a zoo entry by (case-insensitive) name, across Table 1 and the
+/// extra members.
+pub fn find(name: &str) -> Option<&'static ZooEntry> {
+    let lower = name.to_ascii_lowercase();
+    TABLE1
+        .iter()
+        .chain(EXTRAS.iter())
+        .find(|e| e.name.to_ascii_lowercase() == lower)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_entries_build_and_match_paper_node_counts() {
+        for e in TABLE1 {
+            // Build at batch 1 for speed; node count is batch-independent.
+            let g = e.build_batch(1);
+            let lo = e.paper_nodes as f64 * 0.93;
+            let hi = e.paper_nodes as f64 * 1.07;
+            assert!(
+                (g.len() as f64) >= lo && (g.len() as f64) <= hi,
+                "{}: #V = {} vs paper {} (±7%)",
+                e.name,
+                g.len(),
+                e.paper_nodes
+            );
+        }
+    }
+
+    #[test]
+    fn find_is_case_insensitive() {
+        assert!(find("resnet50").is_some());
+        assert!(find("RESNET50").is_some());
+        assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn extras_build() {
+        for e in EXTRAS {
+            let g = e.build_batch(1);
+            assert!(g.len() > 20, "{}", e.name);
+            assert!(find(e.name).is_some());
+        }
+    }
+
+    #[test]
+    fn paper_rows_are_self_consistent() {
+        for e in TABLE1 {
+            let p = &e.paper;
+            assert!(p.vanilla_gb > p.chen_gb);
+            assert!(p.vanilla_gb > p.approx_mc_gb);
+            assert!(p.approx_mc_gb <= p.approx_tc_gb);
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! Chen et al. (2016) √n checkpointing — the paper's baseline.
+//!
+//! "Training deep nets with sublinear memory cost" divides the network
+//! into segments, caches segment boundaries during the forward pass, and
+//! recomputes each segment during backward. The NeurIPS-2019 paper's
+//! Appendix B pins down the two under-specified pieces for general graphs,
+//! which we follow exactly:
+//!
+//! - topological order obtained by DFS on the computation graph;
+//! - candidate stage splitting points `C` = the *articulation points* of
+//!   the (undirected skeleton of the) computation graph — the nodes whose
+//!   removal disconnects it.
+//!
+//! Given a per-segment budget `b`, Chen's "memory planning with budget"
+//! packs nodes into the current segment until its temporary size exceeds
+//! `b`, then cuts at the next candidate point. The overall algorithm
+//! sweeps `b` (Chen uses a grid/doubling search) and keeps the plan with
+//! the lowest total memory. Every topological prefix is a lower set, so
+//! each Chen plan is a [`LowerSetChain`] and is evaluated by the very same
+//! simulator as ours — exactly how the paper compares against it.
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{articulation_points, Graph, NodeSet};
+
+use super::strategy::LowerSetChain;
+
+/// A Chen plan: the chain plus the per-segment budget that produced it.
+pub struct ChenPlan {
+    pub chain: LowerSetChain,
+    /// The per-segment temporary-memory budget `b` that won the sweep.
+    pub segment_budget: u64,
+}
+
+/// Build the segmentation for a fixed per-segment budget `b`.
+///
+/// Walks the topological order accumulating the running segment's memory;
+/// once it exceeds `b` the segment is closed at the next articulation
+/// point (splitting elsewhere would sever a skip connection — Chen's
+/// heuristic only cuts where the graph is 1-connected).
+pub fn chen_segmentation(g: &Graph, b: u64) -> LowerSetChain {
+    let arts: NodeSet = {
+        let mut s = NodeSet::empty(g.len());
+        for v in articulation_points(g) {
+            s.insert(v);
+        }
+        s
+    };
+    let topo = g.topo_order();
+    let mut chain: Vec<NodeSet> = Vec::new();
+    let mut cur = NodeSet::empty(g.len()); // cumulative lower set
+    let mut seg_mem = 0u64;
+    let mut want_cut = false;
+    for (idx, &v) in topo.iter().enumerate() {
+        cur.insert(v);
+        seg_mem += g.node(v).mem;
+        if seg_mem > b {
+            want_cut = true;
+        }
+        let last = idx + 1 == topo.len();
+        // Cut at articulation points once over budget (and always at the end).
+        if last || (want_cut && arts.contains(v)) {
+            chain.push(cur.clone());
+            seg_mem = 0;
+            want_cut = false;
+        }
+    }
+    LowerSetChain::new_unchecked(g, chain)
+}
+
+/// Sweep per-segment budgets and return the plan minimizing the measured
+/// peak (per `score`, typically the liveness-aware simulator). The sweep
+/// is geometric from the largest single node to `M(V)`, which covers the
+/// √n sweet spot Chen's analysis targets.
+pub fn chen_plan<F>(g: &Graph, mut score: F) -> Result<ChenPlan>
+where
+    F: FnMut(&LowerSetChain) -> u64,
+{
+    let max_node = g.nodes().map(|(_, n)| n.mem).max().unwrap_or(1);
+    let total = g.total_mem();
+    if total == 0 {
+        return Err(anyhow!("empty graph"));
+    }
+    let mut budgets: Vec<u64> = Vec::new();
+    let mut b = max_node.max(1);
+    while b < total {
+        budgets.push(b);
+        // 1.3× geometric steps: fine enough to find the knee, coarse
+        // enough to keep the sweep cheap.
+        b = (b as f64 * 1.3) as u64 + 1;
+    }
+    budgets.push(total);
+    let mut best: Option<(u64, u64, LowerSetChain)> = None;
+    for b in budgets {
+        let chain = chen_segmentation(g, b);
+        let peak = score(&chain);
+        if best.as_ref().map(|(p, _, _)| peak < *p).unwrap_or(true) {
+            best = Some((peak, b, chain));
+        }
+    }
+    let (_, segment_budget, chain) = best.unwrap();
+    Ok(ChenPlan { chain, segment_budget })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, NodeId, OpKind};
+
+    fn chain_graph(n: u32, mem: u64) -> Graph {
+        let mut b = GraphBuilder::new("chain", 1);
+        let mut prev: Option<NodeId> = None;
+        for i in 0..n {
+            let inputs: Vec<NodeId> = prev.into_iter().collect();
+            prev = Some(b.add_raw(format!("n{i}"), OpKind::Other, mem, 1, &inputs));
+        }
+        b.build()
+    }
+
+    #[test]
+    fn segmentation_is_valid_chain() {
+        let g = chain_graph(16, 10);
+        for b in [10u64, 40, 80, 160] {
+            let c = chen_segmentation(&g, b);
+            assert_eq!(c.lower_sets().last().unwrap().len(), 16);
+            for l in c.lower_sets() {
+                assert!(g.is_lower_set(l));
+            }
+        }
+    }
+
+    #[test]
+    fn sqrt_n_segments_on_uniform_chain() {
+        // 16 nodes of mem 10, budget 40 ⇒ segments of 4-5 nodes ⇒ 4 cuts.
+        let g = chain_graph(16, 10);
+        let c = chen_segmentation(&g, 40);
+        assert!(c.k() >= 3 && c.k() <= 5, "k={}", c.k());
+    }
+
+    #[test]
+    fn skip_connections_prevent_cuts() {
+        // Residual-style graph: skips 0→3, 3→6 guard the interiors; only
+        // nodes 3 and 6 are articulation points... build 0→1→2→3→4→5→6 with
+        // skips 0→3 and 3→6: cuts can only happen at 3 and 6.
+        let mut b = GraphBuilder::new("res", 1);
+        let mut ids = Vec::new();
+        for i in 0..7u32 {
+            let mut inputs: Vec<NodeId> = Vec::new();
+            if i > 0 {
+                inputs.push(ids[(i - 1) as usize]);
+            }
+            if i == 3 {
+                inputs.push(ids[0]);
+            }
+            if i == 6 {
+                inputs.push(ids[3]);
+            }
+            ids.push(b.add_raw(format!("n{i}"), OpKind::Other, 10, 1, &inputs));
+        }
+        let g = b.build();
+        // Tiny budget: wants to cut everywhere but may only cut at 3.
+        let c = chen_segmentation(&g, 10);
+        assert_eq!(c.k(), 2, "one interior cut at node 3 plus the final segment");
+        assert_eq!(c.lower_sets()[0].len(), 4); // {0,1,2,3}
+    }
+
+    #[test]
+    fn sweep_picks_minimum() {
+        let g = chain_graph(25, 10);
+        let plan = chen_plan(&g, |c| c.peak_mem(&g)).unwrap();
+        // The Eq.2 peak of the chosen plan must beat both extremes.
+        let coarse = chen_segmentation(&g, g.total_mem());
+        let fine = chen_segmentation(&g, 10);
+        let best = plan.chain.peak_mem(&g);
+        assert!(best <= coarse.peak_mem(&g));
+        assert!(best <= fine.peak_mem(&g));
+    }
+}

@@ -1,0 +1,138 @@
+//! Exhaustive depth-first search over lower-set sequences (§4.1).
+//!
+//! The rudimentary baseline: explores every increasing sequence of lower
+//! sets and returns the optimum. Exponential — usable only on small graphs,
+//! which is exactly its role here: it is the *oracle* that the DP planners
+//! are property-tested against.
+
+use crate::graph::{Graph, NodeSet};
+
+use super::strategy::LowerSetChain;
+use super::Objective;
+
+/// Exhaustively find the optimal canonical strategy under `budget`.
+/// Returns `None` if no sequence satisfies the budget.
+///
+/// Complexity is `O(#L_G^{#V})` in the worst case as the paper notes;
+/// only call this on graphs with ≲ 12 nodes.
+pub fn exhaustive_search(g: &Graph, budget: u64, objective: Objective) -> Option<LowerSetChain> {
+    assert!(g.len() <= 20, "exhaustive search is an oracle for tiny graphs");
+    let full = NodeSet::full(g.len());
+    let mut best: Option<(u64, Vec<NodeSet>)> = None;
+    let mut path: Vec<NodeSet> = Vec::new();
+    dfs(g, budget, objective, &NodeSet::empty(g.len()), 0, 0, &full, &mut path, &mut best);
+    best.map(|(_, chain)| LowerSetChain::new_unchecked(g, chain))
+}
+
+#[allow(clippy::too_many_arguments)]
+fn dfs(
+    g: &Graph,
+    budget: u64,
+    objective: Objective,
+    l: &NodeSet,      // current lower set L_i
+    t: u64,           // T({L_1 ≺ … ≺ L_i})
+    m: u64,           // M(U_i)
+    full: &NodeSet,
+    path: &mut Vec<NodeSet>,
+    best: &mut Option<(u64, Vec<NodeSet>)>,
+) {
+    if l == full {
+        let better = match (&best, objective) {
+            (None, _) => true,
+            (Some((bt, _)), Objective::MinOverhead) => t < *bt,
+            (Some((bt, _)), Objective::MaxOverhead) => t > *bt,
+        };
+        if better {
+            *best = Some((t, path.clone()));
+        }
+        return;
+    }
+    // Enumerate all lower sets L' with L ⊊ L' by DFS over addable nodes.
+    // Generate each strict superset exactly once via canonical subset
+    // enumeration: collect all lower sets reachable by adding nodes.
+    let supersets = strict_super_lower_sets(g, l);
+    for l2 in supersets {
+        // Eq. 2 terms for the prospective segment.
+        let mut v_seg = l2.clone();
+        v_seg.subtract(l);
+        let peak = m
+            + 2 * g.mem_of(&v_seg)
+            + g.mem_of(&g.frontier(&l2))
+            + g.mem_of(&g.frontier_coinputs(&l2));
+        if peak > budget {
+            continue;
+        }
+        let boundary = g.boundary(&l2);
+        let mut recomputed = v_seg.clone();
+        recomputed.subtract(&boundary);
+        let t2 = t + g.time_of(&recomputed);
+        let mut newly = boundary;
+        newly.subtract(l);
+        let m2 = m + g.mem_of(&newly);
+        path.push(l2.clone());
+        dfs(g, budget, objective, &l2, t2, m2, full, path, best);
+        path.pop();
+    }
+}
+
+/// All lower sets strictly containing `l`.
+fn strict_super_lower_sets(g: &Graph, l: &NodeSet) -> Vec<NodeSet> {
+    let mut out = Vec::new();
+    let mut seen = std::collections::HashSet::new();
+    let mut stack = vec![l.clone()];
+    seen.insert(l.clone());
+    while let Some(cur) = stack.pop() {
+        for v in crate::graph::addable(g, &cur).iter() {
+            let mut next = cur.clone();
+            next.insert(v);
+            if seen.insert(next.clone()) {
+                out.push(next.clone());
+                stack.push(next);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, NodeId, OpKind};
+
+    fn chain_graph(mems: &[u64]) -> Graph {
+        let mut b = GraphBuilder::new("chain", 1);
+        let mut prev: Option<NodeId> = None;
+        for (i, &m) in mems.iter().enumerate() {
+            let inputs: Vec<NodeId> = prev.into_iter().collect();
+            prev = Some(b.add_raw(format!("n{i}"), OpKind::Other, m, 1, &inputs));
+        }
+        b.build()
+    }
+
+    #[test]
+    fn finds_zero_extra_overhead_at_large_budget() {
+        let g = chain_graph(&[1, 1, 1, 1]);
+        let c = exhaustive_search(&g, 1 << 30, Objective::MinOverhead).unwrap();
+        assert_eq!(c.overhead(&g), 1); // sink only
+    }
+
+    #[test]
+    fn respects_budget() {
+        let g = chain_graph(&[10, 10, 10, 10]);
+        for b in [25u64, 30, 40, 60, 100] {
+            if let Some(c) = exhaustive_search(&g, b, Objective::MinOverhead) {
+                assert!(c.peak_mem(&g) <= b);
+            }
+        }
+        assert!(exhaustive_search(&g, 10, Objective::MinOverhead).is_none());
+    }
+
+    #[test]
+    fn max_objective_not_less_than_min() {
+        let g = chain_graph(&[3, 1, 4, 1, 5]);
+        let b = 30;
+        let tc = exhaustive_search(&g, b, Objective::MinOverhead).unwrap();
+        let mc = exhaustive_search(&g, b, Objective::MaxOverhead).unwrap();
+        assert!(mc.overhead(&g) >= tc.overhead(&g));
+    }
+}

@@ -1,0 +1,527 @@
+//! The dynamic-programming core (Algorithm 1 of the paper).
+//!
+//! Shared by the exact DP (§4.2, family = all lower sets) and the
+//! approximate DP (§4.3, family = `L^Pruned`). The DP table is the
+//! paper's sparse `opt[L, t] = m` with `optarg[L, t] = (L_prev, t_prev)`:
+//! per lower set, a Pareto front sorted by accumulated overhead `t`
+//! holding the minimal cache memory `m = M(U_i)` reaching that `(L, t)`.
+//!
+//! Entries are Pareto-pruned in the direction of the objective:
+//!
+//! - **MinOverhead** (time-centric): keep `m` strictly decreasing in `t`
+//!   — the paper's "skip `opt[L,t']` when `t < t'` and
+//!   `opt[L,t] < opt[L,t']`";
+//! - **MaxOverhead** (memory-centric, §4.4): larger `t` is *desirable*,
+//!   so keep `m` strictly increasing in `t` (mirror front).
+//!
+//! Both prunings are sound because every downstream feasibility check is
+//! monotone in `m` and the final selection is monotone in `t`.
+//!
+//! [`DpContext::min_feasible_budget`] avoids the naive binary search over
+//! budgets: a single **minimax DP** pass computes, per lower set, the
+//! Pareto front of `(cache m, best achievable max-peak)` and reads the
+//! minimal feasible `B*` off the final front directly.
+
+use crate::graph::{Graph, NodeSet};
+
+use super::strategy::LowerSetChain;
+use super::Objective;
+
+/// Precomputed per-family quantities reused across DP runs.
+pub struct DpContext<'g> {
+    pub g: &'g Graph,
+    /// The lower-set family, sorted by cardinality ascending; `family[0]`
+    /// must be ∅ and the last element `V`.
+    pub family: Vec<NodeSet>,
+    /// `M(δ+(L)\L) + M(δ−(δ+(L))\L)` per family member (Eq. 2 iii+iv).
+    extra_mem: Vec<u64>,
+    /// For each family index, the index of the first member with strictly
+    /// larger cardinality (start of possible transition targets).
+    next_size_start: Vec<usize>,
+    /// Per-ideal prefix sums `M(L)` / `T(L)` — turn the per-transition
+    /// segment sums into O(1) differences (perf §opt-1).
+    mem_cum: Vec<u64>,
+    time_cum: Vec<u64>,
+    /// Boundary node lists (boundaries are narrow — tens of nodes — so the
+    /// per-transition `∂(L')\L` sums scan these instead of full bitsets).
+    boundary_nodes: Vec<Vec<u32>>,
+    /// Per-node cost lookups.
+    node_mem: Vec<u64>,
+    node_time: Vec<u64>,
+}
+
+/// One DP front entry: `opt[L, t] = m` plus the `optarg` predecessor.
+#[derive(Clone, Copy, Debug)]
+struct Cell {
+    t: u32,
+    m: u64,
+    prev: u32,
+    prev_t: u32,
+}
+
+/// Solution of one DP run.
+pub struct DpSolution {
+    pub chain: LowerSetChain,
+    pub overhead: u64,
+}
+
+impl<'g> DpContext<'g> {
+    /// Build a context. `family` must contain ∅ and `V`; it is re-sorted
+    /// by cardinality here.
+    pub fn new(g: &'g Graph, mut family: Vec<NodeSet>) -> Self {
+        family.sort_by(|a, b| a.len().cmp(&b.len()).then_with(|| a.words().cmp(b.words())));
+        family.dedup();
+        assert!(family.first().map(|l| l.is_empty()).unwrap_or(false), "family must contain ∅");
+        assert_eq!(family.last().map(|l| l.len()), Some(g.len()), "family must contain V");
+        let boundaries: Vec<NodeSet> = family.iter().map(|l| g.boundary(l)).collect();
+        let extra_mem: Vec<u64> = family
+            .iter()
+            .map(|l| g.mem_of(&g.frontier(l)) + g.mem_of(&g.frontier_coinputs(l)))
+            .collect();
+        let sizes: Vec<u32> = family.iter().map(|l| l.len()).collect();
+        let next_size_start: Vec<usize> =
+            sizes.iter().map(|&s| sizes.partition_point(|&x| x <= s)).collect();
+        let mem_cum: Vec<u64> = family.iter().map(|l| g.mem_of(l)).collect();
+        let time_cum: Vec<u64> = family.iter().map(|l| g.time_of(l)).collect();
+        let boundary_nodes: Vec<Vec<u32>> =
+            boundaries.iter().map(|b| b.iter().map(|v| v.0).collect()).collect();
+        let node_mem: Vec<u64> = (0..g.len()).map(|v| g.node(crate::graph::NodeId(v)).mem).collect();
+        let node_time: Vec<u64> =
+            (0..g.len()).map(|v| g.node(crate::graph::NodeId(v)).time).collect();
+        DpContext {
+            g,
+            family,
+            extra_mem,
+            next_size_start,
+            mem_cum,
+            time_cum,
+            boundary_nodes,
+            node_mem,
+            node_time,
+        }
+    }
+
+    /// Number of family members.
+    pub fn family_len(&self) -> usize {
+        self.family.len()
+    }
+
+    /// Per-transition Eq. 2 terms for `L = family[j] → L' = family[j2]`.
+    /// Returns `(seg_mem2, t_add, m_add)`.
+    ///
+    /// Perf §opt-1: all three terms reduce to prefix-sum differences plus
+    /// a scan of the *boundary* `∂(L')` (narrow — tens of nodes) instead
+    /// of three full-bitset iterations:
+    ///   `M(V')            = M(L') − M(L)`
+    ///   `T(V' \ ∂(L'))    = T(L') − T(L) − T(∂(L') \ L)`
+    ///   `M(∂(L') \ L)`    = boundary scan
+    /// (`∂(L') ∩ V' = ∂(L') \ L` because `∂(L') ⊆ L'`.)
+    #[inline]
+    fn transition_terms(&self, j: usize, j2: usize) -> (u64, u64, u64) {
+        let seg_mem2 = 2 * (self.mem_cum[j2] - self.mem_cum[j]);
+        let l1 = &self.family[j];
+        let mut bsum_m = 0u64;
+        let mut bsum_t = 0u64;
+        for &v in &self.boundary_nodes[j2] {
+            if !l1.contains(crate::graph::NodeId(v)) {
+                bsum_m += self.node_mem[v as usize];
+                bsum_t += self.node_time[v as usize];
+            }
+        }
+        let t_add = self.time_cum[j2] - self.time_cum[j] - bsum_t;
+        let m_add = bsum_m;
+        (seg_mem2, t_add, m_add)
+    }
+
+    /// Run Algorithm 1 under memory budget `budget` and extract the best
+    /// chain for `objective`. Returns `None` if no canonical strategy over
+    /// this family satisfies the budget.
+    ///
+    /// Perf §opt-2: a transition `L → L'` maps the *whole* source front by
+    /// a uniform shift `(t + t_add, m + m_add)` after a feasibility filter
+    /// that is monotone in `m`; target-front update is therefore a single
+    /// Pareto **merge** of two sorted vectors — O(|a|+|b|), allocation-free
+    /// with a reused scratch buffer — instead of per-entry tree inserts.
+    pub fn solve(&self, budget: u64, objective: Objective) -> Option<DpSolution> {
+        let n = self.family.len();
+        let mut fronts: Vec<Vec<Cell>> = vec![Vec::new(); n];
+        fronts[0].push(Cell { t: 0, m: 0, prev: u32::MAX, prev_t: 0 });
+        let mut scratch: Vec<Cell> = Vec::new();
+        let mut shifted: Vec<Cell> = Vec::new();
+
+        for j in 0..n {
+            if fronts[j].is_empty() {
+                continue;
+            }
+            let (head, tail) = fronts.split_at_mut(j + 1);
+            let src = &head[j];
+            for j2 in self.next_size_start[j]..n {
+                if !self.family[j].is_strict_subset(&self.family[j2]) {
+                    continue;
+                }
+                let (seg_mem2, t_add, m_add) = self.transition_terms(j, j2);
+                let extra = self.extra_mem[j2];
+                let cap = budget.saturating_sub(seg_mem2 + extra);
+                if seg_mem2 + extra > budget {
+                    continue;
+                }
+                // Feasible + shifted copy of the source front. Fronts are
+                // sorted by t ascending in both objectives; the filter
+                // m <= cap keeps a contiguous run (m monotone in t).
+                shifted.clear();
+                for c in src.iter() {
+                    if c.m <= cap {
+                        shifted.push(Cell {
+                            t: c.t + t_add as u32,
+                            m: c.m + m_add,
+                            prev: j as u32,
+                            prev_t: c.t,
+                        });
+                    }
+                }
+                if shifted.is_empty() {
+                    continue;
+                }
+                let dst = &mut tail[j2 - j - 1];
+                pareto_merge(dst, &shifted, &mut scratch, objective);
+            }
+        }
+
+        let final_front = &fronts[n - 1];
+        let best = match objective {
+            Objective::MinOverhead => final_front.first()?,
+            Objective::MaxOverhead => final_front.last()?,
+        };
+        let t_star = best.t;
+
+        // Backtrack via optarg.
+        let mut chain_rev = Vec::new();
+        let mut j = n - 1;
+        let mut t = t_star;
+        loop {
+            chain_rev.push(self.family[j].clone());
+            let cell = fronts[j]
+                .iter()
+                .find(|c| c.t == t)
+                .expect("optarg chain broken");
+            if cell.prev == u32::MAX {
+                break;
+            }
+            j = cell.prev as usize;
+            t = cell.prev_t;
+            if self.family[j].is_empty() {
+                break;
+            }
+        }
+        chain_rev.reverse();
+        let chain = LowerSetChain::new_unchecked(self.g, chain_rev);
+        debug_assert_eq!(chain.overhead(self.g), t_star as u64, "DP t matches Eq. 1");
+        Some(DpSolution { chain, overhead: t_star as u64 })
+    }
+
+    /// Smallest budget for which `solve` succeeds.
+    ///
+    /// One **minimax DP** pass instead of the paper's binary search: per
+    /// lower set, keep the Pareto front of `(m, p)` where `p` is the best
+    /// achievable maximum segment peak among chains reaching that state
+    /// with cache memory `m`. `B* = min p` over the final front. (§5.1
+    /// determined the same quantity by binary search; the one-pass version
+    /// is validated against the search in the planner tests, and measured
+    /// ~50× faster.)
+    ///
+    /// Perf §opt-2 applies here too: a transition maps a front entry to
+    /// `(m + m_add, max(p, m + c))`. Along a front (m asc, p desc) the
+    /// image is a p-decreasing prefix followed by m-dominated entries, so
+    /// the shifted front is the prefix plus the crossover point — then one
+    /// O(n) Pareto merge into the target.
+    pub fn min_feasible_budget(&self) -> u64 {
+        let n = self.family.len();
+        // Front per ideal: Vec<(m, p)>, m ascending ⇒ p strictly decreasing.
+        let mut fronts: Vec<Vec<(u64, u64)>> = vec![Vec::new(); n];
+        fronts[0].push((0, 0));
+        let mut shifted: Vec<(u64, u64)> = Vec::new();
+        let mut scratch: Vec<(u64, u64)> = Vec::new();
+        for j in 0..n {
+            if fronts[j].is_empty() {
+                continue;
+            }
+            let (head, tail) = fronts.split_at_mut(j + 1);
+            let src = &head[j];
+            for j2 in self.next_size_start[j]..n {
+                if !self.family[j].is_strict_subset(&self.family[j2]) {
+                    continue;
+                }
+                let (seg_mem2, _t_add, m_add) = self.transition_terms(j, j2);
+                let c = seg_mem2 + self.extra_mem[j2];
+                shifted.clear();
+                for &(m, p) in src.iter() {
+                    let p2 = p.max(m + c);
+                    shifted.push((m + m_add, p2));
+                    if p <= m + c {
+                        // Every later entry has both larger m and larger
+                        // peak — dominated by this crossover point.
+                        break;
+                    }
+                }
+                let dst = &mut tail[j2 - j - 1];
+                minimax_merge(dst, &shifted, &mut scratch);
+            }
+        }
+        fronts[n - 1].iter().map(|&(_, p)| p).min().expect("one-segment chain always exists")
+    }
+
+    /// Reference implementation of the minimal budget by binary search
+    /// (the paper's §5.1 method) — used to validate the minimax DP.
+    pub fn min_feasible_budget_by_search(&self) -> u64 {
+        let mut hi = 2 * self.g.total_mem() + self.extra_mem.iter().copied().max().unwrap_or(0);
+        let mut lo = 0u64;
+        debug_assert!(self.solve(hi, Objective::MinOverhead).is_some());
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            if self.solve(mid, Objective::MinOverhead).is_some() {
+                hi = mid;
+            } else {
+                lo = mid + 1;
+            }
+        }
+        hi
+    }
+}
+
+/// Merge the Pareto front `add` into `dst` (both sorted by `t` asc),
+/// keeping only non-dominated cells for the objective:
+///
+/// - MinOverhead: `m` strictly decreasing in `t` (smaller t, smaller m win);
+/// - MaxOverhead: `m` strictly increasing in `t` (larger t, smaller m win).
+fn pareto_merge(dst: &mut Vec<Cell>, add: &[Cell], scratch: &mut Vec<Cell>, obj: Objective) {
+    if dst.is_empty() {
+        dst.extend_from_slice(add);
+        return;
+    }
+    scratch.clear();
+    let (mut i, mut k) = (0usize, 0usize);
+    match obj {
+        Objective::MinOverhead => {
+            // Sweep t ascending; keep a cell iff its m is strictly below
+            // every m seen so far (any earlier-t cell with m <= dominates).
+            let mut best_m = u64::MAX;
+            while i < dst.len() || k < add.len() {
+                let take_dst = match (dst.get(i), add.get(k)) {
+                    (Some(a), Some(b)) => (a.t, a.m) <= (b.t, b.m),
+                    (Some(_), None) => true,
+                    _ => false,
+                };
+                let c = if take_dst {
+                    i += 1;
+                    dst[i - 1]
+                } else {
+                    k += 1;
+                    add[k - 1]
+                };
+                if c.m < best_m {
+                    best_m = c.m;
+                    scratch.push(c);
+                }
+            }
+        }
+        Objective::MaxOverhead => {
+            // Sweep t descending; keep a cell iff its m is strictly below
+            // every m seen so far (any later-t cell with m <= dominates).
+            let mut best_m = u64::MAX;
+            let (mut i2, mut k2) = (dst.len(), add.len());
+            while i2 > 0 || k2 > 0 {
+                let take_dst = match (
+                    i2.checked_sub(1).map(|x| &dst[x]),
+                    k2.checked_sub(1).map(|x| &add[x]),
+                ) {
+                    (Some(a), Some(b)) => (a.t, u64::MAX - a.m) >= (b.t, u64::MAX - b.m),
+                    (Some(_), None) => true,
+                    _ => false,
+                };
+                let c = if take_dst {
+                    i2 -= 1;
+                    dst[i2]
+                } else {
+                    k2 -= 1;
+                    add[k2]
+                };
+                if c.m < best_m {
+                    best_m = c.m;
+                    scratch.push(c);
+                }
+            }
+            scratch.reverse();
+        }
+    }
+    let _ = (i, k);
+    std::mem::swap(dst, scratch);
+}
+
+/// Merge minimax fronts (both sorted m asc, p strictly desc), keeping the
+/// Pareto-optimal subset: an entry survives iff its `p` is strictly below
+/// every `p` of entries with smaller-or-equal `m`.
+fn minimax_merge(dst: &mut Vec<(u64, u64)>, add: &[(u64, u64)], scratch: &mut Vec<(u64, u64)>) {
+    if dst.is_empty() {
+        dst.extend_from_slice(add);
+        return;
+    }
+    scratch.clear();
+    let (mut i, mut k) = (0usize, 0usize);
+    let mut best_p = u64::MAX;
+    while i < dst.len() || k < add.len() {
+        let take_dst = match (dst.get(i), add.get(k)) {
+            (Some(a), Some(b)) => *a <= *b,
+            (Some(_), None) => true,
+            _ => false,
+        };
+        let e = if take_dst {
+            i += 1;
+            dst[i - 1]
+        } else {
+            k += 1;
+            add[k - 1]
+        };
+        if e.1 < best_p {
+            best_p = e.1;
+            scratch.push(e);
+        }
+    }
+    std::mem::swap(dst, scratch);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{enumerate_lower_sets, EnumerationLimit, Graph, GraphBuilder, NodeId, OpKind};
+
+    fn chain_graph(mems: &[u64], times: &[u64]) -> Graph {
+        let mut b = GraphBuilder::new("chain", 1);
+        let mut prev: Option<NodeId> = None;
+        for (i, (&m, &t)) in mems.iter().zip(times).enumerate() {
+            let inputs: Vec<NodeId> = prev.into_iter().collect();
+            prev = Some(b.add_raw(format!("n{i}"), OpKind::Other, m, t, &inputs));
+        }
+        b.build()
+    }
+
+    fn full_ctx(g: &Graph) -> DpContext<'_> {
+        let fam = enumerate_lower_sets(g, EnumerationLimit::default()).unwrap();
+        DpContext::new(g, fam)
+    }
+
+    #[test]
+    fn generous_budget_gives_zero_overhead_chain() {
+        let g = chain_graph(&[1, 1, 1, 1], &[1, 1, 1, 1]);
+        let ctx = full_ctx(&g);
+        let sol = ctx.solve(1 << 40, Objective::MinOverhead).unwrap();
+        // Only the sink cannot be cached (∂ never contains it).
+        assert_eq!(sol.overhead, 1);
+    }
+
+    #[test]
+    fn tight_budget_forces_recomputation() {
+        let g = chain_graph(&[10, 10, 10, 10], &[1, 1, 1, 1]);
+        let ctx = full_ctx(&g);
+        let generous = ctx.solve(1 << 40, Objective::MinOverhead).unwrap();
+        let min_b = ctx.min_feasible_budget();
+        let tight = ctx.solve(min_b, Objective::MinOverhead).unwrap();
+        assert!(tight.overhead >= generous.overhead);
+        assert!(ctx.solve(min_b - 1, Objective::MinOverhead).is_none());
+    }
+
+    #[test]
+    fn minimax_budget_matches_binary_search() {
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(90);
+        for _ in 0..30 {
+            let n = rng.range(3, 11);
+            let g = crate::testutil::random_dag(&mut rng, n);
+            let ctx = full_ctx(&g);
+            assert_eq!(
+                ctx.min_feasible_budget(),
+                ctx.min_feasible_budget_by_search(),
+                "graph {}",
+                g.to_json()
+            );
+        }
+    }
+
+    #[test]
+    fn mc_overhead_geq_tc_overhead() {
+        let g = chain_graph(&[5, 3, 8, 2, 7, 4], &[2, 1, 3, 1, 2, 1]);
+        let ctx = full_ctx(&g);
+        let b = ctx.min_feasible_budget();
+        let tc = ctx.solve(b, Objective::MinOverhead).unwrap();
+        let mc = ctx.solve(b, Objective::MaxOverhead).unwrap();
+        assert!(mc.overhead >= tc.overhead);
+        // MC overhead is bounded by one forward pass (§4.4).
+        assert!(mc.overhead <= g.total_time());
+    }
+
+    #[test]
+    fn chain_eq2_within_budget() {
+        let g = chain_graph(&[4, 7, 2, 9, 5], &[1, 1, 1, 1, 1]);
+        let ctx = full_ctx(&g);
+        for budget in [10u64, 14, 20, 30, 44] {
+            if let Some(sol) = ctx.solve(budget, Objective::MinOverhead) {
+                assert!(
+                    sol.chain.peak_mem(&g) <= budget,
+                    "budget {budget}: peak {}",
+                    sol.chain.peak_mem(&g),
+                );
+                assert_eq!(sol.chain.overhead(&g), sol.overhead);
+            }
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_returns_none() {
+        let g = chain_graph(&[10, 10], &[1, 1]);
+        let ctx = full_ctx(&g);
+        assert!(ctx.solve(1, Objective::MinOverhead).is_none());
+    }
+
+    #[test]
+    fn branching_graph_solves() {
+        let mut b = GraphBuilder::new("d", 1);
+        let a = b.add_raw("a", OpKind::Other, 2, 1, &[]);
+        let x = b.add_raw("x", OpKind::Other, 9, 2, &[a]);
+        let y = b.add_raw("y", OpKind::Other, 3, 1, &[a]);
+        let _z = b.add_raw("z", OpKind::Other, 4, 1, &[x, y]);
+        let g = b.build();
+        let ctx = full_ctx(&g);
+        let min_b = ctx.min_feasible_budget();
+        let sol = ctx.solve(min_b, Objective::MinOverhead).unwrap();
+        assert!(sol.chain.peak_mem(&g) <= min_b);
+        for l in sol.chain.lower_sets() {
+            assert!(g.is_lower_set(l));
+        }
+    }
+
+    #[test]
+    fn pareto_merge_invariants() {
+        let mk = |t, m| Cell { t, m, prev: 0, prev_t: 0 };
+        // MinOverhead: result must have m strictly decreasing in t.
+        let mut dst = vec![mk(3, 20), mk(5, 10)];
+        let mut scratch = Vec::new();
+        pareto_merge(&mut dst, &[mk(4, 8), mk(6, 12), mk(7, 5)], &mut scratch,
+            Objective::MinOverhead);
+        let ts: Vec<(u32, u64)> = dst.iter().map(|c| (c.t, c.m)).collect();
+        for w in ts.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 > w[1].1, "{ts:?}");
+        }
+        assert!(ts.contains(&(3, 20)) && ts.contains(&(4, 8)) && ts.contains(&(7, 5)));
+        assert!(!ts.contains(&(5, 10)) && !ts.contains(&(6, 12)), "{ts:?}");
+
+        // MaxOverhead: m strictly increasing in t.
+        let mut dst = vec![mk(5, 10)];
+        pareto_merge(&mut dst, &[mk(3, 2), mk(6, 3), mk(7, 5)], &mut scratch,
+            Objective::MaxOverhead);
+        let ts: Vec<(u32, u64)> = dst.iter().map(|c| (c.t, c.m)).collect();
+        for w in ts.windows(2) {
+            assert!(w[0].0 < w[1].0 && w[0].1 < w[1].1, "{ts:?}");
+        }
+        assert!(ts.contains(&(7, 5)) && ts.contains(&(3, 2)) && ts.contains(&(6, 3)));
+        assert!(!ts.contains(&(5, 10)), "{ts:?}");
+    }
+}

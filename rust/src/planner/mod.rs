@@ -1,0 +1,356 @@
+//! Recomputation planners — the paper's core contribution.
+//!
+//! Entry points:
+//!
+//! - [`exact_dp`] — §4.2, Algorithm 1 over **all** lower sets (optimal
+//!   canonical strategy). Falls back to the approximate family when the
+//!   lower-set lattice exceeds the enumeration cap.
+//! - [`approx_dp`] — §4.3, Algorithm 1 over the pruned family
+//!   `L^Pruned = {L^v}`, `O(T(V)·#V²)`.
+//! - [`exhaustive_search`] — §4.1, the DFS oracle (tiny graphs/tests only).
+//! - [`chen_plan`] — the Chen et al. (2016) √n baseline (Appendix B).
+//! - [`Objective::MaxOverhead`] — §4.4 memory-centric strategies.
+//! - [`min_feasible_budget`] — the binary search used throughout §5.
+//!
+//! All planners return a [`Plan`]: the lower-set chain plus its analytic
+//! costs. *Measured* peak memory (with liveness analysis) comes from
+//! [`crate::sim::simulate`] — the two are deliberately separate, mirroring
+//! the paper (the DP optimizes Eq. 2; Table 1 reports simulator numbers).
+
+mod chen;
+mod dfs;
+mod dp;
+mod strategy;
+
+pub use chen::{chen_plan, chen_segmentation, ChenPlan};
+pub use dfs::exhaustive_search;
+pub use dp::{DpContext, DpSolution};
+pub use strategy::{singleton_chain, whole_graph_chain, LowerSetChain, SegmentCost};
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::{enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, Graph};
+
+/// Optimization direction for Algorithm 1's final selection (line 15).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Objective {
+    /// Time-centric (§4.2/4.3): minimize recomputation overhead.
+    MinOverhead,
+    /// Memory-centric (§4.4): maximize overhead — coarse partitions that
+    /// couple well with liveness analysis for the lowest peak memory.
+    MaxOverhead,
+}
+
+/// Which algorithm produced a plan (for reports).
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum PlannerKind {
+    ExactDp,
+    ApproxDp,
+    Chen,
+    Exhaustive,
+    Vanilla,
+}
+
+impl PlannerKind {
+    pub fn label(self) -> &'static str {
+        match self {
+            PlannerKind::ExactDp => "ExactDP",
+            PlannerKind::ApproxDp => "ApproxDP",
+            PlannerKind::Chen => "Chen's",
+            PlannerKind::Exhaustive => "Exhaustive",
+            PlannerKind::Vanilla => "Vanilla",
+        }
+    }
+}
+
+/// A recomputation plan: the canonical strategy plus analytic costs.
+pub struct Plan {
+    pub chain: LowerSetChain,
+    pub kind: PlannerKind,
+    pub objective: Objective,
+    /// The memory budget `B` the plan was solved under.
+    pub budget: u64,
+    /// Recomputation overhead (Eq. 1), in `T_v` units.
+    pub overhead: u64,
+    /// Analytic peak memory (Eq. 2), activations only, bytes.
+    pub peak_eq2: u64,
+}
+
+impl Plan {
+    fn from_solution(
+        g: &Graph,
+        sol: DpSolution,
+        kind: PlannerKind,
+        objective: Objective,
+        budget: u64,
+    ) -> Plan {
+        let peak_eq2 = sol.chain.peak_mem(g);
+        Plan { chain: sol.chain, kind, objective, budget, overhead: sol.overhead, peak_eq2 }
+    }
+}
+
+/// Exact DP (§4.2) under memory budget `budget` (activation bytes).
+///
+/// Errors if the budget is infeasible. If the lower-set lattice is larger
+/// than the enumeration cap, degrades to the approximate family (and says
+/// so in the returned plan's `kind`).
+pub fn exact_dp(g: &Graph, budget: u64, objective: Objective) -> Result<Plan> {
+    let (ctx, exact) = exact_context(g);
+    let kind = if exact { PlannerKind::ExactDp } else { PlannerKind::ApproxDp };
+    let sol = ctx
+        .solve(budget, objective)
+        .ok_or_else(|| anyhow!("budget {budget} infeasible for {}", g.name))?;
+    Ok(Plan::from_solution(g, sol, kind, objective, budget))
+}
+
+/// Approximate DP (§4.3) under memory budget `budget`.
+pub fn approx_dp(g: &Graph, budget: u64, objective: Objective) -> Result<Plan> {
+    let ctx = DpContext::new(g, pruned_lower_sets(g));
+    let sol = ctx
+        .solve(budget, objective)
+        .ok_or_else(|| anyhow!("budget {budget} infeasible for {}", g.name))?;
+    Ok(Plan::from_solution(g, sol, PlannerKind::ApproxDp, objective, budget))
+}
+
+/// Family selector for [`min_feasible_budget`] / [`plan_at_min_budget`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Family {
+    Exact,
+    Approx,
+}
+
+fn exact_context(g: &Graph) -> (DpContext<'_>, bool) {
+    match enumerate_lower_sets(g, EnumerationLimit::default()) {
+        Some(family) => (DpContext::new(g, family), true),
+        None => (DpContext::new(g, pruned_lower_sets(g)), false),
+    }
+}
+
+/// Build the (possibly expensive) DP context for a family once; reuse it
+/// across budget searches and multiple solves.
+pub fn build_context(g: &Graph, family: Family) -> DpContext<'_> {
+    match family {
+        Family::Exact => exact_context(g).0,
+        Family::Approx => DpContext::new(g, pruned_lower_sets(g)),
+    }
+}
+
+/// The minimal feasible budget `B*` for the given family (binary search,
+/// §5.1).
+pub fn min_feasible_budget(g: &Graph, family: Family) -> u64 {
+    build_context(g, family).min_feasible_budget()
+}
+
+/// Solve at the minimal feasible budget — the configuration Table 1 uses
+/// for both the TC and MC columns.
+pub fn plan_at_min_budget(g: &Graph, family: Family, objective: Objective) -> Result<Plan> {
+    let ctx = build_context(g, family);
+    let b = ctx.min_feasible_budget();
+    let kind = match family {
+        Family::Exact => PlannerKind::ExactDp,
+        Family::Approx => PlannerKind::ApproxDp,
+    };
+    let sol = ctx
+        .solve(b, objective)
+        .ok_or_else(|| anyhow!("solve at min budget {b} must succeed"))?;
+    Ok(Plan::from_solution(g, sol, kind, objective, b))
+}
+
+/// Convenience: solve a prebuilt context into a [`Plan`].
+pub fn plan_with_context(
+    g: &Graph,
+    ctx: &DpContext<'_>,
+    kind: PlannerKind,
+    budget: u64,
+    objective: Objective,
+) -> Result<Plan> {
+    let sol =
+        ctx.solve(budget, objective).ok_or_else(|| anyhow!("budget {budget} infeasible"))?;
+    Ok(Plan::from_solution(g, sol, kind, objective, budget))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, NodeId, OpKind};
+    use crate::util::rng::Pcg32;
+
+    /// Random small DAG with random costs; always weakly connected.
+    pub(crate) fn random_dag(rng: &mut Pcg32, n: u32) -> Graph {
+        let mut b = GraphBuilder::new("rand", 1);
+        let mut ids: Vec<NodeId> = Vec::new();
+        for w in 0..n {
+            let mut inputs = Vec::new();
+            if w > 0 {
+                inputs.push(ids[rng.below(w) as usize]);
+                if rng.chance(0.35) {
+                    inputs.push(ids[rng.below(w) as usize]);
+                }
+                inputs.sort();
+                inputs.dedup();
+            }
+            ids.push(b.add_raw(
+                format!("n{w}"),
+                OpKind::Other,
+                rng.range(1, 12) as u64,
+                rng.range(1, 6) as u64,
+                &inputs,
+            ));
+        }
+        b.build()
+    }
+
+    #[test]
+    fn exact_dp_matches_exhaustive_oracle() {
+        let mut rng = Pcg32::seeded(42);
+        let mut feasible_cases = 0;
+        for case in 0..40 {
+            let n = rng.range(4, 9);
+            let g = random_dag(&mut rng, n);
+            // Random budget between min node and 2·M(V).
+            let budget = rng.range(
+                g.nodes().map(|(_, n)| n.mem).max().unwrap() as u32,
+                (2 * g.total_mem()) as u32 + 1,
+            ) as u64;
+            let oracle = exhaustive_search(&g, budget, Objective::MinOverhead);
+            let dp = exact_dp(&g, budget, Objective::MinOverhead).ok();
+            match (oracle, dp) {
+                (None, None) => {}
+                (Some(o), Some(d)) => {
+                    feasible_cases += 1;
+                    assert_eq!(
+                        o.overhead(&g),
+                        d.overhead,
+                        "case {case}: oracle {} vs dp {}",
+                        o.overhead(&g),
+                        d.overhead
+                    );
+                    assert!(d.peak_eq2 <= budget);
+                }
+                (o, d) => panic!(
+                    "case {case}: feasibility disagreement oracle={} dp={}",
+                    o.is_some(),
+                    d.is_some()
+                ),
+            }
+        }
+        assert!(feasible_cases >= 10, "want a healthy mix, got {feasible_cases}");
+    }
+
+    #[test]
+    fn exact_dp_matches_oracle_for_max_objective() {
+        let mut rng = Pcg32::seeded(43);
+        for case in 0..25 {
+            let n = rng.range(4, 8);
+            let g = random_dag(&mut rng, n);
+            let budget = 2 * g.total_mem();
+            let oracle = exhaustive_search(&g, budget, Objective::MaxOverhead).unwrap();
+            let dp = exact_dp(&g, budget, Objective::MaxOverhead).unwrap();
+            assert_eq!(oracle.overhead(&g), dp.overhead, "case {case}");
+        }
+    }
+
+    #[test]
+    fn approx_never_beats_exact() {
+        let mut rng = Pcg32::seeded(44);
+        for _ in 0..25 {
+            let n = rng.range(5, 10);
+            let g = random_dag(&mut rng, n);
+            let budget = g.total_mem() + g.nodes().map(|(_, n)| n.mem).max().unwrap();
+            let exact = exact_dp(&g, budget, Objective::MinOverhead).ok();
+            let approx = approx_dp(&g, budget, Objective::MinOverhead).ok();
+            if let (Some(e), Some(a)) = (&exact, &approx) {
+                assert!(
+                    e.overhead <= a.overhead,
+                    "exact searches a superset of the approx family"
+                );
+            }
+            // If approx is feasible, exact must be too (superset family).
+            if approx.is_some() {
+                assert!(exact.is_some());
+            }
+        }
+    }
+
+    #[test]
+    fn min_budget_exact_leq_approx() {
+        let mut rng = Pcg32::seeded(45);
+        for _ in 0..15 {
+            let n = rng.range(5, 10);
+            let g = random_dag(&mut rng, n);
+            let be = min_feasible_budget(&g, Family::Exact);
+            let ba = min_feasible_budget(&g, Family::Approx);
+            assert!(be <= ba, "exact family ⊇ approx family ⇒ B*_exact ≤ B*_approx");
+        }
+    }
+
+    #[test]
+    fn plans_always_valid_chains() {
+        let mut rng = Pcg32::seeded(46);
+        for _ in 0..20 {
+            let n = rng.range(4, 12);
+            let g = random_dag(&mut rng, n);
+            for family in [Family::Exact, Family::Approx] {
+                for obj in [Objective::MinOverhead, Objective::MaxOverhead] {
+                    let plan = plan_at_min_budget(&g, family, obj).unwrap();
+                    // Re-validate through the checked constructor.
+                    LowerSetChain::new(&g, plan.chain.lower_sets().to_vec()).unwrap();
+                    assert!(plan.peak_eq2 <= plan.budget);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mc_has_no_less_overhead_than_tc_at_same_budget() {
+        let mut rng = Pcg32::seeded(47);
+        for _ in 0..20 {
+            let n = rng.range(4, 10);
+            let g = random_dag(&mut rng, n);
+            let ctx = build_context(&g, Family::Exact);
+            let b = ctx.min_feasible_budget();
+            let tc = ctx.solve(b, Objective::MinOverhead).unwrap();
+            let mc = ctx.solve(b, Objective::MaxOverhead).unwrap();
+            assert!(mc.overhead >= tc.overhead);
+            assert!(mc.overhead <= g.total_time(), "§4.4: MC ≤ one forward pass");
+        }
+    }
+
+    #[test]
+    fn vanilla_like_chain_within_generous_budget() {
+        let g = random_dag(&mut Pcg32::seeded(48), 8);
+        let s = singleton_chain(&g);
+        let w = whole_graph_chain(&g);
+        assert!(s.overhead(&g) <= w.overhead(&g));
+        assert_eq!(w.overhead(&g), g.total_time());
+    }
+
+    #[test]
+    fn larger_budget_never_increases_tc_overhead() {
+        let mut rng = Pcg32::seeded(49);
+        for _ in 0..10 {
+            let n = rng.range(5, 10);
+            let g = random_dag(&mut rng, n);
+            let ctx = build_context(&g, Family::Exact);
+            let b0 = ctx.min_feasible_budget();
+            let mut last = u64::MAX;
+            for mult in [10u64, 12, 15, 20, 40] {
+                let b = b0 * mult / 10;
+                let sol = ctx.solve(b, Objective::MinOverhead).unwrap();
+                assert!(sol.overhead <= last, "monotone in budget");
+                last = sol.overhead;
+            }
+        }
+    }
+
+    #[test]
+    fn chen_is_a_feasible_canonical_strategy() {
+        let mut rng = Pcg32::seeded(50);
+        for _ in 0..10 {
+            let n = rng.range(6, 14);
+            let g = random_dag(&mut rng, n);
+            let plan = chen_plan(&g, |c| c.peak_mem(&g)).unwrap();
+            LowerSetChain::new(&g, plan.chain.lower_sets().to_vec()).unwrap();
+        }
+    }
+}

@@ -1,0 +1,366 @@
+//! Canonical strategies: increasing lower-set sequences and their costs.
+//!
+//! §3 of the paper: a recomputation strategy is determined by an increasing
+//! sequence of lower sets `{L₁ ≺ … ≺ L_k = V}`. This module implements the
+//! sequence type with its invariants, the cache sets `U_i = ∪_{j≤i} ∂(L_j)`,
+//! the computational overhead (Eq. 1) and the peak-memory model (Eq. 2).
+//! The event-accurate measurement (with liveness analysis) lives in
+//! [`crate::sim`]; Eq. 2 is the *analytic* model the DP optimizes.
+
+use anyhow::{bail, Result};
+
+use crate::graph::{Graph, NodeSet};
+
+/// An increasing sequence of lower sets `L₁ ≺ L₂ ≺ … ≺ L_k = V`.
+///
+/// The canonical strategy derived from it (§3):
+/// - forward: after evaluating `V_i = L_i \ L_{i-1}`, cache `∂(L_i)` and
+///   discard `V_i \ ∂(L_i)`;
+/// - backward: for `i = k..1`, recompute the discarded values of `V_i`
+///   from the caches, backprop `V_i`, keep the gradients that earlier
+///   segments still need.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LowerSetChain {
+    /// Cumulative lower sets; `chain.last() == V`.
+    chain: Vec<NodeSet>,
+}
+
+/// Per-segment breakdown of Eq. 2 — useful for reports and debugging which
+/// segment is the memory bottleneck.
+#[derive(Clone, Debug)]
+pub struct SegmentCost {
+    /// Segment index `i` (1-based like the paper).
+    pub index: usize,
+    /// `M(U_{i-1})` — cached forward values before this segment.
+    pub cached: u64,
+    /// `2·M(V_i)` — forward + backward buffers of the segment.
+    pub segment: u64,
+    /// `M(δ+(L_i) \ L_i)` — forward frontier outside the segment.
+    pub frontier: u64,
+    /// `M(δ−(δ+(L_i)) \ L_i)` — co-inputs of the frontier.
+    pub coinputs: u64,
+}
+
+impl SegmentCost {
+    /// `𝓜^(i)` — total of Eq. 2 for this segment.
+    pub fn total(&self) -> u64 {
+        self.cached + self.segment + self.frontier + self.coinputs
+    }
+}
+
+impl LowerSetChain {
+    /// Build a chain after validating all invariants: every element is a
+    /// lower set, the sequence is strictly increasing, and the last
+    /// element is `V`.
+    pub fn new(g: &Graph, chain: Vec<NodeSet>) -> Result<Self> {
+        if chain.is_empty() {
+            bail!("empty lower-set chain");
+        }
+        for (i, l) in chain.iter().enumerate() {
+            if l.capacity() != g.len() {
+                bail!("lower set {i} has capacity {} != #V {}", l.capacity(), g.len());
+            }
+            if !g.is_lower_set(l) {
+                bail!("element {i} of the chain is not a lower set");
+            }
+            if l.is_empty() {
+                bail!("element {i} of the chain is empty (segments must be non-empty)");
+            }
+        }
+        for w in chain.windows(2) {
+            if !w[0].is_strict_subset(&w[1]) {
+                bail!("chain is not strictly increasing");
+            }
+        }
+        if chain.last().unwrap().len() != g.len() {
+            bail!("chain must end at V");
+        }
+        Ok(LowerSetChain { chain })
+    }
+
+    /// Unchecked constructor for planner-internal use (the DP only builds
+    /// valid chains; the invariant is re-checked in debug builds).
+    pub(crate) fn new_unchecked(g: &Graph, chain: Vec<NodeSet>) -> Self {
+        debug_assert!(LowerSetChain::new(g, chain.clone()).is_ok());
+        let _ = g;
+        LowerSetChain { chain }
+    }
+
+    /// Number of segments `k`.
+    pub fn k(&self) -> usize {
+        self.chain.len()
+    }
+
+    /// The cumulative lower sets `L₁ … L_k`.
+    pub fn lower_sets(&self) -> &[NodeSet] {
+        &self.chain
+    }
+
+    /// The partition `V_i = L_i \ L_{i-1}` (with `L₀ = ∅`).
+    pub fn segments(&self) -> Vec<NodeSet> {
+        let mut prev: Option<&NodeSet> = None;
+        let mut out = Vec::with_capacity(self.chain.len());
+        for l in &self.chain {
+            let mut v = l.clone();
+            if let Some(p) = prev {
+                v.subtract(p);
+            }
+            out.push(v);
+            prev = Some(l);
+        }
+        out
+    }
+
+    /// Cache sets `U_i = ∪_{j≤i} ∂(L_j)` for `i = 1..k`.
+    pub fn cache_sets(&self, g: &Graph) -> Vec<NodeSet> {
+        let mut u = NodeSet::empty(g.len());
+        self.chain
+            .iter()
+            .map(|l| {
+                u.union_with(&g.boundary(l));
+                u.clone()
+            })
+            .collect()
+    }
+
+    /// Computational overhead (Eq. 1): `T(V \ U_k) = Σ_i T(V_i \ ∂(L_i))` —
+    /// every value not cached anywhere is recomputed exactly once.
+    pub fn overhead(&self, g: &Graph) -> u64 {
+        let mut total = 0u64;
+        let mut prev = NodeSet::empty(g.len());
+        for l in &self.chain {
+            let mut v = l.clone();
+            v.subtract(&prev);
+            v.subtract(&g.boundary(l));
+            total += g.time_of(&v);
+            prev = l.clone();
+        }
+        total
+    }
+
+    /// Per-segment Eq. 2 breakdown.
+    pub fn segment_costs(&self, g: &Graph) -> Vec<SegmentCost> {
+        let mut out = Vec::with_capacity(self.chain.len());
+        let mut cached = 0u64; // M(U_{i-1})
+        let mut u = NodeSet::empty(g.len());
+        let mut prev = NodeSet::empty(g.len());
+        for (i, l) in self.chain.iter().enumerate() {
+            let mut v = l.clone();
+            v.subtract(&prev);
+            out.push(SegmentCost {
+                index: i + 1,
+                cached,
+                segment: 2 * g.mem_of(&v),
+                frontier: g.mem_of(&g.frontier(l)),
+                coinputs: g.mem_of(&g.frontier_coinputs(l)),
+            });
+            // Update U_i for the next iteration: M(U_i) = M(U_{i-1}) +
+            // M(∂(L_i) \ L_{i-1}) — nodes of ∂(L_i)∩L_{i-1} are already in
+            // U_{i-1} (they had successors outside L_{i-1} too).
+            let mut newly = g.boundary(l);
+            newly.subtract(&prev);
+            cached += g.mem_of(&newly);
+            u.union_with(&g.boundary(l));
+            debug_assert_eq!(cached, g.mem_of(&u), "incremental U_i accounting");
+            prev = l.clone();
+        }
+        out
+    }
+
+    /// Peak memory (Eq. 2): `max_i 𝓜^(i)`, activations only (parameter
+    /// memory is accounted separately in the reports, as the paper does).
+    pub fn peak_mem(&self, g: &Graph) -> u64 {
+        self.segment_costs(g).iter().map(SegmentCost::total).max().unwrap_or(0)
+    }
+
+    /// Index (1-based) of the segment achieving the peak.
+    pub fn peak_segment(&self, g: &Graph) -> usize {
+        self.segment_costs(g)
+            .iter()
+            .max_by_key(|c| c.total())
+            .map(|c| c.index)
+            .unwrap_or(0)
+    }
+}
+
+/// The finest canonical strategy: one node per segment (topological order).
+/// Caches every node that has a successor — the closest canonical analogue
+/// of vanilla execution, used as a baseline plan.
+pub fn singleton_chain(g: &Graph) -> LowerSetChain {
+    let mut chain = Vec::with_capacity(g.len() as usize);
+    let mut cur = NodeSet::empty(g.len());
+    for &v in g.topo_order() {
+        cur.insert(v);
+        chain.push(cur.clone());
+    }
+    LowerSetChain::new_unchecked(g, chain)
+}
+
+/// The coarsest canonical strategy: a single segment `{V}` — caches
+/// nothing, recomputes the entire forward pass during backward.
+pub fn whole_graph_chain(g: &Graph) -> LowerSetChain {
+    LowerSetChain::new_unchecked(g, vec![NodeSet::full(g.len())])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, NodeId, OpKind};
+
+    /// Chain 0→1→2→3 with mem 1,2,3,4 and time 1 each.
+    fn chain4() -> Graph {
+        let mut b = GraphBuilder::new("c4", 1);
+        let mut prev = None;
+        for i in 0..4u64 {
+            let inputs: Vec<NodeId> = prev.into_iter().collect();
+            prev = Some(b.add_raw(format!("n{i}"), OpKind::Other, i + 1, 1, &inputs));
+        }
+        b.build()
+    }
+
+    fn set(g: &Graph, ids: &[u32]) -> NodeSet {
+        NodeSet::from_iter(g.len(), ids.iter().map(|&i| NodeId(i)))
+    }
+
+    #[test]
+    fn validation() {
+        let g = chain4();
+        // Valid: {0,1} ≺ {0,1,2,3}.
+        assert!(LowerSetChain::new(&g, vec![set(&g, &[0, 1]), set(&g, &[0, 1, 2, 3])]).is_ok());
+        // Not ending at V.
+        assert!(LowerSetChain::new(&g, vec![set(&g, &[0, 1])]).is_err());
+        // Not a lower set.
+        assert!(
+            LowerSetChain::new(&g, vec![set(&g, &[1]), set(&g, &[0, 1, 2, 3])]).is_err()
+        );
+        // Not strictly increasing.
+        assert!(LowerSetChain::new(
+            &g,
+            vec![set(&g, &[0, 1]), set(&g, &[0, 1]), set(&g, &[0, 1, 2, 3])]
+        )
+        .is_err());
+        // Empty first element.
+        assert!(LowerSetChain::new(&g, vec![set(&g, &[]), set(&g, &[0, 1, 2, 3])]).is_err());
+    }
+
+    #[test]
+    fn overhead_on_chain() {
+        let g = chain4();
+        // Two segments {0,1}, {2,3}: ∂(L1)={1} (succ 2 outside), so node 0
+        // is recomputed; ∂(L2)=∅ ⇒ nodes 2,3 recomputed. Overhead=1+2=3.
+        let c = LowerSetChain::new(&g, vec![set(&g, &[0, 1]), set(&g, &[0, 1, 2, 3])]).unwrap();
+        assert_eq!(c.overhead(&g), 3);
+        // Singleton chain: every node with a successor is cached; only the
+        // sink (node 3) is discarded+recomputed.
+        let s = singleton_chain(&g);
+        assert_eq!(s.overhead(&g), 1);
+        // Whole-graph chain: everything recomputed.
+        let w = whole_graph_chain(&g);
+        assert_eq!(w.overhead(&g), 4);
+    }
+
+    #[test]
+    fn eq2_on_chain() {
+        let g = chain4();
+        let c = LowerSetChain::new(&g, vec![set(&g, &[0, 1]), set(&g, &[0, 1, 2, 3])]).unwrap();
+        let costs = c.segment_costs(&g);
+        // Segment 1: cached=0, 2M({0,1})=6, frontier={2}:3, coinputs=δ−({1,2})\L={?}
+        //   δ+(L1)={1,2}; δ−({1,2})={0,1}; minus L1 ⇒ ∅ ⇒ 0.
+        assert_eq!(costs[0].cached, 0);
+        assert_eq!(costs[0].segment, 6);
+        assert_eq!(costs[0].frontier, 3);
+        assert_eq!(costs[0].coinputs, 0);
+        // Segment 2: cached=M(∂(L1))=M({1})=2, 2M({2,3})=14, frontier 0, coinputs 0.
+        assert_eq!(costs[1].cached, 2);
+        assert_eq!(costs[1].segment, 14);
+        assert_eq!(costs[1].frontier, 0);
+        assert_eq!(costs[1].coinputs, 0);
+        assert_eq!(c.peak_mem(&g), 16);
+        assert_eq!(c.peak_segment(&g), 2);
+    }
+
+    #[test]
+    fn cache_sets_monotone_and_boundary_union() {
+        let g = chain4();
+        let c = LowerSetChain::new(
+            &g,
+            vec![set(&g, &[0]), set(&g, &[0, 1, 2]), set(&g, &[0, 1, 2, 3])],
+        )
+        .unwrap();
+        let us = c.cache_sets(&g);
+        assert_eq!(us.len(), 3);
+        assert!(us[0].is_subset(&us[1]));
+        assert!(us[1].is_subset(&us[2]));
+        assert_eq!(us[0], set(&g, &[0]));
+        assert_eq!(us[1], set(&g, &[0, 2]));
+        // Overhead equals T(V \ U_k) (Eq. 1, closed form).
+        let not_cached = us[2].complement();
+        assert_eq!(c.overhead(&g), g.time_of(&not_cached));
+    }
+
+    #[test]
+    fn skip_connection_boundary_kept() {
+        // 0→1→2→3 plus skip 0→3: ∂({0,1}) = {0 (skip to 3), 1}.
+        let mut b = GraphBuilder::new("skip", 1);
+        let n0 = b.add_raw("n0", OpKind::Other, 1, 1, &[]);
+        let n1 = b.add_raw("n1", OpKind::Other, 2, 1, &[n0]);
+        let n2 = b.add_raw("n2", OpKind::Other, 3, 1, &[n1]);
+        let _n3 = b.add_raw("n3", OpKind::Other, 4, 1, &[n2, n0]);
+        let g = b.build();
+        let c =
+            LowerSetChain::new(&g, vec![set(&g, &[0, 1]), set(&g, &[0, 1, 2, 3])]).unwrap();
+        // Both 0 and 1 are boundary of L1 ⇒ nothing recomputed in segment 1.
+        // Nodes 2,3 (∂(V)=∅) are recomputed at T_v = 1 each.
+        assert_eq!(c.overhead(&g), 2);
+        let costs = c.segment_costs(&g);
+        assert_eq!(costs[1].cached, 1 + 2);
+    }
+
+    #[test]
+    fn eq1_equivalence_on_random_chains() {
+        // Σ_i T(V_i \ ∂(L_i)) == T(V \ U_k) for arbitrary chains (paper Eq. 1).
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(11);
+        for _ in 0..20 {
+            let n = rng.range(4, 12);
+            let mut b = GraphBuilder::new("r", 1);
+            let mut ids = Vec::new();
+            for w in 0..n {
+                let mut inputs = Vec::new();
+                if w > 0 {
+                    inputs.push(ids[rng.below(w) as usize]);
+                    if rng.chance(0.3) {
+                        inputs.push(ids[rng.below(w) as usize]);
+                    }
+                    inputs.sort();
+                    inputs.dedup();
+                }
+                ids.push(b.add_raw(
+                    format!("n{w}"),
+                    OpKind::Other,
+                    rng.range(1, 10) as u64,
+                    rng.range(1, 5) as u64,
+                    &inputs,
+                ));
+            }
+            let g = b.build();
+            // Random topo-prefix chain.
+            let mut cuts: Vec<u32> = (1..n).filter(|_| rng.chance(0.4)).collect();
+            cuts.push(n);
+            let mut chain = Vec::new();
+            let mut cur = NodeSet::empty(g.len());
+            let topo = g.topo_order().to_vec();
+            let mut pos = 0usize;
+            for &c in &cuts {
+                while pos < c as usize {
+                    cur.insert(topo[pos]);
+                    pos += 1;
+                }
+                chain.push(cur.clone());
+            }
+            let chain = LowerSetChain::new(&g, chain).unwrap();
+            let uk = chain.cache_sets(&g).last().unwrap().clone();
+            assert_eq!(chain.overhead(&g), g.time_of(&uk.complement()));
+        }
+    }
+}

@@ -1,0 +1,41 @@
+//! Shared helpers for unit/property tests (compiled only under `cfg(test)`).
+
+use crate::graph::{Graph, GraphBuilder, NodeId, OpKind};
+use crate::util::rng::Pcg32;
+
+/// Random weakly-connected DAG with random costs — the workhorse of the
+/// property tests (planner-vs-oracle, trace safety, simulator invariants).
+pub fn random_dag(rng: &mut Pcg32, n: u32) -> Graph {
+    let mut b = GraphBuilder::new("rand", 1);
+    let mut ids: Vec<NodeId> = Vec::new();
+    for w in 0..n {
+        let mut inputs = Vec::new();
+        if w > 0 {
+            inputs.push(ids[rng.below(w) as usize]);
+            if rng.chance(0.35) {
+                inputs.push(ids[rng.below(w) as usize]);
+            }
+            inputs.sort();
+            inputs.dedup();
+        }
+        ids.push(b.add_raw(
+            format!("n{w}"),
+            OpKind::Other,
+            rng.range(1, 12) as u64,
+            rng.range(1, 6) as u64,
+            &inputs,
+        ));
+    }
+    b.build()
+}
+
+/// A simple chain graph with the given memories and unit times.
+pub fn chain_graph(mems: &[u64]) -> Graph {
+    let mut b = GraphBuilder::new("chain", 1);
+    let mut prev: Option<NodeId> = None;
+    for (i, &m) in mems.iter().enumerate() {
+        let inputs: Vec<NodeId> = prev.into_iter().collect();
+        prev = Some(b.add_raw(format!("n{i}"), OpKind::Other, m, 1, &inputs));
+    }
+    b.build()
+}

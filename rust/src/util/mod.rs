@@ -1,0 +1,14 @@
+//! In-tree utility substrates.
+//!
+//! The build environment is offline, so the usual ecosystem crates are
+//! replaced by small, fully-tested local implementations:
+//!
+//! - [`json`] — JSON value model + parser + serializer (graph files, the
+//!   AOT artifact manifest, configs, reports).
+//! - [`rng`] — deterministic PCG32 generator (synthetic data, random-DAG
+//!   property tests, workload generation).
+//! - [`table`] — plain-text table rendering for the paper-style reports.
+
+pub mod json;
+pub mod rng;
+pub mod table;

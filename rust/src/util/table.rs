@@ -1,0 +1,117 @@
+//! Plain-text table rendering for paper-style reports.
+//!
+//! Every experiment harness (`repro table1`, `table2`, `figure3`, …)
+//! renders its rows through this module so the output format is uniform
+//! and diffs cleanly into EXPERIMENTS.md.
+
+/// Column alignment.
+#[derive(Clone, Copy, PartialEq, Eq)]
+pub enum Align {
+    Left,
+    Right,
+}
+
+/// A simple monospace table builder.
+pub struct Table {
+    headers: Vec<String>,
+    aligns: Vec<Align>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create with headers; all columns left-aligned by default.
+    pub fn new(headers: &[&str]) -> Self {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            aligns: vec![Align::Left; headers.len()],
+            rows: Vec::new(),
+        }
+    }
+
+    /// Right-align all columns except the first (the usual numeric layout).
+    pub fn numeric(mut self) -> Self {
+        for a in self.aligns.iter_mut().skip(1) {
+            *a = Align::Right;
+        }
+        self
+    }
+
+    /// Append a row. Panics if the arity differs from the header count.
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with `|`-separated columns and a header rule, markdown-style.
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |cells: &[String], widths: &[usize], aligns: &[Align]| -> String {
+            let mut line = String::from("|");
+            for i in 0..ncol {
+                let pad = widths[i] - cells[i].chars().count();
+                match aligns[i] {
+                    Align::Left => {
+                        line.push(' ');
+                        line.push_str(&cells[i]);
+                        line.push_str(&" ".repeat(pad + 1));
+                    }
+                    Align::Right => {
+                        line.push_str(&" ".repeat(pad + 1));
+                        line.push_str(&cells[i]);
+                        line.push(' ');
+                    }
+                }
+                line.push('|');
+            }
+            line
+        };
+        out.push_str(&fmt_row(&self.headers, &widths, &vec![Align::Left; ncol]));
+        out.push('\n');
+        out.push('|');
+        for w in &widths {
+            out.push_str(&"-".repeat(w + 2));
+            out.push('|');
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths, &self.aligns));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["Network", "Peak", "Reduction"]).numeric();
+        t.row(vec!["ResNet50".into(), "3.4 GB".into(), "-62%".into()]);
+        t.row(vec!["U-Net".into(), "5.0 GB".into(), "-45%".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].contains("Network"));
+        assert!(lines[1].starts_with("|-"));
+        assert!(lines[2].contains("ResNet50"));
+        // All lines same width.
+        let w = lines[0].chars().count();
+        assert!(lines.iter().all(|l| l.chars().count() == w), "{s}");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["x".into()]);
+    }
+}

@@ -1,0 +1,75 @@
+//! CLI integration: drive the `repro` binary end-to-end (no artifacts
+//! needed for these subcommands).
+
+use std::process::Command;
+
+fn repro() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_repro"))
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let out = repro().arg("help").output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    for cmd in ["table1", "table2", "figure3", "plan", "train", "export"] {
+        assert!(text.contains(cmd), "missing {cmd} in help");
+    }
+}
+
+#[test]
+fn unknown_subcommand_fails() {
+    let out = repro().arg("frobnicate").output().unwrap();
+    assert!(!out.status.success());
+}
+
+#[test]
+fn export_then_plan_graph_roundtrip() {
+    let dir = std::env::temp_dir().join(format!("repro_cli_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("vgg19.json");
+    let out = repro()
+        .args(["export", "--network", "VGG19", "--batch", "2", "--out"])
+        .arg(&path)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(path.exists());
+
+    let out = repro().args(["plan", "--graph"]).arg(&path).output().unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("vanilla peak"), "{text}");
+    assert!(text.contains("ApproxDP plan"), "{text}");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn plan_named_network_with_explicit_budget() {
+    let out = repro()
+        .args(["plan", "--network", "VGG19", "--batch", "4", "--budget", "1.0"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("peak:"));
+}
+
+#[test]
+fn plan_chen_mode() {
+    let out = repro()
+        .args(["plan", "--network", "VGG19", "--batch", "4", "--chen"])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("chen: k="));
+}
+
+#[test]
+fn infeasible_budget_reports_error() {
+    let out = repro()
+        .args(["plan", "--network", "VGG19", "--batch", "64", "--budget", "0.001"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("infeasible"));
+}

@@ -1,0 +1,162 @@
+//! Integration tests across runtime + executor + planner.
+//!
+//! These need `artifacts/` (run `make artifacts` first); the Makefile's
+//! `test` target guarantees that ordering.
+
+use std::path::PathBuf;
+
+use recompute::exec::{ChainSchedule, TowerTrainer, TrainConfig};
+use recompute::models::mlp_tower;
+use recompute::planner::{build_context, Family, Objective};
+use recompute::runtime::{literal_f32, to_vec_f32, ArtifactSet};
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn quiet_cfg(layers: usize, steps: usize) -> TrainConfig {
+    TrainConfig { layers, steps, lr: 0.05, seed: 7, log_every: 0 }
+}
+
+/// Host-side GELU (tanh approximation) — independent re-implementation
+/// for cross-checking the compiled artifact.
+fn gelu(x: f32) -> f32 {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    0.5 * x * (1.0 + (c * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[test]
+fn layer_fwd_artifact_matches_host_math() {
+    let arts = ArtifactSet::load(&artifacts_dir()).expect("run `make artifacts` first");
+    let (b, w) = (arts.batch, arts.width);
+    // x = small ramp, w = identity, bias = 0.5 ⇒ out = gelu(x + 0.5).
+    let x: Vec<f32> = (0..b * w).map(|i| (i % 7) as f32 * 0.1 - 0.3).collect();
+    let mut wmat = vec![0f32; w * w];
+    for i in 0..w {
+        wmat[i * w + i] = 1.0;
+    }
+    let bias = vec![0.5f32; w];
+    let out = arts
+        .run(
+            "layer_fwd",
+            &[
+                literal_f32(&x, &[b, w]).unwrap(),
+                literal_f32(&wmat, &[w, w]).unwrap(),
+                literal_f32(&bias, &[w]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+    for (i, (&g, &xi)) in got.iter().zip(&x).enumerate() {
+        let want = gelu(xi + 0.5);
+        assert!((g - want).abs() < 1e-5, "elem {i}: got {g} want {want}");
+    }
+}
+
+#[test]
+fn sgd_artifacts_update_parameters() {
+    let arts = ArtifactSet::load(&artifacts_dir()).unwrap();
+    let w = arts.width;
+    let wmat = vec![1.0f32; w * w];
+    let gmat = vec![2.0f32; w * w];
+    let out = arts
+        .run(
+            "sgd_mat",
+            &[
+                literal_f32(&wmat, &[w, w]).unwrap(),
+                literal_f32(&gmat, &[w, w]).unwrap(),
+                literal_f32(&[0.25], &[]).unwrap(),
+            ],
+        )
+        .unwrap();
+    let got = to_vec_f32(&out[0]).unwrap();
+    assert!(got.iter().all(|&v| (v - 0.5).abs() < 1e-6));
+}
+
+#[test]
+fn recomputation_does_not_alter_training_trajectory() {
+    // The defining property of recomputation (§1): identical outputs.
+    let layers = 10;
+    let cfg = quiet_cfg(layers, 4);
+    let g = mlp_tower(layers as u32, 0, 1); // width/batch irrelevant for plan shape
+    let _ = g;
+
+    let mut vanilla = TowerTrainer::new(&artifacts_dir(), &cfg).unwrap();
+    let v_report = vanilla.train(&ChainSchedule::vanilla(layers + 1), &cfg).unwrap();
+
+    let mut recomp = TowerTrainer::new(&artifacts_dir(), &cfg).unwrap();
+    let g = mlp_tower(layers as u32, recomp.width() as u32, recomp.batch() as u64);
+    let ctx = build_context(&g, Family::Exact);
+    let sol = ctx.solve(ctx.min_feasible_budget(), Objective::MinOverhead).unwrap();
+    let sched = ChainSchedule::from_chain(&g, &sol.chain).unwrap();
+    assert!(sched.segments.len() > 1, "plan must actually cut");
+    let r_report = recomp.train(&sched, &cfg).unwrap();
+
+    assert_eq!(v_report.losses.len(), r_report.losses.len());
+    for (i, (a, b)) in v_report.losses.iter().zip(&r_report.losses).enumerate() {
+        assert!(
+            (a - b).abs() <= 1e-6 * a.abs().max(1.0),
+            "step {i}: vanilla {a} vs recompute {b}"
+        );
+    }
+    assert!(
+        r_report.peak_bytes < v_report.peak_bytes,
+        "recompute {} must beat vanilla {}",
+        r_report.peak_bytes,
+        v_report.peak_bytes
+    );
+    assert!(r_report.recomputes_per_step > 0);
+    assert_eq!(v_report.recomputes_per_step, 0, "vanilla never recomputes");
+}
+
+#[test]
+fn executor_peak_matches_schedule_prediction() {
+    // Peak layer-activation count under a k-segment schedule on a chain:
+    // checkpoints + the running segment's activations. Verify the measured
+    // byte counter against the closed-form for the actual schedule.
+    let layers = 12;
+    let cfg = quiet_cfg(layers, 2);
+    let mut t = TowerTrainer::new(&artifacts_dir(), &cfg).unwrap();
+    let act = (t.batch() * t.width() * 4) as u64;
+    let g = mlp_tower(layers as u32, t.width() as u32, t.batch() as u64);
+    let ctx = build_context(&g, Family::Exact);
+    let sol = ctx.solve(ctx.min_feasible_budget(), Objective::MinOverhead).unwrap();
+    let sched = ChainSchedule::from_chain(&g, &sol.chain).unwrap();
+    let report = t.train(&sched, &cfg).unwrap();
+    // Loose structural bounds: at least max-segment activations, at most
+    // vanilla's (n+1 live activations + gradient).
+    let n = sched.n_layers as u64;
+    let max_seg = sched.segments.iter().map(|s| (s.end - s.start) as u64).max().unwrap();
+    assert!(report.peak_bytes >= max_seg * act, "peak {} too small", report.peak_bytes);
+    assert!(report.peak_bytes <= (n + 2) * act, "peak {} too large", report.peak_bytes);
+}
+
+#[test]
+fn mc_schedule_runs_and_matches_losses_too() {
+    let layers = 8;
+    let cfg = quiet_cfg(layers, 3);
+    let mut mc = TowerTrainer::new(&artifacts_dir(), &cfg).unwrap();
+    let g = mlp_tower(layers as u32, mc.width() as u32, mc.batch() as u64);
+    let ctx = build_context(&g, Family::Exact);
+    let sol = ctx.solve(ctx.min_feasible_budget(), Objective::MaxOverhead).unwrap();
+    let sched = ChainSchedule::from_chain(&g, &sol.chain).unwrap();
+    let mc_report = mc.train(&sched, &cfg).unwrap();
+
+    let mut v = TowerTrainer::new(&artifacts_dir(), &cfg).unwrap();
+    let v_report = v.train(&ChainSchedule::vanilla(layers + 1), &cfg).unwrap();
+    for (a, b) in v_report.losses.iter().zip(&mc_report.losses) {
+        assert!((a - b).abs() <= 1e-6 * a.abs().max(1.0));
+    }
+}
+
+#[test]
+fn loss_decreases_on_synthetic_task() {
+    let layers = 6;
+    let cfg = TrainConfig { layers, steps: 30, lr: 0.1, seed: 3, log_every: 0 };
+    let mut t = TowerTrainer::new(&artifacts_dir(), &cfg).unwrap();
+    let report = t.train(&ChainSchedule::vanilla(layers + 1), &cfg).unwrap();
+    let first = report.losses[0];
+    let last = *report.losses.last().unwrap();
+    assert!(last < first * 0.8, "loss must drop: {first} → {last}");
+    assert!(last.is_finite());
+}

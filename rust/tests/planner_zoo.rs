@@ -1,0 +1,92 @@
+//! Planner integration over the real network zoo (no artifacts needed).
+//!
+//! These assert the *shape* of the paper's results end-to-end through the
+//! public API: reductions in the 36–81% band, method ordering, Chen
+//! weakest on skip-heavy graphs — the qualitative content of Table 1.
+
+use recompute::models::zoo;
+use recompute::planner::{build_context, chen_plan, Family, Objective};
+use recompute::sim::{simulate, simulate_vanilla, SimOptions};
+
+fn reduction(peak: u64, vanilla: u64) -> f64 {
+    100.0 * (1.0 - peak as f64 / vanilla as f64)
+}
+
+#[test]
+fn approx_dp_reductions_land_in_paper_band() {
+    // Run the fast planner on every zoo network at the paper's batch
+    // sizes; reductions (incl. params) must land in a generous band
+    // around the paper's 36–81%.
+    for e in zoo::TABLE1 {
+        let g = e.build_paper();
+        let opts = SimOptions::default();
+        let vanilla = simulate_vanilla(&g, opts).peak_total;
+        let ctx = build_context(&g, Family::Approx);
+        let b = ctx.min_feasible_budget();
+        let mc = ctx.solve(b, Objective::MaxOverhead).unwrap();
+        let peak = simulate(&g, &mc.chain, opts).peak_total;
+        let red = reduction(peak, vanilla);
+        assert!(
+            (30.0..=92.0).contains(&red),
+            "{}: ApproxDP+MC reduction {red:.0}% out of band (peak {peak}, vanilla {vanilla})",
+            e.name
+        );
+    }
+}
+
+#[test]
+fn ours_beats_chen_on_skip_heavy_networks() {
+    // The paper's headline qualitative claim (§5.1): PSPNet, U-Net and
+    // GoogLeNet favor lower-set planning over Chen's segmentation.
+    for name in ["U-Net", "GoogLeNet"] {
+        let e = zoo::find(name).unwrap();
+        let g = e.build_paper();
+        let opts = SimOptions::default();
+        let ctx = build_context(&g, Family::Approx);
+        let b = ctx.min_feasible_budget();
+        let ours = simulate(&g, &ctx.solve(b, Objective::MaxOverhead).unwrap().chain, opts)
+            .peak_total;
+        let chen = chen_plan(&g, |c| simulate(&g, c, opts).peak_total).unwrap();
+        let chen_peak = simulate(&g, &chen.chain, opts).peak_total;
+        assert!(
+            ours <= chen_peak,
+            "{name}: ours {ours} should beat Chen {chen_peak}"
+        );
+    }
+}
+
+#[test]
+fn mc_overhead_bounded_by_forward_pass() {
+    // §4.4: memory-centric overhead ≤ one forward computation.
+    for e in zoo::TABLE1 {
+        let g = e.build_batch(1);
+        let ctx = build_context(&g, Family::Approx);
+        let b = ctx.min_feasible_budget();
+        let mc = ctx.solve(b, Objective::MaxOverhead).unwrap();
+        assert!(mc.overhead <= g.total_time(), "{}", e.name);
+    }
+}
+
+#[test]
+fn tc_overhead_leq_mc_overhead_at_min_budget() {
+    for e in zoo::TABLE1 {
+        let g = e.build_batch(1);
+        let ctx = build_context(&g, Family::Approx);
+        let b = ctx.min_feasible_budget();
+        let tc = ctx.solve(b, Objective::MinOverhead).unwrap();
+        let mc = ctx.solve(b, Objective::MaxOverhead).unwrap();
+        assert!(tc.overhead <= mc.overhead, "{}", e.name);
+    }
+}
+
+#[test]
+fn bigger_budget_means_less_overhead_across_zoo() {
+    for e in zoo::TABLE1 {
+        let g = e.build_batch(1);
+        let ctx = build_context(&g, Family::Approx);
+        let b = ctx.min_feasible_budget();
+        let tight = ctx.solve(b, Objective::MinOverhead).unwrap().overhead;
+        let loose = ctx.solve(b * 2, Objective::MinOverhead).unwrap().overhead;
+        assert!(loose <= tight, "{}", e.name);
+    }
+}
