@@ -2,16 +2,21 @@
 //! the zoo (paper: ExactDP >80 s on GoogLeNet/PSPNet, ApproxDP <1 s on
 //! everything), plus DP-cost scaling on synthetic chains.
 //!
+//! Writes `BENCH_planner.json` (via `util::json`) so the planner perf
+//! trajectory is tracked across PRs.
+//!
 //! ```sh
 //! cargo bench --bench planner_scaling
 //! ```
 
-use recompute::bench::{bench, time_once};
+use recompute::bench::{bench, bench_report_json, time_once, BenchStats};
 use recompute::graph::{GraphBuilder, NodeId, OpKind};
 use recompute::models::zoo;
 use recompute::planner::{build_context, Family, Objective};
 
 fn main() {
+    let mut collected: Vec<BenchStats> = Vec::new();
+
     println!("== §5.1: ExactDP vs ApproxDP wall-clock on the zoo ==\n");
     println!("{}", recompute::bench::tables::planner_timing(zoo::TABLE1));
 
@@ -30,14 +35,30 @@ fn main() {
             ctx.solve(b, Objective::MinOverhead)
         });
         println!("{}", stats.summary());
+        collected.push(stats);
     }
 
     println!("\n== one-pass minimax B* vs binary search (perf §opt) ==");
     let g = zoo::resnet50(8, 224);
     let ctx = build_context(&g, Family::Approx);
-    let (b1, d1) = time_once(|| ctx.min_feasible_budget());
-    let (b2, d2) = time_once(|| ctx.min_feasible_budget_by_search());
+    let minimax = bench("minimax_budget_resnet50", 1, 5, || ctx.min_feasible_budget());
+    let search = bench("budget_binary_search_resnet50", 1, 5, || {
+        ctx.min_feasible_budget_by_search()
+    });
+    let (b1, _) = time_once(|| ctx.min_feasible_budget());
+    let (b2, _) = time_once(|| ctx.min_feasible_budget_by_search());
     assert_eq!(b1, b2);
-    println!("minimax-DP: {d1:.2?}   binary-search: {d2:.2?}   speedup {:.1}×",
-        d2.as_secs_f64() / d1.as_secs_f64());
+    println!("{}", minimax.summary());
+    println!("{}", search.summary());
+    println!(
+        "speedup {:.1}×",
+        search.median.as_secs_f64() / minimax.median.as_secs_f64()
+    );
+    collected.push(minimax);
+    collected.push(search);
+
+    let doc = bench_report_json("planner", &collected);
+    std::fs::write("BENCH_planner.json", doc.to_string_pretty())
+        .expect("writing BENCH_planner.json");
+    println!("\nwrote BENCH_planner.json ({} results)", collected.len());
 }

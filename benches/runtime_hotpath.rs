@@ -1,20 +1,29 @@
 //! Micro-benchmarks of the hot paths: bitset algebra, boundary/frontier
-//! computation, DP solve, trace generation + liveness measurement, and —
-//! when artifacts are present — the real PJRT training step.
+//! computation, DP solve, trace generation + liveness measurement, the
+//! native-backend kernels, and the real executor training step.
+//!
+//! Writes `BENCH_runtime.json` (via `util::json`) so the runtime perf
+//! trajectory is tracked across PRs. Everything runs on the pure-Rust
+//! `NativeBackend` — no artifacts required.
 //!
 //! ```sh
 //! cargo bench --bench runtime_hotpath
 //! ```
 
-use std::path::PathBuf;
-
-use recompute::bench::bench;
+use recompute::bench::{bench, bench_report_json, BenchStats};
 use recompute::exec::{ChainSchedule, TowerTrainer, TrainConfig};
 use recompute::models::{mlp_tower, zoo};
 use recompute::planner::{build_context, Family, Objective};
+use recompute::runtime::{Backend, NativeBackend};
 use recompute::sim::{canonical_trace, measure, SimOptions};
 
 fn main() {
+    let mut collected: Vec<BenchStats> = Vec::new();
+    let mut record = |s: BenchStats| {
+        println!("{}", s.summary());
+        collected.push(s);
+    };
+
     let g = zoo::resnet50(32, 224);
     let full = recompute::graph::NodeSet::full(g.len());
     let half = {
@@ -25,58 +34,76 @@ fn main() {
         s
     };
 
-    println!("{}", bench("nodeset_union_500", 10, 50, || {
+    record(bench("nodeset_union_500", 10, 50, || {
         let mut acc = recompute::graph::NodeSet::empty(g.len());
         for _ in 0..500 {
             acc.union_with(&half);
             acc.intersect_with(&full);
         }
         acc
-    }).summary());
+    }));
 
-    println!("{}", bench("graph_boundary_resnet50", 10, 50, || g.boundary(&half)).summary());
-    println!("{}", bench("graph_frontier_resnet50", 10, 50, || g.frontier(&half)).summary());
+    record(bench("graph_boundary_resnet50", 10, 50, || g.boundary(&half)));
+    record(bench("graph_frontier_resnet50", 10, 50, || g.frontier(&half)));
 
-    println!("{}", bench("approx_ctx_build_resnet50", 2, 10, || {
+    record(bench("approx_ctx_build_resnet50", 2, 10, || {
         build_context(&g, Family::Approx).family_len()
-    }).summary());
+    }));
 
     let ctx = build_context(&g, Family::Approx);
     let b_star = ctx.min_feasible_budget();
-    println!("{}", bench("approx_solve_resnet50", 2, 10, || {
+    record(bench("approx_solve_resnet50", 2, 10, || {
         ctx.solve(b_star, Objective::MinOverhead)
-    }).summary());
-    println!("{}", bench("minimax_budget_resnet50", 2, 10, || ctx.min_feasible_budget()).summary());
+    }));
+    record(bench("minimax_budget_resnet50", 2, 10, || ctx.min_feasible_budget()));
 
     let plan = ctx.solve(b_star, Objective::MinOverhead).unwrap();
-    println!("{}", bench("trace_gen_resnet50", 2, 10, || canonical_trace(&g, &plan.chain)).summary());
+    record(bench("trace_gen_resnet50", 2, 10, || canonical_trace(&g, &plan.chain)));
     let tr = canonical_trace(&g, &plan.chain);
-    println!("{}", bench("liveness_measure_resnet50", 2, 10, || {
+    record(bench("liveness_measure_resnet50", 2, 10, || {
         measure(&g, &tr, SimOptions::default())
-    }).summary());
+    }));
 
-    // Real executor step (needs artifacts).
-    let dir = PathBuf::from("artifacts");
-    if dir.join("manifest.json").exists() {
-        let cfg = TrainConfig { layers: 12, steps: 1, lr: 0.05, seed: 1, log_every: 0 };
-        if let Ok(mut t) = TowerTrainer::new(&dir, &cfg) {
-            let tower = mlp_tower(12, t.width() as u32, t.batch() as u64);
-            let tctx = build_context(&tower, Family::Exact);
-            let sol = tctx.solve(tctx.min_feasible_budget(), Objective::MinOverhead).unwrap();
-            let sched = ChainSchedule::from_chain(&tower, &sol.chain).unwrap();
-            let vsched = ChainSchedule::vanilla(13);
-            let mut task = recompute::exec::SyntheticTask::new(t.batch(), t.width(), 3);
-            let (xv, yv) = task.next_batch();
-            let x = recompute::runtime::literal_f32(&xv, &[t.batch(), t.width()]).unwrap();
-            let y = recompute::runtime::literal_f32(&yv, &[t.batch(), t.width()]).unwrap();
-            println!("{}", bench("executor_step_vanilla_12L", 2, 10, || {
-                t.step(&vsched, &x, &y, 0.0).unwrap()
-            }).summary());
-            println!("{}", bench("executor_step_recompute_12L", 2, 10, || {
-                t.step(&sched, &x, &y, 0.0).unwrap()
-            }).summary());
-        }
-    } else {
-        println!("(artifacts/ missing — skipping executor step benches; run `make artifacts`)");
-    }
+    // -- native-backend kernels --------------------------------------------
+    let (batch, width) = (32usize, 64usize);
+    let be = NativeBackend::new(batch, width);
+    let xdata = vec![0.1f32; batch * width];
+    let wdata = vec![0.05f32; width * width];
+    let bdata = vec![0.0f32; width];
+    let x = be.upload(&xdata, &[batch, width]).unwrap();
+    let w = be.upload(&wdata, &[width, width]).unwrap();
+    let bias = be.upload(&bdata, &[width]).unwrap();
+    record(bench("native_layer_fwd_32x64", 5, 30, || {
+        be.run("layer_fwd", &[x.clone(), w.clone(), bias.clone()]).unwrap()
+    }));
+    record(bench("native_layer_bwd_32x64", 5, 30, || {
+        be.run("layer_bwd", &[x.clone(), w.clone(), bias.clone(), x.clone()]).unwrap()
+    }));
+
+    // -- real executor step (native backend, 12-layer tower) ---------------
+    let cfg = TrainConfig { layers: 12, steps: 1, lr: 0.05, seed: 1, log_every: 0 };
+    let mut t = TowerTrainer::native(batch, width, &cfg).unwrap();
+    let tower = mlp_tower(12, width as u32, batch as u64);
+    let tctx = build_context(&tower, Family::Exact);
+    let sol = tctx.solve(tctx.min_feasible_budget(), Objective::MinOverhead).unwrap();
+    let sched = ChainSchedule::from_chain(&tower, &sol.chain).unwrap();
+    let vsched = ChainSchedule::vanilla(13);
+    let mut task = recompute::exec::SyntheticTask::new(batch, width, 3);
+    let (xv, yv) = task.next_batch();
+    let xt = t.backend().upload(&xv, &[batch, width]).unwrap();
+    let yt = t.backend().upload(&yv, &[batch, width]).unwrap();
+    let s1 = bench("executor_step_vanilla_12L", 2, 10, || {
+        t.step(&vsched, &xt, &yt, 0.0).unwrap()
+    });
+    record(s1);
+    let s2 = bench("executor_step_recompute_12L", 2, 10, || {
+        t.step(&sched, &xt, &yt, 0.0).unwrap()
+    });
+    record(s2);
+
+    drop(record);
+    let doc = bench_report_json("runtime", &collected);
+    std::fs::write("BENCH_runtime.json", doc.to_string_pretty())
+        .expect("writing BENCH_runtime.json");
+    println!("\nwrote BENCH_runtime.json ({} results)", collected.len());
 }

@@ -11,9 +11,10 @@ use recompute::fmt_bytes;
 use recompute::models::zoo;
 use recompute::planner::{build_context, Family, Objective};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> recompute::anyhow::Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "ResNet50".into());
-    let e = zoo::find(&name).ok_or_else(|| anyhow::anyhow!("unknown network {name}"))?;
+    let e = zoo::find(&name)
+        .ok_or_else(|| recompute::anyhow::Error::msg(format!("unknown network {name}")))?;
     let g = e.build_paper();
     let ctx = build_context(&g, Family::Approx);
     let b_star = ctx.min_feasible_budget();

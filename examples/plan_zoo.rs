@@ -12,7 +12,7 @@ use recompute::planner::{build_context, chen_plan, Family, Objective};
 use recompute::sim::{simulate, simulate_vanilla, SimOptions};
 use recompute::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> recompute::anyhow::Result<()> {
     let mut t =
         Table::new(&["Network", "ApproxDP+MC", "ApproxDP+TC", "Chen's", "Vanilla", "paper MC"])
             .numeric();

@@ -1,16 +1,18 @@
-//! Regression check for the PJRT input-buffer leak (EXPERIMENTS §Perf-L3-2).
+//! Regression check: hammering the backend's hot kernel must keep RSS
+//! flat — no per-call buffer leaks.
 //!
-//! The published `xla` crate's `execute` C shim leaks every input buffer
-//! (`BufferFromHostLiteral(..).release()` with no matching free). The
-//! runtime works around it with caller-owned buffers + `execute_b`; this
-//! example hammers an artifact for 300 iterations and asserts RSS stays
-//! flat.
+//! History: the published `xla` crate's `execute` C shim leaked every
+//! input buffer (`BufferFromHostLiteral(..).release()` with no matching
+//! free; EXPERIMENTS §Perf-L3-2), which this example was written to
+//! catch. The same harness now guards the default `NativeBackend`: its
+//! `Rc`-shared tensors would show up here just the same if a reference
+//! cycle or an unbounded stats structure ever kept buffers alive.
 //!
 //! ```sh
-//! make artifacts && cargo run --release --example runtime_leak_check
+//! cargo run --release --example runtime_leak_check
 //! ```
 
-use recompute::runtime::{literal_f32, ArtifactSet};
+use recompute::runtime::{Backend, NativeBackend};
 
 fn rss_mb() -> f64 {
     let s = std::fs::read_to_string("/proc/self/status").unwrap();
@@ -19,25 +21,25 @@ fn rss_mb() -> f64 {
 }
 
 fn main() {
-    let arts = ArtifactSet::load(std::path::Path::new("artifacts")).unwrap();
-    let w = arts.width;
+    let w = 256usize;
+    let be = NativeBackend::new(32, w);
     let wm = vec![1.0f32; w * w];
     let gm = vec![0.1f32; w * w];
     let baseline = {
-        // Warm up allocator + executable caches first.
-        let mut cur = literal_f32(&wm, &[w, w]).unwrap();
+        // Warm up allocator caches first.
+        let mut cur = be.upload(&wm, &[w, w]).unwrap();
         for _ in 0..20 {
-            let g = literal_f32(&gm, &[w, w]).unwrap();
-            let lr = literal_f32(&[0.01], &[]).unwrap();
-            cur = arts.run("sgd_mat", &[cur, g, lr]).unwrap().pop().unwrap();
+            let g = be.upload(&gm, &[w, w]).unwrap();
+            let lr = be.upload(&[0.01], &[]).unwrap();
+            cur = be.run("sgd_mat", &[cur, g, lr]).unwrap().pop().unwrap();
         }
         rss_mb()
     };
-    let mut cur = literal_f32(&wm, &[w, w]).unwrap();
+    let mut cur = be.upload(&wm, &[w, w]).unwrap();
     for i in 0..300 {
-        let g = literal_f32(&gm, &[w, w]).unwrap();
-        let lr = literal_f32(&[0.01], &[]).unwrap();
-        cur = arts.run("sgd_mat", &[cur, g, lr]).unwrap().pop().unwrap();
+        let g = be.upload(&gm, &[w, w]).unwrap();
+        let lr = be.upload(&[0.01], &[]).unwrap();
+        cur = be.run("sgd_mat", &[cur, g, lr]).unwrap().pop().unwrap();
         if i % 100 == 0 {
             println!("iter {i:>3}  rss {:.1} MB", rss_mb());
         }
@@ -48,8 +50,11 @@ fn main() {
     let mat_mb = (w * w * 4) as f64 / 1e6;
     assert!(
         end - baseline < 40.0 * mat_mb.max(1.0),
-        "RSS grew by {:.1} MB over 300 iters — input buffers are leaking again",
+        "RSS grew by {:.1} MB over 300 iters — kernel buffers are leaking",
         end - baseline
     );
-    println!("runtime_leak_check OK");
+    let stats = be.stats();
+    let sgd = stats.iter().find(|s| s.kernel == "sgd_mat").unwrap();
+    assert_eq!(sgd.calls, 320, "stats must count every call");
+    println!("runtime_leak_check OK ({} sgd_mat calls tracked)", sgd.calls);
 }

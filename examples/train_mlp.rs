@@ -1,72 +1,59 @@
-//! End-to-end driver (deliverable E6): REAL training through the full
-//! three-layer stack — L3 plan → L2/L1 AOT artifacts → PJRT execution —
-//! comparing vanilla, time-centric and memory-centric schedules on the
-//! same initial parameters.
+//! End-to-end driver: REAL training through the full stack — L3 plan →
+//! backend kernels — comparing vanilla, time-centric and memory-centric
+//! schedules on the same initial parameters.
+//!
+//! Runs on the pure-Rust `NativeBackend`: no Python, no artifacts, no
+//! native libraries. (Build with `--features xla` and use
+//! `repro train --backend pjrt` to drive the AOT/PJRT path instead.)
 //!
 //! Proves the layers compose: the loss trajectory is bitwise identical
-//! across schedules (recomputation's defining property) while the
-//! *measured* live activation bytes drop as planned.
+//! across schedules (recomputation's defining property), the *measured*
+//! live activation bytes drop as planned, and the loss decreases.
 //!
 //! ```sh
-//! make artifacts          # batch/width of the manifest
-//! cargo run --release --example train_mlp -- [layers] [steps]
+//! cargo run --release --example train_mlp -- [layers] [steps] [width] [batch]
 //! ```
 
-use std::path::PathBuf;
-
+use recompute::anyhow::Result;
 use recompute::coordinator::report::{loss_summary, report_json};
-use recompute::exec::{ChainSchedule, TowerTrainer, TrainConfig};
+use recompute::coordinator::train::{compare_schedules, trajectories_identical};
+use recompute::exec::{TowerTrainer, TrainConfig};
 use recompute::fmt_bytes;
-use recompute::models::mlp_tower;
-use recompute::planner::{build_context, Family, Objective};
 use recompute::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let layers: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(24);
-    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(200);
-    let artifacts = PathBuf::from("artifacts");
-    let cfg = TrainConfig { layers, steps, lr: 0.05, seed: 17, log_every: steps / 10 + 1 };
+    let layers: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(12);
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(80);
+    let width: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(64);
+    let batch: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(32);
+    let cfg = TrainConfig { layers, steps, lr: 0.1, seed: 7, log_every: steps / 10 + 1 };
 
-    println!("== end-to-end training: {layers}-layer tower, {steps} steps ==");
-    let mut reports = Vec::new();
-    for mode in ["vanilla", "tc", "mc"] {
-        let mut trainer = TowerTrainer::new(&artifacts, &cfg)?;
-        let g = mlp_tower(layers as u32, trainer.width() as u32, trainer.batch() as u64);
-        let sched = match mode {
-            "vanilla" => ChainSchedule::vanilla(layers + 1),
-            _ => {
-                let ctx = build_context(&g, Family::Exact);
-                let b = ctx.min_feasible_budget();
-                let obj = if mode == "tc" {
-                    Objective::MinOverhead
-                } else {
-                    Objective::MaxOverhead
-                };
-                ChainSchedule::from_chain(&g, &ctx.solve(b, obj).unwrap().chain)?
-            }
-        };
-        eprintln!("-- {mode}: k={} segments", sched.segments.len());
-        let r = trainer.train(&sched, &cfg)?;
+    println!(
+        "== end-to-end training: {layers}-layer tower (width {width}, batch {batch}), {steps} steps, native backend =="
+    );
+    let reports = compare_schedules(
+        || TowerTrainer::native(batch, width, &cfg),
+        &cfg,
+        &["vanilla", "tc", "mc"],
+        None,
+        false,
+    )?;
+    for (mode, r) in &reports {
         println!(
-            "{mode:<8} k={:<3} peak_act={:<10} step={:>7.1}ms recompute/step={:<3} {}",
+            "{mode:<8} k={:<3} peak_act={:<10} step={:>7.2}ms recompute/step={:<3} {}",
             r.k,
             fmt_bytes(r.peak_bytes),
             r.mean_step_ms,
             r.recomputes_per_step,
-            loss_summary(&r)
+            loss_summary(r)
         );
-        reports.push((mode.to_string(), r));
     }
 
-    // Invariant: identical loss trajectories.
+    // Invariant 1: identical loss trajectories across schedules.
     let v = &reports[0].1;
     for (mode, r) in &reports[1..] {
-        let same = v
-            .losses
-            .iter()
-            .zip(&r.losses)
-            .all(|(a, b)| (a - b).abs() <= 1e-6 * a.abs().max(1.0));
+        let same = trajectories_identical(v, r);
         println!(
             "{mode} trajectory vs vanilla: {}",
             if same { "IDENTICAL ✓" } else { "DIVERGED ✗" }
@@ -79,6 +66,12 @@ fn main() -> anyhow::Result<()> {
             100.0 * (1.0 - r.peak_bytes as f64 / v.peak_bytes as f64)
         );
     }
+
+    // Invariant 2: the tower actually learns the synthetic task.
+    let first = v.losses.first().copied().unwrap_or(f32::NAN);
+    let last = v.losses.last().copied().unwrap_or(f32::NAN);
+    println!("loss trajectory: {first:.4} → {last:.4}");
+    assert!(last.is_finite() && last < first, "loss must decrease: {first} → {last}");
 
     let arr: Vec<Json> = reports.iter().map(|(m, r)| report_json(m, r)).collect();
     std::fs::write("train_mlp_report.json", Json::Arr(arr).to_string_pretty())?;

@@ -1,0 +1,165 @@
+//! Drop-in stand-in for the `anyhow` crate.
+//!
+//! The build environment is offline — no crates.io — so the ergonomic
+//! error handling the codebase was written against (`anyhow::Result`,
+//! `anyhow!`, `bail!`, `.context(..)`) is provided by this self-contained
+//! module instead. The surface mirrors the subset of `anyhow` the repo
+//! uses; swapping the real crate back in is a one-line import change per
+//! file.
+//!
+//! Design notes:
+//!
+//! - [`Error`] is a flat message string with contexts prepended
+//!   (`"outer: inner"`), matching how `anyhow` renders with `{:#}`.
+//! - A blanket `From<E: std::error::Error>` powers `?` on std errors
+//!   (io, parse, [`crate::util::json::JsonError`], …). `Error` itself
+//!   deliberately does **not** implement `std::error::Error`, exactly like
+//!   `anyhow::Error`, so the blanket impl does not overlap the reflexive
+//!   `From<T> for T`.
+//! - The macros are `#[macro_export]` under hidden names and re-exported
+//!   here, so `use crate::anyhow::{anyhow, bail}` (in-crate) and
+//!   `use recompute::anyhow::{anyhow, bail}` (tests/examples/benches)
+//!   both work.
+
+use std::fmt;
+
+/// A flat, context-prefixed error message.
+pub struct Error {
+    msg: String,
+}
+
+/// `Result` defaulting its error type to [`Error`], like `anyhow::Result`.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error { msg: m.to_string() }
+    }
+
+    /// Prepend a context layer: `"{context}: {self}"`.
+    pub fn context<C: fmt::Display>(self, context: C) -> Error {
+        Error { msg: format!("{context}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Render the source chain inline so nothing is lost.
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+/// Context-attaching extension for `Result` and `Option`, mirroring
+/// `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or `None`) with a fixed context message.
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+
+    /// Wrap with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Format an [`Error`] — `anyhow!("bad value {v}")`.
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __recompute_anyhow {
+    ($($t:tt)*) => {
+        $crate::anyhow::Error::msg(::std::format!($($t)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] — `bail!("unknown flag {f}")`.
+#[doc(hidden)]
+#[macro_export]
+macro_rules! __recompute_bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::__recompute_anyhow!($($t)*))
+    };
+}
+
+pub use crate::__recompute_anyhow as anyhow;
+pub use crate::__recompute_bail as bail;
+
+#[cfg(test)]
+mod tests {
+    use super::{anyhow, bail, Context, Error, Result};
+
+    fn parse_two(s: &str) -> Result<u32> {
+        let v: u32 = s.parse()?; // From<ParseIntError>
+        if v != 2 {
+            bail!("expected 2, got {v}");
+        }
+        Ok(v)
+    }
+
+    #[test]
+    fn question_mark_and_bail() {
+        assert_eq!(parse_two("2").unwrap(), 2);
+        assert!(parse_two("x").unwrap_err().to_string().contains("invalid digit"));
+        assert_eq!(parse_two("3").unwrap_err().to_string(), "expected 2, got 3");
+    }
+
+    #[test]
+    fn context_layers_prepend() {
+        let e: Result<()> = Err(anyhow!("inner"));
+        let e = e.context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+        let e2 = Err::<(), Error>(e).with_context(|| format!("layer {}", 3)).unwrap_err();
+        assert_eq!(e2.to_string(), "layer 3: outer: inner");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        assert_eq!(v.context("missing value").unwrap_err().to_string(), "missing value");
+        assert_eq!(Some(7u32).context("unused").unwrap(), 7);
+    }
+
+    #[test]
+    fn std_errors_convert() {
+        let e: Error = "x".parse::<u32>().unwrap_err().into();
+        assert!(e.to_string().contains("invalid digit"));
+        // Debug and Display agree (flat message, no struct noise).
+        assert_eq!(format!("{e}"), format!("{e:?}"));
+    }
+}

@@ -5,6 +5,8 @@
 
 use std::time::{Duration, Instant};
 
+use crate::util::json::Json;
+
 /// Timing statistics over a set of iterations.
 #[derive(Clone, Debug)]
 pub struct BenchStats {
@@ -23,6 +25,26 @@ impl BenchStats {
             self.name, self.iters, self.min, self.median, self.mean, self.max
         )
     }
+
+    /// Machine-readable form for the `BENCH_*.json` perf-trajectory files.
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("name", self.name.as_str().into())
+            .set("iters", (self.iters as u64).into())
+            .set("min_ms", (self.min.as_secs_f64() * 1e3).into())
+            .set("median_ms", (self.median.as_secs_f64() * 1e3).into())
+            .set("mean_ms", (self.mean.as_secs_f64() * 1e3).into())
+            .set("max_ms", (self.max.as_secs_f64() * 1e3).into())
+    }
+}
+
+/// Serialize a bench suite as the standard `BENCH_*.json` document:
+/// `{"suite": …, "results": [BenchStats…]}` (deterministic key order via
+/// `util::json`), so the perf trajectory diffs cleanly across PRs.
+pub fn bench_report_json(suite: &str, stats: &[BenchStats]) -> Json {
+    Json::obj()
+        .set("suite", suite.into())
+        .set("results", Json::Arr(stats.iter().map(BenchStats::to_json).collect()))
 }
 
 /// Run `f` for `iters` timed iterations after `warmup` untimed ones.
@@ -81,5 +103,18 @@ mod tests {
         let (v, d) = time_once(|| 42);
         assert_eq!(v, 42);
         assert!(d.as_nanos() > 0);
+    }
+
+    #[test]
+    fn bench_json_is_parseable_and_complete() {
+        let s = bench("one", 0, 3, || 1 + 1);
+        let doc = bench_report_json("unit", &[s.clone(), s]);
+        let reparsed = crate::util::json::Json::parse(&doc.to_string_pretty()).unwrap();
+        assert_eq!(reparsed.get("suite").as_str(), Some("unit"));
+        let results = reparsed.get("results").as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(results[0].get("name").as_str(), Some("one"));
+        assert_eq!(results[0].get("iters").as_u64(), Some(3));
+        assert!(results[0].get("mean_ms").as_f64().unwrap() >= 0.0);
     }
 }

@@ -4,4 +4,4 @@
 pub mod harness;
 pub mod tables;
 
-pub use harness::{bench, time_once, BenchStats};
+pub use harness::{bench, bench_report_json, time_once, BenchStats};

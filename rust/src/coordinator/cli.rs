@@ -1,32 +1,41 @@
 //! `repro train` — CLI front-end of the training coordinator.
 //!
-//! Runs the real PJRT executor on the MLP tower under one or more
-//! schedules and prints the measured peak / step-time / loss evidence.
+//! Runs the real executor on the MLP tower under one or more schedules
+//! and prints the measured peak / step-time / loss evidence. The backend
+//! defaults to the pure-Rust `native` kernels (always available); `pjrt`
+//! replays the AOT artifact path when the crate is built with the `xla`
+//! feature.
 //!
 //! Flags:
-//!   --artifacts DIR   artifact directory (default: artifacts)
-//!   --layers N        hidden layers (default 16)
+//!   --backend B       native | pjrt (default: native)
+//!   --batch N         native backend batch size (default 32)
+//!   --width N         native backend tower width (default 64)
+//!   --artifacts DIR   pjrt artifact directory (default: artifacts)
+//!   --layers N        hidden layers (default 12)
 //!   --steps N         training steps (default 50)
-//!   --lr F            learning rate (default 0.05)
+//!   --lr F            learning rate (default 0.1)
 //!   --mode M          vanilla | tc | mc | all (default all)
 //!   --budget-frac F   activation budget as a fraction of vanilla (tc/mc
 //!                     default: minimal feasible)
 //!   --report FILE     write a JSON report
+//!   --stats           print per-kernel backend timing/byte statistics
 //!   --quiet           suppress per-step loss logging
 
 use std::path::PathBuf;
 
-use anyhow::{anyhow, bail, Result};
+use crate::anyhow::{anyhow, bail, Result};
 
-use crate::exec::{ChainSchedule, TowerTrainer, TrainConfig};
+use crate::exec::{TowerTrainer, TrainConfig, TrainReport};
 use crate::fmt_bytes;
-use crate::models::mlp_tower;
-use crate::planner::{build_context, Family, Objective};
 use crate::util::json::Json;
 
 use super::report::{loss_summary, report_json};
+use super::train::{compare_schedules, parse_modes, trajectories_identical};
 
 struct TrainArgs {
+    backend: String,
+    batch: usize,
+    width: usize,
     artifacts: PathBuf,
     layers: usize,
     steps: usize,
@@ -34,24 +43,32 @@ struct TrainArgs {
     mode: String,
     budget_frac: Option<f64>,
     report: Option<PathBuf>,
+    stats: bool,
     quiet: bool,
 }
 
 fn parse_args(args: &[String]) -> Result<TrainArgs> {
     let mut out = TrainArgs {
+        backend: "native".into(),
+        batch: 32,
+        width: 64,
         artifacts: PathBuf::from("artifacts"),
-        layers: 16,
+        layers: 12,
         steps: 50,
-        lr: 0.05,
+        lr: 0.1,
         mode: "all".into(),
         budget_frac: None,
         report: None,
+        stats: false,
         quiet: false,
     };
     let mut it = args.iter();
     while let Some(a) = it.next() {
         let mut val = || it.next().ok_or_else(|| anyhow!("missing value for {a}"));
         match a.as_str() {
+            "--backend" => out.backend = val()?.clone(),
+            "--batch" => out.batch = val()?.parse()?,
+            "--width" => out.width = val()?.parse()?,
             "--artifacts" => out.artifacts = PathBuf::from(val()?),
             "--layers" => out.layers = val()?.parse()?,
             "--steps" => out.steps = val()?.parse()?,
@@ -59,12 +76,16 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
             "--mode" => out.mode = val()?.clone(),
             "--budget-frac" => out.budget_frac = Some(val()?.parse()?),
             "--report" => out.report = Some(PathBuf::from(val()?)),
+            "--stats" => out.stats = true,
             "--quiet" => out.quiet = true,
             "--help" | "-h" => {
-                bail!("see module docs: repro train [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--budget-frac F] [--report FILE] [--quiet]")
+                bail!("see module docs: repro train [--backend native|pjrt] [--batch N] [--width N] [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--budget-frac F] [--report FILE] [--stats] [--quiet]")
             }
             other => bail!("unknown train flag {other}"),
         }
+    }
+    if out.batch == 0 || out.width == 0 {
+        bail!("--batch and --width must be positive");
     }
     Ok(out)
 }
@@ -76,62 +97,37 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
         layers: a.layers,
         steps: a.steps,
         lr: a.lr,
-        seed: 17,
+        seed: 7,
         log_every: if a.quiet { 0 } else { (a.steps / 5).max(1) },
     };
+    let modes = parse_modes(&a.mode)?;
 
-    // One trainer per schedule: training mutates parameters, and the
+    // Each mode gets a fresh trainer: training mutates parameters, and the
     // schedules must see identical initial conditions for the bitwise
     // loss comparison.
-    let mut results: Vec<(String, crate::exec::TrainReport)> = Vec::new();
-    let modes: Vec<&str> = match a.mode.as_str() {
-        "all" => vec!["vanilla", "tc", "mc"],
-        m @ ("vanilla" | "tc" | "mc") => vec![m],
-        m => bail!("bad --mode {m}"),
+    let results: Vec<(String, TrainReport)> = match a.backend.as_str() {
+        "native" => compare_schedules(
+            || TowerTrainer::native(a.batch, a.width, &cfg),
+            &cfg,
+            &modes,
+            a.budget_frac,
+            a.quiet,
+        )?,
+        "pjrt" => run_pjrt(&a, &cfg, &modes)?,
+        other => bail!("unknown backend '{other}' (native|pjrt)"),
     };
 
-    for mode in modes {
-        let mut trainer = TowerTrainer::new(&a.artifacts, &cfg)?;
-        let batch = trainer.batch() as u64;
-        let width = trainer.width() as u32;
-        let g = mlp_tower(a.layers as u32, width, batch);
-        let sched = match mode {
-            "vanilla" => ChainSchedule::vanilla(a.layers + 1),
-            tc_or_mc => {
-                let ctx = build_context(&g, Family::Exact);
-                let min_b = ctx.min_feasible_budget();
-                let budget = match a.budget_frac {
-                    Some(f) => {
-                        let vanilla_acts = g.total_mem();
-                        ((vanilla_acts as f64 * f) as u64).max(min_b)
-                    }
-                    None => min_b,
-                };
-                let obj = if tc_or_mc == "tc" {
-                    Objective::MinOverhead
-                } else {
-                    Objective::MaxOverhead
-                };
-                let sol = ctx
-                    .solve(budget, obj)
-                    .ok_or_else(|| anyhow!("budget {} infeasible", fmt_bytes(budget)))?;
-                ChainSchedule::from_chain(&g, &sol.chain)?
-            }
-        };
-        if !a.quiet {
-            eprintln!("== mode {mode}: k={} segments ==", sched.segments.len());
-        }
-        let report = trainer.train(&sched, &cfg)?;
+    for (mode, report) in &results {
         println!(
-            "{mode:<8} k={:<3} peak_act={:<10} (+params {:<9}) step={:.1}ms recompute/step={} {}",
+            "{mode:<8} [{}] k={:<3} peak_act={:<10} (+params {:<9}) step={:.2}ms recompute/step={} {}",
+            report.backend,
             report.k,
             fmt_bytes(report.peak_bytes),
             fmt_bytes(report.param_bytes),
             report.mean_step_ms,
             report.recomputes_per_step,
-            loss_summary(&report),
+            loss_summary(report),
         );
-        results.push((mode.to_string(), report));
     }
 
     // Cross-schedule invariants worth asserting out loud.
@@ -139,11 +135,7 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
         let v = results.iter().find(|(m, _)| m == "vanilla");
         let tc = results.iter().find(|(m, _)| m == "tc");
         if let (Some((_, v)), Some((_, t))) = (v, tc) {
-            let same = v
-                .losses
-                .iter()
-                .zip(&t.losses)
-                .all(|(a, b)| (a - b).abs() <= 1e-6 * a.abs().max(1.0));
+            let same = trajectories_identical(v, t);
             println!(
                 "loss trajectory vanilla vs tc: {} (recomputation must not alter outputs)",
                 if same { "IDENTICAL ✓" } else { "DIVERGED ✗" }
@@ -160,10 +152,56 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
         }
     }
 
+    if a.stats {
+        for (mode, report) in &results {
+            println!("-- kernel stats ({mode}, {} backend) --", report.backend);
+            for s in &report.kernel_stats {
+                println!(
+                    "  {:<14} calls={:<6} total={:>10.2?} mean={:>9.2?} in={:<10} out={}",
+                    s.kernel,
+                    s.calls,
+                    s.total,
+                    s.mean(),
+                    fmt_bytes(s.bytes_in),
+                    fmt_bytes(s.bytes_out),
+                );
+            }
+        }
+    }
+
     if let Some(path) = a.report {
         let arr: Vec<Json> = results.iter().map(|(m, r)| report_json(m, r)).collect();
         std::fs::write(&path, Json::Arr(arr).to_string_pretty())?;
         println!("report written to {}", path.display());
     }
     Ok(())
+}
+
+#[cfg(feature = "xla")]
+fn run_pjrt(
+    a: &TrainArgs,
+    cfg: &TrainConfig,
+    modes: &[&str],
+) -> Result<Vec<(String, TrainReport)>> {
+    let dir = a.artifacts.clone();
+    compare_schedules(
+        || TowerTrainer::from_artifacts(&dir, cfg),
+        cfg,
+        modes,
+        a.budget_frac,
+        a.quiet,
+    )
+}
+
+#[cfg(not(feature = "xla"))]
+fn run_pjrt(
+    a: &TrainArgs,
+    _cfg: &TrainConfig,
+    _modes: &[&str],
+) -> Result<Vec<(String, TrainReport)>> {
+    bail!(
+        "the pjrt backend (artifacts at {}) requires `cargo build --features xla` \
+         (plus real PJRT libraries and `make artifacts`; see README 'Backend matrix')",
+        a.artifacts.display()
+    )
 }

@@ -17,7 +17,7 @@
 //! ```
 //! Omitted fields default (batch = zoo default, methods = all).
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::anyhow::{anyhow, bail, Context, Result};
 
 use crate::fmt_bytes;
 use crate::graph::Graph;

@@ -1,11 +1,13 @@
 //! Training coordinator: configuration, launcher CLI, and run reports for
-//! the real PJRT training executor.
+//! the backend-generic training executor.
 //!
 //! The coordinator is deliberately thin — the paper's contribution is the
 //! planner (L3 `planner`) and the plan-following executor (`exec`); this
-//! module wires them to a command line, compares schedules side by side,
-//! and emits machine-readable reports for EXPERIMENTS.md.
+//! module wires them to a command line, compares schedules side by side
+//! on whatever [`crate::runtime::Backend`] is selected, and emits
+//! machine-readable reports for EXPERIMENTS.md.
 
 pub mod cli;
 pub mod experiment;
 pub mod report;
+pub mod train;

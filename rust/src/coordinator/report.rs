@@ -5,8 +5,21 @@ use crate::util::json::Json;
 
 /// Serialize a training report for EXPERIMENTS.md / plotting.
 pub fn report_json(label: &str, r: &TrainReport) -> Json {
+    let kernels: Vec<Json> = r
+        .kernel_stats
+        .iter()
+        .map(|s| {
+            Json::obj()
+                .set("kernel", s.kernel.as_str().into())
+                .set("calls", s.calls.into())
+                .set("total_ms", (s.total.as_secs_f64() * 1000.0).into())
+                .set("bytes_in", s.bytes_in.into())
+                .set("bytes_out", s.bytes_out.into())
+        })
+        .collect();
     Json::obj()
         .set("label", label.into())
+        .set("backend", r.backend.into())
         .set("k_segments", (r.k as u64).into())
         .set("peak_bytes", r.peak_bytes.into())
         .set("param_bytes", r.param_bytes.into())
@@ -16,6 +29,7 @@ pub fn report_json(label: &str, r: &TrainReport) -> Json {
             "losses",
             Json::Arr(r.losses.iter().map(|&l| Json::Num(l as f64)).collect()),
         )
+        .set("kernel_stats", Json::Arr(kernels))
 }
 
 /// First/last loss summary line.
@@ -28,20 +42,34 @@ pub fn loss_summary(r: &TrainReport) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::KernelStat;
 
     #[test]
     fn report_roundtrips() {
         let r = TrainReport {
+            backend: "native",
             losses: vec![1.0, 0.5],
             peak_bytes: 1234,
             param_bytes: 99,
             mean_step_ms: 1.5,
             recomputes_per_step: 7,
             k: 3,
+            kernel_stats: vec![KernelStat {
+                kernel: "layer_fwd".into(),
+                calls: 12,
+                ..KernelStat::default()
+            }],
         };
         let j = report_json("tc", &r);
         assert_eq!(j.get("peak_bytes").as_u64(), Some(1234));
+        assert_eq!(j.get("backend").as_str(), Some("native"));
         assert_eq!(j.get("losses").as_arr().unwrap().len(), 2);
+        let ks = j.get("kernel_stats").as_arr().unwrap();
+        assert_eq!(ks[0].get("kernel").as_str(), Some("layer_fwd"));
+        assert_eq!(ks[0].get("calls").as_u64(), Some(12));
         assert!(loss_summary(&r).contains("1.0000 → 0.5000"));
+        // serialize → parse round-trip through the util::json module.
+        let parsed = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(parsed.get("mean_step_ms").as_f64(), Some(1.5));
     }
 }

@@ -1,0 +1,152 @@
+//! Backend-generic schedule comparison — the shared engine behind
+//! `repro train` and `examples/train_mlp`.
+//!
+//! Given a way to construct a fresh [`TowerTrainer`] (fresh = identical
+//! initial parameters, so loss trajectories are comparable bitwise), runs
+//! the same training configuration under a set of schedules (vanilla /
+//! time-centric / memory-centric) and returns the measured reports.
+
+use crate::anyhow::{anyhow, bail, Result};
+use crate::exec::{ChainSchedule, TowerTrainer, TrainConfig, TrainReport};
+use crate::fmt_bytes;
+use crate::models::mlp_tower;
+use crate::planner::{build_context, Family, Objective};
+use crate::runtime::Backend;
+
+/// Parse a `--mode` value into the schedule list to run.
+pub fn parse_modes(mode: &str) -> Result<Vec<&'static str>> {
+    Ok(match mode {
+        "all" => vec!["vanilla", "tc", "mc"],
+        "vanilla" => vec!["vanilla"],
+        "tc" => vec!["tc"],
+        "mc" => vec!["mc"],
+        m => bail!("bad mode {m} (vanilla|tc|mc|all)"),
+    })
+}
+
+/// Build the executable schedule for one mode over a `layers`-deep MLP
+/// tower at `(batch, width)`.
+///
+/// `budget_frac` scales the activation budget as a fraction of the
+/// tower's total activation memory (clamped to the minimal feasible
+/// budget); `None` plans at the minimal feasible budget B*.
+pub fn schedule_for_mode(
+    mode: &str,
+    layers: usize,
+    width: usize,
+    batch: usize,
+    budget_frac: Option<f64>,
+) -> Result<ChainSchedule> {
+    if mode == "vanilla" {
+        return Ok(ChainSchedule::vanilla(layers + 1));
+    }
+    let obj = match mode {
+        "tc" => Objective::MinOverhead,
+        "mc" => Objective::MaxOverhead,
+        m => bail!("bad mode {m} (vanilla|tc|mc)"),
+    };
+    let g = mlp_tower(layers as u32, width as u32, batch as u64);
+    let ctx = build_context(&g, Family::Exact);
+    let min_b = ctx.min_feasible_budget();
+    let budget = match budget_frac {
+        Some(f) => ((g.total_mem() as f64 * f) as u64).max(min_b),
+        None => min_b,
+    };
+    let sol = ctx
+        .solve(budget, obj)
+        .ok_or_else(|| anyhow!("budget {} infeasible", fmt_bytes(budget)))?;
+    ChainSchedule::from_chain(&g, &sol.chain)
+}
+
+/// Train `cfg` under each schedule in `modes`, each on a **fresh** trainer
+/// from `make_trainer` so all runs share identical initial conditions.
+/// Returns `(mode, report)` pairs in the order requested.
+pub fn compare_schedules<B, F>(
+    make_trainer: F,
+    cfg: &TrainConfig,
+    modes: &[&str],
+    budget_frac: Option<f64>,
+    quiet: bool,
+) -> Result<Vec<(String, TrainReport)>>
+where
+    B: Backend,
+    F: Fn() -> Result<TowerTrainer<B>>,
+{
+    let mut results = Vec::new();
+    for &mode in modes {
+        let mut trainer = make_trainer()?;
+        let sched = schedule_for_mode(
+            mode,
+            cfg.layers,
+            trainer.width(),
+            trainer.batch(),
+            budget_frac,
+        )?;
+        if !quiet {
+            eprintln!(
+                "== mode {mode} on {} backend: k={} segments ==",
+                trainer.backend().name(),
+                sched.segments.len()
+            );
+        }
+        let report = trainer.train(&sched, cfg)?;
+        results.push((mode.to_string(), report));
+    }
+    Ok(results)
+}
+
+/// Recomputation's defining property: two schedules of the same
+/// computation must produce bitwise-comparable loss trajectories
+/// (tolerance covers only float noise in the loss *reduction*, which is
+/// itself recomputation-free — the default is exact equality in practice).
+pub fn trajectories_identical(a: &TrainReport, b: &TrainReport) -> bool {
+    a.losses.len() == b.losses.len()
+        && a.losses
+            .iter()
+            .zip(&b.losses)
+            .all(|(x, y)| (x - y).abs() <= 1e-6 * x.abs().max(1.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modes_parse() {
+        assert_eq!(parse_modes("all").unwrap(), vec!["vanilla", "tc", "mc"]);
+        assert_eq!(parse_modes("tc").unwrap(), vec!["tc"]);
+        assert!(parse_modes("warp").is_err());
+    }
+
+    #[test]
+    fn schedules_cover_the_tower() {
+        for mode in ["vanilla", "tc", "mc"] {
+            let s = schedule_for_mode(mode, 12, 64, 32, None).unwrap();
+            assert_eq!(s.n_layers, 13);
+            let mut pos = 0;
+            for seg in &s.segments {
+                assert_eq!(seg.start, pos);
+                pos = seg.end;
+            }
+            assert_eq!(pos, 13, "{mode}");
+        }
+        // A planned schedule on a 12-layer tower must actually cut.
+        assert!(schedule_for_mode("tc", 12, 64, 32, None).unwrap().segments.len() > 1);
+    }
+
+    #[test]
+    fn native_compare_runs_all_modes() {
+        let cfg = TrainConfig { layers: 6, steps: 2, lr: 0.05, seed: 9, log_every: 0 };
+        let results = compare_schedules(
+            || TowerTrainer::native(4, 16, &cfg),
+            &cfg,
+            &["vanilla", "tc"],
+            None,
+            true,
+        )
+        .unwrap();
+        assert_eq!(results.len(), 2);
+        assert!(trajectories_identical(&results[0].1, &results[1].1));
+        assert!(results[1].1.peak_bytes < results[0].1.peak_bytes);
+    }
+}

@@ -1,13 +1,15 @@
-//! The training executor: runs real forward/backward steps on the PJRT
-//! runtime, caching / discarding / recomputing activations exactly as a
-//! canonical strategy prescribes.
+//! The training executor: runs real forward/backward steps on any
+//! execution [`Backend`](crate::runtime::Backend), caching / discarding /
+//! recomputing activations exactly as a canonical strategy prescribes.
 //!
-//! This is the end-to-end proof that the three layers compose: the L3
-//! plan (lower-set chain over the tower graph) drives which of the
-//! L2-compiled, L1-Pallas-powered artifacts run when, and the executor's
-//! live-byte accounting shows the *measured* peak dropping exactly as the
-//! simulator predicted — while the loss trajectory stays bitwise identical
-//! to vanilla execution, recomputation's defining property.
+//! This is the end-to-end proof that the layers compose: the L3 plan
+//! (lower-set chain over the tower graph) drives which backend kernels
+//! run when, and the executor's live-byte accounting shows the *measured*
+//! peak dropping exactly as the simulator predicted — while the loss
+//! trajectory stays bitwise identical to vanilla execution,
+//! recomputation's defining property. By default the kernels are the
+//! pure-Rust `NativeBackend`; with the `xla` feature the same trainer
+//! drives PJRT-compiled artifacts instead.
 
 mod schedule;
 mod trainer;

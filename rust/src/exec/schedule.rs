@@ -7,7 +7,7 @@
 //! segment, which layer range it covers and which activation the strategy
 //! caches at its end (the segment's boundary node).
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 use crate::graph::Graph;
 use crate::planner::LowerSetChain;

@@ -1,4 +1,4 @@
-//! The tower trainer: real training steps through the PJRT artifacts,
+//! The tower trainer: real training steps through any [`Backend`],
 //! following a [`ChainSchedule`].
 //!
 //! Memory protocol per step (the canonical strategy of §3, specialized to
@@ -9,19 +9,20 @@
 //!   of each segment its boundary activation is cached;
 //! - **backward**: walk segments in reverse; recompute the segment's
 //!   interior activations from the checkpoint below it, backprop each
-//!   layer (Pallas backward kernel), apply SGD immediately (gradients die
-//!   young), and drop the segment's activations before moving down.
+//!   layer, apply SGD immediately (gradients die young), and drop the
+//!   segment's activations before moving down.
 //!
 //! Every allocate/drop updates the live-byte counter; `peak_bytes` is the
 //! measured maximum — the executor-side analogue of the simulator's
-//! number, and the end-to-end evidence for the paper's claim.
+//! number, and the end-to-end evidence for the paper's claim. The trainer
+//! is generic over [`Backend`], so the same schedule-following logic runs
+//! on the pure-Rust [`NativeBackend`] and on PJRT artifacts alike.
 
-use std::path::Path;
 use std::time::Instant;
 
-use anyhow::{Context, Result};
+use crate::anyhow::{Context, Result};
 
-use crate::runtime::{literal_bytes, literal_f32, to_vec_f32, ArtifactSet};
+use crate::runtime::{Backend, KernelStat, NativeBackend};
 use crate::util::rng::Pcg32;
 
 use super::schedule::ChainSchedule;
@@ -40,13 +41,13 @@ pub struct TrainConfig {
 
 impl Default for TrainConfig {
     fn default() -> Self {
-        TrainConfig { layers: 16, steps: 50, lr: 0.05, seed: 17, log_every: 10 }
+        TrainConfig { layers: 12, steps: 50, lr: 0.1, seed: 7, log_every: 10 }
     }
 }
 
-/// Synthetic regression task: y = sin of a fixed random projection of x,
-/// mapped through the width — learnable by the tower, loss visibly
-/// decreasing within tens of steps.
+/// Synthetic regression task: y = sin of a scaled copy of x — smooth,
+/// deterministic, learnable by the tower with loss visibly decreasing
+/// within tens of steps.
 pub struct SyntheticTask {
     batch: usize,
     width: usize,
@@ -71,6 +72,8 @@ impl SyntheticTask {
 /// Measured results of a training run.
 #[derive(Clone, Debug)]
 pub struct TrainReport {
+    /// Which backend executed the run (`"native"`, `"pjrt"`).
+    pub backend: &'static str,
     pub losses: Vec<f32>,
     /// Peak live activation bytes over all steps (params excluded).
     pub peak_bytes: u64,
@@ -82,23 +85,40 @@ pub struct TrainReport {
     pub recomputes_per_step: usize,
     /// Number of segments in the schedule.
     pub k: usize,
+    /// Per-kernel timing/byte statistics from the backend.
+    pub kernel_stats: Vec<KernelStat>,
 }
 
-/// The trainer: parameters + compiled artifacts + live-byte accounting.
-pub struct TowerTrainer {
-    arts: ArtifactSet,
+/// The trainer: parameters + an execution backend + live-byte accounting.
+pub struct TowerTrainer<B: Backend> {
+    backend: B,
     /// (w, b) per layer; `layers + 1` entries (last = loss head).
-    params: Vec<(xla::Literal, xla::Literal)>,
+    params: Vec<(B::Tensor, B::Tensor)>,
     live_bytes: u64,
     peak_bytes: u64,
 }
 
-impl TowerTrainer {
-    /// Load artifacts from `dir` and He-initialize a tower with
-    /// `cfg.layers` hidden layers (+1 head) at the artifact width.
-    pub fn new(dir: &Path, cfg: &TrainConfig) -> Result<TowerTrainer> {
-        let arts = ArtifactSet::load(dir)?;
-        let width = arts.width;
+impl TowerTrainer<NativeBackend> {
+    /// Pure-Rust trainer: He-initialized tower on [`NativeBackend`] at the
+    /// given `(batch, width)`. No artifacts, no Python, no native libs.
+    pub fn native(batch: usize, width: usize, cfg: &TrainConfig) -> Result<Self> {
+        TowerTrainer::new(NativeBackend::new(batch, width), cfg)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl TowerTrainer<crate::runtime::PjrtBackend> {
+    /// PJRT trainer over the AOT artifact set in `dir`.
+    pub fn from_artifacts(dir: &std::path::Path, cfg: &TrainConfig) -> Result<Self> {
+        TowerTrainer::new(crate::runtime::PjrtBackend::load(dir)?, cfg)
+    }
+}
+
+impl<B: Backend> TowerTrainer<B> {
+    /// He-initialize a tower with `cfg.layers` hidden layers (+1 head) at
+    /// the backend's width, with parameters living on the backend.
+    pub fn new(backend: B, cfg: &TrainConfig) -> Result<TowerTrainer<B>> {
+        let width = backend.width();
         let mut rng = Pcg32::seeded(cfg.seed);
         let scale = (2.0 / width as f64).sqrt();
         let mut params = Vec::with_capacity(cfg.layers + 1);
@@ -107,23 +127,31 @@ impl TowerTrainer {
                 (0..width * width).map(|_| (rng.normal() * scale) as f32).collect();
             let b = vec![0f32; width];
             params.push((
-                literal_f32(&w, &[width, width])?,
-                literal_f32(&b, &[width])?,
+                backend.upload(&w, &[width, width])?,
+                backend.upload(&b, &[width])?,
             ));
         }
-        Ok(TowerTrainer { arts, params, live_bytes: 0, peak_bytes: 0 })
+        Ok(TowerTrainer { backend, params, live_bytes: 0, peak_bytes: 0 })
+    }
+
+    /// The execution backend (for kernel stats, name, shape queries).
+    pub fn backend(&self) -> &B {
+        &self.backend
     }
 
     pub fn batch(&self) -> usize {
-        self.arts.batch
+        self.backend.batch()
     }
 
     pub fn width(&self) -> usize {
-        self.arts.width
+        self.backend.width()
     }
 
     pub fn param_bytes(&self) -> u64 {
-        self.params.iter().map(|(w, b)| literal_bytes(w) + literal_bytes(b)).sum()
+        self.params
+            .iter()
+            .map(|(w, b)| self.backend.tensor_bytes(w) + self.backend.tensor_bytes(b))
+            .sum()
     }
 
     fn alloc(&mut self, bytes: u64) {
@@ -138,36 +166,39 @@ impl TowerTrainer {
 
     /// One training step under `sched`. Returns (loss, recompute_count).
     ///
-    /// `x`/`y` are the batch input/target literals (always live; their
+    /// `x`/`y` are the batch input/target tensors (always live; their
     /// bytes are excluded like the paper excludes input nodes).
+    // Index loops are load-bearing here: iterating `&self.params[..]`
+    // would hold the borrow across the `&mut self` accounting calls.
+    #[allow(clippy::needless_range_loop)]
     pub fn step(
         &mut self,
         sched: &ChainSchedule,
-        x: &xla::Literal,
-        y: &xla::Literal,
+        x: &B::Tensor,
+        y: &B::Tensor,
         lr: f32,
     ) -> Result<(f32, usize)> {
         let n = sched.n_layers; // includes loss head at index n-1
-        let lr_lit = literal_f32(&[lr], &[])?;
-        let act_bytes = (self.arts.batch * self.arts.width * 4) as u64;
+        let lr_t = self.backend.upload(&[lr], &[])?;
+        let act_bytes = (self.backend.batch() * self.backend.width() * 4) as u64;
         let mut recomputes = 0usize;
 
         // --- forward: keep only checkpoint activations -------------------
         // checkpoints[s] = activation index cached at end of segment s
         // (activation i = input of layer i; activation 0 = x).
-        let mut ckpt: Vec<Option<xla::Literal>> = vec![None; n + 1];
-        let mut h: Option<xla::Literal> = None; // current activation (None = x)
+        let mut ckpt: Vec<Option<B::Tensor>> = vec![None; n + 1];
+        let mut h: Option<B::Tensor> = None; // current activation (None = x)
         for seg in &sched.segments {
             for li in seg.start..seg.end.min(n - 1) {
                 let (w, b) = &self.params[li];
                 let inp = h.as_ref().unwrap_or(x);
                 let out = self
-                    .arts
+                    .backend
                     .run("layer_fwd", &[inp.clone(), w.clone(), b.clone()])?
                     .pop()
                     .context("layer_fwd output")?;
                 self.alloc(act_bytes);
-                if let Some(_old) = h.take() {
+                if h.take().is_some() {
                     self.free(act_bytes); // intermediate dropped
                 }
                 h = Some(out);
@@ -188,13 +219,13 @@ impl TowerTrainer {
         // live only if the last segment ends at the head; the canonical
         // strategy discards non-boundary values, so we drop it and let the
         // backward pass recompute from the last checkpoint.
-        if let Some(_last) = h.take() {
+        if h.take().is_some() {
             self.free(act_bytes);
         }
 
         // --- backward: segments in reverse -------------------------------
         let mut loss_val = f32::NAN;
-        let mut gh: Option<xla::Literal> = None; // gradient flowing down
+        let mut gh: Option<B::Tensor> = None; // gradient flowing down
         for seg in sched.segments.iter().rev() {
             // 1. Recompute the segment's interior input activations from
             //    the checkpoint below it (or x for the first segment).
@@ -202,11 +233,11 @@ impl TowerTrainer {
             //    segment's boundary *output* act[seg.end] belongs to the
             //    segment above, whose backward already ran — so only
             //    layers seg.start .. seg.end-1 (exclusive) re-execute.
-            let base: Option<&xla::Literal> =
+            let base: Option<&B::Tensor> =
                 if seg.start == 0 { None } else { ckpt[seg.start].as_ref() };
-            let mut acts: Vec<xla::Literal> = Vec::with_capacity(seg.end - seg.start);
+            let mut acts: Vec<B::Tensor> = Vec::with_capacity(seg.end - seg.start);
             {
-                let mut cur: Option<xla::Literal> = base.cloned();
+                let mut cur: Option<B::Tensor> = base.cloned();
                 for li in seg.start..seg.end - 1 {
                     let inp_owned;
                     let inp = match &cur {
@@ -219,7 +250,7 @@ impl TowerTrainer {
                     acts.push(inp.clone()); // input activation of layer li
                     let (w, b) = &self.params[li];
                     let out = self
-                        .arts
+                        .backend
                         .run("layer_fwd", &[inp.clone(), w.clone(), b.clone()])?
                         .pop()
                         .context("recompute layer_fwd")?;
@@ -240,31 +271,31 @@ impl TowerTrainer {
             // 2. Backprop layers of the segment in reverse.
             for li in (seg.start..seg.end).rev() {
                 let a_in = &acts[li - seg.start];
-                let (w, b) = self.params[li].clone_pair();
+                let (w, b) = self.params[li].clone();
                 if li == n - 1 {
-                    // Loss head: loss + gradients in one artifact.
-                    let outs = self.arts.run(
+                    // Loss head: loss + gradients in one kernel call.
+                    let outs = self.backend.run(
                         "loss_head_bwd",
                         &[a_in.clone(), w.clone(), b.clone(), y.clone()],
                     )?;
-                    let [loss, ghead, gw, gb]: [xla::Literal; 4] =
+                    let [loss, ghead, gw, gb]: [B::Tensor; 4] =
                         outs.try_into().ok().context("loss_head_bwd arity")?;
-                    loss_val = loss.to_vec::<f32>()?[0];
+                    loss_val = self.backend.download(&loss)?[0];
                     self.alloc(act_bytes); // ghead
                     gh = Some(ghead);
-                    self.apply_sgd(li, &gw, &gb, &lr_lit)?;
+                    self.apply_sgd(li, &gw, &gb, &lr_t)?;
                 } else {
                     let g_out = gh.take().context("missing upstream gradient")?;
-                    let outs = self.arts.run(
+                    let outs = self.backend.run(
                         "layer_bwd",
                         &[a_in.clone(), w.clone(), b.clone(), g_out.clone()],
                     )?;
-                    let [gx, gw, gb]: [xla::Literal; 3] =
+                    let [gx, gw, gb]: [B::Tensor; 3] =
                         outs.try_into().ok().context("layer_bwd arity")?;
                     drop(g_out);
                     // gx replaces g_out: net zero on the counter.
                     gh = Some(gx);
-                    self.apply_sgd(li, &gw, &gb, &lr_lit)?;
+                    self.apply_sgd(li, &gw, &gb, &lr_t)?;
                 }
             }
             // 3. Drop this segment's recomputed activations and its
@@ -272,10 +303,8 @@ impl TowerTrainer {
             let n_interior = acts.len().saturating_sub(1); // first aliases ckpt/x
             drop(acts);
             self.free(n_interior as u64 * act_bytes);
-            if seg.start > 0 {
-                if ckpt[seg.start].take().is_some() {
-                    self.free(act_bytes);
-                }
+            if seg.start > 0 && ckpt[seg.start].take().is_some() {
+                self.free(act_bytes);
             }
         }
         // The gradient flowing below layer 0 is w.r.t. the input — dropped.
@@ -289,18 +318,18 @@ impl TowerTrainer {
     fn apply_sgd(
         &mut self,
         li: usize,
-        gw: &xla::Literal,
-        gb: &xla::Literal,
-        lr: &xla::Literal,
+        gw: &B::Tensor,
+        gb: &B::Tensor,
+        lr: &B::Tensor,
     ) -> Result<()> {
-        let (w, b) = self.params[li].clone_pair();
+        let (w, b) = self.params[li].clone();
         let new_w = self
-            .arts
+            .backend
             .run("sgd_mat", &[w, gw.clone(), lr.clone()])?
             .pop()
             .context("sgd_mat output")?;
         let new_b = self
-            .arts
+            .backend
             .run("sgd_vec", &[b, gb.clone(), lr.clone()])?
             .pop()
             .context("sgd_vec output")?;
@@ -310,14 +339,15 @@ impl TowerTrainer {
 
     /// Train for `cfg.steps` steps on the synthetic task.
     pub fn train(&mut self, sched: &ChainSchedule, cfg: &TrainConfig) -> Result<TrainReport> {
-        let mut task = SyntheticTask::new(self.arts.batch, self.arts.width, cfg.seed ^ 0xabcd);
+        let (batch, width) = (self.backend.batch(), self.backend.width());
+        let mut task = SyntheticTask::new(batch, width, cfg.seed ^ 0xabcd);
         let mut losses = Vec::with_capacity(cfg.steps);
         let mut recomputes = 0usize;
         let t0 = Instant::now();
         for step in 0..cfg.steps {
             let (xv, yv) = task.next_batch();
-            let x = literal_f32(&xv, &[self.arts.batch, self.arts.width])?;
-            let y = literal_f32(&yv, &[self.arts.batch, self.arts.width])?;
+            let x = self.backend.upload(&xv, &[batch, width])?;
+            let y = self.backend.upload(&yv, &[batch, width])?;
             let (loss, rec) = self.step(sched, &x, &y, cfg.lr)?;
             recomputes = rec;
             losses.push(loss);
@@ -327,12 +357,14 @@ impl TowerTrainer {
         }
         let elapsed = t0.elapsed();
         Ok(TrainReport {
+            backend: self.backend.name(),
             losses,
             peak_bytes: self.peak_bytes,
             param_bytes: self.param_bytes(),
             mean_step_ms: elapsed.as_secs_f64() * 1000.0 / cfg.steps as f64,
             recomputes_per_step: recomputes,
             k: sched.segments.len(),
+            kernel_stats: self.backend.stats(),
         })
     }
 
@@ -345,16 +377,7 @@ impl TowerTrainer {
     /// Fetch the current loss-head weight row 0 (diagnostics).
     pub fn probe_weights(&self) -> Result<Vec<f32>> {
         let (w, _) = &self.params[self.params.len() - 1];
-        Ok(to_vec_f32(w)?[..8.min(self.arts.width)].to_vec())
-    }
-}
-
-trait ClonePair {
-    fn clone_pair(&self) -> (xla::Literal, xla::Literal);
-}
-
-impl ClonePair for (xla::Literal, xla::Literal) {
-    fn clone_pair(&self) -> (xla::Literal, xla::Literal) {
-        (self.0.clone(), self.1.clone())
+        let v = self.backend.download(w)?;
+        Ok(v[..8.min(self.backend.width())].to_vec())
     }
 }

@@ -14,7 +14,7 @@
 //! }
 //! ```
 
-use anyhow::{bail, Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 use crate::util::json::Json;
 

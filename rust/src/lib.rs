@@ -19,20 +19,30 @@
 //!   baseline.
 //! - [`sim`] — an event-accurate execution simulator with liveness
 //!   analysis, measuring true peak memory of any strategy (Tables 1 & 2).
-//! - [`runtime`] — PJRT wrapper: loads AOT-compiled HLO-text artifacts
-//!   produced by the JAX/Pallas build path and executes them from Rust.
-//! - [`exec`] — the training executor: runs real forward/backward steps
-//!   following a recomputation plan, caching/discarding/recomputing
-//!   activations exactly as the canonical strategy prescribes.
-//! - [`coordinator`] — the training loop driver: config, metrics, logging.
+//! - [`runtime`] — the pluggable execution-backend layer: a
+//!   [`runtime::Backend`] trait (upload / run-kernel / download /
+//!   per-kernel stats) with two implementations. The default
+//!   [`runtime::NativeBackend`] is pure-Rust f32 CPU kernels — the whole
+//!   stack builds and trains with `cargo` alone, no Python, no artifacts,
+//!   no native libraries. The `xla` cargo feature adds the PJRT backend,
+//!   which loads AOT-compiled HLO-text artifacts produced by
+//!   `python/compile/aot.py`.
+//! - [`exec`] — the training executor, generic over `Backend`: runs real
+//!   forward/backward steps following a recomputation plan,
+//!   caching/discarding/recomputing activations exactly as the canonical
+//!   strategy prescribes, with measured live-byte accounting.
+//! - [`coordinator`] — the training-loop driver: backend selection,
+//!   schedule comparison, metrics, JSON reports.
 //! - [`bench`] — shared harness code regenerating every table/figure of
-//!   the paper's evaluation section.
+//!   the paper's evaluation section, with machine-readable `BENCH_*.json`
+//!   output.
+//! - [`anyhow`] — in-tree stand-in for the `anyhow` crate ([`util`] holds
+//!   the other offline substrates: JSON, RNG, tables).
 //!
-//! Quickstart (compile-checked here; executed as the `quickstart`
-//! example and the `plan_named_network` CLI test — rustdoc test binaries
-//! don't inherit the cargo rpath for `libxla_extension`):
+//! Planning quickstart (also the `quickstart` example, which additionally
+//! trains a tower end-to-end on the native backend):
 //!
-//! ```no_run
+//! ```
 //! use recompute::models::zoo;
 //! use recompute::planner::{self, Objective};
 //! use recompute::sim::{simulate, SimOptions};
@@ -43,7 +53,21 @@
 //! let report = simulate(&g, &plan.chain, SimOptions::default());
 //! assert!(report.peak_bytes <= g.total_mem() * 3);
 //! ```
+//!
+//! Training quickstart — pure Rust, no setup:
+//!
+//! ```
+//! use recompute::coordinator::train::schedule_for_mode;
+//! use recompute::exec::{TowerTrainer, TrainConfig};
+//!
+//! let cfg = TrainConfig { layers: 4, steps: 2, ..TrainConfig::default() };
+//! let sched = schedule_for_mode("tc", cfg.layers, 16, 4, None).unwrap();
+//! let mut trainer = TowerTrainer::native(4, 16, &cfg).unwrap();
+//! let report = trainer.train(&sched, &cfg).unwrap();
+//! assert!(report.losses.iter().all(|l| l.is_finite()));
+//! ```
 
+pub mod anyhow;
 pub mod bench;
 pub mod coordinator;
 pub mod exec;

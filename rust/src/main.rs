@@ -10,13 +10,14 @@
 //! - `plan --network NAME [--batch N] [--budget GB] [--objective tc|mc]
 //!    [--family exact|approx]` — plan one network and print the schedule.
 //! - `plan --graph FILE.json …` — plan a user-supplied graph.
-//! - `train …` — run the real PJRT training executor (see `exec`);
+//! - `train …` — run the real training executor (see `exec`) on the
+//!   pure-Rust native backend by default, or PJRT with `--features xla`;
 //!   `repro train --help` for its flags.
 //! - `export --network NAME --out FILE.json` — dump a zoo graph as JSON.
 
 use std::process::ExitCode;
 
-use anyhow::{anyhow, bail, Context, Result};
+use recompute::anyhow::{anyhow, bail, Context, Result};
 
 use recompute::bench::tables;
 use recompute::coordinator;
@@ -112,8 +113,9 @@ fn print_usage() {
            plan --graph FILE.json [...]  plan a user-supplied graph JSON\n\
            experiment --config F.json [--csv out.csv]  declarative sweep runner\n\
            export --network N --out F    dump a zoo graph as JSON\n\
-           train [flags]                 real PJRT training with a recompute plan\n\
-                                         (see 'repro train --help')"
+           train [flags]                 real training with a recompute plan\n\
+                                         (native backend by default; --backend pjrt\n\
+                                         needs --features xla; 'repro train --help')"
     );
 }
 

@@ -19,7 +19,7 @@
 //! each Chen plan is a [`LowerSetChain`] and is evaluated by the very same
 //! simulator as ours — exactly how the paper compares against it.
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 
 use crate::graph::{articulation_points, Graph, NodeSet};
 

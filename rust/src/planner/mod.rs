@@ -27,7 +27,7 @@ pub use dfs::exhaustive_search;
 pub use dp::{DpContext, DpSolution};
 pub use strategy::{singleton_chain, whole_graph_chain, LowerSetChain, SegmentCost};
 
-use anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, Result};
 
 use crate::graph::{enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, Graph};
 

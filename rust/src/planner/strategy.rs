@@ -7,7 +7,7 @@
 //! The event-accurate measurement (with liveness analysis) lives in
 //! [`crate::sim`]; Eq. 2 is the *analytic* model the DP optimizes.
 
-use anyhow::{bail, Result};
+use crate::anyhow::{bail, Result};
 
 use crate::graph::{Graph, NodeSet};
 

@@ -1,0 +1,122 @@
+//! The pluggable execution-backend layer.
+//!
+//! Everything above this module — the trainer ([`crate::exec`]), the
+//! coordinator, the benches — talks to hardware exclusively through the
+//! [`Backend`] trait: upload host buffers, run a named kernel, download
+//! results, and read per-kernel timing/byte statistics. Two
+//! implementations exist:
+//!
+//! - [`native::NativeBackend`] (always available, the default): a pure-Rust
+//!   f32 CPU implementation of the dense tower kernels, mathematically
+//!   mirroring `python/compile/kernels/ref.py`. Zero Python, zero
+//!   artifacts, zero native libraries — the whole repo trains end-to-end
+//!   with `cargo run` alone.
+//! - [`pjrt::PjrtBackend`] (behind the `xla` cargo feature): loads the
+//!   AOT-compiled HLO-text artifacts produced by `python/compile/aot.py`
+//!   and executes them through PJRT.
+//!
+//! The kernel *names* are the interchange contract shared by all
+//! backends (and by the artifact manifest): `layer_fwd`, `layer_bwd`,
+//! `loss_head_fwd`, `loss_head_bwd`, `sgd_mat`, `sgd_vec`.
+
+use std::time::Duration;
+
+use crate::anyhow::Result;
+
+pub mod native;
+#[cfg(feature = "xla")]
+pub mod pjrt;
+#[cfg(feature = "xla")]
+pub mod xla_stub;
+
+pub use native::{HostTensor, NativeBackend};
+#[cfg(feature = "xla")]
+pub use pjrt::PjrtBackend;
+
+/// Aggregate execution statistics for one kernel on one backend.
+#[derive(Clone, Debug, Default)]
+pub struct KernelStat {
+    pub kernel: String,
+    /// Number of `run` calls.
+    pub calls: u64,
+    /// Total wall-clock across those calls.
+    pub total: Duration,
+    /// Bytes of tensor arguments consumed across all calls.
+    pub bytes_in: u64,
+    /// Bytes of tensor outputs produced across all calls.
+    pub bytes_out: u64,
+}
+
+impl KernelStat {
+    /// Mean wall-clock per call (zero if never called).
+    pub fn mean(&self) -> Duration {
+        if self.calls == 0 {
+            Duration::ZERO
+        } else {
+            self.total / self.calls as u32
+        }
+    }
+}
+
+/// Accumulate one kernel call into a per-kernel stats map — the shared
+/// recorder behind every backend's `stats()` view.
+pub(crate) fn record_call(
+    stats: &mut std::collections::BTreeMap<String, KernelStat>,
+    kernel: &str,
+    elapsed: Duration,
+    bytes_in: u64,
+    bytes_out: u64,
+) {
+    let entry = stats
+        .entry(kernel.to_string())
+        .or_insert_with(|| KernelStat { kernel: kernel.to_string(), ..KernelStat::default() });
+    entry.calls += 1;
+    entry.total += elapsed;
+    entry.bytes_in += bytes_in;
+    entry.bytes_out += bytes_out;
+}
+
+/// An execution backend: owns device buffers, runs named kernels, and
+/// accounts for what it did.
+///
+/// `run` takes `&self` — backends use interior mutability for their stats
+/// so the trainer can hold tensor borrows across calls.
+pub trait Backend {
+    /// The backend's buffer handle. Cloning must be cheap *or* correct —
+    /// the trainer clones tensors to model caching, and the live-bytes
+    /// accounting is done host-side, so either a refcount (native) or a
+    /// deep copy (PJRT literal) is acceptable.
+    type Tensor: Clone;
+
+    /// Human-readable backend name (`"native"`, `"pjrt"`).
+    fn name(&self) -> &'static str;
+
+    /// Batch size this backend instance is specialized for.
+    fn batch(&self) -> usize;
+
+    /// Tower width this backend instance is specialized for.
+    fn width(&self) -> usize;
+
+    /// Upload a row-major f32 host buffer (`dims = []` is a scalar).
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Self::Tensor>;
+
+    /// Download a tensor to a flat host vec.
+    fn download(&self, t: &Self::Tensor) -> Result<Vec<f32>>;
+
+    /// Logical size of a tensor in bytes (for live-memory accounting).
+    fn tensor_bytes(&self, t: &Self::Tensor) -> u64;
+
+    /// Execute kernel `name` on `args`, returning its outputs.
+    fn run(&self, name: &str, args: &[Self::Tensor]) -> Result<Vec<Self::Tensor>>;
+
+    /// Names of the kernels this backend has loaded, sorted.
+    fn kernels(&self) -> Vec<String>;
+
+    /// Per-kernel timing/byte statistics accumulated so far, sorted by
+    /// kernel name.
+    fn stats(&self) -> Vec<KernelStat>;
+}
+
+/// Names of the kernels every tower backend must provide.
+pub const TOWER_KERNELS: [&str; 6] =
+    ["layer_bwd", "layer_fwd", "loss_head_bwd", "loss_head_fwd", "sgd_mat", "sgd_vec"];

@@ -1,0 +1,291 @@
+//! PJRT backend: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! The interchange contract with `python/compile/aot.py`:
+//!
+//! - each artifact is XLA HLO **text** (`HloModuleProto::from_text_file`
+//!   re-assigns instruction ids, sidestepping the 64-bit-id protos jax ≥
+//!   0.5 emits that xla_extension 0.5.1 rejects);
+//! - every artifact's root is a tuple (lowered with `return_tuple=True`),
+//!   so execution returns one buffer that we decompose host-side;
+//! - `manifest.json` describes the artifact set: input shapes, output
+//!   arity, and the `(batch, width)` the artifacts were specialized for.
+//!
+//! Compilation happens once per artifact at startup (`ArtifactSet::load`);
+//! the training hot path only calls `execute`, which is pure Rust + XLA —
+//! Python never runs after `make artifacts`.
+//!
+//! This module compiles against [`super::xla_stub`] in the offline build;
+//! see that module's docs for how to link the real `xla` crate.
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use crate::anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+use super::xla_stub as xla;
+use super::{Backend, KernelStat};
+
+/// Metadata of one artifact, parsed from the manifest.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// Input shapes (row-major dims; `[]` = scalar).
+    pub inputs: Vec<Vec<usize>>,
+    /// Number of tuple outputs.
+    pub outputs: usize,
+}
+
+/// A compiled artifact: executable + metadata.
+pub struct Artifact {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Artifact {
+    /// Execute with host literals; returns the decomposed tuple outputs.
+    ///
+    /// Inputs are uploaded through `buffer_from_host_literal` and executed
+    /// with `execute_b` — NOT the crate's `execute`, whose C shim
+    /// `BufferFromHostLiteral(..).release()`s every input buffer and never
+    /// frees it (≈4.5 MB leaked per training step at width 768; see
+    /// EXPERIMENTS.md §Perf-L3-2). With caller-owned buffers every
+    /// allocation is dropped on return.
+    pub fn execute(&self, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if args.len() != self.meta.inputs.len() {
+            bail!(
+                "{}: expected {} args, got {}",
+                self.meta.name,
+                self.meta.inputs.len(),
+                args.len()
+            );
+        }
+        let client = self.exe.client();
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|lit| {
+                client
+                    .buffer_from_host_literal(None, lit)
+                    .map_err(|e| anyhow!("{}: upload failed: {e:?}", self.meta.name))
+            })
+            .collect::<Result<_>>()?;
+        let result = self
+            .exe
+            .execute_b::<xla::PjRtBuffer>(&bufs)
+            .map_err(|e| anyhow!("{}: execute failed: {e:?}", self.meta.name))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("{}: fetch failed: {e:?}", self.meta.name))?;
+        let parts = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow!("{}: decompose failed: {e:?}", self.meta.name))?;
+        if parts.len() != self.meta.outputs {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.meta.name,
+                self.meta.outputs,
+                parts.len()
+            );
+        }
+        Ok(parts)
+    }
+}
+
+/// The artifact runtime: one PJRT CPU client + the compiled artifact set.
+pub struct ArtifactSet {
+    pub batch: usize,
+    pub width: usize,
+    pub dir: PathBuf,
+    artifacts: HashMap<String, Artifact>,
+    /// Wall-clock spent compiling each artifact (startup diagnostics).
+    pub compile_times: Vec<(String, Duration)>,
+    // Kept alive for the executables' lifetime.
+    _client: xla::PjRtClient,
+}
+
+impl ArtifactSet {
+    /// Load `manifest.json` from `dir`, compile every artifact.
+    pub fn load(dir: &Path) -> Result<ArtifactSet> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("reading {} — run `make artifacts` first", manifest_path.display())
+        })?;
+        let manifest = Json::parse(&text).context("parsing manifest.json")?;
+        let batch =
+            manifest.get("batch").as_u64().context("manifest: missing batch")? as usize;
+        let width =
+            manifest.get("width").as_u64().context("manifest: missing width")? as usize;
+
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT CPU client: {e:?}"))?;
+        let mut artifacts = HashMap::new();
+        let mut compile_times = Vec::new();
+        let arts = manifest
+            .get("artifacts")
+            .as_obj()
+            .context("manifest: missing artifacts object")?;
+        for (name, meta_json) in arts {
+            let file = meta_json
+                .get("file")
+                .as_str()
+                .with_context(|| format!("artifact {name}: missing file"))?
+                .to_string();
+            let inputs: Vec<Vec<usize>> = meta_json
+                .get("inputs")
+                .as_arr()
+                .with_context(|| format!("artifact {name}: missing inputs"))?
+                .iter()
+                .map(|shape| {
+                    shape
+                        .as_arr()
+                        .map(|dims| {
+                            dims.iter()
+                                .filter_map(|d| d.as_u64())
+                                .map(|d| d as usize)
+                                .collect()
+                        })
+                        .unwrap_or_default()
+                })
+                .collect();
+            let outputs = meta_json
+                .get("outputs")
+                .as_u64()
+                .with_context(|| format!("artifact {name}: missing outputs"))?
+                as usize;
+
+            let path = dir.join(&file);
+            let t0 = Instant::now();
+            let proto =
+                xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+                    .map_err(|e| anyhow!("{name}: parsing HLO {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe =
+                client.compile(&comp).map_err(|e| anyhow!("{name}: XLA compile: {e:?}"))?;
+            compile_times.push((name.clone(), t0.elapsed()));
+            artifacts.insert(
+                name.clone(),
+                Artifact {
+                    meta: ArtifactMeta { name: name.clone(), file, inputs, outputs },
+                    exe,
+                },
+            );
+        }
+        Ok(ArtifactSet {
+            batch,
+            width,
+            dir: dir.to_path_buf(),
+            artifacts,
+            compile_times,
+            _client: client,
+        })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&Artifact> {
+        self.artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact '{name}' not in manifest (have: {:?})", self.names()))
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort();
+        v
+    }
+
+    /// Convenience: execute an artifact by name.
+    pub fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        self.get(name)?.execute(args)
+    }
+}
+
+/// Build an `f32` literal of the given shape from host data.
+pub fn literal_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let expect: usize = dims.iter().product::<usize>().max(1);
+    if data.len() != expect {
+        bail!("literal shape mismatch: {} elems for dims {dims:?}", data.len());
+    }
+    if dims.is_empty() {
+        return Ok(xla::Literal::scalar(data[0]));
+    }
+    let lit = xla::Literal::vec1(data);
+    let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    lit.reshape(&dims_i64).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+/// Fetch an `f32` literal's data to a host vec.
+pub fn to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("literal to_vec: {e:?}"))
+}
+
+/// Logical size in bytes of a literal (for the live-bytes accounting).
+pub fn literal_bytes(lit: &xla::Literal) -> u64 {
+    lit.size_bytes() as u64
+}
+
+/// [`Backend`] over a compiled [`ArtifactSet`]: the artifact names ARE the
+/// kernel names, so the trainer's calls map 1:1 onto artifact executions.
+pub struct PjrtBackend {
+    arts: ArtifactSet,
+    stats: RefCell<BTreeMap<String, KernelStat>>,
+}
+
+impl PjrtBackend {
+    /// Load + compile the artifact set in `dir` (`manifest.json` et al.).
+    pub fn load(dir: &Path) -> Result<PjrtBackend> {
+        Ok(PjrtBackend { arts: ArtifactSet::load(dir)?, stats: RefCell::new(BTreeMap::new()) })
+    }
+
+    /// The underlying artifact set (compile times, manifest metadata).
+    pub fn artifacts(&self) -> &ArtifactSet {
+        &self.arts
+    }
+}
+
+impl Backend for PjrtBackend {
+    type Tensor = xla::Literal;
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn batch(&self) -> usize {
+        self.arts.batch
+    }
+
+    fn width(&self) -> usize {
+        self.arts.width
+    }
+
+    fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+        literal_f32(data, dims)
+    }
+
+    fn download(&self, t: &xla::Literal) -> Result<Vec<f32>> {
+        to_vec_f32(t)
+    }
+
+    fn tensor_bytes(&self, t: &xla::Literal) -> u64 {
+        literal_bytes(t)
+    }
+
+    fn run(&self, name: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let t0 = Instant::now();
+        let bytes_in: u64 = args.iter().map(literal_bytes).sum();
+        let outs = self.arts.run(name, args)?;
+        let bytes_out: u64 = outs.iter().map(literal_bytes).sum();
+        super::record_call(&mut self.stats.borrow_mut(), name, t0.elapsed(), bytes_in, bytes_out);
+        Ok(outs)
+    }
+
+    fn kernels(&self) -> Vec<String> {
+        self.arts.names().into_iter().map(str::to_string).collect()
+    }
+
+    fn stats(&self) -> Vec<KernelStat> {
+        self.stats.borrow().values().cloned().collect()
+    }
+}

@@ -523,4 +523,121 @@ mod tests {
         let a = Json::obj().set("z", 1u64.into()).set("a", 2u64.into());
         assert_eq!(a.to_string(), r#"{"a":2,"z":1}"#);
     }
+
+    // -- extended coverage: the artifact manifest and the BENCH_*.json ----
+    // -- outputs both ride on this module, so the edges get their own ----
+    // -- regression net. ---------------------------------------------------
+
+    #[test]
+    fn malformed_inputs_all_error() {
+        for src in [
+            "",
+            "   ",
+            "{",
+            "}",
+            "[",
+            "[1,]",
+            "[1 2]",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "{a: 1}",
+            "{\"a\": 1,}",
+            "nul",
+            "tru",
+            "falsy",
+            "'single'",
+            "\"unterminated",
+            "\"bad escape \\q\"",
+            "\"trunc \\u00",
+            "01x",
+            "- 1",
+            "+1",
+            "NaN",
+            "Infinity",
+            "[1] extra",
+            "{\"a\": 1} {\"b\": 2}",
+        ] {
+            assert!(Json::parse(src).is_err(), "should reject: {src:?}");
+        }
+    }
+
+    #[test]
+    fn number_edges_u64_and_f64() {
+        // Exact integers survive up to 2^53 (f64 mantissa).
+        let max_exact = 1u64 << 53;
+        let v = Json::parse(&max_exact.to_string()).unwrap();
+        assert_eq!(v.as_u64(), Some(max_exact));
+        // 2^53 + 1 is not representable: it silently rounds down to 2^53 —
+        // the documented precision boundary of the f64 value model.
+        assert_eq!(Json::parse("9007199254740993").unwrap().as_u64(), Some(max_exact));
+        // Far beyond 2^53 the u64 accessor refuses outright.
+        assert_eq!(Json::parse("18014398509481984").unwrap().as_u64(), None);
+        // u64::MAX round-trips only through f64 semantics.
+        assert_eq!(Json::parse(&u64::MAX.to_string()).unwrap().as_u64(), None);
+        // Negative and fractional values are not u64.
+        assert_eq!(Json::parse("-0.0").unwrap().as_u64(), Some(0));
+        assert_eq!(Json::parse("1e-3").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("1e-3").unwrap().as_f64(), Some(0.001));
+        // Large exponents parse as f64.
+        assert_eq!(Json::parse("2.5e10").unwrap().as_f64(), Some(2.5e10));
+        // Serialization of integral f64 prints without a fraction.
+        assert_eq!(Json::Num(4096.0).to_string(), "4096");
+        assert_eq!(Json::Num(0.5).to_string(), "0.5");
+        // Round-trip: serialize → parse is identity for both forms.
+        for n in [0.0, -1.5, 1e15, 123456789.25] {
+            let s = Json::Num(n).to_string();
+            assert_eq!(Json::parse(&s).unwrap().as_f64(), Some(n), "{s}");
+        }
+    }
+
+    #[test]
+    fn deeply_nested_arrays_and_objects_roundtrip() {
+        // Build [[[…[42]…]]] 64 levels deep, plus an object ladder.
+        let mut v = Json::Num(42.0);
+        for _ in 0..64 {
+            v = Json::Arr(vec![v]);
+        }
+        let reparsed = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(reparsed, v);
+
+        let mut o = Json::obj().set("leaf", true.into());
+        for i in 0..32 {
+            o = Json::obj().set(&format!("k{i}"), o);
+        }
+        let pretty = o.to_string_pretty();
+        assert_eq!(Json::parse(&pretty).unwrap(), o);
+        // Mixed nesting as emitted by the bench reports.
+        let src = r#"{"runs": [{"name": "a", "samples": [1, 2.5, 3e2]},
+                      {"name": "b", "samples": []}], "meta": {"n": 2}}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.get("runs").as_arr().unwrap().len(), 2);
+        assert_eq!(v.get("runs").as_arr().unwrap()[0].get("samples").as_arr().unwrap().len(), 3);
+        assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn escape_roundtrip_all_control_chars() {
+        let s: String = (0u32..0x20).map(|c| char::from_u32(c).unwrap()).collect();
+        let v = Json::Str(s.clone());
+        let parsed = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(parsed.as_str(), Some(s.as_str()));
+        // \u escapes for printable chars decode too.
+        assert_eq!(Json::parse(r#""\u0041\u00e9""#).unwrap().as_str(), Some("Aé"));
+        // Solidus may be escaped or bare.
+        assert_eq!(Json::parse(r#""a\/b""#).unwrap().as_str(), Some("a/b"));
+        // Lone surrogates degrade to the replacement character, not a panic.
+        assert_eq!(Json::parse(r#""\ud800""#).unwrap().as_str(), Some("\u{fffd}"));
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let v = Json::parse(r#"{"a": 1, "a": 2}"#).unwrap();
+        assert_eq!(v.get("a").as_u64(), Some(2));
+    }
+
+    #[test]
+    fn whitespace_tolerance() {
+        let v = Json::parse(" \t\r\n { \"a\" : [ 1 , 2 ] } \n").unwrap();
+        assert_eq!(v.get("a").as_arr().unwrap().len(), 2);
+    }
 }
