@@ -7,17 +7,25 @@
 //! feature.
 //!
 //! Flags:
-//!   --backend B       native | pjrt (default: native)
+//!   --model M         tower (default) | any zoo name (resnet, unet,
+//!                     densenet161, googlenet, pspnet, …). Zoo models run
+//!                     on the general DAG executor (native backend only):
+//!                     the topology is lowered to [batch, width] tensors,
+//!                     planned, executed under vanilla + the plan, and
+//!                     verified (bit-exact gradients, observed peak ==
+//!                     simulator prediction).
+//!   --backend B       native | pjrt (default: native; tower only)
 //!   --batch N         native backend batch size (default 32)
 //!   --width N         native backend tower width (default 64)
 //!   --artifacts DIR   pjrt artifact directory (default: artifacts)
-//!   --layers N        hidden layers (default 12)
+//!   --layers N        hidden layers (default 12; tower only)
 //!   --steps N         training steps (default 50)
 //!   --lr F            learning rate (default 0.1)
-//!   --mode M          vanilla | tc | mc | all (default all)
+//!   --mode M          vanilla | tc | mc | all (default all; zoo models
+//!                     use tc unless --mode mc)
 //!   --budget-frac F   activation budget as a fraction of vanilla (tc/mc
 //!                     default: minimal feasible)
-//!   --report FILE     write a JSON report
+//!   --report FILE     write a JSON report (tower only)
 //!   --stats           print per-kernel backend timing/byte statistics
 //!   --quiet           suppress per-step loss logging
 
@@ -33,6 +41,7 @@ use super::report::{loss_summary, report_json};
 use super::train::{compare_schedules, parse_modes, trajectories_identical};
 
 struct TrainArgs {
+    model: String,
     backend: String,
     batch: usize,
     width: usize,
@@ -49,6 +58,7 @@ struct TrainArgs {
 
 fn parse_args(args: &[String]) -> Result<TrainArgs> {
     let mut out = TrainArgs {
+        model: "tower".into(),
         backend: "native".into(),
         batch: 32,
         width: 64,
@@ -66,6 +76,7 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
     while let Some(a) = it.next() {
         let mut val = || it.next().ok_or_else(|| anyhow!("missing value for {a}"));
         match a.as_str() {
+            "--model" => out.model = val()?.clone(),
             "--backend" => out.backend = val()?.clone(),
             "--batch" => out.batch = val()?.parse()?,
             "--width" => out.width = val()?.parse()?,
@@ -79,7 +90,7 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
             "--stats" => out.stats = true,
             "--quiet" => out.quiet = true,
             "--help" | "-h" => {
-                bail!("see module docs: repro train [--backend native|pjrt] [--batch N] [--width N] [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--budget-frac F] [--report FILE] [--stats] [--quiet]")
+                bail!("see module docs: repro train [--model tower|<zoo>] [--backend native|pjrt] [--batch N] [--width N] [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--budget-frac F] [--report FILE] [--stats] [--quiet]")
             }
             other => bail!("unknown train flag {other}"),
         }
@@ -100,6 +111,9 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
         seed: 7,
         log_every: if a.quiet { 0 } else { (a.steps / 5).max(1) },
     };
+    if !a.model.eq_ignore_ascii_case("tower") {
+        return train_zoo(&a, &cfg);
+    }
     let modes = parse_modes(&a.mode)?;
 
     // Each mode gets a fresh trainer: training mutates parameters, and the
@@ -175,6 +189,103 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
         println!("report written to {}", path.display());
     }
     Ok(())
+}
+
+/// Zoo-model path: lower, plan, execute on the general DAG executor, and
+/// hold the run to the executor's two invariants (bit-exact gradients,
+/// observed peak == simulator prediction) — failing loudly otherwise.
+fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
+    use crate::planner::Objective;
+
+    if a.backend != "native" {
+        bail!(
+            "zoo models run on the general DAG executor, which is native-only \
+             (backend '{}' requested); see README 'Execution matrix'",
+            a.backend
+        );
+    }
+    if a.report.is_some() {
+        bail!("--report is not supported for zoo models yet (tower only)");
+    }
+    // Zoo runs always compare vanilla vs the planned schedule; --mode only
+    // picks the planning objective (the vanilla baseline is always run).
+    let objective = match a.mode.as_str() {
+        "mc" => Objective::MaxOverhead,
+        "tc" | "all" | "vanilla" => Objective::MinOverhead,
+        m => bail!("bad mode {m} (vanilla|tc|mc|all)"),
+    };
+    let cmp = super::train::train_zoo_model(
+        &a.model,
+        a.batch,
+        a.width,
+        cfg,
+        a.budget_frac,
+        objective,
+        a.quiet,
+    )?;
+
+    for (label, r) in [("vanilla", &cmp.vanilla), ("planned", &cmp.planned)] {
+        println!(
+            "{label:<8} [{}] peak_act={:<10} (+params {:<9}) step={:.2}ms recompute/step={} {}",
+            r.backend,
+            fmt_bytes(r.observed_peak),
+            fmt_bytes(r.param_bytes),
+            r.mean_step_ms,
+            r.recomputes_per_step,
+            dag_loss_summary(r),
+        );
+    }
+    println!(
+        "model {} ({} nodes): k={} segments, overhead={} T_v units",
+        cmp.model, cmp.nodes, cmp.k, cmp.overhead
+    );
+    println!(
+        "gradients vanilla vs planned: {}",
+        if cmp.grads_match { "BIT-IDENTICAL ✓" } else { "DIVERGED ✗" }
+    );
+    println!(
+        "observed peak {} vs simulator prediction {} (liveness off): {}",
+        fmt_bytes(cmp.planned.observed_peak),
+        fmt_bytes(cmp.sim_peak),
+        if cmp.peak_matches_sim { "EQUAL ✓" } else { "MISMATCH ✗" }
+    );
+    println!(
+        "peak activation memory: vanilla {} → planned {} ({:.0}% reduction)",
+        fmt_bytes(cmp.vanilla.observed_peak),
+        fmt_bytes(cmp.planned.observed_peak),
+        100.0 * (1.0 - cmp.planned.observed_peak as f64 / cmp.vanilla.observed_peak as f64)
+    );
+    if a.stats {
+        for (label, r) in [("vanilla", &cmp.vanilla), ("planned", &cmp.planned)] {
+            println!("-- kernel stats ({label}, {} backend) --", r.backend);
+            for s in &r.kernel_stats {
+                println!(
+                    "  {:<14} calls={:<6} total={:>10.2?} mean={:>9.2?} in={:<10} out={}",
+                    s.kernel,
+                    s.calls,
+                    s.total,
+                    s.mean(),
+                    fmt_bytes(s.bytes_in),
+                    fmt_bytes(s.bytes_out),
+                );
+            }
+        }
+    }
+    if !cmp.grads_match || !cmp.losses_identical {
+        bail!("recomputation changed the training outputs on {}", cmp.model);
+    }
+    if !cmp.peak_matches_sim {
+        bail!("executor-observed peak diverged from the simulator's prediction");
+    }
+    Ok(())
+}
+
+/// Loss summary for DAG reports (first → last).
+fn dag_loss_summary(r: &crate::exec::DagTrainReport) -> String {
+    match (r.losses.first(), r.losses.last()) {
+        (Some(f), Some(l)) => format!("loss {f:.4}→{l:.4}"),
+        _ => "no steps".into(),
+    }
 }
 
 #[cfg(feature = "xla")]

@@ -1,17 +1,30 @@
 //! Backend-generic schedule comparison — the shared engine behind
 //! `repro train` and `examples/train_mlp`.
 //!
-//! Given a way to construct a fresh [`TowerTrainer`] (fresh = identical
-//! initial parameters, so loss trajectories are comparable bitwise), runs
-//! the same training configuration under a set of schedules (vanilla /
-//! time-centric / memory-centric) and returns the measured reports.
+//! Two engines share this module:
+//!
+//! - the tower engine ([`compare_schedules`]): given a way to construct a
+//!   fresh [`TowerTrainer`] (fresh = identical initial parameters, so
+//!   loss trajectories are comparable bitwise), runs the same training
+//!   configuration under a set of schedules (vanilla / time-centric /
+//!   memory-centric) and returns the measured reports;
+//! - the zoo engine ([`train_zoo_model`]): lowers any zoo topology to the
+//!   executable `[batch, width]` form, plans it, compiles vanilla and
+//!   planned [`OpProgram`]s, verifies loss + parameter gradients are
+//!   bit-identical and that the observed peak equals the simulator's
+//!   no-liveness prediction, then trains both and reports.
 
 use crate::anyhow::{anyhow, bail, Result};
-use crate::exec::{ChainSchedule, TowerTrainer, TrainConfig, TrainReport};
+use crate::exec::{
+    ChainSchedule, DagTrainReport, DagTrainer, GradMap, OpProgram, SyntheticTask,
+    TowerTrainer, TrainConfig, TrainReport,
+};
 use crate::fmt_bytes;
-use crate::models::mlp_tower;
+use crate::models::executable::recost;
+use crate::models::{mlp_tower, zoo};
 use crate::planner::{build_context, Family, Objective};
-use crate::runtime::Backend;
+use crate::runtime::{Backend, NativeBackend};
+use crate::sim::{simulate, SimOptions};
 
 /// Parse a `--mode` value into the schedule list to run.
 pub fn parse_modes(mode: &str) -> Result<Vec<&'static str>> {
@@ -107,6 +120,124 @@ pub fn trajectories_identical(a: &TrainReport, b: &TrainReport) -> bool {
             .all(|(x, y)| (x - y).abs() <= 1e-6 * x.abs().max(1.0))
 }
 
+/// Measured comparison of one zoo model under vanilla vs planned
+/// execution on the general DAG executor.
+pub struct ZooComparison {
+    /// Executable graph name (`ResNet50@exec32x64`-style).
+    pub model: String,
+    pub nodes: u32,
+    /// Segments in the plan.
+    pub k: usize,
+    /// Planned recomputation overhead (Eq. 1 units).
+    pub overhead: u64,
+    /// Simulator-predicted peak for the plan (liveness off, activations).
+    pub sim_peak: u64,
+    pub vanilla: DagTrainReport,
+    pub planned: DagTrainReport,
+    /// One-step verification: loss and every parameter gradient of the
+    /// planned execution are bit-identical to vanilla's.
+    pub grads_match: bool,
+    /// The executor's observed per-step live bytes equal the program's
+    /// model prediction, and the observed peak equals `sim_peak`.
+    pub peak_matches_sim: bool,
+    /// Full-run loss trajectories are bit-identical.
+    pub losses_identical: bool,
+}
+
+/// Bitwise comparison of two f32 sequences (`NaN`-safe: compares bits).
+pub fn bits_equal(a: &[f32], b: &[f32]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Bitwise comparison of two per-node gradient maps: same node set, and
+/// every node's `(gw, gb)` identical bit for bit.
+pub fn grad_maps_equal(a: &GradMap, b: &GradMap) -> bool {
+    a.len() == b.len()
+        && a.iter().all(|(k, (w0, b0))| {
+            b.get(k).is_some_and(|(w1, b1)| bits_equal(w0, w1) && bits_equal(b0, b1))
+        })
+}
+
+/// Lower zoo model `name` to `[batch, width]`, plan it under a
+/// planner-chosen budget (minimal feasible, or `budget_frac` of total
+/// activation memory), and train it under both vanilla and the planned
+/// schedule on the native backend, verifying the executor's two core
+/// invariants along the way (see [`ZooComparison`]).
+pub fn train_zoo_model(
+    name: &str,
+    batch: usize,
+    width: usize,
+    cfg: &TrainConfig,
+    budget_frac: Option<f64>,
+    objective: Objective,
+    quiet: bool,
+) -> Result<ZooComparison> {
+    let entry = zoo::find(name)
+        .ok_or_else(|| anyhow!("unknown zoo model '{name}' (try resnet, unet, …)"))?;
+    // Topology at batch 1 (shape metadata is replaced by the lowering).
+    let g = recost(&entry.build_batch(1), batch, width);
+    // ApproxDP is the paper's planner of choice at zoo scale (§4.3) —
+    // exact enumeration on a 500-node DenseNet lattice is a bench, not a
+    // CLI default.
+    let ctx = build_context(&g, Family::Approx);
+    let min_b = ctx.min_feasible_budget();
+    let budget = match budget_frac {
+        Some(f) => ((g.total_mem() as f64 * f) as u64).max(min_b),
+        None => min_b,
+    };
+    let sol = ctx
+        .solve(budget, objective)
+        .ok_or_else(|| anyhow!("budget {} infeasible for {}", fmt_bytes(budget), g.name))?;
+    let planned_prog = OpProgram::from_chain(&g, &sol.chain)?;
+    let vanilla_prog = OpProgram::vanilla(&g)?;
+    let sim_peak = simulate(&g, &sol.chain, SimOptions { liveness: false, include_params: false })
+        .peak_bytes;
+    if !quiet {
+        eprintln!(
+            "== zoo model {} ({} nodes): k={} segments, budget {} ==",
+            g.name,
+            g.len(),
+            sol.chain.k(),
+            fmt_bytes(budget)
+        );
+    }
+
+    // One verification step on a shared batch: bit-exact loss/grads and
+    // observed-vs-predicted memory.
+    let mut task = SyntheticTask::new(batch, width, cfg.seed ^ 0xabcd);
+    let (xv, yv) = task.next_batch();
+    let mut tv = DagTrainer::new(NativeBackend::new(batch, width), &g, cfg.seed)?;
+    let x = tv.backend().upload(&xv, &[batch, width])?;
+    let y = tv.backend().upload(&yv, &[batch, width])?;
+    let rv = tv.run_step(&vanilla_prog, &x, &y, cfg.lr, true)?;
+    let mut tp = DagTrainer::new(NativeBackend::new(batch, width), &g, cfg.seed)?;
+    let rp = tp.run_step(&planned_prog, &x, &y, cfg.lr, true)?;
+    let (gv, gp) = (rv.grads.as_ref().unwrap(), rp.grads.as_ref().unwrap());
+    let grads_match = rv.loss.to_bits() == rp.loss.to_bits() && grad_maps_equal(gv, gp);
+    let peak_matches_sim = rp.observed_peak == sim_peak
+        && rp.live_trajectory == planned_prog.predicted_live;
+
+    // Fresh trainers for the reported runs (identical initial params).
+    let mut tv = DagTrainer::new(NativeBackend::new(batch, width), &g, cfg.seed)?;
+    let vanilla = tv.train(&vanilla_prog, cfg)?;
+    let mut tp = DagTrainer::new(NativeBackend::new(batch, width), &g, cfg.seed)?;
+    let planned = tp.train(&planned_prog, cfg)?;
+    let losses_identical = bits_equal(&vanilla.losses, &planned.losses);
+
+    Ok(ZooComparison {
+        model: g.name.clone(),
+        nodes: g.len(),
+        k: sol.chain.k(),
+        overhead: sol.overhead,
+        sim_peak,
+        vanilla,
+        planned,
+        grads_match,
+        peak_matches_sim,
+        losses_identical,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,6 +263,26 @@ mod tests {
         }
         // A planned schedule on a 12-layer tower must actually cut.
         assert!(schedule_for_mode("tc", 12, 64, 32, None).unwrap().segments.len() > 1);
+    }
+
+    #[test]
+    fn bits_equal_is_exact_and_nan_safe() {
+        assert!(bits_equal(&[1.0, -0.0], &[1.0, -0.0]));
+        assert!(!bits_equal(&[0.0], &[-0.0]), "signed zero differs bitwise");
+        assert!(bits_equal(&[f32::NAN], &[f32::NAN]), "same NaN bits compare equal");
+        assert!(!bits_equal(&[1.0], &[1.0, 2.0]));
+    }
+
+    #[test]
+    fn zoo_engine_verifies_unet_end_to_end() {
+        let cfg = TrainConfig { layers: 0, steps: 2, lr: 0.02, seed: 11, log_every: 0 };
+        let cmp =
+            train_zoo_model("unet", 2, 4, &cfg, None, Objective::MinOverhead, true).unwrap();
+        assert!(cmp.grads_match, "planned grads must be bit-identical to vanilla");
+        assert!(cmp.peak_matches_sim, "observed peak must equal the sim prediction");
+        assert!(cmp.losses_identical);
+        assert!(cmp.planned.observed_peak < cmp.vanilla.observed_peak);
+        assert!(cmp.planned.recomputes_per_step > 0);
     }
 
     #[test]

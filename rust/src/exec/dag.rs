@@ -1,0 +1,491 @@
+//! The general-DAG trainer: executes an [`OpProgram`] on any
+//! [`Backend`], over arbitrary computation graphs.
+//!
+//! Where [`super::trainer::TowerTrainer`] hand-specializes the canonical
+//! strategy to chains, this executor is *trace-driven*: the compiled
+//! program already says which forward value to (re)materialize when,
+//! when each backward op runs, and when each buffer dies — the trainer
+//! just follows the steps with real kernels, under the executable
+//! lowering of [`crate::models::executable`] (uniform `[batch, width]`
+//! tensors; source / dense / merge roles).
+//!
+//! Two properties the design guarantees, both property-tested end to end:
+//!
+//! - **Bit-exact schedules.** Recomputed forward values rerun the same
+//!   kernels on the same inputs (a node's parameters are only updated at
+//!   its own backward, which the canonical strategy orders after every
+//!   recomputation that needs them), and gradient fan-in is reduced in
+//!   ascending contributor-id order regardless of the order contributions
+//!   arrive in — so any plan's loss *and* parameter gradients are
+//!   bit-identical to vanilla execution.
+//! - **Observed = predicted memory.** Every step updates a live-byte
+//!   counter from real tensor sizes; on graphs lowered with
+//!   [`crate::models::executable::recost`] the per-step counter equals
+//!   the program's model-side prediction and the observed peak equals
+//!   [`crate::sim::SimReport::peak_bytes`] (liveness off) — an equality,
+//!   not a bound. One caveat: forward values are measured, but a
+//!   gradient is booked as the canonical model's *single* logical buffer
+//!   (one `act` from its alloc step to its free step). The deferred
+//!   fan-in contributions backing that buffer are real tensors the
+//!   counter does not itemize — at a node with `s` consumers, actual
+//!   transient memory can exceed the counter by up to `(s−1)·act` until
+//!   the node's backprop reduces them.
+//!
+//! Loss-gradient seeding is lazy: the trace accounts a sink's gradient at
+//! the start of the backward pass (when the sink's forward value may
+//! already be discarded), so the executor reserves the bytes there but
+//! runs the `mse` kernel at the sink's own backprop step, where the
+//! canonical strategy guarantees `fwd(sink)` is live again.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::anyhow::{bail, Context, Result};
+
+use crate::graph::{Graph, NodeId};
+use crate::models::executable::{node_role, NodeRole};
+use crate::runtime::{Backend, KernelStat};
+use crate::util::rng::Pcg32;
+
+use super::program::{OpProgram, Step};
+use super::trainer::{SyntheticTask, TrainConfig};
+
+/// Per-dense-node parameter gradients `(gw, gb)` keyed by node id.
+pub type GradMap = BTreeMap<u32, (Vec<f32>, Vec<f32>)>;
+
+/// Measured outcome of one executed training step.
+#[derive(Clone, Debug)]
+pub struct StepReport {
+    /// Total loss: sum of per-sink MSE in ascending node-id order.
+    pub loss: f32,
+    /// Peak of the observed live-byte counter.
+    pub observed_peak: u64,
+    /// Program step index at which the peak was reached.
+    pub peak_step: usize,
+    /// Observed live bytes after every program step (compare against
+    /// [`OpProgram::predicted_live`]).
+    pub live_trajectory: Vec<u64>,
+    /// Forward recomputations performed.
+    pub recomputes: u64,
+    /// Per-dense-node parameter gradients `(gw, gb)` downloaded before
+    /// the optimizer ran; `None` unless requested.
+    pub grads: Option<GradMap>,
+}
+
+/// Measured results of a multi-step DAG training run.
+#[derive(Clone, Debug)]
+pub struct DagTrainReport {
+    pub backend: &'static str,
+    pub losses: Vec<f32>,
+    /// Peak observed live activation+gradient bytes over all steps.
+    pub observed_peak: u64,
+    pub param_bytes: u64,
+    pub recomputes_per_step: u64,
+    pub mean_step_ms: f64,
+    pub kernel_stats: Vec<KernelStat>,
+}
+
+/// The general-DAG trainer: per-node parameters + a backend + the graph.
+pub struct DagTrainer<B: Backend> {
+    backend: B,
+    g: Graph,
+    /// `(w, b)` for dense nodes, `None` otherwise; indexed by node id.
+    params: Vec<Option<(B::Tensor, B::Tensor)>>,
+    /// Per-node `1/√k` fan-in normalizer for merge nodes (uploaded once),
+    /// `None` otherwise; indexed by node id.
+    merge_scale: Vec<Option<B::Tensor>>,
+}
+
+impl<B: Backend> DagTrainer<B> {
+    /// He-initialize parameters for every dense node of `g` (deterministic
+    /// in `seed` and node order, so two trainers built alike start
+    /// bit-identically — the precondition for schedule comparisons).
+    pub fn new(backend: B, g: &Graph, seed: u64) -> Result<DagTrainer<B>> {
+        let width = backend.width();
+        let mut rng = Pcg32::seeded(seed);
+        let scale = (2.0 / width as f64).sqrt();
+        let mut params = Vec::with_capacity(g.len() as usize);
+        let mut merge_scale = Vec::with_capacity(g.len() as usize);
+        for (v, _) in g.nodes() {
+            match node_role(g, v) {
+                NodeRole::Dense => {
+                    let w: Vec<f32> =
+                        (0..width * width).map(|_| (rng.normal() * scale) as f32).collect();
+                    let b = vec![0f32; width];
+                    params.push(Some((
+                        backend.upload(&w, &[width, width])?,
+                        backend.upload(&b, &[width])?,
+                    )));
+                    merge_scale.push(None);
+                }
+                NodeRole::Merge => {
+                    let k = g.preds(v).len() as f32;
+                    params.push(None);
+                    merge_scale.push(Some(backend.upload(&[1.0 / k.sqrt()], &[])?));
+                }
+                NodeRole::Source => {
+                    params.push(None);
+                    merge_scale.push(None);
+                }
+            }
+        }
+        Ok(DagTrainer { backend, g: g.clone(), params, merge_scale })
+    }
+
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.g
+    }
+
+    pub fn batch(&self) -> usize {
+        self.backend.batch()
+    }
+
+    pub fn width(&self) -> usize {
+        self.backend.width()
+    }
+
+    /// Bytes of one `[batch, width]` activation/gradient buffer.
+    fn act_bytes(&self) -> u64 {
+        (self.backend.batch() * self.backend.width() * 4) as u64
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.params
+            .iter()
+            .flatten()
+            .map(|(w, b)| self.backend.tensor_bytes(w) + self.backend.tensor_bytes(b))
+            .sum()
+    }
+
+    /// Execute one training step following `prog`. `x`/`y` are the batch
+    /// input and target (always live; excluded from the byte counter like
+    /// the paper excludes input nodes).
+    pub fn run_step(
+        &mut self,
+        prog: &OpProgram,
+        x: &B::Tensor,
+        y: &B::Tensor,
+        lr: f32,
+        record_grads: bool,
+    ) -> Result<StepReport> {
+        let n = self.g.len() as usize;
+        let act = self.act_bytes();
+        let lr_t = self.backend.upload(&[lr], &[])?;
+        let mut fwd: Vec<Option<B::Tensor>> = vec![None; n];
+        // Gradient contributions per node, keyed by contributor id;
+        // reduced in ascending key order at the node's own backprop so the
+        // sum is independent of arrival order (bit-exact across plans).
+        let mut pending: Vec<Vec<(u32, B::Tensor)>> = vec![Vec::new(); n];
+        let mut seeded = vec![false; n];
+        let mut sink_losses: BTreeMap<u32, f32> = BTreeMap::new();
+        let mut grads = GradMap::new();
+        let mut live = 0u64;
+        let mut peak = 0u64;
+        let mut peak_step = 0usize;
+        let mut traj = Vec::with_capacity(prog.steps.len());
+
+        for (i, step) in prog.steps.iter().enumerate() {
+            match *step {
+                Step::Compute { node, .. } => {
+                    let t = self.forward(node, &fwd, x)?;
+                    live += self.backend.tensor_bytes(&t);
+                    fwd[node.0 as usize] = Some(t);
+                }
+                Step::SeedGrad { node } => {
+                    seeded[node.0 as usize] = true;
+                    live += act;
+                }
+                Step::AllocGrad { node } => {
+                    if pending[node.0 as usize].is_empty() {
+                        bail!(
+                            "grad({}) allocated before any contribution",
+                            self.g.node(node).name
+                        );
+                    }
+                    live += act;
+                }
+                Step::Backprop { node } => {
+                    let gv = self.materialize_grad(
+                        node,
+                        &mut pending,
+                        &seeded,
+                        &fwd,
+                        y,
+                        &mut sink_losses,
+                    )?;
+                    self.backprop_node(
+                        node,
+                        &gv,
+                        &fwd,
+                        &lr_t,
+                        &mut pending,
+                        record_grads.then_some(&mut grads),
+                    )?;
+                }
+                Step::FreeFwd { node, .. } => {
+                    let t = fwd[node.0 as usize]
+                        .take()
+                        .with_context(|| format!("free of dead fwd({})", self.g.node(node).name))?;
+                    live -= self.backend.tensor_bytes(&t);
+                }
+                Step::FreeGrad { node } => {
+                    pending[node.0 as usize].clear();
+                    seeded[node.0 as usize] = false;
+                    live -= act;
+                }
+            }
+            traj.push(live);
+            if live > peak {
+                peak = live;
+                peak_step = i;
+            }
+        }
+        if live != 0 {
+            bail!("executor leaked {live} live bytes at end of step");
+        }
+        let loss = sink_losses.values().sum();
+        Ok(StepReport {
+            loss,
+            observed_peak: peak,
+            peak_step,
+            live_trajectory: traj,
+            recomputes: prog.recompute_count,
+            grads: if record_grads { Some(grads) } else { None },
+        })
+    }
+
+    /// Forward op of `node` under the executable lowering.
+    fn forward(
+        &self,
+        node: NodeId,
+        fwd: &[Option<B::Tensor>],
+        x: &B::Tensor,
+    ) -> Result<B::Tensor> {
+        let input = |p: NodeId| {
+            fwd[p.0 as usize]
+                .clone()
+                .with_context(|| format!("fwd({}) not live", self.g.node(p).name))
+        };
+        match node_role(&self.g, node) {
+            NodeRole::Source => Ok(x.clone()),
+            NodeRole::Dense => {
+                let xin = input(self.g.preds(node)[0])?;
+                let (w, b) = self.params[node.0 as usize]
+                    .clone()
+                    .context("dense node has no parameters")?;
+                self.backend.run("layer_fwd", &[xin, w, b])?.pop().context("layer_fwd output")
+            }
+            NodeRole::Merge => {
+                let preds = self.g.preds(node);
+                let mut acc = input(preds[0])?;
+                for &p in &preds[1..] {
+                    acc = self
+                        .backend
+                        .run("add", &[acc, input(p)?])?
+                        .pop()
+                        .context("add output")?;
+                }
+                let s = self.merge_scale[node.0 as usize]
+                    .clone()
+                    .context("merge node has no scale")?;
+                self.backend.run("scale", &[acc, s])?.pop().context("scale output")
+            }
+        }
+    }
+
+    /// Produce `grad(node)`: run the lazy loss seed for sinks, otherwise
+    /// reduce the pending contributions in ascending contributor order.
+    fn materialize_grad(
+        &self,
+        node: NodeId,
+        pending: &mut [Vec<(u32, B::Tensor)>],
+        seeded: &[bool],
+        fwd: &[Option<B::Tensor>],
+        y: &B::Tensor,
+        sink_losses: &mut BTreeMap<u32, f32>,
+    ) -> Result<B::Tensor> {
+        let i = node.0 as usize;
+        if seeded[i] {
+            let f = fwd[i]
+                .clone()
+                .with_context(|| format!("fwd({}) dead at loss", self.g.node(node).name))?;
+            let outs = self.backend.run("mse", &[f, y.clone()])?;
+            let [loss, grad]: [B::Tensor; 2] = outs.try_into().ok().context("mse arity")?;
+            sink_losses.insert(node.0, self.backend.download(&loss)?[0]);
+            return Ok(grad);
+        }
+        let mut contribs = std::mem::take(&mut pending[i]);
+        if contribs.is_empty() {
+            bail!("backprop of {} with no gradient contributions", self.g.node(node).name);
+        }
+        contribs.sort_by_key(|&(src, _)| src);
+        let mut it = contribs.into_iter();
+        let mut acc = it.next().unwrap().1;
+        for (_, c) in it {
+            acc = self.backend.run("add", &[acc, c])?.pop().context("add output")?;
+        }
+        Ok(acc)
+    }
+
+    /// Backward op of `node`: propagate contributions to predecessors and
+    /// (for dense nodes) apply SGD to its parameters.
+    fn backprop_node(
+        &mut self,
+        node: NodeId,
+        gv: &B::Tensor,
+        fwd: &[Option<B::Tensor>],
+        lr_t: &B::Tensor,
+        pending: &mut [Vec<(u32, B::Tensor)>],
+        record: Option<&mut GradMap>,
+    ) -> Result<()> {
+        match node_role(&self.g, node) {
+            NodeRole::Source => Ok(()), // gradient w.r.t. the input: dropped
+            NodeRole::Merge => {
+                let s = self.merge_scale[node.0 as usize]
+                    .clone()
+                    .context("merge node has no scale")?;
+                let scaled = self
+                    .backend
+                    .run("scale", &[gv.clone(), s])?
+                    .pop()
+                    .context("scale output")?;
+                for &p in self.g.preds(node) {
+                    pending[p.0 as usize].push((node.0, scaled.clone()));
+                }
+                Ok(())
+            }
+            NodeRole::Dense => {
+                let p = self.g.preds(node)[0];
+                let xin = fwd[p.0 as usize]
+                    .clone()
+                    .with_context(|| format!("fwd({}) dead at backprop", self.g.node(p).name))?;
+                let (w, b) = self.params[node.0 as usize]
+                    .clone()
+                    .context("dense node has no parameters")?;
+                let outs =
+                    self.backend.run("layer_bwd", &[xin, w.clone(), b.clone(), gv.clone()])?;
+                let [gx, gw, gb]: [B::Tensor; 3] =
+                    outs.try_into().ok().context("layer_bwd arity")?;
+                pending[p.0 as usize].push((node.0, gx));
+                if let Some(rec) = record {
+                    rec.insert(
+                        node.0,
+                        (self.backend.download(&gw)?, self.backend.download(&gb)?),
+                    );
+                }
+                let new_w = self
+                    .backend
+                    .run("sgd_mat", &[w, gw, lr_t.clone()])?
+                    .pop()
+                    .context("sgd_mat output")?;
+                let new_b = self
+                    .backend
+                    .run("sgd_vec", &[b, gb, lr_t.clone()])?
+                    .pop()
+                    .context("sgd_vec output")?;
+                self.params[node.0 as usize] = Some((new_w, new_b));
+                Ok(())
+            }
+        }
+    }
+
+    /// Train for `cfg.steps` steps on the synthetic task (same data stream
+    /// as the tower trainer, so runs are comparable across seeds).
+    pub fn train(&mut self, prog: &OpProgram, cfg: &TrainConfig) -> Result<DagTrainReport> {
+        let (batch, width) = (self.backend.batch(), self.backend.width());
+        let mut task = SyntheticTask::new(batch, width, cfg.seed ^ 0xabcd);
+        let mut losses = Vec::with_capacity(cfg.steps);
+        let mut peak = 0u64;
+        let t0 = Instant::now();
+        for step in 0..cfg.steps {
+            let (xv, yv) = task.next_batch();
+            let x = self.backend.upload(&xv, &[batch, width])?;
+            let y = self.backend.upload(&yv, &[batch, width])?;
+            let r = self.run_step(prog, &x, &y, cfg.lr, false)?;
+            peak = peak.max(r.observed_peak);
+            losses.push(r.loss);
+            if cfg.log_every > 0 && step % cfg.log_every == 0 {
+                eprintln!("step {step:>4}  loss {:.6}", r.loss);
+            }
+        }
+        let elapsed = t0.elapsed();
+        Ok(DagTrainReport {
+            backend: self.backend.name(),
+            losses,
+            observed_peak: peak,
+            param_bytes: self.param_bytes(),
+            recomputes_per_step: prog.recompute_count,
+            mean_step_ms: elapsed.as_secs_f64() * 1000.0 / cfg.steps.max(1) as f64,
+            kernel_stats: self.backend.stats(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exec::OpProgram;
+    use crate::models::executable::recost;
+    use crate::planner::{plan_at_min_budget, Family, Objective};
+    use crate::runtime::NativeBackend;
+    use crate::testutil::diamond;
+
+    fn trainer_for(g: &Graph, batch: usize, width: usize) -> DagTrainer<NativeBackend> {
+        DagTrainer::new(NativeBackend::new(batch, width), g, 7).unwrap()
+    }
+
+    #[test]
+    fn diamond_trains_and_schedules_agree_bitwise() {
+        let g = recost(&diamond(), 4, 8);
+        let vanilla = OpProgram::vanilla(&g).unwrap();
+        let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+        let planned = OpProgram::from_chain(&g, &plan.chain).unwrap();
+
+        let be = NativeBackend::new(4, 8);
+        let x = be.upload(&[0.3f32; 4 * 8], &[4, 8]).unwrap();
+        let y = be.upload(&[0.1f32; 4 * 8], &[4, 8]).unwrap();
+
+        let mut tv = trainer_for(&g, 4, 8);
+        let rv = tv.run_step(&vanilla, &x, &y, 0.05, true).unwrap();
+        let mut tp = trainer_for(&g, 4, 8);
+        let rp = tp.run_step(&planned, &x, &y, 0.05, true).unwrap();
+
+        assert_eq!(rv.loss.to_bits(), rp.loss.to_bits(), "loss must be bit-identical");
+        let (gv, gp) = (rv.grads.unwrap(), rp.grads.unwrap());
+        assert_eq!(gv.len(), gp.len());
+        for (k, (w0, b0)) in &gv {
+            let (w1, b1) = &gp[k];
+            assert!(w0.iter().zip(w1).all(|(a, b)| a.to_bits() == b.to_bits()), "gw {k}");
+            assert!(b0.iter().zip(b1).all(|(a, b)| a.to_bits() == b.to_bits()), "gb {k}");
+        }
+    }
+
+    #[test]
+    fn observed_bytes_track_prediction_on_diamond() {
+        let g = recost(&diamond(), 2, 4);
+        let prog = OpProgram::vanilla(&g).unwrap();
+        let mut t = trainer_for(&g, 2, 4);
+        let be = NativeBackend::new(2, 4);
+        let x = be.upload(&[0.0f32; 8], &[2, 4]).unwrap();
+        let y = be.upload(&[0.0f32; 8], &[2, 4]).unwrap();
+        let r = t.run_step(&prog, &x, &y, 0.1, false).unwrap();
+        assert_eq!(r.live_trajectory, prog.predicted_live);
+        assert_eq!(r.observed_peak, prog.predicted_peak());
+    }
+
+    #[test]
+    fn training_loss_is_finite_and_decreasing_on_towerlike_dag() {
+        let g = recost(&crate::models::mlp_tower(6, 8, 4), 4, 8);
+        let prog = OpProgram::vanilla(&g).unwrap();
+        let mut t = trainer_for(&g, 4, 8);
+        let cfg = TrainConfig { layers: 6, steps: 25, lr: 0.1, seed: 3, log_every: 0 };
+        let rep = t.train(&prog, &cfg).unwrap();
+        let (first, last) = (rep.losses[0], *rep.losses.last().unwrap());
+        assert!(last.is_finite() && first.is_finite());
+        assert!(last < first, "loss must drop: {first} → {last}");
+    }
+}

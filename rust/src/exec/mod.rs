@@ -2,17 +2,30 @@
 //! execution [`Backend`](crate::runtime::Backend), caching / discarding /
 //! recomputing activations exactly as a canonical strategy prescribes.
 //!
-//! This is the end-to-end proof that the layers compose: the L3 plan
-//! (lower-set chain over the tower graph) drives which backend kernels
-//! run when, and the executor's live-byte accounting shows the *measured*
-//! peak dropping exactly as the simulator predicted — while the loss
-//! trajectory stays bitwise identical to vanilla execution,
-//! recomputation's defining property. By default the kernels are the
-//! pure-Rust `NativeBackend`; with the `xla` feature the same trainer
-//! drives PJRT-compiled artifacts instead.
+//! Two execution paths share the backend layer:
+//!
+//! - the **chain fast path** ([`ChainSchedule`] + [`TowerTrainer`]) —
+//!   hand-specialized to tower graphs, also usable with PJRT artifacts
+//!   under the `xla` feature;
+//! - the **general path** ([`OpProgram`] + [`DagTrainer`]) — compiles the
+//!   event trace of [`crate::sim`] into a typed step program and
+//!   executes it over *arbitrary DAGs* (the whole model zoo: residual
+//!   adds, concats, fan-out reuse), with per-step observed live-byte
+//!   instrumentation that is cross-checked against the simulator's
+//!   predicted peak.
+//!
+//! Both paths are the end-to-end proof that the layers compose: the L3
+//! plan drives which backend kernels run when, the *measured* peak drops
+//! exactly as the simulator predicted, and the loss trajectory (and on
+//! the general path, every parameter gradient) stays bit-identical to
+//! vanilla execution — recomputation's defining property.
 
+mod dag;
+mod program;
 mod schedule;
 mod trainer;
 
+pub use dag::{DagTrainReport, DagTrainer, GradMap, StepReport};
+pub use program::{OpProgram, Step};
 pub use schedule::{ChainSchedule, Segment};
 pub use trainer::{SyntheticTask, TowerTrainer, TrainConfig, TrainReport};

@@ -1,0 +1,268 @@
+//! Trace → executable op program compilation.
+//!
+//! A [`crate::sim::Trace`] is the single source of truth for what a
+//! canonical strategy does: which forward value is materialized when
+//! (original or recomputation), when each backward op runs, and when each
+//! buffer is freed. [`OpProgram::compile`] turns that event stream into a
+//! flat list of typed [`Step`]s that an executor can run on any
+//! [`crate::runtime::Backend`] — over *arbitrary DAGs*, not just chains.
+//!
+//! Compilation also re-validates the trace's safety invariants (every
+//! read targets a live buffer, every allocation is balanced by a free)
+//! and records the model-predicted live bytes after every step, so the
+//! executor's *observed* live bytes can be cross-checked step by step
+//! against the simulator's prediction — the end-to-end evidence that the
+//! measured peak is the planned peak.
+
+use crate::anyhow::{bail, Result};
+
+use crate::graph::{Graph, NodeId};
+use crate::planner::LowerSetChain;
+use crate::sim::{canonical_trace, vanilla_trace, Buffer, Event, Trace};
+
+/// One executable step of a training iteration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Step {
+    /// Run the forward op of `node`, materializing `Fwd { node, gen }`
+    /// (`recompute` marks backward-phase re-materializations).
+    Compute { node: NodeId, gen: u8, recompute: bool },
+    /// Allocate the loss gradient of sink `node`. The actual loss kernel
+    /// runs lazily at the sink's [`Step::Backprop`] (where the canonical
+    /// strategy guarantees `fwd(node)` is live again); this step only
+    /// reserves the buffer, exactly where the trace accounts for it.
+    SeedGrad { node: NodeId },
+    /// Allocate the gradient buffer of `node` (first backward contribution
+    /// from one of its successors just materialized).
+    AllocGrad { node: NodeId },
+    /// Run the backward op of `node`: reduce its gradient contributions,
+    /// emit contributions into each predecessor's gradient, and apply the
+    /// optimizer to the node's parameters.
+    Backprop { node: NodeId },
+    /// Release the forward value of `node`.
+    FreeFwd { node: NodeId, gen: u8 },
+    /// Release the gradient of `node`.
+    FreeGrad { node: NodeId },
+}
+
+impl Step {
+    /// The node this step operates on.
+    pub fn node(&self) -> NodeId {
+        match *self {
+            Step::Compute { node, .. }
+            | Step::SeedGrad { node }
+            | Step::AllocGrad { node }
+            | Step::Backprop { node }
+            | Step::FreeFwd { node, .. }
+            | Step::FreeGrad { node } => node,
+        }
+    }
+
+    /// Human-readable rendering (for divergence reports and logs).
+    pub fn describe(&self, g: &Graph) -> String {
+        let name = |v: NodeId| g.node(v).name.clone();
+        match *self {
+            Step::Compute { node, gen, recompute } => {
+                let tag = if recompute { "recompute" } else { "compute" };
+                format!("{tag} fwd({}) gen {gen}", name(node))
+            }
+            Step::SeedGrad { node } => format!("seed grad({})", name(node)),
+            Step::AllocGrad { node } => format!("alloc grad({})", name(node)),
+            Step::Backprop { node } => format!("backprop {}", name(node)),
+            Step::FreeFwd { node, gen } => format!("free fwd({}) gen {gen}", name(node)),
+            Step::FreeGrad { node } => format!("free grad({})", name(node)),
+        }
+    }
+}
+
+/// An executable training-step program plus the model-side accounting it
+/// was compiled against.
+#[derive(Clone, Debug)]
+pub struct OpProgram {
+    pub steps: Vec<Step>,
+    /// Model-predicted live bytes *after* each step, using the graph's
+    /// `M_v` metadata — identical to the simulator's no-liveness counter
+    /// at the corresponding trace events.
+    pub predicted_live: Vec<u64>,
+    /// Number of forward recomputations the program performs.
+    pub recompute_count: u64,
+}
+
+impl OpProgram {
+    /// Compile the canonical strategy of `chain` into an executable
+    /// program.
+    pub fn from_chain(g: &Graph, chain: &LowerSetChain) -> Result<OpProgram> {
+        OpProgram::compile(g, &canonical_trace(g, chain))
+    }
+
+    /// Compile vanilla (no-recomputation) execution.
+    pub fn vanilla(g: &Graph) -> Result<OpProgram> {
+        OpProgram::compile(g, &vanilla_trace(g))
+    }
+
+    /// Compile a trace into steps, re-validating liveness along the way.
+    pub fn compile(g: &Graph, tr: &Trace) -> Result<OpProgram> {
+        let n = g.len() as usize;
+        let mut fwd_live: Vec<Option<u8>> = vec![None; n];
+        let mut grad_live = vec![false; n];
+        let mut live = 0u64;
+        let mut steps = Vec::with_capacity(tr.events.len());
+        let mut predicted_live = Vec::with_capacity(tr.events.len());
+        for ev in &tr.events {
+            match *ev {
+                Event::Alloc { buffer: Buffer::Fwd { node, gen }, bytes, recompute, .. } => {
+                    let i = node.0 as usize;
+                    if fwd_live[i].is_some() {
+                        bail!("trace double-computes fwd({})", g.node(node).name);
+                    }
+                    fwd_live[i] = Some(gen);
+                    live += bytes;
+                    steps.push(Step::Compute { node, gen, recompute });
+                    predicted_live.push(live);
+                }
+                Event::Alloc { buffer: Buffer::Grad { node }, bytes, .. } => {
+                    let i = node.0 as usize;
+                    if grad_live[i] {
+                        bail!("trace double-allocates grad({})", g.node(node).name);
+                    }
+                    grad_live[i] = true;
+                    live += bytes;
+                    // A sink's gradient can only come from the loss; any
+                    // other node's gradient is opened by a successor's
+                    // backward contribution.
+                    let step = if g.succs(node).is_empty() {
+                        Step::SeedGrad { node }
+                    } else {
+                        Step::AllocGrad { node }
+                    };
+                    steps.push(step);
+                    predicted_live.push(live);
+                }
+                Event::Use { buffer } => match buffer {
+                    Buffer::Fwd { node, gen } => {
+                        if fwd_live[node.0 as usize] != Some(gen) {
+                            bail!(
+                                "trace reads dead fwd({}) gen {gen} at step {}",
+                                g.node(node).name,
+                                steps.len()
+                            );
+                        }
+                    }
+                    Buffer::Grad { node } => {
+                        if !grad_live[node.0 as usize] {
+                            bail!(
+                                "trace reads dead grad({}) at step {}",
+                                g.node(node).name,
+                                steps.len()
+                            );
+                        }
+                    }
+                },
+                Event::Free { buffer } => {
+                    let (step, bytes) = match buffer {
+                        Buffer::Fwd { node, gen } => {
+                            if fwd_live[node.0 as usize] != Some(gen) {
+                                bail!("trace frees dead fwd({})", g.node(node).name);
+                            }
+                            fwd_live[node.0 as usize] = None;
+                            (Step::FreeFwd { node, gen }, g.node(node).mem)
+                        }
+                        Buffer::Grad { node } => {
+                            if !grad_live[node.0 as usize] {
+                                bail!("trace frees dead grad({})", g.node(node).name);
+                            }
+                            grad_live[node.0 as usize] = false;
+                            (Step::FreeGrad { node }, g.node(node).mem)
+                        }
+                    };
+                    live -= bytes;
+                    steps.push(step);
+                    predicted_live.push(live);
+                }
+                Event::Backprop { node } => {
+                    if !grad_live[node.0 as usize] {
+                        bail!(
+                            "backprop of {} before its gradient exists",
+                            g.node(node).name
+                        );
+                    }
+                    steps.push(Step::Backprop { node });
+                    predicted_live.push(live);
+                }
+            }
+        }
+        if live != 0 || fwd_live.iter().any(Option::is_some) || grad_live.iter().any(|&b| b) {
+            bail!("trace leaks buffers ({live} bytes live at end of step)");
+        }
+        Ok(OpProgram { steps, predicted_live, recompute_count: tr.recompute_count })
+    }
+
+    /// Model-predicted peak live bytes over the whole program.
+    pub fn predicted_peak(&self) -> u64 {
+        self.predicted_live.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Index of the step at which the predicted peak is reached.
+    pub fn predicted_peak_step(&self) -> usize {
+        let peak = self.predicted_peak();
+        self.predicted_live.iter().position(|&b| b == peak).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{plan_at_min_budget, singleton_chain, Family, Objective};
+    use crate::sim::{measure, SimOptions};
+    use crate::testutil::{chain_graph, diamond, random_dag};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn vanilla_program_shape_on_chain() {
+        let g = chain_graph(&[1, 2, 3]);
+        let p = OpProgram::vanilla(&g).unwrap();
+        // 3 computes, 3 backprops, 3 grad allocs (one sink seed), 6 frees.
+        let computes = p.steps.iter().filter(|s| matches!(s, Step::Compute { .. })).count();
+        let backprops = p.steps.iter().filter(|s| matches!(s, Step::Backprop { .. })).count();
+        let seeds = p.steps.iter().filter(|s| matches!(s, Step::SeedGrad { .. })).count();
+        assert_eq!(computes, 3);
+        assert_eq!(backprops, 3);
+        assert_eq!(seeds, 1, "one sink");
+        assert_eq!(p.recompute_count, 0);
+        assert_eq!(*p.predicted_live.last().unwrap(), 0, "balanced");
+    }
+
+    #[test]
+    fn predicted_peak_matches_simulator_no_liveness() {
+        let mut rng = Pcg32::seeded(91);
+        for _ in 0..15 {
+            let n = rng.range(4, 12);
+            let g = random_dag(&mut rng, n);
+            let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+            let tr = canonical_trace(&g, &plan.chain);
+            let prog = OpProgram::compile(&g, &tr).unwrap();
+            let rep = measure(&g, &tr, SimOptions { liveness: false, include_params: false });
+            assert_eq!(prog.predicted_peak(), rep.peak_bytes);
+            assert_eq!(prog.recompute_count, rep.recompute_count);
+        }
+    }
+
+    #[test]
+    fn diamond_fan_in_compiles_with_merge_semantics_visible() {
+        let g = diamond();
+        let p = OpProgram::from_chain(&g, &singleton_chain(&g)).unwrap();
+        // Node 3 (fan-in) is backpropped before nodes 1 and 2.
+        let order: Vec<u32> = p
+            .steps
+            .iter()
+            .filter_map(|s| match s {
+                Step::Backprop { node } => Some(node.0),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(order, vec![3, 2, 1, 0]);
+        // Every step renders without panicking.
+        for (i, s) in p.steps.iter().enumerate() {
+            assert!(!s.describe(&g).is_empty(), "step {i}");
+        }
+    }
+}

@@ -1,11 +1,16 @@
 //! Translation of a lower-set chain over a tower graph into an executable
-//! layer schedule.
+//! layer schedule — the chain *fast path* of the executor.
 //!
 //! Tower graphs (`models::mlp_tower`) are chains `input → layer_0 → … →
 //! layer_{n-1} → loss_head`, so every lower set of the graph is a prefix
 //! and a plan is exactly a list of cut points. The schedule records, per
 //! segment, which layer range it covers and which activation the strategy
 //! caches at its end (the segment's boundary node).
+//!
+//! Graphs with any fan-in (residual adds, concats — the whole model zoo)
+//! are rejected here with an error naming the offending node; they are
+//! executed through the general trace-driven path instead
+//! ([`super::OpProgram`] + [`super::DagTrainer`]).
 
 use crate::anyhow::{bail, Result};
 
@@ -34,9 +39,22 @@ impl ChainSchedule {
     pub fn from_chain(g: &Graph, chain: &LowerSetChain) -> Result<ChainSchedule> {
         // Tower graphs: node 0 is the input stub; nodes 1..n are layers in
         // topo order (graph construction guarantees id order = topo order).
-        for (v, _) in g.nodes() {
-            if g.preds(v).len() > 1 {
-                bail!("executor only schedules chain graphs (towers)");
+        for (v, node) in g.nodes() {
+            let fan_in = g.preds(v).len();
+            if fan_in > 1 {
+                let inputs: Vec<&str> =
+                    g.preds(v).iter().map(|&p| g.node(p).name.as_str()).collect();
+                bail!(
+                    "graph '{}' is not a chain: node '{}' (id {}) has fan-in {} \
+                     (inputs: {}); the tower fast path only schedules chains — \
+                     use the general DAG executor (exec::OpProgram + exec::DagTrainer, \
+                     `repro train --model <zoo>`) for branching graphs",
+                    g.name,
+                    node.name,
+                    v.0,
+                    fan_in,
+                    inputs.join(", ")
+                );
             }
         }
         let n_layers = g.len() as usize - 1; // minus input stub
@@ -121,5 +139,20 @@ mod tests {
         let g = crate::models::transformer_tower(2, 32, 8, 4); // has residual fan-out
         let plan = plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap();
         assert!(ChainSchedule::from_chain(&g, &plan.chain).is_err());
+    }
+
+    #[test]
+    fn non_chain_error_names_offending_node_and_fan_in() {
+        // Regression: the old message ("executor only schedules chain
+        // graphs") left zoo users with nothing actionable. The structured
+        // error must name the first fan-in node, its degree and inputs,
+        // and point at the general executor.
+        let g = crate::models::transformer_tower(2, 32, 8, 4);
+        let plan = plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap();
+        let msg = ChainSchedule::from_chain(&g, &plan.chain).unwrap_err().to_string();
+        assert!(msg.contains("block0/add1"), "names the node: {msg}");
+        assert!(msg.contains("fan-in 2"), "names the degree: {msg}");
+        assert!(msg.contains("block0/attn"), "lists the inputs: {msg}");
+        assert!(msg.contains("DAG executor"), "points at the fix: {msg}");
     }
 }

@@ -341,30 +341,7 @@ impl Graph {
 #[cfg(test)]
 mod tests {
     use super::*;
-
-    /// Diamond: 0 → {1,2} → 3.
-    pub(crate) fn diamond() -> Graph {
-        let nodes = (0..4)
-            .map(|i| Node {
-                name: format!("n{i}"),
-                op: OpKind::Other,
-                mem: 10 * (i + 1) as u64,
-                time: 1,
-                shape: vec![],
-                param_bytes: 0,
-            })
-            .collect();
-        Graph::new(
-            "diamond",
-            nodes,
-            &[
-                (NodeId(0), NodeId(1)),
-                (NodeId(0), NodeId(2)),
-                (NodeId(1), NodeId(3)),
-                (NodeId(2), NodeId(3)),
-            ],
-        )
-    }
+    use crate::testutil::diamond;
 
     #[test]
     fn basic_shape() {

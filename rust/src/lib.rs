@@ -27,10 +27,14 @@
 //!   no native libraries. The `xla` cargo feature adds the PJRT backend,
 //!   which loads AOT-compiled HLO-text artifacts produced by
 //!   `python/compile/aot.py`.
-//! - [`exec`] — the training executor, generic over `Backend`: runs real
-//!   forward/backward steps following a recomputation plan,
-//!   caching/discarding/recomputing activations exactly as the canonical
-//!   strategy prescribes, with measured live-byte accounting.
+//! - [`exec`] — the training executors, generic over `Backend`: the chain
+//!   fast path (`TowerTrainer`) and the trace-driven general-DAG path
+//!   (`OpProgram` + `DagTrainer`, running the whole zoo's branch/merge
+//!   graphs for real), both following a recomputation plan exactly as the
+//!   canonical strategy prescribes, with measured live-byte accounting
+//!   cross-checked against the simulator.
+//! - [`testutil`] — shared seeded fixtures (`random_dag`, `chain_graph`,
+//!   `diamond`) used by the unit, integration and property suites.
 //! - [`coordinator`] — the training-loop driver: backend selection,
 //!   schedule comparison, metrics, JSON reports.
 //! - [`bench`] — shared harness code regenerating every table/figure of
@@ -78,7 +82,6 @@ pub mod runtime;
 pub mod sim;
 pub mod util;
 
-#[cfg(test)]
 pub mod testutil;
 
 pub use graph::{Graph, GraphBuilder, NodeId, NodeSet, OpKind};

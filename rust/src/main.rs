@@ -114,8 +114,10 @@ fn print_usage() {
            experiment --config F.json [--csv out.csv]  declarative sweep runner\n\
            export --network N --out F    dump a zoo graph as JSON\n\
            train [flags]                 real training with a recompute plan\n\
-                                         (native backend by default; --backend pjrt\n\
-                                         needs --features xla; 'repro train --help')"
+                                         (--model tower or any zoo name, e.g.\n\
+                                         'train --model resnet'; native backend by\n\
+                                         default, --backend pjrt needs --features\n\
+                                         xla; 'repro train --help')"
     );
 }
 

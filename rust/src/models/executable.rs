@@ -1,0 +1,128 @@
+//! Executable shape metadata: run any graph topology for real.
+//!
+//! The zoo graphs carry the *paper's* cost model (conv shapes at batch 96,
+//! hundreds of MB per node) — plannable, but far beyond what a reference
+//! CPU backend should execute. This module gives every topology a second
+//! life as a real training workload: each node is lowered to a uniform
+//! `[batch, width]` f32 tensor with one of three execution roles, so the
+//! whole zoo (ResNet, U-Net, DenseNet, GoogLeNet, PSPNet, …) trains
+//! end-to-end on [`crate::runtime::NativeBackend`] while keeping its exact
+//! branch/merge structure — which is what the planner actually cares
+//! about.
+//!
+//! Roles (decided purely by graph structure, so random property-test DAGs
+//! lower the same way as zoo graphs):
+//!
+//! - **Source** (no predecessors): forwards the batch input unchanged.
+//! - **Dense** (exactly one predecessor): fused dense layer
+//!   `gelu(x·W + b)` with its own `[width, width]` weights — the
+//!   `layer_fwd`/`layer_bwd` kernel pair.
+//! - **Merge** (two or more predecessors): variance-preserving fan-in
+//!   `Σ inputs / √k` — the `add`/`scale` kernels; no parameters. The √k
+//!   normalization keeps activations finite through DenseNet-style concat
+//!   cascades without changing the graph's memory structure.
+//!
+//! Every sink additionally feeds a mean-squared-error loss against the
+//! synthetic target (the `mse` kernel); the training loss is the sum over
+//! sinks in node-id order, which makes losses and gradients bit-exactly
+//! reproducible across execution schedules.
+
+use crate::graph::builder::BYTES_PER_ELEM;
+use crate::graph::{Graph, Node, NodeId};
+
+/// Execution role of a node under the uniform `[batch, width]` lowering.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum NodeRole {
+    /// No predecessors: forwards the batch input.
+    Source,
+    /// Exactly one predecessor: parameterized dense layer.
+    Dense,
+    /// Two or more predecessors: normalized elementwise fan-in sum.
+    Merge,
+}
+
+/// Classify `v` by its fan-in (structure decides, not `OpKind`, so any
+/// DAG — zoo or random — is executable).
+pub fn node_role(g: &Graph, v: NodeId) -> NodeRole {
+    match g.preds(v).len() {
+        0 => NodeRole::Source,
+        1 => NodeRole::Dense,
+        _ => NodeRole::Merge,
+    }
+}
+
+/// Parameter bytes a node owns under the lowering (dense layers carry a
+/// `[width, width]` weight plus a `[width]` bias).
+pub fn role_param_bytes(role: NodeRole, width: usize) -> u64 {
+    match role {
+        NodeRole::Dense => ((width * width + width) as u64) * BYTES_PER_ELEM,
+        NodeRole::Source | NodeRole::Merge => 0,
+    }
+}
+
+/// Re-cost `g` for execution at `[batch, width]`: same name, topology and
+/// op kinds, but every node's `M_v` is exactly the bytes of the tensor the
+/// executor will hold for it — which is what makes the simulator's
+/// predicted peak and the executor's observed peak comparable *as an
+/// equality*, not a bound.
+pub fn recost(g: &Graph, batch: usize, width: usize) -> Graph {
+    assert!(batch > 0 && width > 0, "batch/width must be positive");
+    let act = (batch * width) as u64 * BYTES_PER_ELEM;
+    let nodes: Vec<Node> = g
+        .nodes()
+        .map(|(v, n)| Node {
+            name: n.name.clone(),
+            op: n.op,
+            mem: act,
+            time: n.time,
+            shape: vec![width as u32],
+            param_bytes: role_param_bytes(node_role(g, v), width),
+        })
+        .collect();
+    let mut edges = Vec::with_capacity(g.edge_count());
+    for (v, _) in g.nodes() {
+        for &p in g.preds(v) {
+            edges.push((p, v));
+        }
+    }
+    Graph::new(format!("{}@exec{batch}x{width}", g.name), nodes, &edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+    use crate::testutil::diamond;
+
+    #[test]
+    fn recost_preserves_topology_and_uniformizes_memory() {
+        let g0 = zoo::find("ResNet50").unwrap().build_batch(1);
+        let g = recost(&g0, 4, 8);
+        assert_eq!(g.len(), g0.len());
+        assert_eq!(g.edge_count(), g0.edge_count());
+        for (v, n) in g.nodes() {
+            assert_eq!(n.mem, 4 * 8 * 4, "uniform activation bytes");
+            assert_eq!(g.preds(v).len(), g0.preds(v).len());
+        }
+    }
+
+    #[test]
+    fn roles_follow_fan_in() {
+        let g = diamond();
+        assert_eq!(node_role(&g, NodeId(0)), NodeRole::Source);
+        assert_eq!(node_role(&g, NodeId(1)), NodeRole::Dense);
+        assert_eq!(node_role(&g, NodeId(3)), NodeRole::Merge);
+        assert_eq!(role_param_bytes(NodeRole::Dense, 8), (64 + 8) * 4);
+        assert_eq!(role_param_bytes(NodeRole::Merge, 8), 0);
+    }
+
+    #[test]
+    fn zoo_has_real_merges_to_exercise() {
+        for name in ["U-Net", "ResNet50", "GoogLeNet"] {
+            let g = recost(&zoo::find(name).unwrap().build_batch(1), 2, 4);
+            let merges =
+                g.nodes().filter(|(v, _)| node_role(&g, *v) == NodeRole::Merge).count();
+            assert!(merges > 0, "{name} must have fan-in nodes");
+        }
+    }
+}

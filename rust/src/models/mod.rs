@@ -12,6 +12,7 @@
 
 pub mod common;
 mod densenet;
+pub mod executable;
 mod googlenet;
 mod mobilenet;
 mod pspnet;

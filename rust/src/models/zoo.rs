@@ -181,6 +181,14 @@ pub const EXTRAS: &[ZooEntry] = &[
         build: resnet34,
     },
     ZooEntry {
+        name: "ResNet101",
+        batch: 64,
+        input_hw: 224,
+        paper_nodes: 0,
+        paper: NO_PAPER_ROW,
+        build: resnet101,
+    },
+    ZooEntry {
         name: "MobileNetV1",
         batch: 256,
         input_hw: 224,
@@ -216,13 +224,24 @@ const NO_PAPER_ROW: PaperRow = PaperRow {
 };
 
 /// Look up a zoo entry by (case-insensitive) name, across Table 1 and the
-/// extra members.
+/// extra members. Common short names (`resnet`, `unet`, `densenet`,
+/// `vgg`, `psp`) resolve to their Table-1 representative.
 pub fn find(name: &str) -> Option<&'static ZooEntry> {
     let lower = name.to_ascii_lowercase();
+    let canonical = match lower.as_str() {
+        "resnet" => "resnet50",
+        "unet" | "u-net" => "u-net",
+        "densenet" => "densenet161",
+        "vgg" => "vgg19",
+        "psp" | "pspnet" => "pspnet",
+        "googlenet" | "inception" => "googlenet",
+        "mobilenet" => "mobilenetv1",
+        other => other,
+    };
     TABLE1
         .iter()
         .chain(EXTRAS.iter())
-        .find(|e| e.name.to_ascii_lowercase() == lower)
+        .find(|e| e.name.to_ascii_lowercase() == canonical)
 }
 
 #[cfg(test)]
@@ -251,6 +270,14 @@ mod tests {
         assert!(find("resnet50").is_some());
         assert!(find("RESNET50").is_some());
         assert!(find("nope").is_none());
+    }
+
+    #[test]
+    fn find_resolves_short_aliases() {
+        assert_eq!(find("resnet").unwrap().name, "ResNet50");
+        assert_eq!(find("unet").unwrap().name, "U-Net");
+        assert_eq!(find("densenet").unwrap().name, "DenseNet161");
+        assert_eq!(find("pspnet").unwrap().name, "PSPNet");
     }
 
     #[test]

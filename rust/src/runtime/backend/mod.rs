@@ -120,3 +120,10 @@ pub trait Backend {
 /// Names of the kernels every tower backend must provide.
 pub const TOWER_KERNELS: [&str; 6] =
     ["layer_bwd", "layer_fwd", "loss_head_bwd", "loss_head_fwd", "sgd_mat", "sgd_vec"];
+
+/// Extra kernels the general-DAG executor ([`crate::exec::DagTrainer`])
+/// needs beyond the tower set: elementwise fan-in/gradient accumulation
+/// (`add`), the merge normalization (`scale`), and the per-sink loss
+/// (`mse`). Currently provided by the native backend only — the PJRT
+/// artifact manifest predates general-DAG execution.
+pub const DAG_KERNELS: [&str; 3] = ["add", "mse", "scale"];

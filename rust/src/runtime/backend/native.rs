@@ -18,7 +18,7 @@ use std::time::Instant;
 
 use crate::anyhow::{bail, Result};
 
-use super::{Backend, KernelStat, TOWER_KERNELS};
+use super::{Backend, KernelStat, DAG_KERNELS, TOWER_KERNELS};
 
 /// A host-side f32 tensor: row-major data + dims (`[]` = scalar).
 #[derive(Clone)]
@@ -122,7 +122,12 @@ impl Backend for NativeBackend {
             "loss_head_bwd" => loss_head_bwd(args)?,
             "sgd_mat" => sgd(name, args, 2)?,
             "sgd_vec" => sgd(name, args, 1)?,
-            other => bail!("native backend has no kernel '{other}' (have: {TOWER_KERNELS:?})"),
+            "add" => add(args)?,
+            "scale" => scale(args)?,
+            "mse" => mse(args)?,
+            other => bail!(
+                "native backend has no kernel '{other}' (have: {TOWER_KERNELS:?} + {DAG_KERNELS:?})"
+            ),
         };
         let bytes_out: u64 = outs.iter().map(HostTensor::bytes).sum();
         self.record(name, t0, bytes_in, bytes_out);
@@ -130,7 +135,10 @@ impl Backend for NativeBackend {
     }
 
     fn kernels(&self) -> Vec<String> {
-        TOWER_KERNELS.iter().map(|s| s.to_string()).collect()
+        let mut ks: Vec<String> =
+            TOWER_KERNELS.iter().chain(DAG_KERNELS.iter()).map(|s| s.to_string()).collect();
+        ks.sort();
+        ks
     }
 
     fn stats(&self) -> Vec<KernelStat> {
@@ -325,6 +333,60 @@ fn loss_head_bwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
         HostTensor::new(gw, vec![k, k]),
         HostTensor::new(gb, vec![k]),
     ])
+}
+
+/// Elementwise `a + b` — the fan-in merge building block and the
+/// gradient-accumulation kernel of the general-DAG executor.
+fn add(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    if args.len() != 2 {
+        bail!("add: expected 2 args, got {}", args.len());
+    }
+    let (a, b) = (&args[0], &args[1]);
+    if a.dims() != b.dims() {
+        bail!("add: dims {:?} vs {:?}", a.dims(), b.dims());
+    }
+    let out: Vec<f32> = a.data().iter().zip(b.data()).map(|(&x, &y)| x + y).collect();
+    Ok(vec![HostTensor::new(out, a.dims().to_vec())])
+}
+
+/// Elementwise `x · s` for scalar `s` — normalizes merge fan-ins (and
+/// their backward pass-through) by `1/√k`.
+fn scale(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    if args.len() != 2 {
+        bail!("scale: expected 2 args, got {}", args.len());
+    }
+    let (x, s) = (&args[0], &args[1]);
+    if !s.dims().is_empty() {
+        bail!("scale: factor must be a scalar, got {:?}", s.dims());
+    }
+    let f = s.data()[0];
+    let out: Vec<f32> = x.data().iter().map(|&v| v * f).collect();
+    Ok(vec![HostTensor::new(out, x.dims().to_vec())])
+}
+
+/// Mean-squared-error loss + gradient in one call:
+/// `(mean((p − y)²), 2(p − y)/n)` — the per-sink loss of the DAG executor.
+fn mse(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+    if args.len() != 2 {
+        bail!("mse: expected 2 args, got {}", args.len());
+    }
+    let (p, y) = (&args[0], &args[1]);
+    if p.dims() != y.dims() {
+        bail!("mse: pred dims {:?} vs target dims {:?}", p.dims(), y.dims());
+    }
+    if p.is_empty() {
+        bail!("mse: empty prediction");
+    }
+    let n = p.len() as f32;
+    let mut loss = 0.0f32;
+    let mut grad = Vec::with_capacity(p.len());
+    for (&pv, &yv) in p.data().iter().zip(y.data()) {
+        let diff = pv - yv;
+        loss += diff * diff;
+        grad.push(2.0 * diff / n);
+    }
+    loss /= n;
+    Ok(vec![HostTensor::new(vec![loss], vec![]), HostTensor::new(grad, p.dims().to_vec())])
 }
 
 /// `p − lr·g` elementwise; `rank` pins the expected dimensionality so the
@@ -572,6 +634,46 @@ mod tests {
         assert_eq!(stats[0].calls, 3);
         assert_eq!(stats[0].bytes_in, 3 * (12 + 16 + 4) * 4);
         assert_eq!(stats[0].bytes_out, 3 * 12 * 4);
-        assert_eq!(b.kernels().len(), TOWER_KERNELS.len());
+        assert_eq!(b.kernels().len(), TOWER_KERNELS.len() + DAG_KERNELS.len());
+    }
+
+    #[test]
+    fn add_and_scale_are_elementwise() {
+        let b = be();
+        let x = b.upload(&[1.0, 2.0, 3.0, 4.0], &[2, 2]).unwrap();
+        let y = b.upload(&[0.5, 0.5, -1.0, 1.0], &[2, 2]).unwrap();
+        let sum = b.run("add", &[x.clone(), y]).unwrap();
+        assert_eq!(b.download(&sum[0]).unwrap(), vec![1.5, 2.5, 2.0, 5.0]);
+        let s = b.upload(&[0.5], &[]).unwrap();
+        let half = b.run("scale", &[x.clone(), s]).unwrap();
+        assert_eq!(b.download(&half[0]).unwrap(), vec![0.5, 1.0, 1.5, 2.0]);
+        // Shape validation.
+        let bad = b.upload(&[0.0; 2], &[2]).unwrap();
+        assert!(b.run("add", &[x.clone(), bad.clone()]).is_err());
+        assert!(b.run("scale", &[x, bad]).is_err());
+    }
+
+    #[test]
+    fn mse_gradient_matches_finite_differences() {
+        let b = be();
+        let (m, k) = (3usize, 4usize);
+        let mut rng = Pcg32::seeded(21);
+        let p = randn(&mut rng, m * k, 1.0);
+        let y = randn(&mut rng, m * k, 1.0);
+        let loss_of = |p: &[f32]| -> f64 {
+            let out = b
+                .run(
+                    "mse",
+                    &[b.upload(p, &[m, k]).unwrap(), b.upload(&y, &[m, k]).unwrap()],
+                )
+                .unwrap();
+            out[0].data()[0] as f64
+        };
+        let outs = b
+            .run("mse", &[b.upload(&p, &[m, k]).unwrap(), b.upload(&y, &[m, k]).unwrap()])
+            .unwrap();
+        assert_eq!(outs.len(), 2);
+        assert!(outs[0].dims().is_empty(), "scalar loss");
+        fd_check(outs[1].data(), &p, loss_of);
     }
 }

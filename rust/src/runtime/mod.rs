@@ -13,7 +13,7 @@
 
 pub mod backend;
 
-pub use backend::{Backend, HostTensor, KernelStat, NativeBackend, TOWER_KERNELS};
+pub use backend::{Backend, HostTensor, KernelStat, NativeBackend, DAG_KERNELS, TOWER_KERNELS};
 
 #[cfg(feature = "xla")]
 pub use backend::pjrt::{

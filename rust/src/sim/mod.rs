@@ -110,6 +110,7 @@ fn peak_without_liveness(tr: &Trace) -> (u64, usize) {
                 let bytes = sizes.remove(&buffer).expect("free of dead buffer");
                 live -= bytes;
             }
+            Event::Backprop { .. } => {}
         }
     }
     assert!(sizes.is_empty(), "buffers leaked: {}", sizes.len());
@@ -129,7 +130,7 @@ fn peak_with_liveness(tr: &Trace) -> (u64, usize) {
             Event::Alloc { buffer, .. } | Event::Use { buffer } => {
                 last_use.insert(buffer, i);
             }
-            Event::Free { .. } => {}
+            Event::Free { .. } | Event::Backprop { .. } => {}
         }
     }
     // Buffers to free after each position.

@@ -20,6 +20,13 @@
 //! checked: every read must target a live buffer, which proves the
 //! canonical strategy never uses a value it discarded — the core safety
 //! property of the whole approach.
+//!
+//! Traces are also *executable*: every forward materialization is an
+//! [`Event::Alloc`] of a `Fwd` buffer and every backward op is announced
+//! by an explicit [`Event::Backprop`] marker, so
+//! [`crate::exec::OpProgram`] can compile a trace into the exact kernel
+//! schedule a real backend runs — same events drive the simulator's
+//! accounting and the executor's kernels.
 
 use crate::graph::{Graph, NodeId, NodeSet};
 use crate::planner::LowerSetChain;
@@ -54,6 +61,12 @@ pub enum Event {
     /// Strategy-mandated free (honored in no-liveness mode; liveness mode
     /// recomputes frees from last uses).
     Free { buffer: Buffer },
+    /// The backward op of `node` executes at this point; its reads
+    /// (`fwd(node)`, `grad(node)`, `fwd(preds)`) and the gradient
+    /// allocations for its predecessors follow as separate events. No
+    /// memory effect of its own — the marker exists so the executor can
+    /// compile the trace into real kernel calls.
+    Backprop { node: NodeId },
 }
 
 /// The step trace plus bookkeeping totals.
@@ -115,6 +128,7 @@ pub fn canonical_trace(g: &Graph, chain: &LowerSetChain) -> Trace {
             if !seg.contains(v) {
                 continue;
             }
+            tb.backprop(v);
             // Reads: own output, own gradient, predecessors' outputs.
             tb.use_fwd(v);
             tb.use_grad(v);
@@ -159,6 +173,7 @@ pub fn vanilla_trace(g: &Graph) -> Trace {
         tb.alloc_grad(v);
     }
     for &v in g.topo_order().iter().rev() {
+        tb.backprop(v);
         tb.use_fwd(v);
         tb.use_grad(v);
         for &p in g.preds(v) {
@@ -248,6 +263,10 @@ impl<'g> TraceBuilder<'g> {
             compute_time: 0,
             recompute: false,
         });
+    }
+
+    fn backprop(&mut self, v: NodeId) {
+        self.events.push(Event::Backprop { node: v });
     }
 
     fn use_grad(&mut self, v: NodeId) {

@@ -1,10 +1,16 @@
-//! Shared helpers for unit/property tests (compiled only under `cfg(test)`).
+//! Shared fixtures for unit, integration and property tests.
+//!
+//! Compiled unconditionally (not `cfg(test)`) so the integration suites
+//! under `rust/tests/` and downstream harnesses can drive the same seeded
+//! graph generators as the in-crate property tests. Not part of the
+//! stable library surface — test support only.
 
-use crate::graph::{Graph, GraphBuilder, NodeId, OpKind};
+use crate::graph::{Graph, GraphBuilder, Node, NodeId, OpKind};
 use crate::util::rng::Pcg32;
 
 /// Random weakly-connected DAG with random costs — the workhorse of the
-/// property tests (planner-vs-oracle, trace safety, simulator invariants).
+/// property tests (planner-vs-oracle, trace safety, simulator invariants,
+/// executor-vs-vanilla bit-exactness).
 pub fn random_dag(rng: &mut Pcg32, n: u32) -> Graph {
     let mut b = GraphBuilder::new("rand", 1);
     let mut ids: Vec<NodeId> = Vec::new();
@@ -38,4 +44,31 @@ pub fn chain_graph(mems: &[u64]) -> Graph {
         prev = Some(b.add_raw(format!("n{i}"), OpKind::Other, m, 1, &inputs));
     }
     b.build()
+}
+
+/// The diamond / fan-in fixture `0 → {1, 2} → 3` with `M_v = 10·(v+1)`
+/// and unit times — the smallest graph exercising both fan-out (node 0
+/// read twice) and fan-in (node 3 merges two branches). Shared by the
+/// graph/planner unit tests and the executor integration suite.
+pub fn diamond() -> Graph {
+    let nodes = (0..4)
+        .map(|i| Node {
+            name: format!("n{i}"),
+            op: OpKind::Other,
+            mem: 10 * (i + 1) as u64,
+            time: 1,
+            shape: vec![],
+            param_bytes: 0,
+        })
+        .collect();
+    Graph::new(
+        "diamond",
+        nodes,
+        &[
+            (NodeId(0), NodeId(1)),
+            (NodeId(0), NodeId(2)),
+            (NodeId(1), NodeId(3)),
+            (NodeId(2), NodeId(3)),
+        ],
+    )
 }

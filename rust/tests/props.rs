@@ -1,0 +1,222 @@
+//! Seeded property harness for the trace-driven general-DAG executor.
+//!
+//! Three end-to-end claims, each over seeded random graphs so failures
+//! reproduce exactly:
+//!
+//! 1. **Schedules don't change numerics.** For random DAGs × every
+//!    planner family (exact DP, approx DP, Chen's baseline, the DFS
+//!    oracle), executing the compiled recomputation program yields the
+//!    same forward loss and the same parameter gradients as vanilla
+//!    execution — *bit-exactly* (compared via `f32::to_bits`).
+//! 2. **Observed memory is predicted memory.** On executable-lowered
+//!    chains and random DAGs, the executor's per-step live-byte counter
+//!    equals the program's model prediction, and its peak equals
+//!    `sim::SimReport::peak_bytes` with liveness off — as an equality.
+//!    Divergence reports the first differing step, rendered.
+//! 3. **The zoo runs.** ResNet50 and U-Net (and friends) train end to end
+//!    on the native backend under a planner-chosen budget with both
+//!    invariants holding.
+
+use recompute::coordinator::train::{bits_equal, grad_maps_equal, train_zoo_model};
+use recompute::exec::{DagTrainer, GradMap, OpProgram, StepReport, TrainConfig};
+use recompute::models::executable::recost;
+use recompute::planner::{
+    chen_plan, exhaustive_search, plan_at_min_budget, Family, LowerSetChain, Objective,
+};
+use recompute::runtime::{Backend, HostTensor, NativeBackend};
+use recompute::sim::{canonical_trace, measure, SimOptions};
+use recompute::testutil::{chain_graph, diamond, random_dag};
+use recompute::util::rng::Pcg32;
+use recompute::Graph;
+
+const BATCH: usize = 4;
+const WIDTH: usize = 8;
+const LR: f32 = 0.05;
+const SEED: u64 = 7;
+
+/// Fresh trainer + one recorded step of `prog` on the shared batch.
+fn run_one(g: &Graph, prog: &OpProgram, x: &HostTensor, y: &HostTensor) -> StepReport {
+    let mut t = DagTrainer::new(NativeBackend::new(BATCH, WIDTH), g, SEED).unwrap();
+    t.run_step(prog, x, y, LR, true).unwrap()
+}
+
+/// Shared random batch for one graph's comparisons.
+fn batch_xy(rng: &mut Pcg32) -> (HostTensor, HostTensor) {
+    let be = NativeBackend::new(BATCH, WIDTH);
+    let n = BATCH * WIDTH;
+    let xv: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+    let yv: Vec<f32> = (0..n).map(|_| (1.7 * rng.normal() as f32).sin()).collect();
+    (be.upload(&xv, &[BATCH, WIDTH]).unwrap(), be.upload(&yv, &[BATCH, WIDTH]).unwrap())
+}
+
+fn assert_grads_bitwise(label: &str, case: u32, vanilla: &GradMap, got: &GradMap) {
+    if grad_maps_equal(vanilla, got) {
+        return;
+    }
+    assert_eq!(vanilla.len(), got.len(), "[{label} case {case}] gradient node sets differ");
+    for (node, (w0, b0)) in vanilla {
+        let (w1, b1) = &got[node];
+        assert!(
+            bits_equal(w0, w1) && bits_equal(b0, b1),
+            "[{label} case {case}] gradient of node {node} diverged from vanilla"
+        );
+    }
+    panic!("[{label} case {case}] gradient maps diverged");
+}
+
+#[test]
+fn every_planner_matches_vanilla_bit_exactly_on_random_dags() {
+    let mut rng = Pcg32::seeded(0xda6);
+    for case in 0..10u32 {
+        let n = rng.range(4, 10);
+        let g = random_dag(&mut rng, n);
+        let (x, y) = batch_xy(&mut rng);
+
+        let vanilla = OpProgram::vanilla(&g).unwrap();
+        let base = run_one(&g, &vanilla, &x, &y);
+        let base_grads = base.grads.as_ref().unwrap();
+
+        let mut plans: Vec<(&str, LowerSetChain)> = Vec::new();
+        let exact = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+        let exact_budget = exact.budget;
+        plans.push(("exact-dp", exact.chain));
+        plans.push((
+            "approx-dp",
+            plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap().chain,
+        ));
+        plans.push((
+            "exact-dp-mc",
+            plan_at_min_budget(&g, Family::Exact, Objective::MaxOverhead).unwrap().chain,
+        ));
+        plans.push(("chen", chen_plan(&g, |c| c.peak_mem(&g)).unwrap().chain));
+        if n <= 8 {
+            plans.push((
+                "dfs-oracle",
+                exhaustive_search(&g, exact_budget, Objective::MinOverhead)
+                    .expect("oracle feasible at the exact min budget"),
+            ));
+        }
+
+        for (label, chain) in plans {
+            let prog = OpProgram::from_chain(&g, &chain)
+                .unwrap_or_else(|e| panic!("[{label} case {case}] compile: {e}"));
+            let r = run_one(&g, &prog, &x, &y);
+            assert_eq!(
+                base.loss.to_bits(),
+                r.loss.to_bits(),
+                "[{label} case {case}] loss diverged: vanilla {} vs {}",
+                base.loss,
+                r.loss
+            );
+            assert_grads_bitwise(label, case, base_grads, r.grads.as_ref().unwrap());
+        }
+    }
+}
+
+/// On failure, name the first step whose observed live bytes differ from
+/// the model prediction — the debuggability contract of the harness.
+fn assert_trajectory_matches(label: &str, g: &Graph, prog: &OpProgram, r: &StepReport) {
+    assert_eq!(r.live_trajectory.len(), prog.predicted_live.len(), "[{label}] step counts");
+    if let Some(i) =
+        (0..prog.steps.len()).find(|&i| r.live_trajectory[i] != prog.predicted_live[i])
+    {
+        panic!(
+            "[{label}] live-byte divergence at step {i} ({}): observed {} vs predicted {}",
+            prog.steps[i].describe(g),
+            r.live_trajectory[i],
+            prog.predicted_live[i]
+        );
+    }
+}
+
+#[test]
+fn observed_peak_equals_simulator_prediction_on_chains_and_dags() {
+    let mut rng = Pcg32::seeded(0x9ea);
+    // Chains of several lengths plus random DAG topologies, all lowered
+    // to the executable cost model (M_v = real tensor bytes).
+    let mut graphs: Vec<Graph> = vec![
+        recost(&chain_graph(&[1; 6]), BATCH, WIDTH),
+        recost(&chain_graph(&[1; 13]), BATCH, WIDTH),
+        recost(&diamond(), BATCH, WIDTH),
+    ];
+    for _ in 0..8 {
+        let n = rng.range(4, 12);
+        graphs.push(recost(&random_dag(&mut rng, n), BATCH, WIDTH));
+    }
+    for (gi, g) in graphs.iter().enumerate() {
+        let (x, y) = batch_xy(&mut rng);
+        for obj in [Objective::MinOverhead, Objective::MaxOverhead] {
+            let plan = plan_at_min_budget(g, Family::Exact, obj).unwrap();
+            let tr = canonical_trace(g, &plan.chain);
+            let prog = OpProgram::compile(g, &tr).unwrap();
+            let sim = measure(g, &tr, SimOptions { liveness: false, include_params: false });
+            let label = format!("graph {gi} {:?}", obj);
+            let r = run_one(g, &prog, &x, &y);
+            assert_trajectory_matches(&label, g, &prog, &r);
+            assert_eq!(
+                r.observed_peak,
+                sim.peak_bytes,
+                "[{label}] observed peak (at step {}: {}) vs SimReport::peak_bytes \
+                 (predicted peak at step {}: {})",
+                r.peak_step,
+                prog.steps[r.peak_step].describe(g),
+                prog.predicted_peak_step(),
+                prog.steps[prog.predicted_peak_step()].describe(g),
+            );
+        }
+        // Vanilla execution obeys the same equality.
+        let prog = OpProgram::vanilla(g).unwrap();
+        let r = run_one(g, &prog, &x, &y);
+        assert_trajectory_matches(&format!("graph {gi} vanilla"), g, &prog, &r);
+    }
+}
+
+#[test]
+fn diamond_fixture_runs_under_every_schedule() {
+    // The shared fan-in/fan-out fixture (also used by the graph and exec
+    // unit suites) through the integration path: vanilla, the exact plan,
+    // and the maximally-coarse whole-graph strategy all agree bitwise.
+    let g = recost(&diamond(), BATCH, WIDTH);
+    let mut rng = Pcg32::seeded(0xd1a);
+    let (x, y) = batch_xy(&mut rng);
+    let vanilla = run_one(&g, &OpProgram::vanilla(&g).unwrap(), &x, &y);
+    let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+    for chain in [plan.chain, recompute::planner::whole_graph_chain(&g)] {
+        let prog = OpProgram::from_chain(&g, &chain).unwrap();
+        let r = run_one(&g, &prog, &x, &y);
+        assert_eq!(vanilla.loss.to_bits(), r.loss.to_bits());
+        let (gv, gr) = (vanilla.grads.as_ref().unwrap(), r.grads.as_ref().unwrap());
+        assert_grads_bitwise("diamond", 0, gv, gr);
+    }
+}
+
+#[test]
+fn zoo_resnet_and_unet_train_end_to_end_with_invariants() {
+    let cfg = TrainConfig { layers: 0, steps: 2, lr: 0.02, seed: 11, log_every: 0 };
+    for model in ["resnet", "unet"] {
+        let cmp = train_zoo_model(model, 2, 4, &cfg, None, Objective::MinOverhead, true)
+            .unwrap_or_else(|e| panic!("{model}: {e}"));
+        assert!(cmp.grads_match, "{model}: planned gradients must match vanilla bit-exactly");
+        assert!(cmp.peak_matches_sim, "{model}: observed peak must equal sim prediction");
+        assert!(cmp.losses_identical, "{model}: loss trajectories must be bit-identical");
+        assert!(
+            cmp.planned.observed_peak < cmp.vanilla.observed_peak,
+            "{model}: recomputation must reduce the measured peak"
+        );
+        assert!(cmp.planned.losses.iter().all(|l| l.is_finite()), "{model}: finite losses");
+        assert!(cmp.planned.recomputes_per_step > 0, "{model}: plan actually recomputes");
+    }
+}
+
+#[test]
+fn chain_schedule_error_is_actionable_for_zoo_graphs() {
+    // Regression (integration-level): planning a branching zoo model and
+    // feeding it to the chain fast path must produce an error naming the
+    // offending node, not a generic rejection.
+    use recompute::exec::ChainSchedule;
+    let g = recost(&recompute::models::zoo::find("unet").unwrap().build_batch(1), 2, 4);
+    let plan = plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap();
+    let msg = ChainSchedule::from_chain(&g, &plan.chain).unwrap_err().to_string();
+    assert!(msg.contains("fan-in"), "degree in message: {msg}");
+    assert!(msg.contains("DAG executor"), "remediation in message: {msg}");
+}
