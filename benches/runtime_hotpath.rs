@@ -66,7 +66,7 @@ fn main() {
 
     // -- native-backend kernels --------------------------------------------
     let (batch, width) = (32usize, 64usize);
-    let be = NativeBackend::new(batch, width);
+    let be = NativeBackend::new();
     let xdata = vec![0.1f32; batch * width];
     let wdata = vec![0.05f32; width * width];
     let bdata = vec![0.0f32; width];

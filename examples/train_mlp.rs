@@ -16,7 +16,7 @@
 
 use recompute::anyhow::Result;
 use recompute::coordinator::report::{loss_summary, report_json};
-use recompute::coordinator::train::{compare_schedules, trajectories_identical};
+use recompute::coordinator::train::{compare_schedules, trajectories_identical, BudgetSpec};
 use recompute::exec::{TowerTrainer, TrainConfig};
 use recompute::fmt_bytes;
 use recompute::util::json::Json;
@@ -36,7 +36,7 @@ fn main() -> Result<()> {
         || TowerTrainer::native(batch, width, &cfg),
         &cfg,
         &["vanilla", "tc", "mc"],
-        None,
+        BudgetSpec::MinFeasible,
         false,
     )?;
     for (mode, r) in &reports {

@@ -2,15 +2,17 @@
 //!
 //!     cargo run --release --example train_zoo
 //!
-//! Lowers the ResNet50 topology to executable `[batch, width]` tensors,
-//! plans it with the approximate DP at the minimal feasible budget, and
+//! Lowers the ResNet50 topology to heterogeneous `[batch, width_v]`
+//! tensors (per-node widths from the model's own `M_v` profile), plans
+//! it with the approximate DP at the minimal feasible budget, and
 //! trains it under both vanilla and the planned schedule — printing the
-//! executor's two verified invariants: the loss/gradients are
-//! bit-identical across schedules, and the observed peak equals the
-//! simulator's no-liveness prediction.
+//! executor's verified invariants: the loss/gradients are bit-identical
+//! across schedules, the observed peak equals the simulator's
+//! no-liveness prediction, and the per-node activation sizes really are
+//! non-uniform.
 
 use recompute::anyhow::Result;
-use recompute::coordinator::train::train_zoo_model;
+use recompute::coordinator::train::{train_zoo_model, BudgetSpec};
 use recompute::exec::TrainConfig;
 use recompute::fmt_bytes;
 use recompute::planner::Objective;
@@ -18,9 +20,17 @@ use recompute::planner::Objective;
 fn main() -> Result<()> {
     let cfg = TrainConfig { layers: 0, steps: 10, lr: 0.05, seed: 7, log_every: 0 };
     for model in ["resnet", "unet"] {
-        let cmp = train_zoo_model(model, 8, 16, &cfg, None, Objective::MinOverhead, true)?;
+        let cmp = train_zoo_model(
+            model,
+            8,
+            16,
+            &cfg,
+            BudgetSpec::MinFeasible,
+            Objective::MinOverhead,
+            true,
+        )?;
         println!(
-            "{:<24} k={:<3} recompute/step={:<4} peak vanilla {} → planned {} (sim {})",
+            "{:<28} k={:<3} recompute/step={:<4} peak vanilla {} → planned {} (sim {})",
             cmp.model,
             cmp.k,
             cmp.planned.recomputes_per_step,
@@ -29,10 +39,17 @@ fn main() -> Result<()> {
             fmt_bytes(cmp.sim_peak),
         );
         println!(
+            "  node activation sizes: {} distinct ({} … {})",
+            cmp.distinct_act_bytes,
+            fmt_bytes(cmp.act_bytes_range.0),
+            fmt_bytes(cmp.act_bytes_range.1),
+        );
+        println!(
             "  gradients bit-identical: {}   observed peak == sim prediction: {}   losses identical: {}",
             cmp.grads_match, cmp.peak_matches_sim, cmp.losses_identical
         );
         assert!(cmp.grads_match && cmp.peak_matches_sim && cmp.losses_identical);
+        assert!(cmp.distinct_act_bytes >= 2, "{model}: lowering must be heterogeneous");
     }
     Ok(())
 }

@@ -10,21 +10,28 @@
 //!   --model M         tower (default) | any zoo name (resnet, unet,
 //!                     densenet161, googlenet, pspnet, …). Zoo models run
 //!                     on the general DAG executor (native backend only):
-//!                     the topology is lowered to [batch, width] tensors,
+//!                     the topology is lowered to heterogeneous
+//!                     [batch, width_v] tensors (per-node widths from the
+//!                     model's own M_v profile, capped at --width),
 //!                     planned, executed under vanilla + the plan, and
 //!                     verified (bit-exact gradients, observed peak ==
-//!                     simulator prediction).
+//!                     simulator prediction, ≥ 2 distinct per-node
+//!                     activation sizes).
 //!   --backend B       native | pjrt (default: native; tower only)
-//!   --batch N         native backend batch size (default 32)
-//!   --width N         native backend tower width (default 64)
+//!   --batch N         batch size (default 32)
+//!   --width N         tower width / max zoo node width (default 64)
 //!   --artifacts DIR   pjrt artifact directory (default: artifacts)
 //!   --layers N        hidden layers (default 12; tower only)
 //!   --steps N         training steps (default 50)
 //!   --lr F            learning rate (default 0.1)
 //!   --mode M          vanilla | tc | mc | all (default all; zoo models
 //!                     use tc unless --mode mc)
-//!   --budget-frac F   activation budget as a fraction of vanilla (tc/mc
-//!                     default: minimal feasible)
+//!   --budget B        absolute activation budget: bare number = GB
+//!                     (same contract as `repro plan`), unit suffix =
+//!                     bytes (512KiB, 2MiB, 1GiB); an infeasible budget
+//!                     errors naming the graph's min_feasible_budget
+//!   --budget-frac F   activation budget as a fraction of vanilla
+//!                     (default without either flag: minimal feasible)
 //!   --report FILE     write a JSON report (tower only)
 //!   --stats           print per-kernel backend timing/byte statistics
 //!   --quiet           suppress per-step loss logging
@@ -34,11 +41,11 @@ use std::path::PathBuf;
 use crate::anyhow::{anyhow, bail, Result};
 
 use crate::exec::{TowerTrainer, TrainConfig, TrainReport};
-use crate::fmt_bytes;
 use crate::util::json::Json;
+use crate::{fmt_bytes, parse_budget};
 
 use super::report::{loss_summary, report_json};
-use super::train::{compare_schedules, parse_modes, trajectories_identical};
+use super::train::{compare_schedules, parse_modes, trajectories_identical, BudgetSpec};
 
 struct TrainArgs {
     model: String,
@@ -50,10 +57,23 @@ struct TrainArgs {
     steps: usize,
     lr: f32,
     mode: String,
+    budget: Option<u64>,
     budget_frac: Option<f64>,
     report: Option<PathBuf>,
     stats: bool,
     quiet: bool,
+}
+
+impl TrainArgs {
+    /// Combine `--budget` / `--budget-frac` into one [`BudgetSpec`].
+    fn budget_spec(&self) -> Result<BudgetSpec> {
+        match (self.budget, self.budget_frac) {
+            (Some(_), Some(_)) => bail!("--budget and --budget-frac are mutually exclusive"),
+            (Some(b), None) => Ok(BudgetSpec::Bytes(b)),
+            (None, Some(f)) => Ok(BudgetSpec::Frac(f)),
+            (None, None) => Ok(BudgetSpec::MinFeasible),
+        }
+    }
 }
 
 fn parse_args(args: &[String]) -> Result<TrainArgs> {
@@ -67,6 +87,7 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
         steps: 50,
         lr: 0.1,
         mode: "all".into(),
+        budget: None,
         budget_frac: None,
         report: None,
         stats: false,
@@ -85,12 +106,13 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
             "--steps" => out.steps = val()?.parse()?,
             "--lr" => out.lr = val()?.parse()?,
             "--mode" => out.mode = val()?.clone(),
+            "--budget" => out.budget = Some(parse_budget(val()?)?),
             "--budget-frac" => out.budget_frac = Some(val()?.parse()?),
             "--report" => out.report = Some(PathBuf::from(val()?)),
             "--stats" => out.stats = true,
             "--quiet" => out.quiet = true,
             "--help" | "-h" => {
-                bail!("see module docs: repro train [--model tower|<zoo>] [--backend native|pjrt] [--batch N] [--width N] [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--budget-frac F] [--report FILE] [--stats] [--quiet]")
+                bail!("see module docs: repro train [--model tower|<zoo>] [--backend native|pjrt] [--batch N] [--width N] [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--budget GB|512KiB] [--budget-frac F] [--report FILE] [--stats] [--quiet]")
             }
             other => bail!("unknown train flag {other}"),
         }
@@ -115,6 +137,7 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
         return train_zoo(&a, &cfg);
     }
     let modes = parse_modes(&a.mode)?;
+    let budget = a.budget_spec()?;
 
     // Each mode gets a fresh trainer: training mutates parameters, and the
     // schedules must see identical initial conditions for the bitwise
@@ -124,7 +147,7 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
             || TowerTrainer::native(a.batch, a.width, &cfg),
             &cfg,
             &modes,
-            a.budget_frac,
+            budget,
             a.quiet,
         )?,
         "pjrt" => run_pjrt(&a, &cfg, &modes)?,
@@ -219,7 +242,7 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
         a.batch,
         a.width,
         cfg,
-        a.budget_frac,
+        a.budget_spec()?,
         objective,
         a.quiet,
     )?;
@@ -238,6 +261,14 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
     println!(
         "model {} ({} nodes): k={} segments, overhead={} T_v units",
         cmp.model, cmp.nodes, cmp.k, cmp.overhead
+    );
+    // `train_zoo_model` refuses uniform lowerings up front, so any
+    // comparison that reaches this report is heterogeneous.
+    println!(
+        "per-node activation bytes: {} distinct sizes ({} … {}): HETEROGENEOUS ✓",
+        cmp.distinct_act_bytes,
+        fmt_bytes(cmp.act_bytes_range.0),
+        fmt_bytes(cmp.act_bytes_range.1),
     );
     println!(
         "gradients vanilla vs planned: {}",
@@ -299,7 +330,7 @@ fn run_pjrt(
         || TowerTrainer::from_artifacts(&dir, cfg),
         cfg,
         modes,
-        a.budget_frac,
+        a.budget_spec()?,
         a.quiet,
     )
 }

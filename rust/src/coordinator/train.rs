@@ -9,22 +9,64 @@
 //!   configuration under a set of schedules (vanilla / time-centric /
 //!   memory-centric) and returns the measured reports;
 //! - the zoo engine ([`train_zoo_model`]): lowers any zoo topology to the
-//!   executable `[batch, width]` form, plans it, compiles vanilla and
-//!   planned [`OpProgram`]s, verifies loss + parameter gradients are
-//!   bit-identical and that the observed peak equals the simulator's
-//!   no-liveness prediction, then trains both and reports.
+//!   *heterogeneous* executable form (per-node widths from the model's
+//!   own `M_v` profile, see
+//!   [`crate::models::executable::recost_profiled`]), plans it, compiles
+//!   vanilla and planned [`OpProgram`]s, verifies loss + parameter
+//!   gradients are bit-identical and that the observed peak equals the
+//!   simulator's no-liveness prediction, then trains both and reports.
+//!
+//! Budgets for planned schedules are described by [`BudgetSpec`]:
+//! minimal-feasible (the default), an absolute byte count (`--budget
+//! 512KiB`), or a fraction of total activation memory (`--budget-frac`).
+//! Absolute budgets below the graph's minimal feasible budget error out
+//! *naming* that minimum, so an infeasible request is actionable.
 
 use crate::anyhow::{anyhow, bail, Result};
 use crate::exec::{
-    ChainSchedule, DagTrainReport, DagTrainer, GradMap, OpProgram, SyntheticTask,
-    TowerTrainer, TrainConfig, TrainReport,
+    ChainSchedule, DagTask, DagTrainReport, DagTrainer, GradMap, OpProgram, TowerTrainer,
+    TrainConfig, TrainReport,
 };
 use crate::fmt_bytes;
-use crate::models::executable::recost;
+use crate::graph::Graph;
+use crate::models::executable::{distinct_act_sizes, recost_profiled};
 use crate::models::{mlp_tower, zoo};
-use crate::planner::{build_context, Family, Objective};
-use crate::runtime::{Backend, NativeBackend};
+use crate::planner::{build_context, DpContext, Family, Objective};
+use crate::runtime::NativeBackend;
 use crate::sim::{simulate, SimOptions};
+
+/// How the activation budget for a planned schedule is chosen.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum BudgetSpec {
+    /// Plan at the minimal feasible budget B*.
+    MinFeasible,
+    /// Absolute activation budget in bytes. Errors (naming B*) if the
+    /// graph cannot be executed under it.
+    Bytes(u64),
+    /// Fraction of the graph's total activation memory, clamped up to
+    /// B* (a fraction can never make the problem infeasible).
+    Frac(f64),
+}
+
+impl BudgetSpec {
+    /// Resolve the spec against a planning context. Infeasible absolute
+    /// budgets report the graph's `min_feasible_budget` instead of a
+    /// bare failure.
+    pub fn resolve(self, g: &Graph, ctx: &DpContext) -> Result<u64> {
+        let min_b = ctx.min_feasible_budget();
+        match self {
+            BudgetSpec::MinFeasible => Ok(min_b),
+            BudgetSpec::Frac(f) => Ok(((g.total_mem() as f64 * f) as u64).max(min_b)),
+            BudgetSpec::Bytes(b) if b < min_b => bail!(
+                "budget {} infeasible for {}: min_feasible_budget = {}",
+                fmt_bytes(b),
+                g.name,
+                fmt_bytes(min_b)
+            ),
+            BudgetSpec::Bytes(b) => Ok(b),
+        }
+    }
+}
 
 /// Parse a `--mode` value into the schedule list to run.
 pub fn parse_modes(mode: &str) -> Result<Vec<&'static str>> {
@@ -38,17 +80,13 @@ pub fn parse_modes(mode: &str) -> Result<Vec<&'static str>> {
 }
 
 /// Build the executable schedule for one mode over a `layers`-deep MLP
-/// tower at `(batch, width)`.
-///
-/// `budget_frac` scales the activation budget as a fraction of the
-/// tower's total activation memory (clamped to the minimal feasible
-/// budget); `None` plans at the minimal feasible budget B*.
+/// tower at `(batch, width)`, planning under `budget`.
 pub fn schedule_for_mode(
     mode: &str,
     layers: usize,
     width: usize,
     batch: usize,
-    budget_frac: Option<f64>,
+    budget: BudgetSpec,
 ) -> Result<ChainSchedule> {
     if mode == "vanilla" {
         return Ok(ChainSchedule::vanilla(layers + 1));
@@ -60,14 +98,14 @@ pub fn schedule_for_mode(
     };
     let g = mlp_tower(layers as u32, width as u32, batch as u64);
     let ctx = build_context(&g, Family::Exact);
-    let min_b = ctx.min_feasible_budget();
-    let budget = match budget_frac {
-        Some(f) => ((g.total_mem() as f64 * f) as u64).max(min_b),
-        None => min_b,
-    };
-    let sol = ctx
-        .solve(budget, obj)
-        .ok_or_else(|| anyhow!("budget {} infeasible", fmt_bytes(budget)))?;
+    let budget = budget.resolve(&g, &ctx)?;
+    let sol = ctx.solve(budget, obj).ok_or_else(|| {
+        anyhow!(
+            "budget {} infeasible: min_feasible_budget = {}",
+            fmt_bytes(budget),
+            fmt_bytes(ctx.min_feasible_budget())
+        )
+    })?;
     ChainSchedule::from_chain(&g, &sol.chain)
 }
 
@@ -78,23 +116,18 @@ pub fn compare_schedules<B, F>(
     make_trainer: F,
     cfg: &TrainConfig,
     modes: &[&str],
-    budget_frac: Option<f64>,
+    budget: BudgetSpec,
     quiet: bool,
 ) -> Result<Vec<(String, TrainReport)>>
 where
-    B: Backend,
+    B: crate::runtime::Backend,
     F: Fn() -> Result<TowerTrainer<B>>,
 {
     let mut results = Vec::new();
     for &mode in modes {
         let mut trainer = make_trainer()?;
-        let sched = schedule_for_mode(
-            mode,
-            cfg.layers,
-            trainer.width(),
-            trainer.batch(),
-            budget_frac,
-        )?;
+        let sched =
+            schedule_for_mode(mode, cfg.layers, trainer.width(), trainer.batch(), budget)?;
         if !quiet {
             eprintln!(
                 "== mode {mode} on {} backend: k={} segments ==",
@@ -123,7 +156,7 @@ pub fn trajectories_identical(a: &TrainReport, b: &TrainReport) -> bool {
 /// Measured comparison of one zoo model under vanilla vs planned
 /// execution on the general DAG executor.
 pub struct ZooComparison {
-    /// Executable graph name (`ResNet50@exec32x64`-style).
+    /// Executable graph name (`ResNet50@exec32xw64het`-style).
     pub model: String,
     pub nodes: u32,
     /// Segments in the plan.
@@ -132,6 +165,12 @@ pub struct ZooComparison {
     pub overhead: u64,
     /// Simulator-predicted peak for the plan (liveness off, activations).
     pub sim_peak: u64,
+    /// Number of distinct per-node activation byte-sizes in the lowered
+    /// graph — ≥ 2 means the heterogeneous lowering is real (the planner
+    /// is cutting a non-uniform memory profile).
+    pub distinct_act_bytes: usize,
+    /// Smallest and largest per-node activation bytes.
+    pub act_bytes_range: (u64, u64),
     pub vanilla: DagTrainReport,
     pub planned: DagTrainReport,
     /// One-step verification: loss and every parameter gradient of the
@@ -158,45 +197,61 @@ pub fn grad_maps_equal(a: &GradMap, b: &GradMap) -> bool {
         })
 }
 
-/// Lower zoo model `name` to `[batch, width]`, plan it under a
-/// planner-chosen budget (minimal feasible, or `budget_frac` of total
-/// activation memory), and train it under both vanilla and the planned
-/// schedule on the native backend, verifying the executor's two core
-/// invariants along the way (see [`ZooComparison`]).
+/// Lower zoo model `name` to heterogeneous `[batch, width_v]` tensors
+/// (per-node widths from the model's `M_v` profile, capped at
+/// `max_width`), plan it under `budget`, and train it under both vanilla
+/// and the planned schedule on the native backend, verifying the
+/// executor's two core invariants along the way (see [`ZooComparison`]).
 pub fn train_zoo_model(
     name: &str,
     batch: usize,
-    width: usize,
+    max_width: usize,
     cfg: &TrainConfig,
-    budget_frac: Option<f64>,
+    budget: BudgetSpec,
     objective: Objective,
     quiet: bool,
 ) -> Result<ZooComparison> {
     let entry = zoo::find(name)
         .ok_or_else(|| anyhow!("unknown zoo model '{name}' (try resnet, unet, …)"))?;
-    // Topology at batch 1 (shape metadata is replaced by the lowering).
-    let g = recost(&entry.build_batch(1), batch, width);
+    // Topology at batch 1 (shape metadata is replaced by the lowering —
+    // only the relative M_v profile survives, as per-node widths).
+    let g = recost_profiled(&entry.build_batch(1), batch, max_width);
+    let act_sizes = distinct_act_sizes(&g);
+    let act_bytes_range = (act_sizes[0], *act_sizes.last().unwrap());
+    let distinct_act_bytes = act_sizes.len();
+    // Gate *before* planning or training: a degenerate width cap makes
+    // every node the same size, which defeats the whole point of the
+    // heterogeneous lowering — fail in milliseconds, not after the runs.
+    if distinct_act_bytes < 2 {
+        bail!(
+            "heterogeneous lowering degenerated to uniform shapes on {} \
+             (max width {max_width} — try a larger --width)",
+            g.name
+        );
+    }
     // ApproxDP is the paper's planner of choice at zoo scale (§4.3) —
     // exact enumeration on a 500-node DenseNet lattice is a bench, not a
     // CLI default.
     let ctx = build_context(&g, Family::Approx);
-    let min_b = ctx.min_feasible_budget();
-    let budget = match budget_frac {
-        Some(f) => ((g.total_mem() as f64 * f) as u64).max(min_b),
-        None => min_b,
-    };
-    let sol = ctx
-        .solve(budget, objective)
-        .ok_or_else(|| anyhow!("budget {} infeasible for {}", fmt_bytes(budget), g.name))?;
+    let budget = budget.resolve(&g, &ctx)?;
+    let sol = ctx.solve(budget, objective).ok_or_else(|| {
+        anyhow!(
+            "budget {} infeasible for {}: min_feasible_budget = {}",
+            fmt_bytes(budget),
+            g.name,
+            fmt_bytes(ctx.min_feasible_budget())
+        )
+    })?;
     let planned_prog = OpProgram::from_chain(&g, &sol.chain)?;
     let vanilla_prog = OpProgram::vanilla(&g)?;
     let sim_peak = simulate(&g, &sol.chain, SimOptions { liveness: false, include_params: false })
         .peak_bytes;
     if !quiet {
         eprintln!(
-            "== zoo model {} ({} nodes): k={} segments, budget {} ==",
+            "== zoo model {} ({} nodes, {} distinct activation sizes): k={} segments, budget {} ==",
             g.name,
             g.len(),
+            distinct_act_bytes,
             sol.chain.k(),
             fmt_bytes(budget)
         );
@@ -204,23 +259,22 @@ pub fn train_zoo_model(
 
     // One verification step on a shared batch: bit-exact loss/grads and
     // observed-vs-predicted memory.
-    let mut task = SyntheticTask::new(batch, width, cfg.seed ^ 0xabcd);
+    let mut task = DagTask::for_graph(&g, batch, cfg.seed ^ 0xabcd);
     let (xv, yv) = task.next_batch();
-    let mut tv = DagTrainer::new(NativeBackend::new(batch, width), &g, cfg.seed)?;
-    let x = tv.backend().upload(&xv, &[batch, width])?;
-    let y = tv.backend().upload(&yv, &[batch, width])?;
-    let rv = tv.run_step(&vanilla_prog, &x, &y, cfg.lr, true)?;
-    let mut tp = DagTrainer::new(NativeBackend::new(batch, width), &g, cfg.seed)?;
-    let rp = tp.run_step(&planned_prog, &x, &y, cfg.lr, true)?;
+    let mut tv = DagTrainer::new(NativeBackend::new(), &g, batch, cfg.seed)?;
+    let (x, targets) = tv.upload_batch(&xv, &yv)?;
+    let rv = tv.run_step(&vanilla_prog, &x, &targets, cfg.lr, true)?;
+    let mut tp = DagTrainer::new(NativeBackend::new(), &g, batch, cfg.seed)?;
+    let rp = tp.run_step(&planned_prog, &x, &targets, cfg.lr, true)?;
     let (gv, gp) = (rv.grads.as_ref().unwrap(), rp.grads.as_ref().unwrap());
     let grads_match = rv.loss.to_bits() == rp.loss.to_bits() && grad_maps_equal(gv, gp);
     let peak_matches_sim = rp.observed_peak == sim_peak
         && rp.live_trajectory == planned_prog.predicted_live;
 
     // Fresh trainers for the reported runs (identical initial params).
-    let mut tv = DagTrainer::new(NativeBackend::new(batch, width), &g, cfg.seed)?;
+    let mut tv = DagTrainer::new(NativeBackend::new(), &g, batch, cfg.seed)?;
     let vanilla = tv.train(&vanilla_prog, cfg)?;
-    let mut tp = DagTrainer::new(NativeBackend::new(batch, width), &g, cfg.seed)?;
+    let mut tp = DagTrainer::new(NativeBackend::new(), &g, batch, cfg.seed)?;
     let planned = tp.train(&planned_prog, cfg)?;
     let losses_identical = bits_equal(&vanilla.losses, &planned.losses);
 
@@ -230,6 +284,8 @@ pub fn train_zoo_model(
         k: sol.chain.k(),
         overhead: sol.overhead,
         sim_peak,
+        distinct_act_bytes,
+        act_bytes_range,
         vanilla,
         planned,
         grads_match,
@@ -252,7 +308,7 @@ mod tests {
     #[test]
     fn schedules_cover_the_tower() {
         for mode in ["vanilla", "tc", "mc"] {
-            let s = schedule_for_mode(mode, 12, 64, 32, None).unwrap();
+            let s = schedule_for_mode(mode, 12, 64, 32, BudgetSpec::MinFeasible).unwrap();
             assert_eq!(s.n_layers, 13);
             let mut pos = 0;
             for seg in &s.segments {
@@ -262,7 +318,21 @@ mod tests {
             assert_eq!(pos, 13, "{mode}");
         }
         // A planned schedule on a 12-layer tower must actually cut.
-        assert!(schedule_for_mode("tc", 12, 64, 32, None).unwrap().segments.len() > 1);
+        assert!(
+            schedule_for_mode("tc", 12, 64, 32, BudgetSpec::MinFeasible)
+                .unwrap()
+                .segments
+                .len()
+                > 1
+        );
+    }
+
+    #[test]
+    fn absolute_budget_below_min_names_the_minimum() {
+        let err = schedule_for_mode("tc", 12, 64, 32, BudgetSpec::Bytes(1)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("infeasible"), "{msg}");
+        assert!(msg.contains("min_feasible_budget"), "{msg}");
     }
 
     #[test]
@@ -276,13 +346,26 @@ mod tests {
     #[test]
     fn zoo_engine_verifies_unet_end_to_end() {
         let cfg = TrainConfig { layers: 0, steps: 2, lr: 0.02, seed: 11, log_every: 0 };
-        let cmp =
-            train_zoo_model("unet", 2, 4, &cfg, None, Objective::MinOverhead, true).unwrap();
+        let cmp = train_zoo_model(
+            "unet",
+            2,
+            8,
+            &cfg,
+            BudgetSpec::MinFeasible,
+            Objective::MinOverhead,
+            true,
+        )
+        .unwrap();
         assert!(cmp.grads_match, "planned grads must be bit-identical to vanilla");
         assert!(cmp.peak_matches_sim, "observed peak must equal the sim prediction");
         assert!(cmp.losses_identical);
         assert!(cmp.planned.observed_peak < cmp.vanilla.observed_peak);
         assert!(cmp.planned.recomputes_per_step > 0);
+        assert!(
+            cmp.distinct_act_bytes >= 2,
+            "heterogeneous lowering must produce ≥ 2 activation sizes"
+        );
+        assert!(cmp.act_bytes_range.0 < cmp.act_bytes_range.1);
     }
 
     #[test]
@@ -292,7 +375,7 @@ mod tests {
             || TowerTrainer::native(4, 16, &cfg),
             &cfg,
             &["vanilla", "tc"],
-            None,
+            BudgetSpec::MinFeasible,
             true,
         )
         .unwrap();

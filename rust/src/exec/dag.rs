@@ -1,13 +1,17 @@
 //! The general-DAG trainer: executes an [`OpProgram`] on any
-//! [`Backend`], over arbitrary computation graphs.
+//! [`Backend`], over arbitrary computation graphs with *per-node* tensor
+//! shapes.
 //!
 //! Where [`super::trainer::TowerTrainer`] hand-specializes the canonical
 //! strategy to chains, this executor is *trace-driven*: the compiled
 //! program already says which forward value to (re)materialize when,
 //! when each backward op runs, and when each buffer dies — the trainer
 //! just follows the steps with real kernels, under the executable
-//! lowering of [`crate::models::executable`] (uniform `[batch, width]`
-//! tensors; source / dense / merge roles).
+//! lowering of [`crate::models::executable`]. Each node `v` owns a
+//! `[batch, width_v]` tensor (widths read from the lowered graph, so
+//! heterogeneous `M_v` profiles execute as heterogeneous shapes; dense
+//! nodes carry rectangular `[w_in, w_out]` weights), and every sink
+//! regresses against a target of its own width.
 //!
 //! Two properties the design guarantees, both property-tested end to end:
 //!
@@ -19,17 +23,18 @@
 //!   arrive in — so any plan's loss *and* parameter gradients are
 //!   bit-identical to vanilla execution.
 //! - **Observed = predicted memory.** Every step updates a live-byte
-//!   counter from real tensor sizes; on graphs lowered with
-//!   [`crate::models::executable::recost`] the per-step counter equals
-//!   the program's model-side prediction and the observed peak equals
+//!   counter: forward values from real tensor sizes, gradients from the
+//!   graph's per-node `M_v` (which, on graphs lowered with
+//!   [`crate::models::executable::recost_widths`], *is* the real tensor
+//!   size — `batch · width_v · 4`). The per-step counter equals the
+//!   program's model-side prediction and the observed peak equals
 //!   [`crate::sim::SimReport::peak_bytes`] (liveness off) — an equality,
-//!   not a bound. One caveat: forward values are measured, but a
-//!   gradient is booked as the canonical model's *single* logical buffer
-//!   (one `act` from its alloc step to its free step). The deferred
-//!   fan-in contributions backing that buffer are real tensors the
-//!   counter does not itemize — at a node with `s` consumers, actual
-//!   transient memory can exceed the counter by up to `(s−1)·act` until
-//!   the node's backprop reduces them.
+//!   not a bound. One caveat: a gradient is booked as the canonical
+//!   model's *single* logical buffer (one `M_v` from its alloc step to
+//!   its free step). The deferred fan-in contributions backing that
+//!   buffer are real tensors the counter does not itemize — at a node
+//!   with `s` consumers, actual transient memory can exceed the counter
+//!   by up to `(s−1)·M_v` until the node's backprop reduces them.
 //!
 //! Loss-gradient seeding is lazy: the trace accounts a sink's gradient at
 //! the start of the backward pass (when the sink's forward value may
@@ -42,16 +47,56 @@ use std::time::Instant;
 
 use crate::anyhow::{bail, Context, Result};
 
+use crate::graph::builder::BYTES_PER_ELEM;
 use crate::graph::{Graph, NodeId};
-use crate::models::executable::{node_role, NodeRole};
+use crate::models::executable::{input_width, node_role, node_width, NodeRole};
 use crate::runtime::{Backend, KernelStat};
 use crate::util::rng::Pcg32;
 
 use super::program::{OpProgram, Step};
-use super::trainer::{SyntheticTask, TrainConfig};
+use super::trainer::TrainConfig;
 
 /// Per-dense-node parameter gradients `(gw, gb)` keyed by node id.
 pub type GradMap = BTreeMap<u32, (Vec<f32>, Vec<f32>)>;
+
+/// Synthetic task for (possibly heterogeneous) DAG lowerings: one batch
+/// input at the sources' shared width plus one regression target per
+/// sink at *that sink's* width. Targets are a smooth function of the
+/// input (`sin(1.7·x)`, columns wrapped modulo the input width), so the
+/// task is learnable and bit-reproducible across schedules — two tasks
+/// built alike stream identical data.
+pub struct DagTask {
+    batch: usize,
+    in_width: usize,
+    /// `(sink id, sink width)` in ascending node-id order.
+    sinks: Vec<(u32, usize)>,
+    rng: Pcg32,
+}
+
+impl DagTask {
+    /// A task matching the shapes of the executable lowering `g`.
+    pub fn for_graph(g: &Graph, batch: usize, seed: u64) -> DagTask {
+        let sinks = g.sinks().iter().map(|&v| (v.0, node_width(g, v))).collect();
+        DagTask { batch, in_width: input_width(g), sinks, rng: Pcg32::seeded(seed) }
+    }
+
+    /// Next `(input, per-sink targets)` batch as flat f32 vectors.
+    pub fn next_batch(&mut self) -> (Vec<f32>, BTreeMap<u32, Vec<f32>>) {
+        let x: Vec<f32> =
+            (0..self.batch * self.in_width).map(|_| self.rng.normal() as f32).collect();
+        let mut targets = BTreeMap::new();
+        for &(id, w) in &self.sinks {
+            let mut y = Vec::with_capacity(self.batch * w);
+            for row in 0..self.batch {
+                for col in 0..w {
+                    y.push((1.7 * x[row * self.in_width + col % self.in_width]).sin());
+                }
+            }
+            targets.insert(id, y);
+        }
+        (x, targets)
+    }
+}
 
 /// Measured outcome of one executed training step.
 #[derive(Clone, Debug)]
@@ -89,6 +134,9 @@ pub struct DagTrainReport {
 pub struct DagTrainer<B: Backend> {
     backend: B,
     g: Graph,
+    batch: usize,
+    /// Execution width of each node (from the lowered graph's shapes).
+    widths: Vec<usize>,
     /// `(w, b)` for dense nodes, `None` otherwise; indexed by node id.
     params: Vec<Option<(B::Tensor, B::Tensor)>>,
     /// Per-node `1/√k` fan-in normalizer for merge nodes (uploaded once),
@@ -100,21 +148,57 @@ impl<B: Backend> DagTrainer<B> {
     /// He-initialize parameters for every dense node of `g` (deterministic
     /// in `seed` and node order, so two trainers built alike start
     /// bit-identically — the precondition for schedule comparisons).
-    pub fn new(backend: B, g: &Graph, seed: u64) -> Result<DagTrainer<B>> {
-        let width = backend.width();
+    ///
+    /// `g` must be an executable lowering (see
+    /// [`crate::models::executable::recost_widths`]): every node carries
+    /// its width in `shape[0]` and `M_v` equals its tensor's bytes at
+    /// `batch` — the contract behind observed == predicted memory.
+    pub fn new(backend: B, g: &Graph, batch: usize, seed: u64) -> Result<DagTrainer<B>> {
+        if batch == 0 {
+            bail!("batch must be positive");
+        }
+        let mut widths = Vec::with_capacity(g.len() as usize);
+        for (_, n) in g.nodes() {
+            let Some(&w) = n.shape.first() else {
+                bail!(
+                    "node {} has no execution width — lower the graph with \
+                     models::executable::recost first",
+                    n.name
+                );
+            };
+            if w == 0 {
+                bail!("node {} has zero execution width", n.name);
+            }
+            let expect = (batch * w as usize) as u64 * BYTES_PER_ELEM;
+            if n.mem != expect {
+                bail!(
+                    "node {} M_v is {} bytes but its [{}x{}] f32 tensor is {} — \
+                     graph not lowered for batch {}",
+                    n.name,
+                    n.mem,
+                    batch,
+                    w,
+                    expect,
+                    batch
+                );
+            }
+            widths.push(w as usize);
+        }
         let mut rng = Pcg32::seeded(seed);
-        let scale = (2.0 / width as f64).sqrt();
         let mut params = Vec::with_capacity(g.len() as usize);
         let mut merge_scale = Vec::with_capacity(g.len() as usize);
         for (v, _) in g.nodes() {
             match node_role(g, v) {
                 NodeRole::Dense => {
+                    let w_in = widths[g.preds(v)[0].0 as usize];
+                    let w_out = widths[v.0 as usize];
+                    let scale = (2.0 / w_in as f64).sqrt();
                     let w: Vec<f32> =
-                        (0..width * width).map(|_| (rng.normal() * scale) as f32).collect();
-                    let b = vec![0f32; width];
+                        (0..w_in * w_out).map(|_| (rng.normal() * scale) as f32).collect();
+                    let b = vec![0f32; w_out];
                     params.push(Some((
-                        backend.upload(&w, &[width, width])?,
-                        backend.upload(&b, &[width])?,
+                        backend.upload(&w, &[w_in, w_out])?,
+                        backend.upload(&b, &[w_out])?,
                     )));
                     merge_scale.push(None);
                 }
@@ -129,7 +213,7 @@ impl<B: Backend> DagTrainer<B> {
                 }
             }
         }
-        Ok(DagTrainer { backend, g: g.clone(), params, merge_scale })
+        Ok(DagTrainer { backend, g: g.clone(), batch, widths, params, merge_scale })
     }
 
     pub fn backend(&self) -> &B {
@@ -141,16 +225,12 @@ impl<B: Backend> DagTrainer<B> {
     }
 
     pub fn batch(&self) -> usize {
-        self.backend.batch()
+        self.batch
     }
 
-    pub fn width(&self) -> usize {
-        self.backend.width()
-    }
-
-    /// Bytes of one `[batch, width]` activation/gradient buffer.
-    fn act_bytes(&self) -> u64 {
-        (self.backend.batch() * self.backend.width() * 4) as u64
+    /// Execution width of each node, indexed by node id.
+    pub fn widths(&self) -> &[usize] {
+        &self.widths
     }
 
     pub fn param_bytes(&self) -> u64 {
@@ -161,19 +241,34 @@ impl<B: Backend> DagTrainer<B> {
             .sum()
     }
 
-    /// Execute one training step following `prog`. `x`/`y` are the batch
-    /// input and target (always live; excluded from the byte counter like
-    /// the paper excludes input nodes).
+    /// Upload one task batch: the shared input plus per-sink targets.
+    pub fn upload_batch(
+        &self,
+        x: &[f32],
+        targets: &BTreeMap<u32, Vec<f32>>,
+    ) -> Result<(B::Tensor, BTreeMap<u32, B::Tensor>)> {
+        let xt = self.backend.upload(x, &[self.batch, input_width(&self.g)])?;
+        let mut ts = BTreeMap::new();
+        for (&id, y) in targets {
+            let w = self.widths[id as usize];
+            ts.insert(id, self.backend.upload(y, &[self.batch, w])?);
+        }
+        Ok((xt, ts))
+    }
+
+    /// Execute one training step following `prog`. `x` is the batch input
+    /// and `targets` maps each sink's node id to its regression target
+    /// (always live; excluded from the byte counter like the paper
+    /// excludes input nodes).
     pub fn run_step(
         &mut self,
         prog: &OpProgram,
         x: &B::Tensor,
-        y: &B::Tensor,
+        targets: &BTreeMap<u32, B::Tensor>,
         lr: f32,
         record_grads: bool,
     ) -> Result<StepReport> {
         let n = self.g.len() as usize;
-        let act = self.act_bytes();
         let lr_t = self.backend.upload(&[lr], &[])?;
         let mut fwd: Vec<Option<B::Tensor>> = vec![None; n];
         // Gradient contributions per node, keyed by contributor id;
@@ -197,7 +292,7 @@ impl<B: Backend> DagTrainer<B> {
                 }
                 Step::SeedGrad { node } => {
                     seeded[node.0 as usize] = true;
-                    live += act;
+                    live += self.g.node(node).mem;
                 }
                 Step::AllocGrad { node } => {
                     if pending[node.0 as usize].is_empty() {
@@ -206,7 +301,7 @@ impl<B: Backend> DagTrainer<B> {
                             self.g.node(node).name
                         );
                     }
-                    live += act;
+                    live += self.g.node(node).mem;
                 }
                 Step::Backprop { node } => {
                     let gv = self.materialize_grad(
@@ -214,7 +309,7 @@ impl<B: Backend> DagTrainer<B> {
                         &mut pending,
                         &seeded,
                         &fwd,
-                        y,
+                        targets,
                         &mut sink_losses,
                     )?;
                     self.backprop_node(
@@ -235,7 +330,7 @@ impl<B: Backend> DagTrainer<B> {
                 Step::FreeGrad { node } => {
                     pending[node.0 as usize].clear();
                     seeded[node.0 as usize] = false;
-                    live -= act;
+                    live -= self.g.node(node).mem;
                 }
             }
             traj.push(live);
@@ -297,15 +392,16 @@ impl<B: Backend> DagTrainer<B> {
         }
     }
 
-    /// Produce `grad(node)`: run the lazy loss seed for sinks, otherwise
-    /// reduce the pending contributions in ascending contributor order.
+    /// Produce `grad(node)`: run the lazy loss seed for sinks (against the
+    /// sink's own target), otherwise reduce the pending contributions in
+    /// ascending contributor order.
     fn materialize_grad(
         &self,
         node: NodeId,
         pending: &mut [Vec<(u32, B::Tensor)>],
         seeded: &[bool],
         fwd: &[Option<B::Tensor>],
-        y: &B::Tensor,
+        targets: &BTreeMap<u32, B::Tensor>,
         sink_losses: &mut BTreeMap<u32, f32>,
     ) -> Result<B::Tensor> {
         let i = node.0 as usize;
@@ -313,6 +409,9 @@ impl<B: Backend> DagTrainer<B> {
             let f = fwd[i]
                 .clone()
                 .with_context(|| format!("fwd({}) dead at loss", self.g.node(node).name))?;
+            let y = targets
+                .get(&node.0)
+                .with_context(|| format!("no target for sink {}", self.g.node(node).name))?;
             let outs = self.backend.run("mse", &[f, y.clone()])?;
             let [loss, grad]: [B::Tensor; 2] = outs.try_into().ok().context("mse arity")?;
             sink_losses.insert(node.0, self.backend.download(&loss)?[0]);
@@ -393,19 +492,17 @@ impl<B: Backend> DagTrainer<B> {
         }
     }
 
-    /// Train for `cfg.steps` steps on the synthetic task (same data stream
-    /// as the tower trainer, so runs are comparable across seeds).
+    /// Train for `cfg.steps` steps on the synthetic DAG task (seeded like
+    /// the tower trainer's stream, so runs are comparable across seeds).
     pub fn train(&mut self, prog: &OpProgram, cfg: &TrainConfig) -> Result<DagTrainReport> {
-        let (batch, width) = (self.backend.batch(), self.backend.width());
-        let mut task = SyntheticTask::new(batch, width, cfg.seed ^ 0xabcd);
+        let mut task = DagTask::for_graph(&self.g, self.batch, cfg.seed ^ 0xabcd);
         let mut losses = Vec::with_capacity(cfg.steps);
         let mut peak = 0u64;
         let t0 = Instant::now();
         for step in 0..cfg.steps {
             let (xv, yv) = task.next_batch();
-            let x = self.backend.upload(&xv, &[batch, width])?;
-            let y = self.backend.upload(&yv, &[batch, width])?;
-            let r = self.run_step(prog, &x, &y, cfg.lr, false)?;
+            let (x, targets) = self.upload_batch(&xv, &yv)?;
+            let r = self.run_step(prog, &x, &targets, cfg.lr, false)?;
             peak = peak.max(r.observed_peak);
             losses.push(r.loss);
             if cfg.log_every > 0 && step % cfg.log_every == 0 {
@@ -429,13 +526,28 @@ impl<B: Backend> DagTrainer<B> {
 mod tests {
     use super::*;
     use crate::exec::OpProgram;
-    use crate::models::executable::recost;
+    use crate::models::executable::{distinct_act_sizes, recost, recost_profiled};
     use crate::planner::{plan_at_min_budget, Family, Objective};
     use crate::runtime::NativeBackend;
     use crate::testutil::diamond;
 
-    fn trainer_for(g: &Graph, batch: usize, width: usize) -> DagTrainer<NativeBackend> {
-        DagTrainer::new(NativeBackend::new(batch, width), g, 7).unwrap()
+    fn trainer_for(g: &Graph, batch: usize) -> DagTrainer<NativeBackend> {
+        DagTrainer::new(NativeBackend::new(), g, batch, 7).unwrap()
+    }
+
+    /// Shared fixed batch (input + per-sink targets) for a graph.
+    fn batch_for(
+        t: &DagTrainer<NativeBackend>,
+        fill_x: f32,
+        fill_y: f32,
+    ) -> (crate::runtime::HostTensor, BTreeMap<u32, crate::runtime::HostTensor>) {
+        let g = t.graph();
+        let xv = vec![fill_x; t.batch() * input_width(g)];
+        let mut ys = BTreeMap::new();
+        for v in g.sinks() {
+            ys.insert(v.0, vec![fill_y; t.batch() * node_width(g, v)]);
+        }
+        t.upload_batch(&xv, &ys).unwrap()
     }
 
     #[test]
@@ -445,13 +557,10 @@ mod tests {
         let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
         let planned = OpProgram::from_chain(&g, &plan.chain).unwrap();
 
-        let be = NativeBackend::new(4, 8);
-        let x = be.upload(&[0.3f32; 4 * 8], &[4, 8]).unwrap();
-        let y = be.upload(&[0.1f32; 4 * 8], &[4, 8]).unwrap();
-
-        let mut tv = trainer_for(&g, 4, 8);
+        let mut tv = trainer_for(&g, 4);
+        let (x, y) = batch_for(&tv, 0.3, 0.1);
         let rv = tv.run_step(&vanilla, &x, &y, 0.05, true).unwrap();
-        let mut tp = trainer_for(&g, 4, 8);
+        let mut tp = trainer_for(&g, 4);
         let rp = tp.run_step(&planned, &x, &y, 0.05, true).unwrap();
 
         assert_eq!(rv.loss.to_bits(), rp.loss.to_bits(), "loss must be bit-identical");
@@ -468,24 +577,61 @@ mod tests {
     fn observed_bytes_track_prediction_on_diamond() {
         let g = recost(&diamond(), 2, 4);
         let prog = OpProgram::vanilla(&g).unwrap();
-        let mut t = trainer_for(&g, 2, 4);
-        let be = NativeBackend::new(2, 4);
-        let x = be.upload(&[0.0f32; 8], &[2, 4]).unwrap();
-        let y = be.upload(&[0.0f32; 8], &[2, 4]).unwrap();
+        let mut t = trainer_for(&g, 2);
+        let (x, y) = batch_for(&t, 0.0, 0.0);
         let r = t.run_step(&prog, &x, &y, 0.1, false).unwrap();
         assert_eq!(r.live_trajectory, prog.predicted_live);
         assert_eq!(r.observed_peak, prog.predicted_peak());
     }
 
     #[test]
+    fn heterogeneous_diamond_executes_with_distinct_shapes() {
+        // Profiled lowering of the diamond: source at width 2, merge
+        // class at width 8 — rectangular dense layers in between.
+        let g = recost_profiled(&diamond(), 2, 8);
+        let sizes = distinct_act_sizes(&g);
+        assert!(sizes.len() >= 2, "lowering must be heterogeneous: {sizes:?}");
+
+        let vanilla = OpProgram::vanilla(&g).unwrap();
+        let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+        let planned = OpProgram::from_chain(&g, &plan.chain).unwrap();
+
+        let mut tv = trainer_for(&g, 2);
+        let (x, y) = batch_for(&tv, 0.3, 0.1);
+        let rv = tv.run_step(&vanilla, &x, &y, 0.05, true).unwrap();
+        assert_eq!(rv.live_trajectory, vanilla.predicted_live, "vanilla trajectory");
+        let mut tp = trainer_for(&g, 2);
+        let rp = tp.run_step(&planned, &x, &y, 0.05, true).unwrap();
+        assert_eq!(rp.live_trajectory, planned.predicted_live, "planned trajectory");
+        assert_eq!(rv.loss.to_bits(), rp.loss.to_bits(), "heterogeneous bit-exactness");
+    }
+
+    #[test]
     fn training_loss_is_finite_and_decreasing_on_towerlike_dag() {
         let g = recost(&crate::models::mlp_tower(6, 8, 4), 4, 8);
         let prog = OpProgram::vanilla(&g).unwrap();
-        let mut t = trainer_for(&g, 4, 8);
+        let mut t = trainer_for(&g, 4);
         let cfg = TrainConfig { layers: 6, steps: 25, lr: 0.1, seed: 3, log_every: 0 };
         let rep = t.train(&prog, &cfg).unwrap();
         let (first, last) = (rep.losses[0], *rep.losses.last().unwrap());
         assert!(last.is_finite() && first.is_finite());
         assert!(last < first, "loss must drop: {first} → {last}");
+    }
+
+    #[test]
+    fn trainer_rejects_unlowered_graphs() {
+        // The raw diamond has no execution widths (empty shapes).
+        let err = match DagTrainer::new(NativeBackend::new(), &diamond(), 2, 7) {
+            Ok(_) => panic!("unlowered graph must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("execution width"), "{err}");
+        // And a lowering executed at the wrong batch is caught too.
+        let g = recost(&diamond(), 4, 8);
+        let err = match DagTrainer::new(NativeBackend::new(), &g, 2, 7) {
+            Ok(_) => panic!("wrong batch must be rejected"),
+            Err(e) => e,
+        };
+        assert!(err.to_string().contains("not lowered for batch"), "{err}");
     }
 }

@@ -10,7 +10,9 @@
 //! - the **general path** ([`OpProgram`] + [`DagTrainer`]) — compiles the
 //!   event trace of [`crate::sim`] into a typed step program and
 //!   executes it over *arbitrary DAGs* (the whole model zoo: residual
-//!   adds, concats, fan-out reuse), with per-step observed live-byte
+//!   adds, concats, fan-out reuse) with *per-node tensor shapes*
+//!   (heterogeneous widths from the model's own `M_v` profile, see
+//!   [`crate::models::executable`]), with per-step observed live-byte
 //!   instrumentation that is cross-checked against the simulator's
 //!   predicted peak.
 //!
@@ -25,7 +27,7 @@ mod program;
 mod schedule;
 mod trainer;
 
-pub use dag::{DagTrainReport, DagTrainer, GradMap, StepReport};
+pub use dag::{DagTask, DagTrainReport, DagTrainer, GradMap, StepReport};
 pub use program::{OpProgram, Step};
 pub use schedule::{ChainSchedule, Segment};
 pub use trainer::{SyntheticTask, TowerTrainer, TrainConfig, TrainReport};

@@ -20,7 +20,7 @@
 
 use std::time::Instant;
 
-use crate::anyhow::{Context, Result};
+use crate::anyhow::{bail, Context, Result};
 
 use crate::runtime::{Backend, KernelStat, NativeBackend};
 use crate::util::rng::Pcg32;
@@ -90,8 +90,14 @@ pub struct TrainReport {
 }
 
 /// The trainer: parameters + an execution backend + live-byte accounting.
+///
+/// The tower is a uniform-width chain, so unlike the shape-polymorphic
+/// [`super::DagTrainer`] it carries its `(batch, width)` itself — the
+/// backend no longer advertises any shape (kernels are dimension-driven).
 pub struct TowerTrainer<B: Backend> {
     backend: B,
+    batch: usize,
+    width: usize,
     /// (w, b) per layer; `layers + 1` entries (last = loss head).
     params: Vec<(B::Tensor, B::Tensor)>,
     live_bytes: u64,
@@ -102,23 +108,33 @@ impl TowerTrainer<NativeBackend> {
     /// Pure-Rust trainer: He-initialized tower on [`NativeBackend`] at the
     /// given `(batch, width)`. No artifacts, no Python, no native libs.
     pub fn native(batch: usize, width: usize, cfg: &TrainConfig) -> Result<Self> {
-        TowerTrainer::new(NativeBackend::new(batch, width), cfg)
+        TowerTrainer::new(NativeBackend::new(), batch, width, cfg)
     }
 }
 
 #[cfg(feature = "xla")]
 impl TowerTrainer<crate::runtime::PjrtBackend> {
-    /// PJRT trainer over the AOT artifact set in `dir`.
+    /// PJRT trainer over the AOT artifact set in `dir`, at the shape the
+    /// artifacts were compiled for.
     pub fn from_artifacts(dir: &std::path::Path, cfg: &TrainConfig) -> Result<Self> {
-        TowerTrainer::new(crate::runtime::PjrtBackend::load(dir)?, cfg)
+        let backend = crate::runtime::PjrtBackend::load(dir)?;
+        let (batch, width) = (backend.batch(), backend.width());
+        TowerTrainer::new(backend, batch, width, cfg)
     }
 }
 
 impl<B: Backend> TowerTrainer<B> {
     /// He-initialize a tower with `cfg.layers` hidden layers (+1 head) at
-    /// the backend's width, with parameters living on the backend.
-    pub fn new(backend: B, cfg: &TrainConfig) -> Result<TowerTrainer<B>> {
-        let width = backend.width();
+    /// `(batch, width)`, with parameters living on the backend.
+    pub fn new(
+        backend: B,
+        batch: usize,
+        width: usize,
+        cfg: &TrainConfig,
+    ) -> Result<TowerTrainer<B>> {
+        if batch == 0 || width == 0 {
+            bail!("batch/width must be positive");
+        }
         let mut rng = Pcg32::seeded(cfg.seed);
         let scale = (2.0 / width as f64).sqrt();
         let mut params = Vec::with_capacity(cfg.layers + 1);
@@ -131,20 +147,20 @@ impl<B: Backend> TowerTrainer<B> {
                 backend.upload(&b, &[width])?,
             ));
         }
-        Ok(TowerTrainer { backend, params, live_bytes: 0, peak_bytes: 0 })
+        Ok(TowerTrainer { backend, batch, width, params, live_bytes: 0, peak_bytes: 0 })
     }
 
-    /// The execution backend (for kernel stats, name, shape queries).
+    /// The execution backend (for kernel stats and the backend name).
     pub fn backend(&self) -> &B {
         &self.backend
     }
 
     pub fn batch(&self) -> usize {
-        self.backend.batch()
+        self.batch
     }
 
     pub fn width(&self) -> usize {
-        self.backend.width()
+        self.width
     }
 
     pub fn param_bytes(&self) -> u64 {
@@ -180,7 +196,7 @@ impl<B: Backend> TowerTrainer<B> {
     ) -> Result<(f32, usize)> {
         let n = sched.n_layers; // includes loss head at index n-1
         let lr_t = self.backend.upload(&[lr], &[])?;
-        let act_bytes = (self.backend.batch() * self.backend.width() * 4) as u64;
+        let act_bytes = (self.batch * self.width * 4) as u64;
         let mut recomputes = 0usize;
 
         // --- forward: keep only checkpoint activations -------------------
@@ -339,7 +355,7 @@ impl<B: Backend> TowerTrainer<B> {
 
     /// Train for `cfg.steps` steps on the synthetic task.
     pub fn train(&mut self, sched: &ChainSchedule, cfg: &TrainConfig) -> Result<TrainReport> {
-        let (batch, width) = (self.backend.batch(), self.backend.width());
+        let (batch, width) = (self.batch, self.width);
         let mut task = SyntheticTask::new(batch, width, cfg.seed ^ 0xabcd);
         let mut losses = Vec::with_capacity(cfg.steps);
         let mut recomputes = 0usize;
@@ -378,6 +394,6 @@ impl<B: Backend> TowerTrainer<B> {
     pub fn probe_weights(&self) -> Result<Vec<f32>> {
         let (w, _) = &self.params[self.params.len() - 1];
         let v = self.backend.download(w)?;
-        Ok(v[..8.min(self.backend.width())].to_vec())
+        Ok(v[..8.min(self.width)].to_vec())
     }
 }

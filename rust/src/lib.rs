@@ -20,8 +20,9 @@
 //! - [`sim`] — an event-accurate execution simulator with liveness
 //!   analysis, measuring true peak memory of any strategy (Tables 1 & 2).
 //! - [`runtime`] — the pluggable execution-backend layer: a
-//!   [`runtime::Backend`] trait (upload / run-kernel / download /
-//!   per-kernel stats) with two implementations. The default
+//!   *shape-polymorphic* [`runtime::Backend`] trait (upload / run-kernel
+//!   / download / per-kernel stats; dims travel with each tensor, the
+//!   dense path is rectangular) with two implementations. The default
 //!   [`runtime::NativeBackend`] is pure-Rust f32 CPU kernels — the whole
 //!   stack builds and trains with `cargo` alone, no Python, no artifacts,
 //!   no native libraries. The `xla` cargo feature adds the PJRT backend,
@@ -30,9 +31,10 @@
 //! - [`exec`] — the training executors, generic over `Backend`: the chain
 //!   fast path (`TowerTrainer`) and the trace-driven general-DAG path
 //!   (`OpProgram` + `DagTrainer`, running the whole zoo's branch/merge
-//!   graphs for real), both following a recomputation plan exactly as the
-//!   canonical strategy prescribes, with measured live-byte accounting
-//!   cross-checked against the simulator.
+//!   graphs for real with heterogeneous per-node tensor shapes), both
+//!   following a recomputation plan exactly as the canonical strategy
+//!   prescribes, with measured live-byte accounting cross-checked against
+//!   the simulator.
 //! - [`testutil`] — shared seeded fixtures (`random_dag`, `chain_graph`,
 //!   `diamond`) used by the unit, integration and property suites.
 //! - [`coordinator`] — the training-loop driver: backend selection,
@@ -61,11 +63,11 @@
 //! Training quickstart — pure Rust, no setup:
 //!
 //! ```
-//! use recompute::coordinator::train::schedule_for_mode;
+//! use recompute::coordinator::train::{schedule_for_mode, BudgetSpec};
 //! use recompute::exec::{TowerTrainer, TrainConfig};
 //!
 //! let cfg = TrainConfig { layers: 4, steps: 2, ..TrainConfig::default() };
-//! let sched = schedule_for_mode("tc", cfg.layers, 16, 4, None).unwrap();
+//! let sched = schedule_for_mode("tc", cfg.layers, 16, 4, BudgetSpec::MinFeasible).unwrap();
 //! let mut trainer = TowerTrainer::native(4, 16, &cfg).unwrap();
 //! let report = trainer.train(&sched, &cfg).unwrap();
 //! assert!(report.losses.iter().all(|l| l.is_finite()));
@@ -101,6 +103,50 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+/// Parse a human-readable byte size: `"512"`, `"64KiB"`, `"1.5MiB"`,
+/// `"2GiB"`. Units are binary; `KB`/`MB`/`GB` (and bare `K`/`M`/`G`)
+/// are accepted as aliases of the binary units, matching how
+/// [`fmt_bytes`] renders. The inverse direction of `fmt_bytes`, used by
+/// the CLI's `--budget` flags.
+pub fn parse_bytes(s: &str) -> anyhow::Result<u64> {
+    let t = s.trim();
+    let unit_start = t.find(|c: char| !(c.is_ascii_digit() || c == '.')).unwrap_or(t.len());
+    let (num, unit) = t.split_at(unit_start);
+    let mult: f64 = match unit.trim().to_ascii_lowercase().as_str() {
+        "" | "b" => 1.0,
+        "k" | "kb" | "kib" => (1u64 << 10) as f64,
+        "m" | "mb" | "mib" => (1u64 << 20) as f64,
+        "g" | "gb" | "gib" => (1u64 << 30) as f64,
+        other => {
+            return Err(anyhow::Error::msg(format!(
+                "bad byte unit '{other}' in '{s}' (use B, KiB, MiB or GiB)"
+            )))
+        }
+    };
+    let value: f64 = num
+        .parse()
+        .map_err(|_| anyhow::Error::msg(format!("bad byte size '{s}'")))?;
+    if !value.is_finite() || value < 0.0 {
+        return Err(anyhow::Error::msg(format!("bad byte size '{s}'")));
+    }
+    Ok((value * mult).round() as u64)
+}
+
+/// Parse a CLI `--budget` value, shared by `repro plan` and `repro
+/// train` so the flag means the same thing everywhere: a bare number is
+/// **gigabytes** (the CLI's original contract), a value with a unit
+/// suffix goes through [`parse_bytes`] (`512KiB`, `1.5MiB`, `2GiB`).
+pub fn parse_budget(s: &str) -> anyhow::Result<u64> {
+    let s = s.trim();
+    if let Ok(gb) = s.parse::<f64>() {
+        if !gb.is_finite() || gb < 0.0 {
+            return Err(anyhow::Error::msg(format!("bad budget '{s}'")));
+        }
+        return Ok((gb * (1u64 << 30) as f64) as u64);
+    }
+    parse_bytes(s)
+}
+
 #[cfg(test)]
 mod tests {
     #[test]
@@ -108,5 +154,31 @@ mod tests {
         assert_eq!(super::fmt_bytes(512), "512 B");
         assert_eq!(super::fmt_bytes(3 << 20), "3 MB");
         assert_eq!(super::fmt_bytes((27 << 30) / 10), "2.7 GB");
+    }
+
+    #[test]
+    fn parse_bytes_units_and_errors() {
+        assert_eq!(super::parse_bytes("512").unwrap(), 512);
+        assert_eq!(super::parse_bytes("512B").unwrap(), 512);
+        assert_eq!(super::parse_bytes("512KiB").unwrap(), 512 << 10);
+        assert_eq!(super::parse_bytes("512kb").unwrap(), 512 << 10);
+        assert_eq!(super::parse_bytes("1.5MiB").unwrap(), 3 << 19);
+        assert_eq!(super::parse_bytes("2GiB").unwrap(), 2 << 30);
+        assert_eq!(super::parse_bytes(" 64 KiB ").unwrap(), 64 << 10);
+        assert!(super::parse_bytes("12parsecs").is_err());
+        assert!(super::parse_bytes("KiB").is_err());
+        assert!(super::parse_bytes("-3KiB").is_err());
+        // Round-trips with fmt_bytes' rendering.
+        assert_eq!(super::parse_bytes("3 MB").unwrap(), 3 << 20);
+    }
+
+    #[test]
+    fn parse_budget_bare_is_gb_suffixed_is_bytes() {
+        assert_eq!(super::parse_budget("2").unwrap(), 2 << 30);
+        assert_eq!(super::parse_budget(" 2 ").unwrap(), 2 << 30, "whitespace still means GB");
+        assert_eq!(super::parse_budget("0.5").unwrap(), 1 << 29);
+        assert_eq!(super::parse_budget("512KiB").unwrap(), 512 << 10);
+        assert!(super::parse_budget("-1").is_err());
+        assert!(super::parse_budget("chonk").is_err());
     }
 }

@@ -7,8 +7,9 @@
 //! - `figure3 [--network NAME] [--device GB]` — the batch-vs-runtime
 //!   tradeoff sweeps of Figure 3.
 //! - `timing` — §5.1 ExactDP vs ApproxDP planner wall-clock.
-//! - `plan --network NAME [--batch N] [--budget GB] [--objective tc|mc]
-//!    [--family exact|approx]` — plan one network and print the schedule.
+//! - `plan --network NAME [--batch N] [--budget GB|512KiB] [--objective
+//!    tc|mc] [--family exact|approx]` — plan one network and print the
+//!    schedule (budgets: bare number = GB, or human-readable bytes).
 //! - `plan --graph FILE.json …` — plan a user-supplied graph.
 //! - `train …` — run the real training executor (see `exec`) on the
 //!   pure-Rust native backend by default, or PJRT with `--features xla`;
@@ -21,8 +22,8 @@ use recompute::anyhow::{anyhow, bail, Context, Result};
 
 use recompute::bench::tables;
 use recompute::coordinator;
-use recompute::fmt_bytes;
 use recompute::graph::Graph;
+use recompute::{fmt_bytes, parse_budget};
 use recompute::models::zoo;
 use recompute::planner::{
     build_context, chen_plan, plan_with_context, Family, Objective, PlannerKind,
@@ -108,7 +109,7 @@ fn print_usage() {
            table2                        regenerate paper Table 2 (no liveness)\n\
            figure3 [--network N] [--device GB]   batch-vs-runtime sweeps\n\
            timing                        ExactDP vs ApproxDP planner runtime (§5.1)\n\
-           plan --network N [--batch B] [--budget GB]\n\
+           plan --network N [--batch B] [--budget GB|512KiB]\n\
                 [--objective tc|mc] [--family exact|approx] [--chen]\n\
            plan --graph FILE.json [...]  plan a user-supplied graph JSON\n\
            experiment --config F.json [--csv out.csv]  declarative sweep runner\n\
@@ -216,8 +217,8 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
     }
 
     let ctx = build_context(&g, family);
-    let budget = match flags.parse::<f64>("--budget")? {
-        Some(gb) => (gb * (1u64 << 30) as f64) as u64,
+    let budget = match flags.get("--budget") {
+        Some(s) => parse_budget(s)?,
         None => {
             let b = ctx.min_feasible_budget();
             println!("minimal feasible budget B* = {} (activations)", fmt_bytes(b));
@@ -226,8 +227,13 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
     };
     let kind =
         if family == Family::Exact { PlannerKind::ExactDp } else { PlannerKind::ApproxDp };
-    let plan = plan_with_context(&g, &ctx, kind, budget, objective)
-        .with_context(|| format!("budget {} infeasible", fmt_bytes(budget)))?;
+    let plan = plan_with_context(&g, &ctx, kind, budget, objective).with_context(|| {
+        format!(
+            "budget {} infeasible: min_feasible_budget = {}",
+            fmt_bytes(budget),
+            fmt_bytes(ctx.min_feasible_budget())
+        )
+    })?;
     let r = simulate(&g, &plan.chain, SimOptions::default());
     println!(
         "{} plan: k={} segments, overhead={} (+{:.0}% of T(V))",

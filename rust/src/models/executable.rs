@@ -1,36 +1,53 @@
-//! Executable shape metadata: run any graph topology for real.
+//! Executable shape metadata: run any graph topology for real, with
+//! per-node tensor shapes.
 //!
 //! The zoo graphs carry the *paper's* cost model (conv shapes at batch 96,
 //! hundreds of MB per node) — plannable, but far beyond what a reference
 //! CPU backend should execute. This module gives every topology a second
-//! life as a real training workload: each node is lowered to a uniform
-//! `[batch, width]` f32 tensor with one of three execution roles, so the
+//! life as a real training workload: each node is lowered to a
+//! `[batch, width_v]` f32 tensor with one of three execution roles, so the
 //! whole zoo (ResNet, U-Net, DenseNet, GoogLeNet, PSPNet, …) trains
 //! end-to-end on [`crate::runtime::NativeBackend`] while keeping its exact
 //! branch/merge structure — which is what the planner actually cares
 //! about.
 //!
+//! Two lowerings share the machinery:
+//!
+//! - [`recost`] — the uniform special case: every node at the same
+//!   `width` (the original executable lowering, kept for chains/tests
+//!   where shape variety is noise);
+//! - [`recost_profiled`] — the *heterogeneous* lowering: each node's
+//!   width is derived from the source model's own `M_v` profile
+//!   ([`profile_widths`]), so ResNet/U-Net/DenseNet execute with
+//!   activation-byte ratios matching their real memory shapes. This is
+//!   what exercises the planner's cut choices for real: non-uniform
+//!   `M_v` is exactly where the paper's DP beats uniform-cost baselines.
+//!
 //! Roles (decided purely by graph structure, so random property-test DAGs
 //! lower the same way as zoo graphs):
 //!
 //! - **Source** (no predecessors): forwards the batch input unchanged.
-//! - **Dense** (exactly one predecessor): fused dense layer
-//!   `gelu(x·W + b)` with its own `[width, width]` weights — the
-//!   `layer_fwd`/`layer_bwd` kernel pair.
+//! - **Dense** (exactly one predecessor): rectangular fused dense layer
+//!   `gelu(x·W + b)` with its own `[w_in, w_out]` weights — the
+//!   `layer_fwd`/`layer_bwd` kernel pair; `w_in` is the predecessor's
+//!   width, `w_out` the node's own, so dense nodes change width freely.
 //! - **Merge** (two or more predecessors): variance-preserving fan-in
 //!   `Σ inputs / √k` — the `add`/`scale` kernels; no parameters. The √k
 //!   normalization keeps activations finite through DenseNet-style concat
-//!   cascades without changing the graph's memory structure.
+//!   cascades without changing the graph's memory structure. Elementwise
+//!   fan-in requires every input to share the merge's width — the one
+//!   shape constraint the lowering imposes (see [`profile_widths`]).
 //!
-//! Every sink additionally feeds a mean-squared-error loss against the
-//! synthetic target (the `mse` kernel); the training loss is the sum over
-//! sinks in node-id order, which makes losses and gradients bit-exactly
-//! reproducible across execution schedules.
+//! Every sink additionally feeds a mean-squared-error loss against a
+//! synthetic target of the sink's own width (the `mse` kernel); the
+//! training loss is the sum over sinks in node-id order, which makes
+//! losses and gradients bit-exactly reproducible across execution
+//! schedules.
 
 use crate::graph::builder::BYTES_PER_ELEM;
 use crate::graph::{Graph, Node, NodeId};
 
-/// Execution role of a node under the uniform `[batch, width]` lowering.
+/// Execution role of a node under the executable lowering.
 #[derive(Clone, Copy, PartialEq, Eq, Debug)]
 pub enum NodeRole {
     /// No predecessors: forwards the batch input.
@@ -51,32 +68,158 @@ pub fn node_role(g: &Graph, v: NodeId) -> NodeRole {
     }
 }
 
-/// Parameter bytes a node owns under the lowering (dense layers carry a
-/// `[width, width]` weight plus a `[width]` bias).
-pub fn role_param_bytes(role: NodeRole, width: usize) -> u64 {
+/// Parameter bytes a node owns under the lowering: dense layers carry a
+/// rectangular `[w_in, w_out]` weight plus a `[w_out]` bias; sources and
+/// merges are parameter-free.
+pub fn role_param_bytes(role: NodeRole, w_in: usize, w_out: usize) -> u64 {
     match role {
-        NodeRole::Dense => ((width * width + width) as u64) * BYTES_PER_ELEM,
+        NodeRole::Dense => ((w_in * w_out + w_out) as u64) * BYTES_PER_ELEM,
         NodeRole::Source | NodeRole::Merge => 0,
     }
 }
 
-/// Re-cost `g` for execution at `[batch, width]`: same name, topology and
-/// op kinds, but every node's `M_v` is exactly the bytes of the tensor the
-/// executor will hold for it — which is what makes the simulator's
-/// predicted peak and the executor's observed peak comparable *as an
-/// equality*, not a bound.
-pub fn recost(g: &Graph, batch: usize, width: usize) -> Graph {
-    assert!(batch > 0 && width > 0, "batch/width must be positive");
-    let act = (batch * width) as u64 * BYTES_PER_ELEM;
+/// Execution width of `v` under an executable lowering (`shape[0]`).
+/// Panics on graphs that were not lowered by [`recost_widths`] — the
+/// executor validates this up front with a proper error.
+pub fn node_width(g: &Graph, v: NodeId) -> usize {
+    match g.node(v).shape.first() {
+        Some(&w) => w as usize,
+        None => panic!(
+            "node {} has no execution width — not an executable lowering (recost the graph first)",
+            g.node(v).name
+        ),
+    }
+}
+
+/// Width of the batch input forwarded by source nodes. All sources share
+/// it by construction of the lowering.
+pub fn input_width(g: &Graph) -> usize {
+    let v = *g.sources().first().expect("graph has at least one source");
+    node_width(g, v)
+}
+
+/// The distinct per-node activation byte-sizes of a lowering, sorted
+/// ascending. Length ≥ 2 is the definition of a *heterogeneous*
+/// lowering — the zoo engine and the property suites gate on it.
+pub fn distinct_act_sizes(g: &Graph) -> Vec<u64> {
+    let mut sizes: Vec<u64> = g.nodes().map(|(_, n)| n.mem).collect();
+    sizes.sort_unstable();
+    sizes.dedup();
+    sizes
+}
+
+// ---- width-class union-find ----------------------------------------------
+
+fn uf_find(parent: &mut [usize], mut i: usize) -> usize {
+    while parent[i] != i {
+        parent[i] = parent[parent[i]]; // path halving
+        i = parent[i];
+    }
+    i
+}
+
+fn uf_union(parent: &mut [usize], a: usize, b: usize) {
+    let (ra, rb) = (uf_find(parent, a), uf_find(parent, b));
+    if ra != rb {
+        parent[ra.max(rb)] = ra.min(rb);
+    }
+}
+
+/// Derive per-node execution widths from the graph's `M_v` profile:
+/// each node's raw width is proportional to its share of the largest
+/// activation (`⌈max_width · M_v / max M⌉`, clamped to `[1, max_width]`),
+/// then unified across the shape-equality classes the executable
+/// lowering imposes — all sources share the batch-input width, and every
+/// merge shares a width with each of its inputs (elementwise fan-in).
+/// Within a class the largest profiled width wins, so the heaviest
+/// member keeps its memory character.
+pub fn profile_widths(g: &Graph, max_width: usize) -> Vec<usize> {
+    assert!(max_width > 0, "max_width must be positive");
+    let n = g.len() as usize;
+    let max_mem = g.nodes().map(|(_, nd)| nd.mem).max().unwrap_or(1).max(1);
+    let raw: Vec<usize> = g
+        .nodes()
+        .map(|(_, nd)| {
+            let w = (max_width as f64 * nd.mem as f64 / max_mem as f64).ceil() as usize;
+            w.clamp(1, max_width)
+        })
+        .collect();
+
+    let mut parent: Vec<usize> = (0..n).collect();
+    let sources = g.sources();
+    for &s in sources.iter().skip(1) {
+        uf_union(&mut parent, sources[0].0 as usize, s.0 as usize);
+    }
+    for (v, _) in g.nodes() {
+        if node_role(g, v) == NodeRole::Merge {
+            for &p in g.preds(v) {
+                uf_union(&mut parent, v.0 as usize, p.0 as usize);
+            }
+        }
+    }
+
+    let mut class_width = vec![0usize; n];
+    for i in 0..n {
+        let r = uf_find(&mut parent, i);
+        class_width[r] = class_width[r].max(raw[i]);
+    }
+    (0..n).map(|i| class_width[uf_find(&mut parent, i)]).collect()
+}
+
+/// Re-cost `g` for execution with explicit per-node widths: same name
+/// suffix, topology and op kinds, but every node's `M_v` is exactly the
+/// bytes of the `[batch, widths[v]]` f32 tensor the executor will hold
+/// for it — which is what makes the simulator's predicted peak and the
+/// executor's observed peak comparable *as an equality*, not a bound.
+/// The node's width is recorded in `shape[0]` for the executor.
+///
+/// Panics if `widths` violates the lowering's shape constraints (merge
+/// inputs must share the merge's width; all sources must agree) — use
+/// [`profile_widths`] or a uniform width to construct valid assignments.
+pub fn recost_widths(g: &Graph, batch: usize, widths: &[usize], tag: &str) -> Graph {
+    assert!(batch > 0, "batch must be positive");
+    assert_eq!(widths.len(), g.len() as usize, "one width per node");
+    assert!(widths.iter().all(|&w| w > 0), "widths must be positive");
+    let in_width = g.sources().first().map(|&v| widths[v.0 as usize]);
+    for (v, n) in g.nodes() {
+        match node_role(g, v) {
+            NodeRole::Source => assert_eq!(
+                Some(widths[v.0 as usize]),
+                in_width,
+                "source {} must have the shared input width",
+                n.name
+            ),
+            NodeRole::Merge => {
+                for &p in g.preds(v) {
+                    assert_eq!(
+                        widths[p.0 as usize],
+                        widths[v.0 as usize],
+                        "merge {} and its input {} must share a width",
+                        n.name,
+                        g.node(p).name
+                    );
+                }
+            }
+            NodeRole::Dense => {}
+        }
+    }
     let nodes: Vec<Node> = g
         .nodes()
-        .map(|(v, n)| Node {
-            name: n.name.clone(),
-            op: n.op,
-            mem: act,
-            time: n.time,
-            shape: vec![width as u32],
-            param_bytes: role_param_bytes(node_role(g, v), width),
+        .map(|(v, n)| {
+            let w = widths[v.0 as usize];
+            let role = node_role(g, v);
+            let w_in = match role {
+                NodeRole::Dense => widths[g.preds(v)[0].0 as usize],
+                NodeRole::Source | NodeRole::Merge => 0,
+            };
+            Node {
+                name: n.name.clone(),
+                op: n.op,
+                mem: (batch * w) as u64 * BYTES_PER_ELEM,
+                time: n.time,
+                shape: vec![w as u32],
+                param_bytes: role_param_bytes(role, w_in, w),
+            }
         })
         .collect();
     let mut edges = Vec::with_capacity(g.edge_count());
@@ -85,7 +228,24 @@ pub fn recost(g: &Graph, batch: usize, width: usize) -> Graph {
             edges.push((p, v));
         }
     }
-    Graph::new(format!("{}@exec{batch}x{width}", g.name), nodes, &edges)
+    Graph::new(format!("{}@exec{batch}x{tag}", g.name), nodes, &edges)
+}
+
+/// Uniform lowering: every node at `[batch, width]` (the degenerate
+/// width assignment — trivially satisfies all shape constraints).
+pub fn recost(g: &Graph, batch: usize, width: usize) -> Graph {
+    assert!(batch > 0 && width > 0, "batch/width must be positive");
+    recost_widths(g, batch, &vec![width; g.len() as usize], &width.to_string())
+}
+
+/// Heterogeneous lowering: per-node widths from the source model's own
+/// `M_v` profile (see [`profile_widths`]), capped at `max_width`. This
+/// is the lowering the zoo engine executes — activation-byte ratios
+/// follow the real network's memory shape instead of flattening to one
+/// size.
+pub fn recost_profiled(g: &Graph, batch: usize, max_width: usize) -> Graph {
+    let widths = profile_widths(g, max_width);
+    recost_widths(g, batch, &widths, &format!("w{max_width}het"))
 }
 
 #[cfg(test)]
@@ -102,6 +262,7 @@ mod tests {
         assert_eq!(g.edge_count(), g0.edge_count());
         for (v, n) in g.nodes() {
             assert_eq!(n.mem, 4 * 8 * 4, "uniform activation bytes");
+            assert_eq!(n.shape, vec![8], "width recorded for the executor");
             assert_eq!(g.preds(v).len(), g0.preds(v).len());
         }
     }
@@ -112,8 +273,9 @@ mod tests {
         assert_eq!(node_role(&g, NodeId(0)), NodeRole::Source);
         assert_eq!(node_role(&g, NodeId(1)), NodeRole::Dense);
         assert_eq!(node_role(&g, NodeId(3)), NodeRole::Merge);
-        assert_eq!(role_param_bytes(NodeRole::Dense, 8), (64 + 8) * 4);
-        assert_eq!(role_param_bytes(NodeRole::Merge, 8), 0);
+        assert_eq!(role_param_bytes(NodeRole::Dense, 8, 8), (64 + 8) * 4);
+        assert_eq!(role_param_bytes(NodeRole::Dense, 2, 8), (16 + 8) * 4, "rectangular");
+        assert_eq!(role_param_bytes(NodeRole::Merge, 8, 8), 0);
     }
 
     #[test]
@@ -124,5 +286,54 @@ mod tests {
                 g.nodes().filter(|(v, _)| node_role(&g, *v) == NodeRole::Merge).count();
             assert!(merges > 0, "{name} must have fan-in nodes");
         }
+    }
+
+    #[test]
+    fn profile_widths_track_memory_and_satisfy_constraints() {
+        // Diamond M_v = 10/20/30/40: node 0 stays small, the merge class
+        // {1, 2, 3} takes the largest member's width.
+        let g = diamond();
+        let w = profile_widths(&g, 8);
+        assert_eq!(w.len(), 4);
+        assert_eq!(w[0], 2, "source scaled from M_v profile (⌈8·10/40⌉)");
+        assert_eq!(w[1], 8, "merge class unified to its largest member");
+        assert_eq!(w[2], 8);
+        assert_eq!(w[3], 8);
+    }
+
+    #[test]
+    fn profiled_lowering_is_heterogeneous_on_the_zoo() {
+        for name in ["ResNet50", "U-Net", "DenseNet121"] {
+            let g = recost_profiled(&zoo::find(name).unwrap().build_batch(1), 2, 16);
+            let sizes = distinct_act_sizes(&g);
+            assert!(
+                sizes.len() >= 2,
+                "{name}: expected ≥ 2 distinct activation byte-sizes, got {sizes:?}"
+            );
+            // Every node's bytes equal its [batch, width] tensor, and the
+            // lowering's shape constraints hold by construction (the
+            // recost_widths asserts would have fired otherwise).
+            for (v, n) in g.nodes() {
+                assert_eq!(n.mem, 2 * node_width(&g, v) as u64 * 4);
+            }
+        }
+    }
+
+    #[test]
+    fn dense_params_are_rectangular_under_profiled_lowering() {
+        let g = recost_profiled(&diamond(), 2, 8);
+        // Node 1 is dense with source input (width 2) and merge-class
+        // output (width 8): [2, 8] weight + [8] bias.
+        assert_eq!(g.node(NodeId(1)).param_bytes, (2 * 8 + 8) * 4);
+        assert_eq!(input_width(&g), 2);
+        assert_eq!(node_width(&g, NodeId(3)), 8);
+    }
+
+    #[test]
+    #[should_panic(expected = "share a width")]
+    fn recost_widths_rejects_merge_width_mismatch() {
+        let g = diamond();
+        // Merge node 3 at width 4 but input node 1 at width 2: invalid.
+        recost_widths(&g, 2, &[2, 2, 4, 4], "bad");
     }
 }

@@ -7,7 +7,7 @@
 //! implementations exist:
 //!
 //! - [`native::NativeBackend`] (always available, the default): a pure-Rust
-//!   f32 CPU implementation of the dense tower kernels, mathematically
+//!   f32 CPU implementation of the dense kernels, mathematically
 //!   mirroring `python/compile/kernels/ref.py`. Zero Python, zero
 //!   artifacts, zero native libraries — the whole repo trains end-to-end
 //!   with `cargo run` alone.
@@ -15,9 +15,22 @@
 //!   AOT-compiled HLO-text artifacts produced by `python/compile/aot.py`
 //!   and executes them through PJRT.
 //!
+//! The trait is **shape-polymorphic**: a backend instance is not
+//! specialized to any `(batch, width)` — dimensions travel with each
+//! tensor (set at [`Backend::upload`], validated by every kernel from
+//! its arguments), and the dense path is rectangular
+//! (`[m, k_in] × [k_in, k_out] → [m, k_out]`). One backend therefore
+//! executes graphs whose nodes all have *different* tensor shapes, which
+//! is what gives the planner's non-uniform `M_v` cut choices a real
+//! workload. Shape-specialized implementations (the PJRT artifact set is
+//! compiled for one fixed shape) advertise their shapes through inherent
+//! methods, not through this trait.
+//!
 //! The kernel *names* are the interchange contract shared by all
 //! backends (and by the artifact manifest): `layer_fwd`, `layer_bwd`,
-//! `loss_head_fwd`, `loss_head_bwd`, `sgd_mat`, `sgd_vec`.
+//! `loss_head_fwd`, `loss_head_bwd`, `sgd_mat`, `sgd_vec`
+//! ([`TOWER_KERNELS`]), plus `add`, `scale`, `mse` for general-DAG
+//! execution ([`DAG_KERNELS`]).
 
 use std::time::Duration;
 
@@ -91,13 +104,9 @@ pub trait Backend {
     /// Human-readable backend name (`"native"`, `"pjrt"`).
     fn name(&self) -> &'static str;
 
-    /// Batch size this backend instance is specialized for.
-    fn batch(&self) -> usize;
-
-    /// Tower width this backend instance is specialized for.
-    fn width(&self) -> usize;
-
     /// Upload a row-major f32 host buffer (`dims = []` is a scalar).
+    /// The dims become the tensor's shape — kernels are dimension-driven
+    /// and accept any consistent sizes.
     fn upload(&self, data: &[f32], dims: &[usize]) -> Result<Self::Tensor>;
 
     /// Download a tensor to a flat host vec.
@@ -115,15 +124,28 @@ pub trait Backend {
     /// Per-kernel timing/byte statistics accumulated so far, sorted by
     /// kernel name.
     fn stats(&self) -> Vec<KernelStat>;
+
+    /// Bytes currently held by live tensors this backend produced
+    /// (uploads + kernel outputs not yet dropped), or `None` if the
+    /// backend cannot census its allocations. Backends that return
+    /// `Some` power the leak regression tests: after training, live
+    /// bytes must return exactly to the post-init baseline.
+    fn live_bytes(&self) -> Option<u64> {
+        None
+    }
 }
 
-/// Names of the kernels every tower backend must provide.
+/// Names of the kernels every tower backend must provide. All of them
+/// are shape-generic on the native backend (`layer_*`/`loss_head_*` take
+/// rectangular `[m, k_in] × [k_in, k_out]` operands); PJRT artifacts
+/// provide the same names compiled for one fixed `(batch, width)`.
 pub const TOWER_KERNELS: [&str; 6] =
     ["layer_bwd", "layer_fwd", "loss_head_bwd", "loss_head_fwd", "sgd_mat", "sgd_vec"];
 
 /// Extra kernels the general-DAG executor ([`crate::exec::DagTrainer`])
 /// needs beyond the tower set: elementwise fan-in/gradient accumulation
 /// (`add`), the merge normalization (`scale`), and the per-sink loss
-/// (`mse`). Currently provided by the native backend only — the PJRT
-/// artifact manifest predates general-DAG execution.
+/// (`mse`) — each shape-generic, operating on whatever dims its
+/// arguments carry. Currently provided by the native backend only — the
+/// PJRT artifact manifest predates general-DAG execution.
 pub const DAG_KERNELS: [&str; 3] = ["add", "mse", "scale"];

@@ -1,17 +1,24 @@
 //! `NativeBackend` — the pure-Rust f32 CPU reference backend.
 //!
-//! Implements the dense tower kernels of `python/compile/kernels/ref.py`
-//! exactly (matmul + bias + tanh-approximated GELU, the MSE regression
-//! head, and plain SGD), so the whole training stack runs with zero
-//! Python, zero AOT artifacts, and zero native libraries. Gradients were
-//! derived analytically and are cross-checked in the tests below by
+//! Implements the dense kernels of `python/compile/kernels/ref.py`
+//! (matmul + bias + tanh-approximated GELU, the MSE regression head, and
+//! plain SGD), so the whole training stack runs with zero Python, zero
+//! AOT artifacts, and zero native libraries. Every kernel is
+//! *dimension-driven*: shapes are read from the argument tensors, the
+//! dense path is rectangular (`[m, k_in] × [k_in, k_out]`), and nothing
+//! is specialized to a fixed `(batch, width)` — the backend executes
+//! heterogeneous per-node shapes as naturally as uniform ones. Gradients
+//! were derived analytically and are cross-checked in the tests below by
 //! central finite differences against the forward kernels.
 //!
 //! Tensors are `Rc`-shared host buffers: cloning is O(1), which matches
-//! how the trainer models checkpoint caching (the *accounting* of live
-//! bytes is done by the trainer, not the allocator).
+//! how the trainer models checkpoint caching. Every buffer the backend
+//! produces (uploads and kernel outputs) is counted in a live-byte
+//! tracker that its `Drop` decrements, so [`Backend::live_bytes`] is an
+//! exact census of outstanding allocations — the leak regression tests
+//! assert it returns to baseline after training.
 
-use std::cell::RefCell;
+use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::rc::Rc;
 use std::time::Instant;
@@ -20,22 +27,38 @@ use crate::anyhow::{bail, Result};
 
 use super::{Backend, KernelStat, DAG_KERNELS, TOWER_KERNELS};
 
+/// The backing store of a [`HostTensor`]: the flat data plus (once the
+/// owning backend adopts the tensor) a live-byte tracker decremented on
+/// drop.
+struct TensorBuf {
+    data: Vec<f32>,
+    tracker: Option<Rc<Cell<u64>>>,
+}
+
+impl Drop for TensorBuf {
+    fn drop(&mut self) {
+        if let Some(t) = &self.tracker {
+            t.set(t.get() - (self.data.len() * 4) as u64);
+        }
+    }
+}
+
 /// A host-side f32 tensor: row-major data + dims (`[]` = scalar).
 #[derive(Clone)]
 pub struct HostTensor {
-    data: Rc<Vec<f32>>,
+    buf: Rc<TensorBuf>,
     dims: Vec<usize>,
 }
 
 impl HostTensor {
     fn new(data: Vec<f32>, dims: Vec<usize>) -> HostTensor {
         debug_assert_eq!(data.len(), dims.iter().product::<usize>().max(1));
-        HostTensor { data: Rc::new(data), dims }
+        HostTensor { buf: Rc::new(TensorBuf { data, tracker: None }), dims }
     }
 
     /// Flat row-major view of the data.
     pub fn data(&self) -> &[f32] {
-        &self.data
+        &self.buf.data
     }
 
     /// Dimensions (`[]` = scalar).
@@ -45,39 +68,52 @@ impl HostTensor {
 
     /// Number of elements.
     pub fn len(&self) -> usize {
-        self.data.len()
+        self.buf.data.len()
     }
 
     /// True iff the tensor holds no elements (unreachable for tensors
     /// built through `upload`, which always hold at least a scalar).
     pub fn is_empty(&self) -> bool {
-        self.data.is_empty()
+        self.buf.data.is_empty()
     }
 
     /// Logical size in bytes (f32).
     pub fn bytes(&self) -> u64 {
-        (self.data.len() * 4) as u64
+        (self.buf.data.len() * 4) as u64
     }
 }
 
-/// The pure-Rust CPU backend. Specialized (like an artifact set) to one
-/// `(batch, width)` tower shape, though the kernels themselves validate
-/// shapes from their arguments and accept any consistent sizes.
+/// The pure-Rust CPU backend. Shape-free: kernels validate and size
+/// themselves from their argument tensors, so one instance serves any
+/// mix of tensor shapes.
+#[derive(Default)]
 pub struct NativeBackend {
-    batch: usize,
-    width: usize,
+    /// Bytes held by live tensors this backend has produced.
+    live: Rc<Cell<u64>>,
     stats: RefCell<BTreeMap<String, KernelStat>>,
 }
 
 impl NativeBackend {
-    /// A backend for towers of `width` trained at `batch`.
-    pub fn new(batch: usize, width: usize) -> NativeBackend {
-        assert!(batch > 0 && width > 0, "batch/width must be positive");
-        NativeBackend { batch, width, stats: RefCell::new(BTreeMap::new()) }
+    /// A fresh backend with empty stats and a zeroed live-byte tracker.
+    pub fn new() -> NativeBackend {
+        NativeBackend::default()
     }
 
     fn record(&self, kernel: &str, t0: Instant, bytes_in: u64, bytes_out: u64) {
         super::record_call(&mut self.stats.borrow_mut(), kernel, t0.elapsed(), bytes_in, bytes_out);
+    }
+
+    /// Attach the live-byte tracker to a freshly built tensor (uploads
+    /// and kernel outputs have refcount 1 here; already-adopted or
+    /// shared tensors pass through unchanged).
+    fn adopt(&self, mut t: HostTensor) -> HostTensor {
+        if let Some(buf) = Rc::get_mut(&mut t.buf) {
+            if buf.tracker.is_none() {
+                self.live.set(self.live.get() + (buf.data.len() * 4) as u64);
+                buf.tracker = Some(Rc::clone(&self.live));
+            }
+        }
+        t
     }
 }
 
@@ -88,28 +124,24 @@ impl Backend for NativeBackend {
         "native"
     }
 
-    fn batch(&self) -> usize {
-        self.batch
-    }
-
-    fn width(&self) -> usize {
-        self.width
-    }
-
     fn upload(&self, data: &[f32], dims: &[usize]) -> Result<HostTensor> {
         let expect: usize = dims.iter().product::<usize>().max(1);
         if data.len() != expect {
             bail!("upload shape mismatch: {} elems for dims {dims:?}", data.len());
         }
-        Ok(HostTensor::new(data.to_vec(), dims.to_vec()))
+        Ok(self.adopt(HostTensor::new(data.to_vec(), dims.to_vec())))
     }
 
     fn download(&self, t: &HostTensor) -> Result<Vec<f32>> {
-        Ok(t.data.as_ref().clone())
+        Ok(t.buf.data.clone())
     }
 
     fn tensor_bytes(&self, t: &HostTensor) -> u64 {
         t.bytes()
+    }
+
+    fn live_bytes(&self) -> Option<u64> {
+        Some(self.live.get())
     }
 
     fn run(&self, name: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
@@ -129,6 +161,7 @@ impl Backend for NativeBackend {
                 "native backend has no kernel '{other}' (have: {TOWER_KERNELS:?} + {DAG_KERNELS:?})"
             ),
         };
+        let outs: Vec<HostTensor> = outs.into_iter().map(|t| self.adopt(t)).collect();
         let bytes_out: u64 = outs.iter().map(HostTensor::bytes).sum();
         self.record(name, t0, bytes_in, bytes_out);
         Ok(outs)
@@ -233,71 +266,77 @@ fn colsum(a: &[f32], n: usize) -> Vec<f32> {
     out
 }
 
-/// Validate the `(x[m,k], w[k,k], bias[k], …)` dense-layer argument shape
-/// shared by the forward, backward and loss-head kernels; returns `(m, k)`.
-fn dense_shape(kernel: &str, args: &[HostTensor], arity: usize) -> Result<(usize, usize)> {
+/// Validate the rectangular `(x[m,k_in], w[k_in,k_out], bias[k_out], …)`
+/// dense-layer argument shape shared by the forward, backward and
+/// loss-head kernels; returns `(m, k_in, k_out)`.
+fn dense_shape(kernel: &str, args: &[HostTensor], arity: usize) -> Result<(usize, usize, usize)> {
     if args.len() != arity {
         bail!("{kernel}: expected {arity} args, got {}", args.len());
     }
     let (x, w, bias) = (&args[0], &args[1], &args[2]);
-    let [m, k] = x.dims() else {
+    let [m, k_in] = x.dims() else {
         bail!("{kernel}: input must be 2-d, got {:?}", x.dims());
     };
-    let (m, k) = (*m, *k);
-    if w.dims() != [k, k] {
-        bail!("{kernel}: weight dims {:?} incompatible with input [{m}, {k}]", w.dims());
+    let (m, k_in) = (*m, *k_in);
+    let [wk, k_out] = w.dims() else {
+        bail!("{kernel}: weight must be 2-d, got {:?}", w.dims());
+    };
+    let (wk, k_out) = (*wk, *k_out);
+    if wk != k_in {
+        bail!("{kernel}: weight dims {:?} incompatible with input [{m}, {k_in}]", w.dims());
     }
-    if bias.dims() != [k] {
-        bail!("{kernel}: bias dims {:?}, want [{k}]", bias.dims());
+    if bias.dims() != [k_out] {
+        bail!("{kernel}: bias dims {:?}, want [{k_out}]", bias.dims());
     }
-    Ok((m, k))
+    Ok((m, k_in, k_out))
 }
 
-/// `gelu(x @ w + b)` — the fused dense layer forward.
+/// `gelu(x @ w + b)` — the fused dense layer forward, rectangular:
+/// `[m, k_in] × [k_in, k_out] → [m, k_out]`.
 fn layer_fwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
-    let (m, k) = dense_shape("layer_fwd", args, 3)?;
-    let mut z = matmul(args[0].data(), args[1].data(), m, k, k);
+    let (m, k_in, k_out) = dense_shape("layer_fwd", args, 3)?;
+    let mut z = matmul(args[0].data(), args[1].data(), m, k_in, k_out);
     add_bias(&mut z, args[2].data());
     for v in z.iter_mut() {
         *v = gelu(*v);
     }
-    Ok(vec![HostTensor::new(z, vec![m, k])])
+    Ok(vec![HostTensor::new(z, vec![m, k_out])])
 }
 
 /// Gradients of `layer_fwd` w.r.t. `(x, w, b)` given upstream `gh`:
 /// `dz = gh ⊙ gelu'(z)`, `gx = dz @ wᵀ`, `gw = xᵀ @ dz`, `gb = Σ_batch dz`.
 fn layer_bwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
-    let (m, k) = dense_shape("layer_bwd", args, 4)?;
+    let (m, k_in, k_out) = dense_shape("layer_bwd", args, 4)?;
     let gh = &args[3];
-    if gh.dims() != [m, k] {
-        bail!("layer_bwd: upstream grad dims {:?}, want [{m}, {k}]", gh.dims());
+    if gh.dims() != [m, k_out] {
+        bail!("layer_bwd: upstream grad dims {:?}, want [{m}, {k_out}]", gh.dims());
     }
     let (x, w) = (args[0].data(), args[1].data());
-    let mut dz = matmul(x, w, m, k, k);
+    let mut dz = matmul(x, w, m, k_in, k_out);
     add_bias(&mut dz, args[2].data());
     for (d, &g) in dz.iter_mut().zip(gh.data()) {
         *d = g * gelu_prime(*d);
     }
-    let gx = matmul_nt(&dz, w, m, k, k);
-    let gw = matmul_tn(x, &dz, m, k, k);
-    let gb = colsum(&dz, k);
+    let gx = matmul_nt(&dz, w, m, k_out, k_in);
+    let gw = matmul_tn(x, &dz, m, k_in, k_out);
+    let gb = colsum(&dz, k_out);
     Ok(vec![
-        HostTensor::new(gx, vec![m, k]),
-        HostTensor::new(gw, vec![k, k]),
-        HostTensor::new(gb, vec![k]),
+        HostTensor::new(gx, vec![m, k_in]),
+        HostTensor::new(gw, vec![k_in, k_out]),
+        HostTensor::new(gb, vec![k_out]),
     ])
 }
 
 /// MSE regression head forward: `mean((h @ w + b − y)²)` → scalar loss.
 fn loss_head_fwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
-    let (m, k) = dense_shape("loss_head_fwd", args, 4)?;
+    let (m, k_in, k_out) = dense_shape("loss_head_fwd", args, 4)?;
     let y = &args[3];
-    if y.dims() != [m, k] {
-        bail!("loss_head_fwd: target dims {:?}, want [{m}, {k}]", y.dims());
+    if y.dims() != [m, k_out] {
+        bail!("loss_head_fwd: target dims {:?}, want [{m}, {k_out}]", y.dims());
     }
-    let mut pred = matmul(args[0].data(), args[1].data(), m, k, k);
+    let mut pred = matmul(args[0].data(), args[1].data(), m, k_in, k_out);
     add_bias(&mut pred, args[2].data());
-    let n = (m * k) as f32;
+    let n = (m * k_out) as f32;
     let loss: f32 =
         pred.iter().zip(y.data()).map(|(&p, &t)| (p - t) * (p - t)).sum::<f32>() / n;
     Ok(vec![HostTensor::new(vec![loss], vec![])])
@@ -306,15 +345,15 @@ fn loss_head_fwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
 /// Loss head forward + backward in one call:
 /// returns `(loss, gh, gw, gb)` for `loss = mean((h @ w + b − y)²)`.
 fn loss_head_bwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
-    let (m, k) = dense_shape("loss_head_bwd", args, 4)?;
+    let (m, k_in, k_out) = dense_shape("loss_head_bwd", args, 4)?;
     let y = &args[3];
-    if y.dims() != [m, k] {
-        bail!("loss_head_bwd: target dims {:?}, want [{m}, {k}]", y.dims());
+    if y.dims() != [m, k_out] {
+        bail!("loss_head_bwd: target dims {:?}, want [{m}, {k_out}]", y.dims());
     }
     let (h, w) = (args[0].data(), args[1].data());
-    let mut pred = matmul(h, w, m, k, k);
+    let mut pred = matmul(h, w, m, k_in, k_out);
     add_bias(&mut pred, args[2].data());
-    let n = (m * k) as f32;
+    let n = (m * k_out) as f32;
     let mut loss = 0.0f32;
     // dpred = 2 (pred − y) / n, computed in place.
     for (p, &t) in pred.iter_mut().zip(y.data()) {
@@ -324,14 +363,14 @@ fn loss_head_bwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     }
     loss /= n;
     let dpred = pred;
-    let gh = matmul_nt(&dpred, w, m, k, k);
-    let gw = matmul_tn(h, &dpred, m, k, k);
-    let gb = colsum(&dpred, k);
+    let gh = matmul_nt(&dpred, w, m, k_out, k_in);
+    let gw = matmul_tn(h, &dpred, m, k_in, k_out);
+    let gb = colsum(&dpred, k_out);
     Ok(vec![
         HostTensor::new(vec![loss], vec![]),
-        HostTensor::new(gh, vec![m, k]),
-        HostTensor::new(gw, vec![k, k]),
-        HostTensor::new(gb, vec![k]),
+        HostTensor::new(gh, vec![m, k_in]),
+        HostTensor::new(gw, vec![k_in, k_out]),
+        HostTensor::new(gb, vec![k_out]),
     ])
 }
 
@@ -421,7 +460,7 @@ mod tests {
     }
 
     fn be() -> NativeBackend {
-        NativeBackend::new(3, 4)
+        NativeBackend::new()
     }
 
     /// Central-finite-difference check of an analytic gradient against a
@@ -469,25 +508,27 @@ mod tests {
     }
 
     /// Central finite differences of `L(θ) = Σ fwd(θ) · r` must match the
-    /// analytic VJP with upstream gradient `r`, for every parameter.
+    /// analytic VJP with upstream gradient `r`, for every parameter —
+    /// on a *rectangular* layer (`k_in ≠ k_out`), the shape-polymorphic
+    /// dense path.
     #[test]
-    fn layer_bwd_matches_finite_differences() {
+    fn rectangular_layer_bwd_matches_finite_differences() {
         let b = be();
-        let (m, k) = (3usize, 4usize);
+        let (m, k_in, k_out) = (3usize, 5usize, 2usize);
         let mut rng = Pcg32::seeded(11);
-        let x = randn(&mut rng, m * k, 1.0);
-        let w = randn(&mut rng, k * k, 0.5);
-        let bias = randn(&mut rng, k, 0.1);
-        let r = randn(&mut rng, m * k, 1.0);
+        let x = randn(&mut rng, m * k_in, 1.0);
+        let w = randn(&mut rng, k_in * k_out, 0.5);
+        let bias = randn(&mut rng, k_out, 0.1);
+        let r = randn(&mut rng, m * k_out, 1.0);
 
         let fwd_sum = |x: &[f32], w: &[f32], bias: &[f32]| -> f64 {
             let out = b
                 .run(
                     "layer_fwd",
                     &[
-                        b.upload(x, &[m, k]).unwrap(),
-                        b.upload(w, &[k, k]).unwrap(),
-                        b.upload(bias, &[k]).unwrap(),
+                        b.upload(x, &[m, k_in]).unwrap(),
+                        b.upload(w, &[k_in, k_out]).unwrap(),
+                        b.upload(bias, &[k_out]).unwrap(),
                     ],
                 )
                 .unwrap();
@@ -498,13 +539,16 @@ mod tests {
             .run(
                 "layer_bwd",
                 &[
-                    b.upload(&x, &[m, k]).unwrap(),
-                    b.upload(&w, &[k, k]).unwrap(),
-                    b.upload(&bias, &[k]).unwrap(),
-                    b.upload(&r, &[m, k]).unwrap(),
+                    b.upload(&x, &[m, k_in]).unwrap(),
+                    b.upload(&w, &[k_in, k_out]).unwrap(),
+                    b.upload(&bias, &[k_out]).unwrap(),
+                    b.upload(&r, &[m, k_out]).unwrap(),
                 ],
             )
             .unwrap();
+        assert_eq!(outs[0].dims(), [m, k_in], "gx shape");
+        assert_eq!(outs[1].dims(), [k_in, k_out], "gw shape");
+        assert_eq!(outs[2].dims(), [k_out], "gb shape");
         let (gx, gw, gb) = (outs[0].data(), outs[1].data(), outs[2].data());
 
         fd_check(gx, &x, |v| fwd_sum(v, &w, &bias));
@@ -513,24 +557,24 @@ mod tests {
     }
 
     #[test]
-    fn loss_head_bwd_matches_finite_differences_and_fwd() {
+    fn rectangular_loss_head_bwd_matches_finite_differences_and_fwd() {
         let b = be();
-        let (m, k) = (3usize, 4usize);
+        let (m, k_in, k_out) = (3usize, 4usize, 2usize);
         let mut rng = Pcg32::seeded(5);
-        let h = randn(&mut rng, m * k, 1.0);
-        let w = randn(&mut rng, k * k, 0.5);
-        let bias = randn(&mut rng, k, 0.1);
-        let y = randn(&mut rng, m * k, 1.0);
+        let h = randn(&mut rng, m * k_in, 1.0);
+        let w = randn(&mut rng, k_in * k_out, 0.5);
+        let bias = randn(&mut rng, k_out, 0.1);
+        let y = randn(&mut rng, m * k_out, 1.0);
 
         let loss_of = |h: &[f32], w: &[f32], bias: &[f32]| -> f64 {
             let out = b
                 .run(
                     "loss_head_fwd",
                     &[
-                        b.upload(h, &[m, k]).unwrap(),
-                        b.upload(w, &[k, k]).unwrap(),
-                        b.upload(bias, &[k]).unwrap(),
-                        b.upload(&y, &[m, k]).unwrap(),
+                        b.upload(h, &[m, k_in]).unwrap(),
+                        b.upload(w, &[k_in, k_out]).unwrap(),
+                        b.upload(bias, &[k_out]).unwrap(),
+                        b.upload(&y, &[m, k_out]).unwrap(),
                     ],
                 )
                 .unwrap();
@@ -541,38 +585,21 @@ mod tests {
             .run(
                 "loss_head_bwd",
                 &[
-                    b.upload(&h, &[m, k]).unwrap(),
-                    b.upload(&w, &[k, k]).unwrap(),
-                    b.upload(&bias, &[k]).unwrap(),
-                    b.upload(&y, &[m, k]).unwrap(),
+                    b.upload(&h, &[m, k_in]).unwrap(),
+                    b.upload(&w, &[k_in, k_out]).unwrap(),
+                    b.upload(&bias, &[k_out]).unwrap(),
+                    b.upload(&y, &[m, k_out]).unwrap(),
                 ],
             )
             .unwrap();
         assert_eq!(outs.len(), 4);
+        assert_eq!(outs[1].dims(), [m, k_in], "gh shape");
         let loss = outs[0].data()[0];
         assert!((loss as f64 - loss_of(&h, &w, &bias)).abs() < 1e-6);
 
-        let eps = 1e-3f32;
-        for (analytic, base, which) in
-            [(outs[1].data(), &h, 0usize), (outs[2].data(), &w, 1), (outs[3].data(), &bias, 2)]
-        {
-            for (i, &a) in analytic.iter().enumerate() {
-                let mut hi = base.to_vec();
-                hi[i] += eps;
-                let mut lo = base.to_vec();
-                lo[i] -= eps;
-                let (lhi, llo) = match which {
-                    0 => (loss_of(&hi, &w, &bias), loss_of(&lo, &w, &bias)),
-                    1 => (loss_of(&h, &hi, &bias), loss_of(&h, &lo, &bias)),
-                    _ => (loss_of(&h, &w, &hi), loss_of(&h, &w, &lo)),
-                };
-                let numeric = (lhi - llo) / (2.0 * eps as f64);
-                assert!(
-                    (numeric - a as f64).abs() < 5e-3,
-                    "param {which} elem {i}: numeric {numeric} vs analytic {a}"
-                );
-            }
-        }
+        fd_check(outs[1].data(), &h, |v| loss_of(v, &w, &bias));
+        fd_check(outs[2].data(), &w, |v| loss_of(&h, v, &bias));
+        fd_check(outs[3].data(), &bias, |v| loss_of(&h, &w, v));
     }
 
     #[test]
@@ -614,6 +641,9 @@ mod tests {
         let w_bad = b.upload(&[0.0; 9], &[3, 3]).unwrap();
         let bias = b.upload(&[0.0; 4], &[4]).unwrap();
         assert!(b.run("layer_fwd", &[x.clone(), w_bad, bias.clone()]).is_err());
+        // Rectangular weights with the wrong *input* dimension still fail.
+        let w_rect_bad = b.upload(&[0.0; 6], &[3, 2]).unwrap();
+        assert!(b.run("layer_fwd", &[x.clone(), w_rect_bad, bias.clone()]).is_err());
         assert!(b.run("layer_fwd", &[x.clone(), x.clone(), bias]).is_err());
         assert!(b.run("nope", &[]).is_err());
         assert!(b.upload(&[0.0; 3], &[2, 2]).is_err());
@@ -675,5 +705,21 @@ mod tests {
         assert_eq!(outs.len(), 2);
         assert!(outs[0].dims().is_empty(), "scalar loss");
         fd_check(outs[1].data(), &p, loss_of);
+    }
+
+    #[test]
+    fn live_bytes_census_is_exact() {
+        let b = be();
+        assert_eq!(b.live_bytes(), Some(0));
+        let x = b.upload(&[1.0f32; 8], &[2, 4]).unwrap();
+        assert_eq!(b.live_bytes(), Some(32));
+        let x2 = x.clone(); // shares the buffer: no new allocation
+        assert_eq!(b.live_bytes(), Some(32));
+        let s = b.upload(&[2.0], &[]).unwrap();
+        let doubled = b.run("scale", &[x2, s.clone()]).unwrap().pop().unwrap();
+        assert_eq!(b.live_bytes(), Some(32 + 4 + 32), "output tracked too");
+        drop(doubled);
+        drop(x);
+        assert_eq!(b.live_bytes(), Some(4), "only the scalar factor remains");
     }
 }

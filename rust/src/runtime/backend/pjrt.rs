@@ -243,6 +243,19 @@ impl PjrtBackend {
     pub fn artifacts(&self) -> &ArtifactSet {
         &self.arts
     }
+
+    /// Batch size the artifact set was AOT-compiled for. Unlike the
+    /// shape-generic native kernels, PJRT artifacts are fixed-shape —
+    /// these inherent accessors (no longer part of the [`Backend`]
+    /// trait) let callers build matching host buffers.
+    pub fn batch(&self) -> usize {
+        self.arts.batch
+    }
+
+    /// Tower width the artifact set was AOT-compiled for.
+    pub fn width(&self) -> usize {
+        self.arts.width
+    }
 }
 
 impl Backend for PjrtBackend {
@@ -250,14 +263,6 @@ impl Backend for PjrtBackend {
 
     fn name(&self) -> &'static str {
         "pjrt"
-    }
-
-    fn batch(&self) -> usize {
-        self.arts.batch
-    }
-
-    fn width(&self) -> usize {
-        self.arts.width
     }
 
     fn upload(&self, data: &[f32], dims: &[usize]) -> Result<xla::Literal> {

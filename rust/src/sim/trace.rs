@@ -21,6 +21,12 @@
 //! canonical strategy never uses a value it discarded — the core safety
 //! property of the whole approach.
 //!
+//! Byte accounting is **per node** throughout: every `Fwd` *and* `Grad`
+//! allocation charges that node's own `M_v` (a gradient has its node's
+//! shape), so traces of heterogeneously-shaped lowerings — where each
+//! node holds a different `[batch, width_v]` tensor — predict exactly
+//! the bytes the executor observes.
+//!
 //! Traces are also *executable*: every forward materialization is an
 //! [`Event::Alloc`] of a `Fwd` buffer and every backward op is announced
 //! by an explicit [`Event::Backprop`] marker, so

@@ -65,11 +65,57 @@ fn plan_chen_mode() {
 }
 
 #[test]
-fn infeasible_budget_reports_error() {
+fn infeasible_budget_reports_error_naming_the_minimum() {
     let out = repro()
         .args(["plan", "--network", "VGG19", "--batch", "64", "--budget", "0.001"])
         .output()
         .unwrap();
     assert!(!out.status.success());
-    assert!(String::from_utf8_lossy(&out.stderr).contains("infeasible"));
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("infeasible"), "{err}");
+    assert!(err.contains("min_feasible_budget"), "{err}");
+}
+
+#[test]
+fn plan_accepts_human_readable_budget() {
+    // 8GiB is comfortably feasible for VGG19 at batch 4.
+    let out = repro()
+        .args(["plan", "--network", "VGG19", "--batch", "4", "--budget", "8GiB"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("peak:"));
+    // And a nonsense unit is a parse error, not a planner error.
+    let out = repro()
+        .args(["plan", "--network", "VGG19", "--batch", "4", "--budget", "12parsecs"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("byte unit"));
+}
+
+#[test]
+fn train_accepts_human_readable_budget_and_names_minimum_when_infeasible() {
+    // An absurdly small absolute budget must fail actionably…
+    let out = repro()
+        .args([
+            "train", "--model", "unet", "--batch", "2", "--width", "8", "--steps", "1",
+            "--quiet", "--budget", "16B",
+        ])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    let err = String::from_utf8_lossy(&out.stderr);
+    assert!(err.contains("min_feasible_budget"), "{err}");
+    // …while a generous human-readable budget trains end to end.
+    let out = repro()
+        .args([
+            "train", "--model", "unet", "--batch", "2", "--width", "8", "--steps", "1",
+            "--quiet", "--budget", "1MiB",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("HETEROGENEOUS ✓"), "{text}");
 }

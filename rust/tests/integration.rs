@@ -31,8 +31,8 @@ fn gelu(x: f32) -> f32 {
 
 #[test]
 fn layer_fwd_kernel_matches_host_math() {
-    let be = NativeBackend::new(BATCH, WIDTH);
-    let (b, w) = (be.batch(), be.width());
+    let be = NativeBackend::new();
+    let (b, w) = (BATCH, WIDTH);
     // x = small ramp, w = identity, bias = 0.5 ⇒ out = gelu(x + 0.5).
     let x: Vec<f32> = (0..b * w).map(|i| (i % 7) as f32 * 0.1 - 0.3).collect();
     let mut wmat = vec![0f32; w * w];
@@ -59,8 +59,8 @@ fn layer_fwd_kernel_matches_host_math() {
 
 #[test]
 fn sgd_kernels_update_parameters() {
-    let be = NativeBackend::new(BATCH, WIDTH);
-    let w = be.width();
+    let be = NativeBackend::new();
+    let w = WIDTH;
     let wmat = vec![1.0f32; w * w];
     let gmat = vec![2.0f32; w * w];
     let out = be

@@ -1,0 +1,70 @@
+//! Leak regression guard, promoted from `examples/runtime_leak_check.rs`.
+//!
+//! The native backend counts every byte of every tensor it produces
+//! (uploads and kernel outputs) and decrements the counter when the
+//! buffer drops, so `Backend::live_bytes` is an *exact* census — far
+//! stronger than the RSS heuristic the old example used. Two guards:
+//!
+//! - hammering the hot SGD kernel keeps the census flat (the historical
+//!   PJRT `execute` leak this harness was born to catch would show up
+//!   here as monotone growth);
+//! - after `DagTrainer::train` on a zoo model, live bytes return
+//!   *exactly* to the post-init baseline (parameters + merge
+//!   normalizers) — no activation, gradient or optimizer buffer
+//!   survives the run.
+
+use recompute::exec::{DagTrainer, OpProgram, TrainConfig};
+use recompute::models::executable::recost_profiled;
+use recompute::models::zoo;
+use recompute::planner::{plan_at_min_budget, Family, Objective};
+use recompute::runtime::{Backend, NativeBackend};
+
+#[test]
+fn sgd_kernel_hammer_keeps_live_bytes_flat() {
+    let w = 64usize;
+    let be = NativeBackend::new();
+    let wm = vec![1.0f32; w * w];
+    let gm = vec![0.1f32; w * w];
+    let mut cur = be.upload(&wm, &[w, w]).unwrap();
+    let baseline = be.live_bytes().expect("native backend tracks allocations");
+    assert_eq!(baseline, (w * w * 4) as u64, "only `cur` is live");
+    for _ in 0..300 {
+        let g = be.upload(&gm, &[w, w]).unwrap();
+        let lr = be.upload(&[0.01], &[]).unwrap();
+        cur = be.run("sgd_mat", &[cur, g, lr]).unwrap().pop().unwrap();
+    }
+    // Every iteration's gradient, lr scalar and replaced parameter died.
+    assert_eq!(be.live_bytes(), Some(baseline), "kernel buffers are leaking");
+    drop(cur);
+    assert_eq!(be.live_bytes(), Some(0), "census returns to zero");
+    let stats = be.stats();
+    let sgd = stats.iter().find(|s| s.kernel == "sgd_mat").unwrap();
+    assert_eq!(sgd.calls, 300, "stats must count every call");
+}
+
+#[test]
+fn dag_training_returns_live_bytes_to_post_init_baseline() {
+    let g = recost_profiled(&zoo::find("resnet").unwrap().build_batch(1), 2, 8);
+    let plan = plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap();
+    let prog = OpProgram::from_chain(&g, &plan.chain).unwrap();
+
+    let mut t = DagTrainer::new(NativeBackend::new(), &g, 2, 7).unwrap();
+    let baseline = t.backend().live_bytes().expect("native backend tracks allocations");
+    assert!(
+        baseline >= t.param_bytes(),
+        "baseline {} must cover the {} parameter bytes",
+        baseline,
+        t.param_bytes()
+    );
+
+    let cfg = TrainConfig { layers: 0, steps: 3, lr: 0.02, seed: 11, log_every: 0 };
+    t.train(&prog, &cfg).unwrap();
+    let after = t.backend().live_bytes().unwrap();
+    assert_eq!(
+        after, baseline,
+        "live bytes must return exactly to the post-init baseline after training"
+    );
+    // Parameters were updated in place (old buffers replaced 1:1), so the
+    // census still covers exactly the parameter set.
+    assert!(after >= t.param_bytes());
+}

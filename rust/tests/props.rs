@@ -1,11 +1,12 @@
 //! Seeded property harness for the trace-driven general-DAG executor.
 //!
-//! Three end-to-end claims, each over seeded random graphs so failures
+//! Four end-to-end claims, each over seeded random graphs so failures
 //! reproduce exactly:
 //!
 //! 1. **Schedules don't change numerics.** For random DAGs × every
 //!    planner family (exact DP, approx DP, Chen's baseline, the DFS
-//!    oracle), executing the compiled recomputation program yields the
+//!    oracle — planned against the raw graphs' *non-uniform* `M_v`
+//!    costs), executing the compiled recomputation program yields the
 //!    same forward loss and the same parameter gradients as vanilla
 //!    execution — *bit-exactly* (compared via `f32::to_bits`).
 //! 2. **Observed memory is predicted memory.** On executable-lowered
@@ -13,13 +14,21 @@
 //!    equals the program's model prediction, and its peak equals
 //!    `sim::SimReport::peak_bytes` with liveness off — as an equality.
 //!    Divergence reports the first differing step, rendered.
-//! 3. **The zoo runs.** ResNet50 and U-Net (and friends) train end to end
-//!    on the native backend under a planner-chosen budget with both
-//!    invariants holding.
+//! 3. **Heterogeneous shapes preserve every invariant.** Random DAGs
+//!    lowered with *per-node* widths from their own `M_v` profile
+//!    (`recost_profiled`) still match vanilla bit-exactly under every
+//!    planner family, with observed peak == predicted peak ≤ vanilla
+//!    peak.
+//! 4. **The zoo runs.** ResNet50 and U-Net (and friends) train end to end
+//!    on the native backend under a planner-chosen budget with the
+//!    invariants holding — and with genuinely non-uniform per-node
+//!    activation bytes.
 
-use recompute::coordinator::train::{bits_equal, grad_maps_equal, train_zoo_model};
-use recompute::exec::{DagTrainer, GradMap, OpProgram, StepReport, TrainConfig};
-use recompute::models::executable::recost;
+use std::collections::BTreeMap;
+
+use recompute::coordinator::train::{bits_equal, grad_maps_equal, train_zoo_model, BudgetSpec};
+use recompute::exec::{DagTask, DagTrainer, GradMap, OpProgram, StepReport, TrainConfig};
+use recompute::models::executable::{distinct_act_sizes, recost, recost_profiled};
 use recompute::planner::{
     chen_plan, exhaustive_search, plan_at_min_budget, Family, LowerSetChain, Objective,
 };
@@ -35,18 +44,31 @@ const LR: f32 = 0.05;
 const SEED: u64 = 7;
 
 /// Fresh trainer + one recorded step of `prog` on the shared batch.
-fn run_one(g: &Graph, prog: &OpProgram, x: &HostTensor, y: &HostTensor) -> StepReport {
-    let mut t = DagTrainer::new(NativeBackend::new(BATCH, WIDTH), g, SEED).unwrap();
-    t.run_step(prog, x, y, LR, true).unwrap()
+fn run_one(
+    g: &Graph,
+    prog: &OpProgram,
+    x: &HostTensor,
+    targets: &BTreeMap<u32, HostTensor>,
+) -> StepReport {
+    let mut t = DagTrainer::new(NativeBackend::new(), g, BATCH, SEED).unwrap();
+    t.run_step(prog, x, targets, LR, true).unwrap()
 }
 
-/// Shared random batch for one graph's comparisons.
-fn batch_xy(rng: &mut Pcg32) -> (HostTensor, HostTensor) {
-    let be = NativeBackend::new(BATCH, WIDTH);
-    let n = BATCH * WIDTH;
-    let xv: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
-    let yv: Vec<f32> = (0..n).map(|_| (1.7 * rng.normal() as f32).sin()).collect();
-    (be.upload(&xv, &[BATCH, WIDTH]).unwrap(), be.upload(&yv, &[BATCH, WIDTH]).unwrap())
+/// Shared random batch (input + per-sink targets) for one executable
+/// lowering's comparisons; shapes are read off the task's vectors.
+fn batch_xy(g: &Graph, rng: &mut Pcg32) -> (HostTensor, BTreeMap<u32, HostTensor>) {
+    let be = NativeBackend::new();
+    let mut task = DagTask::for_graph(g, BATCH, rng.next_u64());
+    let (xv, ys) = task.next_batch();
+    let x = be.upload(&xv, &[BATCH, xv.len() / BATCH]).unwrap();
+    let targets = ys
+        .into_iter()
+        .map(|(id, y)| {
+            let w = y.len() / BATCH;
+            (id, be.upload(&y, &[BATCH, w]).unwrap())
+        })
+        .collect();
+    (x, targets)
 }
 
 fn assert_grads_bitwise(label: &str, case: u32, vanilla: &GradMap, got: &GradMap) {
@@ -69,30 +91,33 @@ fn every_planner_matches_vanilla_bit_exactly_on_random_dags() {
     let mut rng = Pcg32::seeded(0xda6);
     for case in 0..10u32 {
         let n = rng.range(4, 10);
-        let g = random_dag(&mut rng, n);
-        let (x, y) = batch_xy(&mut rng);
+        // Plan against the raw graph's non-uniform M_v costs; execute the
+        // same chains on the uniform lowering (same node ids/topology).
+        let base = random_dag(&mut rng, n);
+        let g = recost(&base, BATCH, WIDTH);
+        let (x, targets) = batch_xy(&g, &mut rng);
 
         let vanilla = OpProgram::vanilla(&g).unwrap();
-        let base = run_one(&g, &vanilla, &x, &y);
-        let base_grads = base.grads.as_ref().unwrap();
+        let base_report = run_one(&g, &vanilla, &x, &targets);
+        let base_grads = base_report.grads.as_ref().unwrap();
 
         let mut plans: Vec<(&str, LowerSetChain)> = Vec::new();
-        let exact = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+        let exact = plan_at_min_budget(&base, Family::Exact, Objective::MinOverhead).unwrap();
         let exact_budget = exact.budget;
         plans.push(("exact-dp", exact.chain));
         plans.push((
             "approx-dp",
-            plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap().chain,
+            plan_at_min_budget(&base, Family::Approx, Objective::MinOverhead).unwrap().chain,
         ));
         plans.push((
             "exact-dp-mc",
-            plan_at_min_budget(&g, Family::Exact, Objective::MaxOverhead).unwrap().chain,
+            plan_at_min_budget(&base, Family::Exact, Objective::MaxOverhead).unwrap().chain,
         ));
-        plans.push(("chen", chen_plan(&g, |c| c.peak_mem(&g)).unwrap().chain));
+        plans.push(("chen", chen_plan(&base, |c| c.peak_mem(&base)).unwrap().chain));
         if n <= 8 {
             plans.push((
                 "dfs-oracle",
-                exhaustive_search(&g, exact_budget, Objective::MinOverhead)
+                exhaustive_search(&base, exact_budget, Objective::MinOverhead)
                     .expect("oracle feasible at the exact min budget"),
             ));
         }
@@ -100,12 +125,12 @@ fn every_planner_matches_vanilla_bit_exactly_on_random_dags() {
         for (label, chain) in plans {
             let prog = OpProgram::from_chain(&g, &chain)
                 .unwrap_or_else(|e| panic!("[{label} case {case}] compile: {e}"));
-            let r = run_one(&g, &prog, &x, &y);
+            let r = run_one(&g, &prog, &x, &targets);
             assert_eq!(
-                base.loss.to_bits(),
+                base_report.loss.to_bits(),
                 r.loss.to_bits(),
                 "[{label} case {case}] loss diverged: vanilla {} vs {}",
-                base.loss,
+                base_report.loss,
                 r.loss
             );
             assert_grads_bitwise(label, case, base_grads, r.grads.as_ref().unwrap());
@@ -144,14 +169,14 @@ fn observed_peak_equals_simulator_prediction_on_chains_and_dags() {
         graphs.push(recost(&random_dag(&mut rng, n), BATCH, WIDTH));
     }
     for (gi, g) in graphs.iter().enumerate() {
-        let (x, y) = batch_xy(&mut rng);
+        let (x, targets) = batch_xy(g, &mut rng);
         for obj in [Objective::MinOverhead, Objective::MaxOverhead] {
             let plan = plan_at_min_budget(g, Family::Exact, obj).unwrap();
             let tr = canonical_trace(g, &plan.chain);
             let prog = OpProgram::compile(g, &tr).unwrap();
             let sim = measure(g, &tr, SimOptions { liveness: false, include_params: false });
             let label = format!("graph {gi} {:?}", obj);
-            let r = run_one(g, &prog, &x, &y);
+            let r = run_one(g, &prog, &x, &targets);
             assert_trajectory_matches(&label, g, &prog, &r);
             assert_eq!(
                 r.observed_peak,
@@ -166,9 +191,67 @@ fn observed_peak_equals_simulator_prediction_on_chains_and_dags() {
         }
         // Vanilla execution obeys the same equality.
         let prog = OpProgram::vanilla(g).unwrap();
-        let r = run_one(g, &prog, &x, &y);
+        let r = run_one(g, &prog, &x, &targets);
         assert_trajectory_matches(&format!("graph {gi} vanilla"), g, &prog, &r);
     }
+}
+
+#[test]
+fn heterogeneous_lowerings_hold_invariants_across_planners() {
+    // The tentpole claim: per-node widths from the graph's own M_v
+    // profile — so nodes hold differently-sized tensors — and still:
+    // bit-exact gradients vs vanilla under every planner family, and
+    // observed peak == predicted peak ≤ vanilla peak.
+    let mut rng = Pcg32::seeded(0x8e7e40);
+    let mut hetero_cases = 0u32;
+    for case in 0..8u32 {
+        let n = rng.range(5, 11);
+        let base = random_dag(&mut rng, n);
+        let g = recost_profiled(&base, BATCH, 12);
+        if distinct_act_sizes(&g).len() >= 2 {
+            hetero_cases += 1;
+        }
+        let (x, targets) = batch_xy(&g, &mut rng);
+
+        let vanilla_prog = OpProgram::vanilla(&g).unwrap();
+        let rv = run_one(&g, &vanilla_prog, &x, &targets);
+        assert_trajectory_matches(&format!("het vanilla case {case}"), &g, &vanilla_prog, &rv);
+        let base_grads = rv.grads.as_ref().unwrap();
+
+        for (name, family, obj) in [
+            ("exact-tc", Family::Exact, Objective::MinOverhead),
+            ("exact-mc", Family::Exact, Objective::MaxOverhead),
+            ("approx-tc", Family::Approx, Objective::MinOverhead),
+        ] {
+            let label = format!("het {name} case {case}");
+            let plan = plan_at_min_budget(&g, family, obj).unwrap();
+            let tr = canonical_trace(&g, &plan.chain);
+            let prog = OpProgram::compile(&g, &tr).unwrap();
+            let sim = measure(&g, &tr, SimOptions { liveness: false, include_params: false });
+            let r = run_one(&g, &prog, &x, &targets);
+            assert_trajectory_matches(&label, &g, &prog, &r);
+            assert_eq!(r.observed_peak, sim.peak_bytes, "[{label}] observed == predicted");
+            assert!(
+                r.observed_peak <= rv.observed_peak,
+                "[{label}] planned peak {} must not exceed vanilla {}",
+                r.observed_peak,
+                rv.observed_peak
+            );
+            assert_eq!(rv.loss.to_bits(), r.loss.to_bits(), "[{label}] loss diverged");
+            assert_grads_bitwise(&label, case, base_grads, r.grads.as_ref().unwrap());
+        }
+
+        // Chen's baseline executes heterogeneous shapes bit-exactly too.
+        let chen = chen_plan(&g, |c| c.peak_mem(&g)).unwrap();
+        let prog = OpProgram::from_chain(&g, &chen.chain).unwrap();
+        let r = run_one(&g, &prog, &x, &targets);
+        assert_eq!(rv.loss.to_bits(), r.loss.to_bits(), "[het chen case {case}] loss");
+        assert_grads_bitwise("het chen", case, base_grads, r.grads.as_ref().unwrap());
+    }
+    assert!(
+        hetero_cases > 0,
+        "profiled lowering never produced heterogeneous widths across the suite"
+    );
 }
 
 #[test]
@@ -178,12 +261,12 @@ fn diamond_fixture_runs_under_every_schedule() {
     // and the maximally-coarse whole-graph strategy all agree bitwise.
     let g = recost(&diamond(), BATCH, WIDTH);
     let mut rng = Pcg32::seeded(0xd1a);
-    let (x, y) = batch_xy(&mut rng);
-    let vanilla = run_one(&g, &OpProgram::vanilla(&g).unwrap(), &x, &y);
+    let (x, targets) = batch_xy(&g, &mut rng);
+    let vanilla = run_one(&g, &OpProgram::vanilla(&g).unwrap(), &x, &targets);
     let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
     for chain in [plan.chain, recompute::planner::whole_graph_chain(&g)] {
         let prog = OpProgram::from_chain(&g, &chain).unwrap();
-        let r = run_one(&g, &prog, &x, &y);
+        let r = run_one(&g, &prog, &x, &targets);
         assert_eq!(vanilla.loss.to_bits(), r.loss.to_bits());
         let (gv, gr) = (vanilla.grads.as_ref().unwrap(), r.grads.as_ref().unwrap());
         assert_grads_bitwise("diamond", 0, gv, gr);
@@ -194,8 +277,16 @@ fn diamond_fixture_runs_under_every_schedule() {
 fn zoo_resnet_and_unet_train_end_to_end_with_invariants() {
     let cfg = TrainConfig { layers: 0, steps: 2, lr: 0.02, seed: 11, log_every: 0 };
     for model in ["resnet", "unet"] {
-        let cmp = train_zoo_model(model, 2, 4, &cfg, None, Objective::MinOverhead, true)
-            .unwrap_or_else(|e| panic!("{model}: {e}"));
+        let cmp = train_zoo_model(
+            model,
+            2,
+            8,
+            &cfg,
+            BudgetSpec::MinFeasible,
+            Objective::MinOverhead,
+            true,
+        )
+        .unwrap_or_else(|e| panic!("{model}: {e}"));
         assert!(cmp.grads_match, "{model}: planned gradients must match vanilla bit-exactly");
         assert!(cmp.peak_matches_sim, "{model}: observed peak must equal sim prediction");
         assert!(cmp.losses_identical, "{model}: loss trajectories must be bit-identical");
@@ -205,6 +296,10 @@ fn zoo_resnet_and_unet_train_end_to_end_with_invariants() {
         );
         assert!(cmp.planned.losses.iter().all(|l| l.is_finite()), "{model}: finite losses");
         assert!(cmp.planned.recomputes_per_step > 0, "{model}: plan actually recomputes");
+        assert!(
+            cmp.distinct_act_bytes >= 2,
+            "{model}: heterogeneous lowering must yield ≥ 2 distinct node byte-sizes"
+        );
     }
 }
 
