@@ -7,6 +7,7 @@
 //!
 //! ```sh
 //! cargo bench --bench planner_scaling
+//! BENCH_QUICK=1 cargo bench --bench planner_scaling   # CI smoke: smaller chains
 //! ```
 
 use recompute::bench::{bench, bench_report_json, time_once, BenchStats};
@@ -15,13 +16,21 @@ use recompute::models::zoo;
 use recompute::planner::{build_context, Family, Objective};
 
 fn main() {
+    // CI smoke mode: fewer/shorter synthetic chains, one iteration each —
+    // same benchmark names and JSON schema, a fraction of the wall-clock.
+    let quick = std::env::var("BENCH_QUICK").is_ok();
     let mut collected: Vec<BenchStats> = Vec::new();
 
     println!("== §5.1: ExactDP vs ApproxDP wall-clock on the zoo ==\n");
-    println!("{}", recompute::bench::tables::planner_timing(zoo::TABLE1));
+    if quick {
+        println!("(zoo-wide planner timing skipped in BENCH_QUICK mode)\n");
+    } else {
+        println!("{}", recompute::bench::tables::planner_timing(zoo::TABLE1));
+    }
 
     println!("== ApproxDP scaling on synthetic chains (O(T(V)·#V²)) ==");
-    for n in [64u32, 128, 256, 512, 1024] {
+    let chain_sizes: &[u32] = if quick { &[64, 128] } else { &[64, 128, 256, 512, 1024] };
+    for &n in chain_sizes {
         let mut b = GraphBuilder::new(format!("chain{n}"), 1);
         let mut prev: Option<NodeId> = None;
         for i in 0..n {
@@ -29,7 +38,8 @@ fn main() {
             prev = Some(b.add_raw(format!("n{i}"), OpKind::Conv, 1000 + (i as u64 % 7), 10, &inputs));
         }
         let g = b.build();
-        let stats = bench(&format!("approx_dp_chain_{n}"), 1, 5, || {
+        let iters = if quick { 1 } else { 5 };
+        let stats = bench(&format!("approx_dp_chain_{n}"), 1, iters, || {
             let ctx = build_context(&g, Family::Approx);
             let b = ctx.min_feasible_budget();
             ctx.solve(b, Objective::MinOverhead)
@@ -41,8 +51,9 @@ fn main() {
     println!("\n== one-pass minimax B* vs binary search (perf §opt) ==");
     let g = zoo::resnet50(8, 224);
     let ctx = build_context(&g, Family::Approx);
-    let minimax = bench("minimax_budget_resnet50", 1, 5, || ctx.min_feasible_budget());
-    let search = bench("budget_binary_search_resnet50", 1, 5, || {
+    let iters = if quick { 1 } else { 5 };
+    let minimax = bench("minimax_budget_resnet50", 1, iters, || ctx.min_feasible_budget());
+    let search = bench("budget_binary_search_resnet50", 1, iters, || {
         ctx.min_feasible_budget_by_search()
     });
     let (b1, _) = time_once(|| ctx.min_feasible_budget());

@@ -1,6 +1,7 @@
 //! Micro-benchmarks of the hot paths: bitset algebra, boundary/frontier
 //! computation, DP solve, trace generation + liveness measurement, the
-//! native-backend kernels, and the real executor training step.
+//! native-backend kernels, the real executor training step, and the
+//! liveness-scheduled general-DAG step that exercises the buffer pool.
 //!
 //! Writes `BENCH_runtime.json` (via `util::json`) so the runtime perf
 //! trajectory is tracked across PRs. Everything runs on the pure-Rust
@@ -8,14 +9,29 @@
 //!
 //! ```sh
 //! cargo bench --bench runtime_hotpath
+//! BENCH_QUICK=1 cargo bench --bench runtime_hotpath   # CI smoke: fewer reps
 //! ```
 
 use recompute::bench::{bench, bench_report_json, BenchStats};
-use recompute::exec::{ChainSchedule, TowerTrainer, TrainConfig};
+use recompute::exec::{ChainSchedule, DagTask, DagTrainer, OpProgram, TowerTrainer, TrainConfig};
+use recompute::models::executable::recost_profiled;
 use recompute::models::{mlp_tower, zoo};
 use recompute::planner::{build_context, Family, Objective};
 use recompute::runtime::{Backend, NativeBackend};
-use recompute::sim::{canonical_trace, measure, SimOptions};
+use recompute::sim::{canonical_trace, measure, SimMode, SimOptions};
+
+/// `BENCH_QUICK=1` scales every (warmup, iters) pair down for the CI
+/// smoke job — same benchmarks, same JSON schema, a fraction of the
+/// wall-clock.
+fn quick() -> bool {
+    std::env::var("BENCH_QUICK").is_ok()
+}
+
+/// `bench` with quick-mode scaling applied to (warmup, iters).
+fn run_bench<T>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> T) -> BenchStats {
+    let (w, i) = if quick() { (warmup.min(1), iters.clamp(1, 3)) } else { (warmup, iters) };
+    bench(name, w, i, f)
+}
 
 fn main() {
     let mut collected: Vec<BenchStats> = Vec::new();
@@ -34,7 +50,7 @@ fn main() {
         s
     };
 
-    record(bench("nodeset_union_500", 10, 50, || {
+    record(run_bench("nodeset_union_500", 10, 50, || {
         let mut acc = recompute::graph::NodeSet::empty(g.len());
         for _ in 0..500 {
             acc.union_with(&half);
@@ -43,24 +59,24 @@ fn main() {
         acc
     }));
 
-    record(bench("graph_boundary_resnet50", 10, 50, || g.boundary(&half)));
-    record(bench("graph_frontier_resnet50", 10, 50, || g.frontier(&half)));
+    record(run_bench("graph_boundary_resnet50", 10, 50, || g.boundary(&half)));
+    record(run_bench("graph_frontier_resnet50", 10, 50, || g.frontier(&half)));
 
-    record(bench("approx_ctx_build_resnet50", 2, 10, || {
+    record(run_bench("approx_ctx_build_resnet50", 2, 10, || {
         build_context(&g, Family::Approx).family_len()
     }));
 
     let ctx = build_context(&g, Family::Approx);
     let b_star = ctx.min_feasible_budget();
-    record(bench("approx_solve_resnet50", 2, 10, || {
+    record(run_bench("approx_solve_resnet50", 2, 10, || {
         ctx.solve(b_star, Objective::MinOverhead)
     }));
-    record(bench("minimax_budget_resnet50", 2, 10, || ctx.min_feasible_budget()));
+    record(run_bench("minimax_budget_resnet50", 2, 10, || ctx.min_feasible_budget()));
 
     let plan = ctx.solve(b_star, Objective::MinOverhead).unwrap();
-    record(bench("trace_gen_resnet50", 2, 10, || canonical_trace(&g, &plan.chain)));
+    record(run_bench("trace_gen_resnet50", 2, 10, || canonical_trace(&g, &plan.chain)));
     let tr = canonical_trace(&g, &plan.chain);
-    record(bench("liveness_measure_resnet50", 2, 10, || {
+    record(run_bench("liveness_measure_resnet50", 2, 10, || {
         measure(&g, &tr, SimOptions::default())
     }));
 
@@ -73,10 +89,10 @@ fn main() {
     let x = be.upload(&xdata, &[batch, width]).unwrap();
     let w = be.upload(&wdata, &[width, width]).unwrap();
     let bias = be.upload(&bdata, &[width]).unwrap();
-    record(bench("native_layer_fwd_32x64", 5, 30, || {
+    record(run_bench("native_layer_fwd_32x64", 5, 30, || {
         be.run("layer_fwd", &[x.clone(), w.clone(), bias.clone()]).unwrap()
     }));
-    record(bench("native_layer_bwd_32x64", 5, 30, || {
+    record(run_bench("native_layer_bwd_32x64", 5, 30, || {
         be.run("layer_bwd", &[x.clone(), w.clone(), bias.clone(), x.clone()]).unwrap()
     }));
 
@@ -92,14 +108,39 @@ fn main() {
     let (xv, yv) = task.next_batch();
     let xt = t.backend().upload(&xv, &[batch, width]).unwrap();
     let yt = t.backend().upload(&yv, &[batch, width]).unwrap();
-    let s1 = bench("executor_step_vanilla_12L", 2, 10, || {
+    let s1 = run_bench("executor_step_vanilla_12L", 2, 10, || {
         t.step(&vsched, &xt, &yt, 0.0).unwrap()
     });
     record(s1);
-    let s2 = bench("executor_step_recompute_12L", 2, 10, || {
+    let s2 = run_bench("executor_step_recompute_12L", 2, 10, || {
         t.step(&sched, &xt, &yt, 0.0).unwrap()
     });
     record(s2);
+
+    // -- liveness-scheduled general-DAG step (buffer-pool hot path) --------
+    // U-Net lowered heterogeneously, planned at min budget, compiled with
+    // liveness frees: the step churns through free→recompute cycles, so
+    // after warm-up nearly every allocation should be a pool reuse.
+    let zg = recost_profiled(&zoo::find("unet").unwrap().build_batch(1), 8, 16);
+    let zctx = build_context(&zg, Family::Approx);
+    let zsol = zctx.solve(zctx.min_feasible_budget(), Objective::MinOverhead).unwrap();
+    let prog = OpProgram::from_chain(&zg, &zsol.chain, SimMode::Liveness).unwrap();
+    let mut dt = DagTrainer::new(NativeBackend::new(), &zg, 8, 3).unwrap();
+    let mut task = DagTask::for_graph(&zg, 8, 5);
+    let (xv, yv) = task.next_batch();
+    let (x, targets) = dt.upload_batch(&xv, &yv).unwrap();
+    record(run_bench("dag_step_liveness_unet_8x16", 2, 10, || {
+        dt.run_step(&prog, &x, &targets, 0.0, false).unwrap()
+    }));
+    let pool = dt.backend().pool_stats().expect("native backend pools");
+    println!(
+        "pool after dag_step_liveness_unet_8x16: allocs={} reuses={} ({:.0}% recycled) high-water={}",
+        pool.allocs,
+        pool.reuses,
+        100.0 * pool.reuse_ratio(),
+        recompute::fmt_bytes(pool.high_water_bytes),
+    );
+    assert!(pool.reuses > 0, "liveness churn must recycle buffers");
 
     drop(record);
     let doc = bench_report_json("runtime", &collected);

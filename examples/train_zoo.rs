@@ -8,14 +8,15 @@
 //! trains it under both vanilla and the planned schedule — printing the
 //! executor's verified invariants: the loss/gradients are bit-identical
 //! across schedules, the observed peak equals the simulator's
-//! no-liveness prediction, and the per-node activation sizes really are
-//! non-uniform.
+//! liveness prediction (and stays below the no-liveness ablation), and
+//! the per-node activation sizes really are non-uniform.
 
 use recompute::anyhow::Result;
 use recompute::coordinator::train::{train_zoo_model, BudgetSpec};
 use recompute::exec::TrainConfig;
 use recompute::fmt_bytes;
 use recompute::planner::Objective;
+use recompute::sim::SimMode;
 
 fn main() -> Result<()> {
     let cfg = TrainConfig { layers: 0, steps: 10, lr: 0.05, seed: 7, log_every: 0 };
@@ -27,6 +28,7 @@ fn main() -> Result<()> {
             &cfg,
             BudgetSpec::MinFeasible,
             Objective::MinOverhead,
+            SimMode::Liveness,
             true,
         )?;
         println!(
@@ -37,6 +39,12 @@ fn main() -> Result<()> {
             fmt_bytes(cmp.vanilla.observed_peak),
             fmt_bytes(cmp.planned.observed_peak),
             fmt_bytes(cmp.sim_peak),
+        );
+        println!(
+            "  sim {}: liveness peak {} ≤ no-liveness peak {}",
+            cmp.mode.label(),
+            fmt_bytes(cmp.sim_peak),
+            fmt_bytes(cmp.sim_peak_strict),
         );
         println!(
             "  node activation sizes: {} distinct ({} … {})",

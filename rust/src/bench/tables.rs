@@ -18,7 +18,7 @@ use crate::models::zoo::{ZooEntry, TABLE1};
 use crate::planner::{
     build_context, chen_plan, plan_with_context, Family, LowerSetChain, Objective, PlannerKind,
 };
-use crate::sim::{simulate, simulate_vanilla, SimOptions, SimReport};
+use crate::sim::{simulate, simulate_vanilla, SimMode, SimOptions, SimReport};
 use crate::util::table::Table;
 
 use super::harness::time_once;
@@ -49,14 +49,15 @@ pub struct Row {
 }
 
 fn cell(g: &Graph, chain: &LowerSetChain, liveness: bool) -> Cell {
-    let r = simulate(g, chain, SimOptions { liveness, include_params: true });
+    let opts = SimOptions { mode: SimMode::from_liveness(liveness), include_params: true };
+    let r = simulate(g, chain, opts);
     Cell { peak_total: r.peak_total, overhead: r.overhead_time }
 }
 
 /// Measure one zoo network under all five methods.
 pub fn measure_row(e: &ZooEntry, liveness: bool) -> Row {
     let g = e.build_paper();
-    let opts = SimOptions { liveness, include_params: true };
+    let opts = SimOptions { mode: SimMode::from_liveness(liveness), include_params: true };
 
     let ((approx_mc, approx_tc), approx_time) = time_once(|| {
         let ctx = build_context(&g, Family::Approx);
@@ -81,10 +82,7 @@ pub fn measure_row(e: &ZooEntry, liveness: bool) -> Row {
     // Chen: sweep segment budgets, score each candidate segmentation with
     // the same simulator mode used for the report.
     let chen = {
-        let plan = chen_plan(&g, |c| {
-            simulate(&g, c, SimOptions { liveness, include_params: true }).peak_total
-        })
-        .unwrap();
+        let plan = chen_plan(&g, |c| simulate(&g, c, opts).peak_total).unwrap();
         cell(&g, &plan.chain, liveness)
     };
 
@@ -93,8 +91,7 @@ pub fn measure_row(e: &ZooEntry, liveness: bool) -> Row {
     // default") — the liveness toggle applies to the *strategies* only.
     let vanilla = {
         let r: SimReport =
-            simulate_vanilla(&g, SimOptions { liveness: true, include_params: true });
-        let _ = opts;
+            simulate_vanilla(&g, SimOptions { mode: SimMode::Liveness, include_params: true });
         Cell { peak_total: r.peak_total, overhead: 0 }
     };
 
@@ -225,7 +222,7 @@ pub fn figure3_network(e: &ZooEntry, batches: &[u64], device: u64) -> Vec<Fig3Se
         let fwd = g.total_time();
         let base = 3 * fwd; // fwd + 2×bwd per sample-batch
         let params = g.total_param_bytes();
-        let liveness = SimOptions { liveness: true, include_params: true };
+        let liveness = SimOptions { mode: SimMode::Liveness, include_params: true };
 
         // Vanilla.
         let v = simulate_vanilla(&g, liveness);

@@ -26,6 +26,13 @@
 //!   --lr F            learning rate (default 0.1)
 //!   --mode M          vanilla | tc | mc | all (default all; zoo models
 //!                     use tc unless --mode mc)
+//!   --sim M           liveness (default) | strict: free schedule the zoo
+//!                     executor and simulator share. liveness frees every
+//!                     buffer at its last use (paper Table 1); strict
+//!                     honors only strategy-mandated frees (the Table 2
+//!                     ablation). Tower runs always free eagerly (the
+//!                     chain fast path is liveness-equivalent by
+//!                     construction), so --sim applies to zoo models
 //!   --budget B        absolute activation budget: bare number = GB
 //!                     (same contract as `repro plan`), unit suffix =
 //!                     bytes (512KiB, 2MiB, 1GiB); an infeasible budget
@@ -34,6 +41,8 @@
 //!                     (default without either flag: minimal feasible)
 //!   --report FILE     write a JSON report (tower only)
 //!   --stats           print per-kernel backend timing/byte statistics
+//!                     plus buffer-pool counters (allocs, reuses,
+//!                     high-water bytes)
 //!   --quiet           suppress per-step loss logging
 
 use std::path::PathBuf;
@@ -41,10 +50,11 @@ use std::path::PathBuf;
 use crate::anyhow::{anyhow, bail, Result};
 
 use crate::exec::{TowerTrainer, TrainConfig, TrainReport};
+use crate::sim::SimMode;
 use crate::util::json::Json;
 use crate::{fmt_bytes, parse_budget};
 
-use super::report::{loss_summary, report_json};
+use super::report::{loss_summary, pool_summary, report_json};
 use super::train::{compare_schedules, parse_modes, trajectories_identical, BudgetSpec};
 
 struct TrainArgs {
@@ -57,6 +67,7 @@ struct TrainArgs {
     steps: usize,
     lr: f32,
     mode: String,
+    sim: SimMode,
     budget: Option<u64>,
     budget_frac: Option<f64>,
     report: Option<PathBuf>,
@@ -87,6 +98,7 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
         steps: 50,
         lr: 0.1,
         mode: "all".into(),
+        sim: SimMode::Liveness,
         budget: None,
         budget_frac: None,
         report: None,
@@ -106,13 +118,14 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
             "--steps" => out.steps = val()?.parse()?,
             "--lr" => out.lr = val()?.parse()?,
             "--mode" => out.mode = val()?.clone(),
+            "--sim" => out.sim = SimMode::parse(val()?)?,
             "--budget" => out.budget = Some(parse_budget(val()?)?),
             "--budget-frac" => out.budget_frac = Some(val()?.parse()?),
             "--report" => out.report = Some(PathBuf::from(val()?)),
             "--stats" => out.stats = true,
             "--quiet" => out.quiet = true,
             "--help" | "-h" => {
-                bail!("see module docs: repro train [--model tower|<zoo>] [--backend native|pjrt] [--batch N] [--width N] [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--budget GB|512KiB] [--budget-frac F] [--report FILE] [--stats] [--quiet]")
+                bail!("see module docs: repro train [--model tower|<zoo>] [--backend native|pjrt] [--batch N] [--width N] [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--sim liveness|strict] [--budget GB|512KiB] [--budget-frac F] [--report FILE] [--stats] [--quiet]")
             }
             other => bail!("unknown train flag {other}"),
         }
@@ -203,6 +216,9 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
                     fmt_bytes(s.bytes_out),
                 );
             }
+            if let Some(pool) = &report.pool {
+                println!("  {}", pool_summary(pool));
+            }
         }
     }
 
@@ -244,6 +260,7 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
         cfg,
         a.budget_spec()?,
         objective,
+        a.sim,
         a.quiet,
     )?;
 
@@ -275,11 +292,20 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
         if cmp.grads_match { "BIT-IDENTICAL ✓" } else { "DIVERGED ✗" }
     );
     println!(
-        "observed peak {} vs simulator prediction {} (liveness off): {}",
+        "observed peak {} vs simulator prediction {} (sim {}): {}",
         fmt_bytes(cmp.planned.observed_peak),
         fmt_bytes(cmp.sim_peak),
+        cmp.mode.label(),
         if cmp.peak_matches_sim { "EQUAL ✓" } else { "MISMATCH ✗" }
     );
+    if cmp.mode.liveness() {
+        println!(
+            "liveness saves over strategy-only frees: {} → {} ({:.0}% of the no-liveness peak)",
+            fmt_bytes(cmp.sim_peak_strict),
+            fmt_bytes(cmp.sim_peak),
+            100.0 * cmp.sim_peak as f64 / cmp.sim_peak_strict.max(1) as f64
+        );
+    }
     println!(
         "peak activation memory: vanilla {} → planned {} ({:.0}% reduction)",
         fmt_bytes(cmp.vanilla.observed_peak),
@@ -299,6 +325,9 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
                     fmt_bytes(s.bytes_in),
                     fmt_bytes(s.bytes_out),
                 );
+            }
+            if let Some(pool) = &r.pool {
+                println!("  {}", pool_summary(pool));
             }
         }
     }

@@ -23,7 +23,7 @@ use crate::fmt_bytes;
 use crate::graph::Graph;
 use crate::models::zoo;
 use crate::planner::{build_context, chen_plan, DpContext, Family, Objective};
-use crate::sim::{simulate, simulate_vanilla, SimOptions};
+use crate::sim::{simulate, simulate_vanilla, SimMode, SimOptions};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -142,9 +142,11 @@ pub fn run_experiment(exp: &Experiment) -> Result<Vec<RunResult>> {
         let entry = zoo::find(&spec.network).expect("validated at parse");
         let batch = spec.batch.unwrap_or(entry.batch);
         let g: Graph = entry.build_batch(batch);
-        let opts = SimOptions { liveness: exp.liveness, include_params: true };
+        let opts =
+            SimOptions { mode: SimMode::from_liveness(exp.liveness), include_params: true };
         let vanilla_peak =
-            simulate_vanilla(&g, SimOptions { liveness: true, include_params: true }).peak_total;
+            simulate_vanilla(&g, SimOptions { mode: SimMode::Liveness, include_params: true })
+                .peak_total;
 
         // Contexts built lazily, once per family.
         let mut approx_ctx: Option<DpContext> = None;

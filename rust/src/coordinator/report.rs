@@ -1,6 +1,8 @@
-//! JSON run reports (loss curve, measured peaks, timings).
+//! JSON run reports (loss curve, measured peaks, timings, pool counters).
 
 use crate::exec::TrainReport;
+use crate::fmt_bytes;
+use crate::runtime::PoolStats;
 use crate::util::json::Json;
 
 /// Serialize a training report for EXPERIMENTS.md / plotting.
@@ -17,7 +19,7 @@ pub fn report_json(label: &str, r: &TrainReport) -> Json {
                 .set("bytes_out", s.bytes_out.into())
         })
         .collect();
-    Json::obj()
+    let mut out = Json::obj()
         .set("label", label.into())
         .set("backend", r.backend.into())
         .set("k_segments", (r.k as u64).into())
@@ -29,7 +31,33 @@ pub fn report_json(label: &str, r: &TrainReport) -> Json {
             "losses",
             Json::Arr(r.losses.iter().map(|&l| Json::Num(l as f64)).collect()),
         )
-        .set("kernel_stats", Json::Arr(kernels))
+        .set("kernel_stats", Json::Arr(kernels));
+    if let Some(p) = &r.pool {
+        out = out.set("pool", pool_json(p));
+    }
+    out
+}
+
+/// Serialize buffer-pool counters.
+pub fn pool_json(p: &PoolStats) -> Json {
+    Json::obj()
+        .set("allocs", p.allocs.into())
+        .set("reuses", p.reuses.into())
+        .set("parked_bytes", p.parked_bytes.into())
+        .set("high_water_bytes", p.high_water_bytes.into())
+}
+
+/// One-line rendering of the pool counters — printed alongside the
+/// observed peak by `repro train` (`--stats` for tower runs, always for
+/// zoo runs).
+pub fn pool_summary(p: &PoolStats) -> String {
+    format!(
+        "pool: allocs={} reuses={} ({:.0}% recycled) high-water={}",
+        p.allocs,
+        p.reuses,
+        100.0 * p.reuse_ratio(),
+        fmt_bytes(p.high_water_bytes),
+    )
 }
 
 /// First/last loss summary line.
@@ -42,7 +70,7 @@ pub fn loss_summary(r: &TrainReport) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::KernelStat;
+    use crate::runtime::{KernelStat, PoolStats};
 
     #[test]
     fn report_roundtrips() {
@@ -59,6 +87,12 @@ mod tests {
                 calls: 12,
                 ..KernelStat::default()
             }],
+            pool: Some(PoolStats {
+                allocs: 10,
+                reuses: 30,
+                parked_bytes: 256,
+                high_water_bytes: 4096,
+            }),
         };
         let j = report_json("tc", &r);
         assert_eq!(j.get("peak_bytes").as_u64(), Some(1234));
@@ -67,9 +101,16 @@ mod tests {
         let ks = j.get("kernel_stats").as_arr().unwrap();
         assert_eq!(ks[0].get("kernel").as_str(), Some("layer_fwd"));
         assert_eq!(ks[0].get("calls").as_u64(), Some(12));
+        assert_eq!(j.get("pool").get("reuses").as_u64(), Some(30));
+        assert_eq!(j.get("pool").get("high_water_bytes").as_u64(), Some(4096));
         assert!(loss_summary(&r).contains("1.0000 → 0.5000"));
         // serialize → parse round-trip through the util::json module.
         let parsed = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(parsed.get("mean_step_ms").as_f64(), Some(1.5));
+
+        let line = pool_summary(r.pool.as_ref().unwrap());
+        assert!(line.contains("allocs=10"), "{line}");
+        assert!(line.contains("75% recycled"), "{line}");
+        assert!(line.contains("4.0KiB") || line.contains("4096"), "{line}");
     }
 }

@@ -12,9 +12,11 @@
 //!   *heterogeneous* executable form (per-node widths from the model's
 //!   own `M_v` profile, see
 //!   [`crate::models::executable::recost_profiled`]), plans it, compiles
-//!   vanilla and planned [`OpProgram`]s, verifies loss + parameter
-//!   gradients are bit-identical and that the observed peak equals the
-//!   simulator's no-liveness prediction, then trains both and reports.
+//!   vanilla and planned [`OpProgram`]s under the requested
+//!   [`SimMode`] (liveness by default), verifies loss + parameter
+//!   gradients are bit-identical and the liveness invariant chain —
+//!   observed peak == mode-predicted peak (equality) ≤ no-liveness
+//!   peak — then trains both and reports.
 //!
 //! Budgets for planned schedules are described by [`BudgetSpec`]:
 //! minimal-feasible (the default), an absolute byte count (`--budget
@@ -33,7 +35,7 @@ use crate::models::executable::{distinct_act_sizes, recost_profiled};
 use crate::models::{mlp_tower, zoo};
 use crate::planner::{build_context, DpContext, Family, Objective};
 use crate::runtime::NativeBackend;
-use crate::sim::{simulate, SimOptions};
+use crate::sim::{canonical_trace, measure, SimMode, SimOptions};
 
 /// How the activation budget for a planned schedule is chosen.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -163,8 +165,13 @@ pub struct ZooComparison {
     pub k: usize,
     /// Planned recomputation overhead (Eq. 1 units).
     pub overhead: u64,
-    /// Simulator-predicted peak for the plan (liveness off, activations).
+    /// Free schedule both programs were compiled under.
+    pub mode: SimMode,
+    /// Simulator-predicted peak for the plan under `mode` (activations).
     pub sim_peak: u64,
+    /// Simulator-predicted peak for the plan with liveness off — the
+    /// Table 2 ablation the liveness peak must never exceed.
+    pub sim_peak_strict: u64,
     /// Number of distinct per-node activation byte-sizes in the lowered
     /// graph — ≥ 2 means the heterogeneous lowering is real (the planner
     /// is cutting a non-uniform memory profile).
@@ -177,7 +184,9 @@ pub struct ZooComparison {
     /// planned execution are bit-identical to vanilla's.
     pub grads_match: bool,
     /// The executor's observed per-step live bytes equal the program's
-    /// model prediction, and the observed peak equals `sim_peak`.
+    /// model prediction, the observed peak equals `sim_peak` (an
+    /// equality), and `sim_peak ≤ sim_peak_strict` — the full liveness
+    /// invariant chain.
     pub peak_matches_sim: bool,
     /// Full-run loss trajectories are bit-identical.
     pub losses_identical: bool,
@@ -202,6 +211,8 @@ pub fn grad_maps_equal(a: &GradMap, b: &GradMap) -> bool {
 /// `max_width`), plan it under `budget`, and train it under both vanilla
 /// and the planned schedule on the native backend, verifying the
 /// executor's two core invariants along the way (see [`ZooComparison`]).
+/// Both programs are compiled under `mode` (liveness by default — the
+/// paper's Table 1 measurement; strict reproduces the Table 2 ablation).
 pub fn train_zoo_model(
     name: &str,
     batch: usize,
@@ -209,6 +220,7 @@ pub fn train_zoo_model(
     cfg: &TrainConfig,
     budget: BudgetSpec,
     objective: Objective,
+    mode: SimMode,
     quiet: bool,
 ) -> Result<ZooComparison> {
     let entry = zoo::find(name)
@@ -242,18 +254,26 @@ pub fn train_zoo_model(
             fmt_bytes(ctx.min_feasible_budget())
         )
     })?;
-    let planned_prog = OpProgram::from_chain(&g, &sol.chain)?;
-    let vanilla_prog = OpProgram::vanilla(&g)?;
-    let sim_peak = simulate(&g, &sol.chain, SimOptions { liveness: false, include_params: false })
-        .peak_bytes;
+    // One trace drives everything: the compiled program's typed drop
+    // steps and the simulator's predicted peak come from the same
+    // (mode-rewritten) event stream, so "observed == predicted" is an
+    // equality between two views of one schedule — not two accountings.
+    let tr = canonical_trace(&g, &sol.chain);
+    let planned_prog = OpProgram::from_trace(&g, &tr, mode)?;
+    let vanilla_prog = OpProgram::vanilla(&g, mode)?;
+    let sim_peak = measure(&g, &tr, SimOptions { mode, include_params: false }).peak_bytes;
+    let sim_peak_strict =
+        measure(&g, &tr, SimOptions { mode: SimMode::Strict, include_params: false }).peak_bytes;
     if !quiet {
         eprintln!(
-            "== zoo model {} ({} nodes, {} distinct activation sizes): k={} segments, budget {} ==",
+            "== zoo model {} ({} nodes, {} distinct activation sizes): k={} segments, \
+             budget {}, sim {} ==",
             g.name,
             g.len(),
             distinct_act_bytes,
             sol.chain.k(),
-            fmt_bytes(budget)
+            fmt_bytes(budget),
+            mode.label()
         );
     }
 
@@ -269,7 +289,8 @@ pub fn train_zoo_model(
     let (gv, gp) = (rv.grads.as_ref().unwrap(), rp.grads.as_ref().unwrap());
     let grads_match = rv.loss.to_bits() == rp.loss.to_bits() && grad_maps_equal(gv, gp);
     let peak_matches_sim = rp.observed_peak == sim_peak
-        && rp.live_trajectory == planned_prog.predicted_live;
+        && rp.live_trajectory == planned_prog.predicted_live
+        && sim_peak <= sim_peak_strict;
 
     // Fresh trainers for the reported runs (identical initial params).
     let mut tv = DagTrainer::new(NativeBackend::new(), &g, batch, cfg.seed)?;
@@ -283,7 +304,9 @@ pub fn train_zoo_model(
         nodes: g.len(),
         k: sol.chain.k(),
         overhead: sol.overhead,
+        mode,
         sim_peak,
+        sim_peak_strict,
         distinct_act_bytes,
         act_bytes_range,
         vanilla,
@@ -353,11 +376,14 @@ mod tests {
             &cfg,
             BudgetSpec::MinFeasible,
             Objective::MinOverhead,
+            SimMode::Liveness,
             true,
         )
         .unwrap();
+        assert_eq!(cmp.mode, SimMode::Liveness);
         assert!(cmp.grads_match, "planned grads must be bit-identical to vanilla");
         assert!(cmp.peak_matches_sim, "observed peak must equal the sim prediction");
+        assert!(cmp.sim_peak <= cmp.sim_peak_strict, "liveness never exceeds strict");
         assert!(cmp.losses_identical);
         assert!(cmp.planned.observed_peak < cmp.vanilla.observed_peak);
         assert!(cmp.planned.recomputes_per_step > 0);
@@ -366,6 +392,9 @@ mod tests {
             "heterogeneous lowering must produce ≥ 2 activation sizes"
         );
         assert!(cmp.act_bytes_range.0 < cmp.act_bytes_range.1);
+        // The liveness schedule's churn exercised the backend pool.
+        let pool = cmp.planned.pool.expect("native backend pools");
+        assert!(pool.reuses > 0, "pool must recycle under the liveness schedule");
     }
 
     #[test]

@@ -28,13 +28,18 @@
 //!   [`crate::models::executable::recost_widths`], *is* the real tensor
 //!   size — `batch · width_v · 4`). The per-step counter equals the
 //!   program's model-side prediction and the observed peak equals
-//!   [`crate::sim::SimReport::peak_bytes`] (liveness off) — an equality,
-//!   not a bound. One caveat: a gradient is booked as the canonical
-//!   model's *single* logical buffer (one `M_v` from its alloc step to
-//!   its free step). The deferred fan-in contributions backing that
-//!   buffer are real tensors the counter does not itemize — at a node
-//!   with `s` consumers, actual transient memory can exceed the counter
-//!   by up to `(s−1)·M_v` until the node's backprop reduces them.
+//!   [`crate::sim::SimReport::peak_bytes`] *of the mode the program was
+//!   compiled under* — an equality, not a bound. In liveness mode (the
+//!   default) the program's `FreeFwd`/`FreeGrad` steps sit at each
+//!   buffer's last use, so the trainer actually releases tensors there
+//!   and the observed peak is the paper's Table 1 number; in strict
+//!   mode the frees are the strategy-mandated ones (Table 2). One
+//!   caveat: a gradient is booked as the canonical model's *single*
+//!   logical buffer (one `M_v` from its alloc step to its free step).
+//!   The deferred fan-in contributions backing that buffer are real
+//!   tensors the counter does not itemize — at a node with `s`
+//!   consumers, actual transient memory can exceed the counter by up to
+//!   `(s−1)·M_v` until the node's backprop reduces them.
 //!
 //! Loss-gradient seeding is lazy: the trace accounts a sink's gradient at
 //! the start of the backward pass (when the sink's forward value may
@@ -50,7 +55,7 @@ use crate::anyhow::{bail, Context, Result};
 use crate::graph::builder::BYTES_PER_ELEM;
 use crate::graph::{Graph, NodeId};
 use crate::models::executable::{input_width, node_role, node_width, NodeRole};
-use crate::runtime::{Backend, KernelStat};
+use crate::runtime::{Backend, KernelStat, PoolStats};
 use crate::util::rng::Pcg32;
 
 use super::program::{OpProgram, Step};
@@ -128,6 +133,9 @@ pub struct DagTrainReport {
     pub recomputes_per_step: u64,
     pub mean_step_ms: f64,
     pub kernel_stats: Vec<KernelStat>,
+    /// Buffer-pool counters from the backend (`None` for backends that
+    /// allocate tensors individually).
+    pub pool: Option<PoolStats>,
 }
 
 /// The general-DAG trainer: per-node parameters + a backend + the graph.
@@ -518,6 +526,7 @@ impl<B: Backend> DagTrainer<B> {
             recomputes_per_step: prog.recompute_count,
             mean_step_ms: elapsed.as_secs_f64() * 1000.0 / cfg.steps.max(1) as f64,
             kernel_stats: self.backend.stats(),
+            pool: self.backend.pool_stats(),
         })
     }
 }
@@ -529,6 +538,7 @@ mod tests {
     use crate::models::executable::{distinct_act_sizes, recost, recost_profiled};
     use crate::planner::{plan_at_min_budget, Family, Objective};
     use crate::runtime::NativeBackend;
+    use crate::sim::SimMode;
     use crate::testutil::diamond;
 
     fn trainer_for(g: &Graph, batch: usize) -> DagTrainer<NativeBackend> {
@@ -553,9 +563,9 @@ mod tests {
     #[test]
     fn diamond_trains_and_schedules_agree_bitwise() {
         let g = recost(&diamond(), 4, 8);
-        let vanilla = OpProgram::vanilla(&g).unwrap();
+        let vanilla = OpProgram::vanilla(&g, SimMode::Strict).unwrap();
         let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
-        let planned = OpProgram::from_chain(&g, &plan.chain).unwrap();
+        let planned = OpProgram::from_chain(&g, &plan.chain, SimMode::Strict).unwrap();
 
         let mut tv = trainer_for(&g, 4);
         let (x, y) = batch_for(&tv, 0.3, 0.1);
@@ -576,7 +586,7 @@ mod tests {
     #[test]
     fn observed_bytes_track_prediction_on_diamond() {
         let g = recost(&diamond(), 2, 4);
-        let prog = OpProgram::vanilla(&g).unwrap();
+        let prog = OpProgram::vanilla(&g, SimMode::Strict).unwrap();
         let mut t = trainer_for(&g, 2);
         let (x, y) = batch_for(&t, 0.0, 0.0);
         let r = t.run_step(&prog, &x, &y, 0.1, false).unwrap();
@@ -592,9 +602,9 @@ mod tests {
         let sizes = distinct_act_sizes(&g);
         assert!(sizes.len() >= 2, "lowering must be heterogeneous: {sizes:?}");
 
-        let vanilla = OpProgram::vanilla(&g).unwrap();
+        let vanilla = OpProgram::vanilla(&g, SimMode::Strict).unwrap();
         let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
-        let planned = OpProgram::from_chain(&g, &plan.chain).unwrap();
+        let planned = OpProgram::from_chain(&g, &plan.chain, SimMode::Strict).unwrap();
 
         let mut tv = trainer_for(&g, 2);
         let (x, y) = batch_for(&tv, 0.3, 0.1);
@@ -607,9 +617,35 @@ mod tests {
     }
 
     #[test]
+    fn liveness_program_executes_with_matching_trajectory_and_lower_peak() {
+        // The liveness-compiled plan really frees tensors at last use:
+        // the observed trajectory equals the liveness prediction, the
+        // peak never exceeds the strict compilation's, and the numerics
+        // are untouched (same loss bits as the strict schedule).
+        let g = recost(&diamond(), 2, 4);
+        let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+        let strict = OpProgram::from_chain(&g, &plan.chain, SimMode::Strict).unwrap();
+        let live = OpProgram::from_chain(&g, &plan.chain, SimMode::Liveness).unwrap();
+
+        let mut ts = trainer_for(&g, 2);
+        let (x, y) = batch_for(&ts, 0.3, 0.1);
+        let rs = ts.run_step(&strict, &x, &y, 0.05, false).unwrap();
+        let mut tl = trainer_for(&g, 2);
+        let rl = tl.run_step(&live, &x, &y, 0.05, false).unwrap();
+
+        assert_eq!(rl.live_trajectory, live.predicted_live, "liveness trajectory");
+        assert_eq!(rl.observed_peak, live.predicted_peak());
+        assert!(rl.observed_peak <= rs.observed_peak, "liveness never costs more");
+        assert_eq!(rl.loss.to_bits(), rs.loss.to_bits(), "frees don't change numerics");
+        // The backend recycled freed buffers while executing the churn.
+        let pool = tl.backend().pool_stats().expect("native backend pools");
+        assert!(pool.reuses > 0, "liveness churn must hit the pool");
+    }
+
+    #[test]
     fn training_loss_is_finite_and_decreasing_on_towerlike_dag() {
         let g = recost(&crate::models::mlp_tower(6, 8, 4), 4, 8);
-        let prog = OpProgram::vanilla(&g).unwrap();
+        let prog = OpProgram::vanilla(&g, SimMode::Strict).unwrap();
         let mut t = trainer_for(&g, 4);
         let cfg = TrainConfig { layers: 6, steps: 25, lr: 0.1, seed: 3, log_every: 0 };
         let rep = t.train(&prog, &cfg).unwrap();

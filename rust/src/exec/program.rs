@@ -7,6 +7,16 @@
 //! flat list of typed [`Step`]s that an executor can run on any
 //! [`crate::runtime::Backend`] — over *arbitrary DAGs*, not just chains.
 //!
+//! Compilation is **mode-aware** ([`crate::sim::SimMode`]): in liveness
+//! mode (the default everywhere user-facing) the trace is first rewritten
+//! by [`crate::sim::apply_liveness`], so the typed drop steps
+//! ([`Step::FreeFwd`]/[`Step::FreeGrad`]) land at each buffer's last use
+//! and `predicted_live` carries the *liveness* schedule's live bytes; in
+//! strict mode the strategy-mandated frees compile as-is (the Table 2
+//! ablation). Either way the steps and the prediction come from one
+//! trace — the executor frees tensors exactly where the simulator
+//! priced them.
+//!
 //! Compilation also re-validates the trace's safety invariants (every
 //! read targets a live buffer, every allocation is balanced by a free)
 //! and records the model-predicted live bytes after every step, so the
@@ -18,7 +28,7 @@ use crate::anyhow::{bail, Result};
 
 use crate::graph::{Graph, NodeId};
 use crate::planner::LowerSetChain;
-use crate::sim::{canonical_trace, vanilla_trace, Buffer, Event, Trace};
+use crate::sim::{apply_liveness, canonical_trace, vanilla_trace, Buffer, Event, SimMode, Trace};
 
 /// One executable step of a training iteration.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -80,8 +90,10 @@ impl Step {
 pub struct OpProgram {
     pub steps: Vec<Step>,
     /// Model-predicted live bytes *after* each step, using the graph's
-    /// `M_v` metadata — identical to the simulator's no-liveness counter
-    /// at the corresponding trace events.
+    /// `M_v` metadata — identical to the simulator's counter at the
+    /// corresponding events of the trace the program was compiled from
+    /// (the liveness-rewritten trace in liveness mode, the raw trace in
+    /// strict mode).
     pub predicted_live: Vec<u64>,
     /// Number of forward recomputations the program performs.
     pub recompute_count: u64,
@@ -89,14 +101,25 @@ pub struct OpProgram {
 
 impl OpProgram {
     /// Compile the canonical strategy of `chain` into an executable
-    /// program.
-    pub fn from_chain(g: &Graph, chain: &LowerSetChain) -> Result<OpProgram> {
-        OpProgram::compile(g, &canonical_trace(g, chain))
+    /// program under the given free schedule.
+    pub fn from_chain(g: &Graph, chain: &LowerSetChain, mode: SimMode) -> Result<OpProgram> {
+        OpProgram::from_trace(g, &canonical_trace(g, chain), mode)
     }
 
-    /// Compile vanilla (no-recomputation) execution.
-    pub fn vanilla(g: &Graph) -> Result<OpProgram> {
-        OpProgram::compile(g, &vanilla_trace(g))
+    /// Compile vanilla (no-recomputation) execution under the given free
+    /// schedule (liveness = Chainer-style eager freeing).
+    pub fn vanilla(g: &Graph, mode: SimMode) -> Result<OpProgram> {
+        OpProgram::from_trace(g, &vanilla_trace(g), mode)
+    }
+
+    /// Compile a trace under `mode`: liveness first rewrites the frees to
+    /// last uses (the same rewrite [`crate::sim::measure`] folds over, so
+    /// `predicted_live` *is* the simulator's liveness accounting).
+    pub fn from_trace(g: &Graph, tr: &Trace, mode: SimMode) -> Result<OpProgram> {
+        match mode {
+            SimMode::Liveness => OpProgram::compile(g, &apply_liveness(tr)),
+            SimMode::Strict => OpProgram::compile(g, tr),
+        }
     }
 
     /// Compile a trace into steps, re-validating liveness along the way.
@@ -212,14 +235,14 @@ impl OpProgram {
 mod tests {
     use super::*;
     use crate::planner::{plan_at_min_budget, singleton_chain, Family, Objective};
-    use crate::sim::{measure, SimOptions};
+    use crate::sim::{measure, SimMode, SimOptions};
     use crate::testutil::{chain_graph, diamond, random_dag};
     use crate::util::rng::Pcg32;
 
     #[test]
     fn vanilla_program_shape_on_chain() {
         let g = chain_graph(&[1, 2, 3]);
-        let p = OpProgram::vanilla(&g).unwrap();
+        let p = OpProgram::vanilla(&g, SimMode::Strict).unwrap();
         // 3 computes, 3 backprops, 3 grad allocs (one sink seed), 6 frees.
         let computes = p.steps.iter().filter(|s| matches!(s, Step::Compute { .. })).count();
         let backprops = p.steps.iter().filter(|s| matches!(s, Step::Backprop { .. })).count();
@@ -240,16 +263,48 @@ mod tests {
             let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
             let tr = canonical_trace(&g, &plan.chain);
             let prog = OpProgram::compile(&g, &tr).unwrap();
-            let rep = measure(&g, &tr, SimOptions { liveness: false, include_params: false });
+            let rep =
+                measure(&g, &tr, SimOptions { mode: SimMode::Strict, include_params: false });
             assert_eq!(prog.predicted_peak(), rep.peak_bytes);
             assert_eq!(prog.recompute_count, rep.recompute_count);
         }
     }
 
     #[test]
+    fn liveness_compilation_matches_simulator_and_never_costs_more() {
+        // The liveness-compiled program's per-step prediction is the
+        // simulator's liveness accounting (equality), and its peak never
+        // exceeds the strict compilation of the same trace.
+        let mut rng = Pcg32::seeded(92);
+        for _ in 0..15 {
+            let n = rng.range(4, 12);
+            let g = random_dag(&mut rng, n);
+            let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+            let tr = canonical_trace(&g, &plan.chain);
+            let live = OpProgram::from_trace(&g, &tr, SimMode::Liveness).unwrap();
+            let strict = OpProgram::from_trace(&g, &tr, SimMode::Strict).unwrap();
+            let rep =
+                measure(&g, &tr, SimOptions { mode: SimMode::Liveness, include_params: false });
+            assert_eq!(live.predicted_peak(), rep.peak_bytes, "liveness equality");
+            assert!(live.predicted_peak() <= strict.predicted_peak());
+            assert_eq!(live.recompute_count, strict.recompute_count, "frees move, ops don't");
+            assert_eq!(*live.predicted_live.last().unwrap(), 0, "balanced");
+            // Same computation: identical non-free step sequences.
+            let ops = |p: &OpProgram| -> Vec<Step> {
+                p.steps
+                    .iter()
+                    .filter(|s| !matches!(s, Step::FreeFwd { .. } | Step::FreeGrad { .. }))
+                    .copied()
+                    .collect()
+            };
+            assert_eq!(ops(&live), ops(&strict), "liveness must not reorder computation");
+        }
+    }
+
+    #[test]
     fn diamond_fan_in_compiles_with_merge_semantics_visible() {
         let g = diamond();
-        let p = OpProgram::from_chain(&g, &singleton_chain(&g)).unwrap();
+        let p = OpProgram::from_chain(&g, &singleton_chain(&g), SimMode::Strict).unwrap();
         // Node 3 (fan-in) is backpropped before nodes 1 and 2.
         let order: Vec<u32> = p
             .steps

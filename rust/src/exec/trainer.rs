@@ -22,7 +22,7 @@ use std::time::Instant;
 
 use crate::anyhow::{bail, Context, Result};
 
-use crate::runtime::{Backend, KernelStat, NativeBackend};
+use crate::runtime::{Backend, KernelStat, NativeBackend, PoolStats};
 use crate::util::rng::Pcg32;
 
 use super::schedule::ChainSchedule;
@@ -87,6 +87,9 @@ pub struct TrainReport {
     pub k: usize,
     /// Per-kernel timing/byte statistics from the backend.
     pub kernel_stats: Vec<KernelStat>,
+    /// Buffer-pool counters from the backend (`None` for backends that
+    /// allocate tensors individually, e.g. PJRT).
+    pub pool: Option<PoolStats>,
 }
 
 /// The trainer: parameters + an execution backend + live-byte accounting.
@@ -381,6 +384,7 @@ impl<B: Backend> TowerTrainer<B> {
             recomputes_per_step: recomputes,
             k: sched.segments.len(),
             kernel_stats: self.backend.stats(),
+            pool: self.backend.pool_stats(),
         })
     }
 

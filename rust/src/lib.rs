@@ -19,15 +19,21 @@
 //!   baseline.
 //! - [`sim`] — an event-accurate execution simulator with liveness
 //!   analysis, measuring true peak memory of any strategy (Tables 1 & 2).
+//!   Liveness is a trace *rewrite* (`apply_liveness`): explicit last-use
+//!   `Free` events that one shared fold measures and the executor
+//!   compiles, so simulated and executed free schedules are the same
+//!   object.
 //! - [`runtime`] — the pluggable execution-backend layer: a
 //!   *shape-polymorphic* [`runtime::Backend`] trait (upload / run-kernel
 //!   / download / per-kernel stats; dims travel with each tensor, the
 //!   dense path is rectangular) with two implementations. The default
 //!   [`runtime::NativeBackend`] is pure-Rust f32 CPU kernels — the whole
 //!   stack builds and trains with `cargo` alone, no Python, no artifacts,
-//!   no native libraries. The `xla` cargo feature adds the PJRT backend,
-//!   which loads AOT-compiled HLO-text artifacts produced by
-//!   `python/compile/aot.py`.
+//!   no native libraries — backed by a size-classed buffer pool
+//!   (`runtime::MemoryPool`) that recycles freed tensors into later
+//!   allocations, so liveness-schedule churn costs no malloc traffic.
+//!   The `xla` cargo feature adds the PJRT backend, which loads
+//!   AOT-compiled HLO-text artifacts produced by `python/compile/aot.py`.
 //! - [`exec`] — the training executors, generic over `Backend`: the chain
 //!   fast path (`TowerTrainer`) and the trace-driven general-DAG path
 //!   (`OpProgram` + `DagTrainer`, running the whole zoo's branch/merge

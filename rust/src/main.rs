@@ -8,8 +8,10 @@
 //!   tradeoff sweeps of Figure 3.
 //! - `timing` — §5.1 ExactDP vs ApproxDP planner wall-clock.
 //! - `plan --network NAME [--batch N] [--budget GB|512KiB] [--objective
-//!    tc|mc] [--family exact|approx]` — plan one network and print the
-//!    schedule (budgets: bare number = GB, or human-readable bytes).
+//!    tc|mc] [--family exact|approx] [--sim liveness|strict]` — plan one
+//!    network and print the schedule (budgets: bare number = GB, or
+//!    human-readable bytes; `--sim strict` reproduces the Table 2
+//!    no-liveness ablation, default is the Table 1 liveness measurement).
 //! - `plan --graph FILE.json …` — plan a user-supplied graph.
 //! - `train …` — run the real training executor (see `exec`) on the
 //!   pure-Rust native backend by default, or PJRT with `--features xla`;
@@ -28,7 +30,7 @@ use recompute::models::zoo;
 use recompute::planner::{
     build_context, chen_plan, plan_with_context, Family, Objective, PlannerKind,
 };
-use recompute::sim::{simulate, simulate_vanilla, SimOptions};
+use recompute::sim::{simulate, simulate_vanilla, SimMode, SimOptions};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -111,6 +113,7 @@ fn print_usage() {
            timing                        ExactDP vs ApproxDP planner runtime (§5.1)\n\
            plan --network N [--batch B] [--budget GB|512KiB]\n\
                 [--objective tc|mc] [--family exact|approx] [--chen]\n\
+                [--sim liveness|strict]\n\
            plan --graph FILE.json [...]  plan a user-supplied graph JSON\n\
            experiment --config F.json [--csv out.csv]  declarative sweep runner\n\
            export --network N --out F    dump a zoo graph as JSON\n\
@@ -189,6 +192,8 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
         "approx" => Family::Approx,
         f => bail!("bad --family {f} (exact|approx)"),
     };
+    let mode = SimMode::parse(flags.get("--sim").unwrap_or("liveness"))?;
+    let opts = SimOptions { mode, include_params: true };
 
     println!(
         "network {} — #V={} M(V)={} params={} T(V)={}",
@@ -198,12 +203,16 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
         fmt_bytes(g.total_param_bytes()),
         g.total_time()
     );
-    let vanilla = simulate_vanilla(&g, SimOptions::default());
-    println!("vanilla peak: {}", fmt_bytes(vanilla.peak_total));
+    // Vanilla always keeps its framework-native eager freeing (Appendix C)
+    // — the --sim toggle applies to the *strategies* only, matching
+    // table1/table2 and the experiment runner.
+    let vanilla =
+        simulate_vanilla(&g, SimOptions { mode: SimMode::Liveness, include_params: true });
+    println!("vanilla peak: {} (liveness)", fmt_bytes(vanilla.peak_total));
 
     if flags.has("--chen") {
-        let plan = chen_plan(&g, |c| simulate(&g, c, SimOptions::default()).peak_total)?;
-        let r = simulate(&g, &plan.chain, SimOptions::default());
+        let plan = chen_plan(&g, |c| simulate(&g, c, opts).peak_total)?;
+        let r = simulate(&g, &plan.chain, opts);
         println!(
             "chen: k={} segment_budget={} peak={} (-{:.0}%) overhead={} (+{:.0}% of T(V))",
             plan.chain.k(),
@@ -234,7 +243,7 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
             fmt_bytes(ctx.min_feasible_budget())
         )
     })?;
-    let r = simulate(&g, &plan.chain, SimOptions::default());
+    let r = simulate(&g, &plan.chain, opts);
     println!(
         "{} plan: k={} segments, overhead={} (+{:.0}% of T(V))",
         plan.kind.label(),
@@ -243,8 +252,9 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
         100.0 * plan.overhead as f64 / g.total_time() as f64
     );
     println!(
-        "peak: eq2={}  measured(liveness)={} (-{:.0}% vs vanilla)",
+        "peak: eq2={}  measured({})={} (-{:.0}% vs vanilla)",
         fmt_bytes(plan.peak_eq2 + g.total_param_bytes()),
+        mode.label(),
         fmt_bytes(r.peak_total),
         100.0 * (1.0 - r.peak_total as f64 / vanilla.peak_total as f64)
     );

@@ -171,7 +171,11 @@ pub fn profile_widths(g: &Graph, max_width: usize) -> Vec<usize> {
 /// bytes of the `[batch, widths[v]]` f32 tensor the executor will hold
 /// for it — which is what makes the simulator's predicted peak and the
 /// executor's observed peak comparable *as an equality*, not a bound.
-/// The node's width is recorded in `shape[0]` for the executor.
+/// That contract is mode-independent: it holds for strict
+/// (strategy-frees-only) programs and for liveness-rewritten ones alike,
+/// because both sides price every buffer with the same per-node bytes —
+/// only the free schedule moves. The node's width is recorded in
+/// `shape[0]` for the executor.
 ///
 /// Panics if `widths` violates the lowering's shape constraints (merge
 /// inputs must share the merge's width; all sources must agree) — use

@@ -83,7 +83,7 @@ pub fn transformer_tower(blocks: u32, d: u32, s: u32, batch: u64) -> Graph {
 mod tests {
     use super::*;
     use crate::planner::{plan_at_min_budget, Family, Objective};
-    use crate::sim::{simulate, simulate_vanilla, SimOptions};
+    use crate::sim::{simulate, simulate_vanilla, SimMode, SimOptions};
 
     #[test]
     fn mlp_tower_is_a_chain() {
@@ -101,10 +101,10 @@ mod tests {
     #[test]
     fn tower_plans_reduce_memory() {
         let g = mlp_tower(32, 512, 16);
-        let vanilla = simulate_vanilla(&g, SimOptions { liveness: true, include_params: false });
+        let live = SimOptions { mode: SimMode::Liveness, include_params: false };
+        let vanilla = simulate_vanilla(&g, live);
         let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
-        let ours =
-            simulate(&g, &plan.chain, SimOptions { liveness: true, include_params: false });
+        let ours = simulate(&g, &plan.chain, live);
         assert!(ours.peak_bytes * 2 < vanilla.peak_bytes);
     }
 

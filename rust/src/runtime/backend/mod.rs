@@ -42,9 +42,39 @@ pub mod pjrt;
 #[cfg(feature = "xla")]
 pub mod xla_stub;
 
-pub use native::{HostTensor, NativeBackend};
+pub use native::{HostTensor, MemoryPool, NativeBackend};
 #[cfg(feature = "xla")]
 pub use pjrt::PjrtBackend;
+
+/// Aggregate counters of a backend's buffer pool (see
+/// [`Backend::pool_stats`]). A pool recycles freed device buffers into
+/// subsequent allocations so the free/recompute churn of a liveness
+/// schedule does not translate into allocator traffic on the hot path.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Buffer requests served by a fresh allocation.
+    pub allocs: u64,
+    /// Buffer requests served from the pool's free lists.
+    pub reuses: u64,
+    /// Bytes currently parked in the free lists (freed, awaiting reuse).
+    pub parked_bytes: u64,
+    /// Peak bytes the pool ever administered at once — buffers handed
+    /// out and not yet returned, plus parked free-list bytes. This is
+    /// the allocator-footprint analogue of the executor's observed peak.
+    pub high_water_bytes: u64,
+}
+
+impl PoolStats {
+    /// Fraction of requests served without touching the allocator.
+    pub fn reuse_ratio(&self) -> f64 {
+        let total = self.allocs + self.reuses;
+        if total == 0 {
+            0.0
+        } else {
+            self.reuses as f64 / total as f64
+        }
+    }
+}
 
 /// Aggregate execution statistics for one kernel on one backend.
 #[derive(Clone, Debug, Default)]
@@ -131,6 +161,15 @@ pub trait Backend {
     /// `Some` power the leak regression tests: after training, live
     /// bytes must return exactly to the post-init baseline.
     fn live_bytes(&self) -> Option<u64> {
+        None
+    }
+
+    /// Counters of the backend's buffer pool, or `None` if the backend
+    /// allocates tensors individually. Pooled backends (native) recycle
+    /// freed buffers into later allocations; the census above is
+    /// unaffected (it counts live tensors, not the allocator's
+    /// footprint — `PoolStats::high_water_bytes` tracks that).
+    fn pool_stats(&self) -> Option<PoolStats> {
         None
     }
 }

@@ -17,6 +17,16 @@
 //! tracker that its `Drop` decrements, so [`Backend::live_bytes`] is an
 //! exact census of outstanding allocations — the leak regression tests
 //! assert it returns to baseline after training.
+//!
+//! Allocation goes through a size-classed [`MemoryPool`]: every buffer a
+//! kernel or upload materializes is drawn from per-power-of-two free
+//! lists, and a dropped tensor's storage is parked back into its class
+//! instead of hitting the allocator. Under a liveness schedule — where
+//! activations die at last use and recomputation re-materializes them
+//! moments later — nearly every allocation after warm-up is a reuse, so
+//! the extra free/recompute churn costs no malloc traffic. The census
+//! above is *unchanged* by pooling (it counts live tensors); the pool's
+//! own footprint is reported separately via [`Backend::pool_stats`].
 
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
@@ -25,20 +35,132 @@ use std::time::Instant;
 
 use crate::anyhow::{bail, Result};
 
-use super::{Backend, KernelStat, DAG_KERNELS, TOWER_KERNELS};
+use super::{Backend, KernelStat, PoolStats, DAG_KERNELS, TOWER_KERNELS};
+
+/// A size-classed recycling allocator for f32 host buffers.
+///
+/// Buffers are bucketed by their length rounded up to a power of two;
+/// [`MemoryPool::writable`]/[`MemoryPool::zeroed`]/[`MemoryPool::copied`]
+/// pop a parked buffer of the exact class when one exists (a *reuse*)
+/// and fall back to a fresh `Vec` otherwise (an *alloc*). Returning
+/// storage happens automatically: the owning [`TensorBuf`]'s `Drop`
+/// parks its data back into the pool, bounded per class so pathological
+/// shape mixes cannot hoard memory. Handles are cheap `Rc` clones of one
+/// shared pool, mirroring how tensors share the live-byte tracker.
+#[derive(Clone, Default)]
+pub struct MemoryPool {
+    inner: Rc<RefCell<PoolInner>>,
+}
+
+#[derive(Default)]
+struct PoolInner {
+    /// Parked buffers per size class (class = elems rounded up to pow2).
+    classes: BTreeMap<usize, Vec<Vec<f32>>>,
+    allocs: u64,
+    reuses: u64,
+    /// Bytes currently parked in `classes`.
+    parked: u64,
+    /// Bytes currently handed out to live buffers (class-granular).
+    outstanding: u64,
+    high_water: u64,
+}
+
+impl MemoryPool {
+    /// Parked buffers kept per class; beyond this, freed storage really
+    /// goes back to the allocator (keeps worst-case hoarding bounded).
+    const MAX_PER_CLASS: usize = 32;
+
+    /// Size class of a buffer length: the next power of two (≥ 1).
+    fn class_of(len: usize) -> usize {
+        len.max(1).next_power_of_two()
+    }
+
+    /// A buffer with `len == 0` and capacity ≥ `len` — for kernels that
+    /// `push` exactly `len` elements. The charged class is `class_of(len)`,
+    /// so the producer must fill it to exactly `len` (every kernel does).
+    pub fn writable(&self, len: usize) -> Vec<f32> {
+        let cls = Self::class_of(len);
+        let mut inner = self.inner.borrow_mut();
+        let buf = inner.classes.get_mut(&cls).and_then(Vec::pop);
+        let buf = match buf {
+            Some(mut b) => {
+                inner.reuses += 1;
+                inner.parked -= (cls * 4) as u64;
+                b.clear();
+                b
+            }
+            None => {
+                inner.allocs += 1;
+                Vec::with_capacity(cls)
+            }
+        };
+        inner.outstanding += (cls * 4) as u64;
+        inner.high_water = inner.high_water.max(inner.outstanding + inner.parked);
+        buf
+    }
+
+    /// A zero-filled buffer of exactly `len` elements.
+    pub fn zeroed(&self, len: usize) -> Vec<f32> {
+        let mut b = self.writable(len);
+        b.resize(len, 0.0);
+        b
+    }
+
+    /// A buffer holding a copy of `src`.
+    pub fn copied(&self, src: &[f32]) -> Vec<f32> {
+        let mut b = self.writable(src.len());
+        b.extend_from_slice(src);
+        b
+    }
+
+    /// Park a dropped tensor's storage for reuse (called from
+    /// [`TensorBuf`]'s `Drop`). The class is recomputed from the length,
+    /// which never changes after adoption — tensors are immutable.
+    /// `saturating_sub` keeps the ledger safe even for storage that was
+    /// built outside the pool and adopted later.
+    fn give(&self, v: Vec<f32>) {
+        if v.capacity() == 0 {
+            return;
+        }
+        let cls = Self::class_of(v.len());
+        let mut guard = self.inner.borrow_mut();
+        let inner = &mut *guard;
+        inner.outstanding = inner.outstanding.saturating_sub((cls * 4) as u64);
+        let bucket = inner.classes.entry(cls).or_default();
+        if bucket.len() < Self::MAX_PER_CLASS {
+            bucket.push(v);
+            inner.parked += (cls * 4) as u64;
+        }
+    }
+
+    /// Snapshot of the pool counters.
+    pub fn stats(&self) -> PoolStats {
+        let inner = self.inner.borrow();
+        PoolStats {
+            allocs: inner.allocs,
+            reuses: inner.reuses,
+            parked_bytes: inner.parked,
+            high_water_bytes: inner.high_water,
+        }
+    }
+}
 
 /// The backing store of a [`HostTensor`]: the flat data plus (once the
 /// owning backend adopts the tensor) a live-byte tracker decremented on
-/// drop.
+/// drop and the pool the storage returns to.
 struct TensorBuf {
     data: Vec<f32>,
     tracker: Option<Rc<Cell<u64>>>,
+    pool: Option<MemoryPool>,
 }
 
 impl Drop for TensorBuf {
     fn drop(&mut self) {
         if let Some(t) = &self.tracker {
             t.set(t.get() - (self.data.len() * 4) as u64);
+        }
+        if let Some(pool) = &self.pool {
+            pool.give(std::mem::take(&mut self.data));
         }
     }
 }
@@ -53,7 +175,7 @@ pub struct HostTensor {
 impl HostTensor {
     fn new(data: Vec<f32>, dims: Vec<usize>) -> HostTensor {
         debug_assert_eq!(data.len(), dims.iter().product::<usize>().max(1));
-        HostTensor { buf: Rc::new(TensorBuf { data, tracker: None }), dims }
+        HostTensor { buf: Rc::new(TensorBuf { data, tracker: None, pool: None }), dims }
     }
 
     /// Flat row-major view of the data.
@@ -85,16 +207,21 @@ impl HostTensor {
 
 /// The pure-Rust CPU backend. Shape-free: kernels validate and size
 /// themselves from their argument tensors, so one instance serves any
-/// mix of tensor shapes.
+/// mix of tensor shapes. All buffer storage — uploads and kernel
+/// outputs — is drawn from (and returned to) the backend's
+/// [`MemoryPool`].
 #[derive(Default)]
 pub struct NativeBackend {
     /// Bytes held by live tensors this backend has produced.
     live: Rc<Cell<u64>>,
+    /// Recycling allocator behind every tensor this backend produces.
+    pool: MemoryPool,
     stats: RefCell<BTreeMap<String, KernelStat>>,
 }
 
 impl NativeBackend {
-    /// A fresh backend with empty stats and a zeroed live-byte tracker.
+    /// A fresh backend with empty stats, a zeroed live-byte tracker and
+    /// an empty buffer pool.
     pub fn new() -> NativeBackend {
         NativeBackend::default()
     }
@@ -103,14 +230,16 @@ impl NativeBackend {
         super::record_call(&mut self.stats.borrow_mut(), kernel, t0.elapsed(), bytes_in, bytes_out);
     }
 
-    /// Attach the live-byte tracker to a freshly built tensor (uploads
-    /// and kernel outputs have refcount 1 here; already-adopted or
-    /// shared tensors pass through unchanged).
+    /// Attach the live-byte tracker and the pool to a freshly built
+    /// tensor (uploads and kernel outputs have refcount 1 here;
+    /// already-adopted or shared tensors pass through unchanged). From
+    /// here on the tensor's storage returns to the pool when it drops.
     fn adopt(&self, mut t: HostTensor) -> HostTensor {
         if let Some(buf) = Rc::get_mut(&mut t.buf) {
             if buf.tracker.is_none() {
                 self.live.set(self.live.get() + (buf.data.len() * 4) as u64);
                 buf.tracker = Some(Rc::clone(&self.live));
+                buf.pool = Some(self.pool.clone());
             }
         }
         t
@@ -129,7 +258,7 @@ impl Backend for NativeBackend {
         if data.len() != expect {
             bail!("upload shape mismatch: {} elems for dims {dims:?}", data.len());
         }
-        Ok(self.adopt(HostTensor::new(data.to_vec(), dims.to_vec())))
+        Ok(self.adopt(HostTensor::new(self.pool.copied(data), dims.to_vec())))
     }
 
     fn download(&self, t: &HostTensor) -> Result<Vec<f32>> {
@@ -144,19 +273,24 @@ impl Backend for NativeBackend {
         Some(self.live.get())
     }
 
+    fn pool_stats(&self) -> Option<PoolStats> {
+        Some(self.pool.stats())
+    }
+
     fn run(&self, name: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let t0 = Instant::now();
         let bytes_in: u64 = args.iter().map(HostTensor::bytes).sum();
+        let pool = &self.pool;
         let outs = match name {
-            "layer_fwd" => layer_fwd(args)?,
-            "layer_bwd" => layer_bwd(args)?,
-            "loss_head_fwd" => loss_head_fwd(args)?,
-            "loss_head_bwd" => loss_head_bwd(args)?,
-            "sgd_mat" => sgd(name, args, 2)?,
-            "sgd_vec" => sgd(name, args, 1)?,
-            "add" => add(args)?,
-            "scale" => scale(args)?,
-            "mse" => mse(args)?,
+            "layer_fwd" => layer_fwd(pool, args)?,
+            "layer_bwd" => layer_bwd(pool, args)?,
+            "loss_head_fwd" => loss_head_fwd(pool, args)?,
+            "loss_head_bwd" => loss_head_bwd(pool, args)?,
+            "sgd_mat" => sgd(pool, name, args, 2)?,
+            "sgd_vec" => sgd(pool, name, args, 1)?,
+            "add" => add(pool, args)?,
+            "scale" => scale(pool, args)?,
+            "mse" => mse(pool, args)?,
             other => bail!(
                 "native backend has no kernel '{other}' (have: {TOWER_KERNELS:?} + {DAG_KERNELS:?})"
             ),
@@ -199,11 +333,11 @@ fn gelu_prime(x: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
 }
 
-/// `a[m,k] @ b[k,n]` → `[m,n]`.
-fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+/// `a[m,k] @ b[k,n]` → `[m,n]` (output drawn from the pool).
+fn matmul(pool: &MemoryPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
+    let mut out = pool.zeroed(m * n);
     for (arow, orow) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
         for (&av, brow) in arow.iter().zip(b.chunks_exact(n)) {
             if av != 0.0 {
@@ -217,10 +351,10 @@ fn matmul(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 }
 
 /// `a[m,k] @ b[n,k]ᵀ` → `[m,n]` (row-by-row dot products).
-fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+fn matmul_nt(pool: &MemoryPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), m * k);
     debug_assert_eq!(b.len(), n * k);
-    let mut out = Vec::with_capacity(m * n);
+    let mut out = pool.writable(m * n);
     for arow in a.chunks_exact(k) {
         for brow in b.chunks_exact(k) {
             out.push(arow.iter().zip(brow).map(|(&x, &y)| x * y).sum());
@@ -230,10 +364,10 @@ fn matmul_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
 }
 
 /// `a[k,m]ᵀ @ b[k,n]` → `[m,n]` (accumulate rank-1 updates per row pair).
-fn matmul_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
+fn matmul_tn(pool: &MemoryPool, a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
     debug_assert_eq!(a.len(), k * m);
     debug_assert_eq!(b.len(), k * n);
-    let mut out = vec![0.0f32; m * n];
+    let mut out = pool.zeroed(m * n);
     for (arow, brow) in a.chunks_exact(m).zip(b.chunks_exact(n)) {
         for (&av, orow) in arow.iter().zip(out.chunks_exact_mut(n)) {
             if av != 0.0 {
@@ -256,8 +390,8 @@ fn add_bias(z: &mut [f32], bias: &[f32]) {
 }
 
 /// Column sums of `a[m,n]` → `[n]`.
-fn colsum(a: &[f32], n: usize) -> Vec<f32> {
-    let mut out = vec![0.0f32; n];
+fn colsum(pool: &MemoryPool, a: &[f32], n: usize) -> Vec<f32> {
+    let mut out = pool.zeroed(n);
     for arow in a.chunks_exact(n) {
         for (o, &av) in out.iter_mut().zip(arow) {
             *o += av;
@@ -293,9 +427,9 @@ fn dense_shape(kernel: &str, args: &[HostTensor], arity: usize) -> Result<(usize
 
 /// `gelu(x @ w + b)` — the fused dense layer forward, rectangular:
 /// `[m, k_in] × [k_in, k_out] → [m, k_out]`.
-fn layer_fwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+fn layer_fwd(pool: &MemoryPool, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     let (m, k_in, k_out) = dense_shape("layer_fwd", args, 3)?;
-    let mut z = matmul(args[0].data(), args[1].data(), m, k_in, k_out);
+    let mut z = matmul(pool, args[0].data(), args[1].data(), m, k_in, k_out);
     add_bias(&mut z, args[2].data());
     for v in z.iter_mut() {
         *v = gelu(*v);
@@ -305,21 +439,22 @@ fn layer_fwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
 
 /// Gradients of `layer_fwd` w.r.t. `(x, w, b)` given upstream `gh`:
 /// `dz = gh ⊙ gelu'(z)`, `gx = dz @ wᵀ`, `gw = xᵀ @ dz`, `gb = Σ_batch dz`.
-fn layer_bwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+fn layer_bwd(pool: &MemoryPool, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     let (m, k_in, k_out) = dense_shape("layer_bwd", args, 4)?;
     let gh = &args[3];
     if gh.dims() != [m, k_out] {
         bail!("layer_bwd: upstream grad dims {:?}, want [{m}, {k_out}]", gh.dims());
     }
     let (x, w) = (args[0].data(), args[1].data());
-    let mut dz = matmul(x, w, m, k_in, k_out);
+    let mut dz = matmul(pool, x, w, m, k_in, k_out);
     add_bias(&mut dz, args[2].data());
     for (d, &g) in dz.iter_mut().zip(gh.data()) {
         *d = g * gelu_prime(*d);
     }
-    let gx = matmul_nt(&dz, w, m, k_out, k_in);
-    let gw = matmul_tn(x, &dz, m, k_in, k_out);
-    let gb = colsum(&dz, k_out);
+    let gx = matmul_nt(pool, &dz, w, m, k_out, k_in);
+    let gw = matmul_tn(pool, x, &dz, m, k_in, k_out);
+    let gb = colsum(pool, &dz, k_out);
+    pool.give(dz); // scratch: return to the pool, not the allocator
     Ok(vec![
         HostTensor::new(gx, vec![m, k_in]),
         HostTensor::new(gw, vec![k_in, k_out]),
@@ -328,30 +463,31 @@ fn layer_bwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
 }
 
 /// MSE regression head forward: `mean((h @ w + b − y)²)` → scalar loss.
-fn loss_head_fwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+fn loss_head_fwd(pool: &MemoryPool, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     let (m, k_in, k_out) = dense_shape("loss_head_fwd", args, 4)?;
     let y = &args[3];
     if y.dims() != [m, k_out] {
         bail!("loss_head_fwd: target dims {:?}, want [{m}, {k_out}]", y.dims());
     }
-    let mut pred = matmul(args[0].data(), args[1].data(), m, k_in, k_out);
+    let mut pred = matmul(pool, args[0].data(), args[1].data(), m, k_in, k_out);
     add_bias(&mut pred, args[2].data());
     let n = (m * k_out) as f32;
     let loss: f32 =
         pred.iter().zip(y.data()).map(|(&p, &t)| (p - t) * (p - t)).sum::<f32>() / n;
-    Ok(vec![HostTensor::new(vec![loss], vec![])])
+    pool.give(pred); // scratch: return to the pool, not the allocator
+    Ok(vec![HostTensor::new(pool.copied(&[loss]), vec![])])
 }
 
 /// Loss head forward + backward in one call:
 /// returns `(loss, gh, gw, gb)` for `loss = mean((h @ w + b − y)²)`.
-fn loss_head_bwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+fn loss_head_bwd(pool: &MemoryPool, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     let (m, k_in, k_out) = dense_shape("loss_head_bwd", args, 4)?;
     let y = &args[3];
     if y.dims() != [m, k_out] {
         bail!("loss_head_bwd: target dims {:?}, want [{m}, {k_out}]", y.dims());
     }
     let (h, w) = (args[0].data(), args[1].data());
-    let mut pred = matmul(h, w, m, k_in, k_out);
+    let mut pred = matmul(pool, h, w, m, k_in, k_out);
     add_bias(&mut pred, args[2].data());
     let n = (m * k_out) as f32;
     let mut loss = 0.0f32;
@@ -363,11 +499,12 @@ fn loss_head_bwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     }
     loss /= n;
     let dpred = pred;
-    let gh = matmul_nt(&dpred, w, m, k_out, k_in);
-    let gw = matmul_tn(h, &dpred, m, k_in, k_out);
-    let gb = colsum(&dpred, k_out);
+    let gh = matmul_nt(pool, &dpred, w, m, k_out, k_in);
+    let gw = matmul_tn(pool, h, &dpred, m, k_in, k_out);
+    let gb = colsum(pool, &dpred, k_out);
+    pool.give(dpred); // scratch: return to the pool, not the allocator
     Ok(vec![
-        HostTensor::new(vec![loss], vec![]),
+        HostTensor::new(pool.copied(&[loss]), vec![]),
         HostTensor::new(gh, vec![m, k_in]),
         HostTensor::new(gw, vec![k_in, k_out]),
         HostTensor::new(gb, vec![k_out]),
@@ -376,7 +513,7 @@ fn loss_head_bwd(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
 
 /// Elementwise `a + b` — the fan-in merge building block and the
 /// gradient-accumulation kernel of the general-DAG executor.
-fn add(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+fn add(pool: &MemoryPool, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     if args.len() != 2 {
         bail!("add: expected 2 args, got {}", args.len());
     }
@@ -384,13 +521,14 @@ fn add(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     if a.dims() != b.dims() {
         bail!("add: dims {:?} vs {:?}", a.dims(), b.dims());
     }
-    let out: Vec<f32> = a.data().iter().zip(b.data()).map(|(&x, &y)| x + y).collect();
+    let mut out = pool.writable(a.len());
+    out.extend(a.data().iter().zip(b.data()).map(|(&x, &y)| x + y));
     Ok(vec![HostTensor::new(out, a.dims().to_vec())])
 }
 
 /// Elementwise `x · s` for scalar `s` — normalizes merge fan-ins (and
 /// their backward pass-through) by `1/√k`.
-fn scale(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+fn scale(pool: &MemoryPool, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     if args.len() != 2 {
         bail!("scale: expected 2 args, got {}", args.len());
     }
@@ -399,13 +537,14 @@ fn scale(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
         bail!("scale: factor must be a scalar, got {:?}", s.dims());
     }
     let f = s.data()[0];
-    let out: Vec<f32> = x.data().iter().map(|&v| v * f).collect();
+    let mut out = pool.writable(x.len());
+    out.extend(x.data().iter().map(|&v| v * f));
     Ok(vec![HostTensor::new(out, x.dims().to_vec())])
 }
 
 /// Mean-squared-error loss + gradient in one call:
 /// `(mean((p − y)²), 2(p − y)/n)` — the per-sink loss of the DAG executor.
-fn mse(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
+fn mse(pool: &MemoryPool, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     if args.len() != 2 {
         bail!("mse: expected 2 args, got {}", args.len());
     }
@@ -418,19 +557,27 @@ fn mse(args: &[HostTensor]) -> Result<Vec<HostTensor>> {
     }
     let n = p.len() as f32;
     let mut loss = 0.0f32;
-    let mut grad = Vec::with_capacity(p.len());
+    let mut grad = pool.writable(p.len());
     for (&pv, &yv) in p.data().iter().zip(y.data()) {
         let diff = pv - yv;
         loss += diff * diff;
         grad.push(2.0 * diff / n);
     }
     loss /= n;
-    Ok(vec![HostTensor::new(vec![loss], vec![]), HostTensor::new(grad, p.dims().to_vec())])
+    Ok(vec![
+        HostTensor::new(pool.copied(&[loss]), vec![]),
+        HostTensor::new(grad, p.dims().to_vec()),
+    ])
 }
 
 /// `p − lr·g` elementwise; `rank` pins the expected dimensionality so the
 /// mat/vec variants keep the artifact-manifest arity contract.
-fn sgd(kernel: &str, args: &[HostTensor], rank: usize) -> Result<Vec<HostTensor>> {
+fn sgd(
+    pool: &MemoryPool,
+    kernel: &str,
+    args: &[HostTensor],
+    rank: usize,
+) -> Result<Vec<HostTensor>> {
     if args.len() != 3 {
         bail!("{kernel}: expected 3 args, got {}", args.len());
     }
@@ -445,8 +592,8 @@ fn sgd(kernel: &str, args: &[HostTensor], rank: usize) -> Result<Vec<HostTensor>
         bail!("{kernel}: lr must be a scalar, got {:?}", lr.dims());
     }
     let lr = lr.data()[0];
-    let out: Vec<f32> =
-        p.data().iter().zip(g.data()).map(|(&pv, &gv)| pv - lr * gv).collect();
+    let mut out = pool.writable(p.len());
+    out.extend(p.data().iter().zip(g.data()).map(|(&pv, &gv)| pv - lr * gv));
     Ok(vec![HostTensor::new(out, p.dims().to_vec())])
 }
 
@@ -705,6 +852,59 @@ mod tests {
         assert_eq!(outs.len(), 2);
         assert!(outs[0].dims().is_empty(), "scalar loss");
         fd_check(outs[1].data(), &p, loss_of);
+    }
+
+    #[test]
+    fn pool_recycles_freed_buffers() {
+        let b = be();
+        let x = b.upload(&[1.0f32; 64], &[64]).unwrap();
+        let s0 = b.pool_stats().unwrap();
+        assert!(s0.allocs >= 1, "upload allocates through the pool");
+        assert_eq!(s0.reuses, 0, "nothing to reuse yet");
+        drop(x);
+        let s1 = b.pool_stats().unwrap();
+        assert!(s1.parked_bytes >= 64 * 4, "freed storage parks in the pool");
+        // Same-class upload must be served from the free list, and the
+        // recycled buffer must carry the new contents, not stale data.
+        let y = b.upload(&[2.0f32; 64], &[64]).unwrap();
+        let s2 = b.pool_stats().unwrap();
+        assert_eq!(s2.reuses, s1.reuses + 1, "second upload reuses the parked buffer");
+        assert_eq!(s2.allocs, s1.allocs, "no fresh allocation");
+        assert_eq!(b.download(&y).unwrap(), vec![2.0f32; 64]);
+        assert!(s2.high_water_bytes >= 64 * 4);
+        // Kernel outputs recycle too: scale 300×; after warm-up every
+        // output draws from the pool instead of the allocator.
+        let s = b.upload(&[0.5], &[]).unwrap();
+        for _ in 0..300 {
+            let _ = b.run("scale", &[y.clone(), s.clone()]).unwrap();
+        }
+        let s3 = b.pool_stats().unwrap();
+        assert!(
+            s3.reuses >= s2.reuses + 299,
+            "kernel outputs must recycle: {} → {}",
+            s2.reuses,
+            s3.reuses
+        );
+        // The census stays a pure live-tensor count — pooling never
+        // inflates it.
+        assert_eq!(b.live_bytes(), Some(64 * 4 + 4));
+    }
+
+    #[test]
+    fn pool_bounds_parked_storage_per_class() {
+        let b = be();
+        // Park far more than MAX_PER_CLASS buffers of one class…
+        let tensors: Vec<_> =
+            (0..64).map(|_| b.upload(&[0.0f32; 16], &[16]).unwrap()).collect();
+        drop(tensors);
+        let s = b.pool_stats().unwrap();
+        // …and only a bounded number may be retained (class 16 → 64 B each).
+        assert!(
+            s.parked_bytes <= 32 * 16 * 4,
+            "parked {} exceeds the per-class bound",
+            s.parked_bytes
+        );
+        assert_eq!(b.live_bytes(), Some(0), "census unaffected by parked storage");
     }
 
     #[test]

@@ -293,4 +293,12 @@ impl Backend for PjrtBackend {
     fn stats(&self) -> Vec<KernelStat> {
         self.stats.borrow().values().cloned().collect()
     }
+
+    /// PJRT owns its device buffers inside the runtime; there is no
+    /// host-side pool to report (the native backend's `MemoryPool` is
+    /// the pooled path). Explicit `None` rather than the trait default
+    /// so the contract is visible at the implementation site.
+    fn pool_stats(&self) -> Option<super::PoolStats> {
+        None
+    }
 }

@@ -13,7 +13,10 @@
 
 pub mod backend;
 
-pub use backend::{Backend, HostTensor, KernelStat, NativeBackend, DAG_KERNELS, TOWER_KERNELS};
+pub use backend::{
+    Backend, HostTensor, KernelStat, MemoryPool, NativeBackend, PoolStats, DAG_KERNELS,
+    TOWER_KERNELS,
+};
 
 #[cfg(feature = "xla")]
 pub use backend::pjrt::{

@@ -2,26 +2,78 @@
 //!
 //! The planners optimize the *analytic* peak (Eq. 2); what the paper
 //! reports in Table 1 is the peak of the real execution after applying
-//! **liveness analysis** [Appel & Palsberg] — each buffer is released right
-//! after its last use in the whole step schedule. Table 2 is the ablation
-//! without liveness: buffers are released only at the points the canonical
-//! strategy mandates. Both measurements run over the same [`trace`].
+//! **liveness analysis** [Appel & Palsberg] — each buffer is released
+//! right after the op that last uses it. Table 2 is the ablation without
+//! liveness: buffers are released only at the points the canonical
+//! strategy mandates. Both measurements run over the same [`trace`], and
+//! liveness is a trace *rewrite* ([`apply_liveness`]) rather than a
+//! second accounting: the rewritten trace carries explicit last-use
+//! `Free` events, one fold ([`measure`]) computes the peak of either
+//! mode, and [`crate::exec::OpProgram`] compiles the very same rewritten
+//! trace — so the schedule the real executor frees buffers on *is* the
+//! schedule the simulator priced.
 
 mod trace;
 
-pub use trace::{canonical_trace, vanilla_trace, Buffer, Event, Trace};
+pub use trace::{apply_liveness, canonical_trace, vanilla_trace, Buffer, Event, Trace};
 
 use std::collections::HashMap;
 
+use crate::anyhow::{bail, Result};
 use crate::graph::Graph;
 use crate::planner::LowerSetChain;
+
+/// Which free schedule a measurement (or a compiled program) honors.
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub enum SimMode {
+    /// Free each buffer at the end of the op that last uses it
+    /// (Table 1 / Chainer-style eager freeing) — the default, and what
+    /// the paper's headline reductions are measured with.
+    #[default]
+    Liveness,
+    /// Honor only the strategy-mandated frees (the Table 2 ablation).
+    Strict,
+}
+
+impl SimMode {
+    /// True in liveness mode.
+    pub fn liveness(self) -> bool {
+        self == SimMode::Liveness
+    }
+
+    /// The mode matching a Table 1 (`true`) / Table 2 (`false`) toggle.
+    pub fn from_liveness(on: bool) -> SimMode {
+        if on {
+            SimMode::Liveness
+        } else {
+            SimMode::Strict
+        }
+    }
+
+    /// CLI rendering (`--sim` value).
+    pub fn label(self) -> &'static str {
+        match self {
+            SimMode::Liveness => "liveness",
+            SimMode::Strict => "strict",
+        }
+    }
+
+    /// Parse a `--sim` value.
+    pub fn parse(s: &str) -> Result<SimMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "liveness" => Ok(SimMode::Liveness),
+            "strict" => Ok(SimMode::Strict),
+            other => bail!("bad sim mode '{other}' (liveness|strict)"),
+        }
+    }
+}
 
 /// Simulator options.
 #[derive(Clone, Copy, Debug)]
 pub struct SimOptions {
-    /// Apply liveness analysis (free each buffer after its last use)
-    /// instead of honoring only the strategy-mandated frees.
-    pub liveness: bool,
+    /// Free schedule: liveness analysis (free each buffer after the op
+    /// that last uses it) or strict strategy-mandated frees.
+    pub mode: SimMode,
     /// Add the model's parameter bytes to the reported peak (the paper's
     /// Table 1 "includes the memory used by the model parameters itself").
     pub include_params: bool,
@@ -29,7 +81,7 @@ pub struct SimOptions {
 
 impl Default for SimOptions {
     fn default() -> Self {
-        SimOptions { liveness: true, include_params: true }
+        SimOptions { mode: SimMode::Liveness, include_params: true }
     }
 }
 
@@ -69,10 +121,21 @@ pub fn simulate_vanilla(g: &Graph, opts: SimOptions) -> SimReport {
     measure(g, &tr, opts)
 }
 
-/// Core measurement over a trace.
+/// Core measurement over a trace: liveness mode first rewrites the trace
+/// so its frees sit at last uses ([`apply_liveness`]), then both modes
+/// share the same single fold ([`peak_of_trace`]) — one source of truth
+/// for what a free schedule costs. `peak_event`/`trace_len` refer to the
+/// trace actually folded (the rewritten one in liveness mode).
 pub fn measure(g: &Graph, tr: &Trace, opts: SimOptions) -> SimReport {
-    let (peak, peak_event) =
-        if opts.liveness { peak_with_liveness(tr) } else { peak_without_liveness(tr) };
+    let rewritten;
+    let folded: &Trace = match opts.mode {
+        SimMode::Liveness => {
+            rewritten = apply_liveness(tr);
+            &rewritten
+        }
+        SimMode::Strict => tr,
+    };
+    let (peak, peak_event) = peak_of_trace(folded);
     let params = if opts.include_params { g.total_param_bytes() } else { 0 };
     let fwd = g.total_time();
     SimReport {
@@ -82,12 +145,15 @@ pub fn measure(g: &Graph, tr: &Trace, opts: SimOptions) -> SimReport {
         step_time: fwd + BACKWARD_FACTOR * fwd + tr.recompute_time,
         recompute_count: tr.recompute_count,
         peak_event,
-        trace_len: tr.events.len(),
+        trace_len: folded.events.len(),
     }
 }
 
-/// Peak honoring only strategy-mandated frees (Table 2 mode).
-fn peak_without_liveness(tr: &Trace) -> (u64, usize) {
+/// The one peak fold: honor exactly the `Free` events the trace carries
+/// (strategy frees in a raw trace, last-use frees in a liveness-rewritten
+/// one), validating that reads hit live buffers and that the step ends
+/// balanced.
+fn peak_of_trace(tr: &Trace) -> (u64, usize) {
     let mut live = 0u64;
     let mut peak = 0u64;
     let mut peak_at = 0usize;
@@ -117,48 +183,6 @@ fn peak_without_liveness(tr: &Trace) -> (u64, usize) {
     (peak, peak_at)
 }
 
-/// Peak with liveness analysis: every buffer is freed immediately after
-/// its last use (or its allocation, if never used). Strategy frees are
-/// ignored — liveness strictly refines them (a buffer's last use never
-/// comes after the strategy's free, since the trace would have panicked
-/// on a dead read).
-fn peak_with_liveness(tr: &Trace) -> (u64, usize) {
-    // Last-use position per buffer.
-    let mut last_use: HashMap<Buffer, usize> = HashMap::new();
-    for (i, ev) in tr.events.iter().enumerate() {
-        match *ev {
-            Event::Alloc { buffer, .. } | Event::Use { buffer } => {
-                last_use.insert(buffer, i);
-            }
-            Event::Free { .. } | Event::Backprop { .. } => {}
-        }
-    }
-    // Buffers to free after each position.
-    let mut frees_at: Vec<Vec<Buffer>> = vec![Vec::new(); tr.events.len()];
-    for (&buf, &pos) in &last_use {
-        frees_at[pos].push(buf);
-    }
-    let mut live = 0u64;
-    let mut peak = 0u64;
-    let mut peak_at = 0usize;
-    let mut sizes: HashMap<Buffer, u64> = HashMap::new();
-    for (i, ev) in tr.events.iter().enumerate() {
-        if let Event::Alloc { buffer, bytes, .. } = *ev {
-            sizes.insert(buffer, bytes);
-            live += bytes;
-            if live > peak {
-                peak = live;
-                peak_at = i;
-            }
-        }
-        for buf in &frees_at[i] {
-            live -= sizes.remove(buf).expect("liveness double free");
-        }
-    }
-    assert!(sizes.is_empty(), "liveness leaked buffers");
-    (peak, peak_at)
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -175,12 +199,38 @@ mod tests {
             let n = rng.range(4, 14);
             let g = random_dag(&mut rng, n);
             let plan = plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap();
-            let with =
-                simulate(&g, &plan.chain, SimOptions { liveness: true, include_params: false });
-            let without =
-                simulate(&g, &plan.chain, SimOptions { liveness: false, include_params: false });
+            let live = SimOptions { mode: SimMode::Liveness, include_params: false };
+            let strict = SimOptions { mode: SimMode::Strict, include_params: false };
+            let with = simulate(&g, &plan.chain, live);
+            let without = simulate(&g, &plan.chain, strict);
             assert!(with.peak_bytes <= without.peak_bytes);
             assert_eq!(with.overhead_time, without.overhead_time);
+        }
+    }
+
+    #[test]
+    fn liveness_measure_is_the_strict_fold_of_the_rewritten_trace() {
+        // One source of truth: measuring a trace in liveness mode must be
+        // *exactly* measuring its liveness rewrite in strict mode — the
+        // same fold, over the same explicit Free events the executor
+        // compiles. Also pins down that the rewrite preserves the
+        // recomputation totals (it moves frees, never computation).
+        let mut rng = Pcg32::seeded(74);
+        for _ in 0..15 {
+            let n = rng.range(4, 12);
+            let g = random_dag(&mut rng, n);
+            let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+            let tr = canonical_trace(&g, &plan.chain);
+            let rewritten = apply_liveness(&tr);
+            let opts = SimOptions { mode: SimMode::Liveness, include_params: false };
+            let strict = SimOptions { mode: SimMode::Strict, include_params: false };
+            let via_mode = measure(&g, &tr, opts);
+            let via_rewrite = measure(&g, &rewritten, strict);
+            assert_eq!(via_mode.peak_bytes, via_rewrite.peak_bytes);
+            assert_eq!(via_mode.peak_event, via_rewrite.peak_event);
+            assert_eq!(via_mode.trace_len, via_rewrite.trace_len);
+            assert_eq!(rewritten.recompute_time, tr.recompute_time);
+            assert_eq!(rewritten.recompute_count, tr.recompute_count);
         }
     }
 
@@ -195,8 +245,8 @@ mod tests {
             let g = random_dag(&mut rng, n);
             let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
             let eq2 = plan.chain.peak_mem(&g);
-            let meas =
-                simulate(&g, &plan.chain, SimOptions { liveness: false, include_params: false });
+            let strict = SimOptions { mode: SimMode::Strict, include_params: false };
+            let meas = simulate(&g, &plan.chain, strict);
             assert!(meas.peak_bytes <= 2 * eq2, "measured {} vs eq2 {}", meas.peak_bytes, eq2);
             assert!(2 * meas.peak_bytes >= eq2, "measured {} vs eq2 {}", meas.peak_bytes, eq2);
         }
@@ -205,7 +255,7 @@ mod tests {
     #[test]
     fn vanilla_peak_at_least_total_mem() {
         let g = chain_graph(&[5, 5, 5, 5, 5]);
-        let r = simulate_vanilla(&g, SimOptions { liveness: true, include_params: false });
+        let r = simulate_vanilla(&g, SimOptions { mode: SimMode::Liveness, include_params: false });
         assert!(r.peak_bytes >= g.total_mem());
         assert_eq!(r.overhead_time, 0);
         assert_eq!(r.step_time, 3 * g.total_time());
@@ -215,10 +265,10 @@ mod tests {
     fn recomputation_reduces_peak_on_chain() {
         // Long uniform chain: any reasonable plan beats vanilla.
         let g = chain_graph(&[10; 40]);
-        let vanilla = simulate_vanilla(&g, SimOptions { liveness: true, include_params: false });
+        let live = SimOptions { mode: SimMode::Liveness, include_params: false };
+        let vanilla = simulate_vanilla(&g, live);
         let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
-        let ours =
-            simulate(&g, &plan.chain, SimOptions { liveness: true, include_params: false });
+        let ours = simulate(&g, &plan.chain, live);
         assert!(
             ours.peak_bytes < vanilla.peak_bytes,
             "ours {} vanilla {}",
@@ -241,7 +291,7 @@ mod tests {
             let g = random_dag(&mut rng, n);
             let tc = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
             let mc = plan_at_min_budget(&g, Family::Exact, Objective::MaxOverhead).unwrap();
-            let opts = SimOptions { liveness: true, include_params: false };
+            let opts = SimOptions { mode: SimMode::Liveness, include_params: false };
             tc_sum += simulate(&g, &tc.chain, opts).peak_bytes;
             mc_sum += simulate(&g, &mc.chain, opts).peak_bytes;
         }
@@ -267,8 +317,10 @@ mod tests {
         let x = b.add_with("c", OpKind::Conv, &[4, 4, 4], &[], 1234);
         let _ = b.add("r", OpKind::Activation, &[4, 4, 4], &[x]);
         let g = b.build();
-        let with = simulate_vanilla(&g, SimOptions { liveness: true, include_params: true });
-        let without = simulate_vanilla(&g, SimOptions { liveness: true, include_params: false });
+        let with =
+            simulate_vanilla(&g, SimOptions { mode: SimMode::Liveness, include_params: true });
+        let without =
+            simulate_vanilla(&g, SimOptions { mode: SimMode::Liveness, include_params: false });
         assert_eq!(with.peak_total, without.peak_bytes + 1234);
     }
 
@@ -278,10 +330,10 @@ mod tests {
         // working set without liveness.
         let g = chain_graph(&[3, 3, 3, 3]);
         let w = whole_graph_chain(&g);
-        let r = simulate(&g, &w, SimOptions { liveness: false, include_params: false });
+        let r = simulate(&g, &w, SimOptions { mode: SimMode::Strict, include_params: false });
         assert_eq!(r.overhead_time, g.total_time());
         let s = singleton_chain(&g);
-        let rs = simulate(&g, &s, SimOptions { liveness: false, include_params: false });
+        let rs = simulate(&g, &s, SimOptions { mode: SimMode::Strict, include_params: false });
         assert!(rs.overhead_time <= r.overhead_time);
     }
 }

@@ -19,7 +19,13 @@
 //! modes (Table 1 with liveness, Table 2 without) and is structurally
 //! checked: every read must target a live buffer, which proves the
 //! canonical strategy never uses a value it discarded — the core safety
-//! property of the whole approach.
+//! property of the whole approach. The liveness mode is itself a trace
+//! *rewrite* ([`apply_liveness`]): strategy-mandated frees are replaced
+//! by a `Free` at each buffer's last use, so both modes are measured by
+//! the same single fold over events — and the rewritten trace stays
+//! executable, because frees land at **op-group boundaries** (after the
+//! op that performed the last read completes, never mid-op; a real
+//! kernel needs its inputs and its output live simultaneously).
 //!
 //! Byte accounting is **per node** throughout: every `Fwd` *and* `Grad`
 //! allocation charges that node's own `M_v` (a gradient has its node's
@@ -78,10 +84,81 @@ pub enum Event {
 /// The step trace plus bookkeeping totals.
 pub struct Trace {
     pub events: Vec<Event>,
+    /// Op-group id of each event (parallel to `events`, nondecreasing).
+    /// A group is one executable unit — a forward materialization with
+    /// its input reads, a backward op with its reads and gradient
+    /// allocations, or a loss-gradient seed. [`apply_liveness`] frees
+    /// each buffer at the end of the group holding its last use, which
+    /// keeps rewritten traces executable by real kernels.
+    pub op_of: Vec<u32>,
     /// Total recomputation time charged (should equal Eq. 1 overhead).
     pub recompute_time: u64,
     /// Number of forward-value recomputations.
     pub recompute_count: u64,
+}
+
+/// Rewrite a trace so that every buffer is freed exactly once, at the
+/// end of the op group containing its last use (or its allocation, if
+/// never read). Strategy-mandated frees are dropped — liveness strictly
+/// refines them, since a buffer's last use never comes after the
+/// strategy's free (the builder would have panicked on the dead read).
+/// Frees within one group are emitted in a deterministic buffer order,
+/// so rewritten traces — and the programs compiled from them — are
+/// bit-reproducible. Recomputation totals are preserved: liveness moves
+/// frees, never computation.
+pub fn apply_liveness(tr: &Trace) -> Trace {
+    use std::collections::HashMap;
+    debug_assert_eq!(tr.events.len(), tr.op_of.len(), "op_of must parallel events");
+    // Last op group that materializes or reads each buffer, plus the
+    // index of each group's last non-free event (frees trail groups, so
+    // they never define a group's end).
+    let mut last_op: HashMap<Buffer, u32> = HashMap::new();
+    let mut group_end: HashMap<u32, usize> = HashMap::new();
+    for (i, (ev, &op)) in tr.events.iter().zip(&tr.op_of).enumerate() {
+        match *ev {
+            Event::Alloc { buffer, .. } | Event::Use { buffer } => {
+                last_op.insert(buffer, op);
+                group_end.insert(op, i);
+            }
+            Event::Backprop { .. } => {
+                group_end.insert(op, i);
+            }
+            Event::Free { .. } => {}
+        }
+    }
+    // Buffers to free after each group, sorted for determinism.
+    let mut frees: HashMap<u32, Vec<Buffer>> = HashMap::new();
+    for (&buf, &op) in &last_op {
+        frees.entry(op).or_default().push(buf);
+    }
+    for list in frees.values_mut() {
+        list.sort_by_key(|b| match *b {
+            Buffer::Fwd { node, gen } => (0u8, node.0, gen),
+            Buffer::Grad { node } => (1u8, node.0, 0),
+        });
+    }
+    let mut events = Vec::with_capacity(tr.events.len());
+    let mut op_of = Vec::with_capacity(tr.events.len());
+    for (i, (&ev, &op)) in tr.events.iter().zip(&tr.op_of).enumerate() {
+        if matches!(ev, Event::Free { .. }) {
+            continue; // replaced by the last-use frees below
+        }
+        events.push(ev);
+        op_of.push(op);
+        if group_end.get(&op) == Some(&i) {
+            for buf in frees.remove(&op).unwrap_or_default() {
+                events.push(Event::Free { buffer: buf });
+                op_of.push(op);
+            }
+        }
+    }
+    debug_assert!(frees.is_empty(), "liveness left unfreed buffers behind");
+    Trace {
+        events,
+        op_of,
+        recompute_time: tr.recompute_time,
+        recompute_count: tr.recompute_count,
+    }
 }
 
 /// Generate the canonical-strategy trace for one training step.
@@ -96,6 +173,7 @@ pub fn canonical_trace(g: &Graph, chain: &LowerSetChain) -> Trace {
             if !seg.contains(v) {
                 continue;
             }
+            tb.begin_op();
             for &p in g.preds(v) {
                 tb.use_fwd(p);
             }
@@ -113,6 +191,7 @@ pub fn canonical_trace(g: &Graph, chain: &LowerSetChain) -> Trace {
     // ---- backward --------------------------------------------------------
     // Loss gradients: every global sink receives its gradient up front.
     for v in g.sinks() {
+        tb.begin_op();
         tb.alloc_grad(v);
     }
     for i in (0..segments.len()).rev() {
@@ -123,6 +202,7 @@ pub fn canonical_trace(g: &Graph, chain: &LowerSetChain) -> Trace {
         //    recomputed nodes of this segment.
         for &v in g.topo_order() {
             if seg.contains(v) && !boundary.contains(v) {
+                tb.begin_op();
                 for &p in g.preds(v) {
                     tb.use_fwd(p);
                 }
@@ -134,6 +214,7 @@ pub fn canonical_trace(g: &Graph, chain: &LowerSetChain) -> Trace {
             if !seg.contains(v) {
                 continue;
             }
+            tb.begin_op();
             tb.backprop(v);
             // Reads: own output, own gradient, predecessors' outputs.
             tb.use_fwd(v);
@@ -170,15 +251,18 @@ pub fn canonical_trace(g: &Graph, chain: &LowerSetChain) -> Trace {
 pub fn vanilla_trace(g: &Graph) -> Trace {
     let mut tb = TraceBuilder::new(g);
     for &v in g.topo_order() {
+        tb.begin_op();
         for &p in g.preds(v) {
             tb.use_fwd(p);
         }
         tb.alloc_fwd(v, false);
     }
     for v in g.sinks() {
+        tb.begin_op();
         tb.alloc_grad(v);
     }
     for &v in g.topo_order().iter().rev() {
+        tb.begin_op();
         tb.backprop(v);
         tb.use_fwd(v);
         tb.use_grad(v);
@@ -202,6 +286,9 @@ pub fn vanilla_trace(g: &Graph) -> Trace {
 struct TraceBuilder<'g> {
     g: &'g Graph,
     events: Vec<Event>,
+    /// Op-group id per event (see [`Trace::op_of`]).
+    ops: Vec<u32>,
+    cur_op: u32,
     /// Current generation of each node's forward value: None = not live.
     fwd_gen: Vec<Option<u8>>,
     grad_live: NodeSet,
@@ -214,11 +301,27 @@ impl<'g> TraceBuilder<'g> {
         TraceBuilder {
             g,
             events: Vec::with_capacity(g.len() as usize * 8),
+            ops: Vec::with_capacity(g.len() as usize * 8),
+            cur_op: 0,
             fwd_gen: vec![None; g.len() as usize],
             grad_live: NodeSet::empty(g.len()),
             recompute_time: 0,
             recompute_count: 0,
         }
+    }
+
+    /// Start a new op group; subsequent events belong to it. The
+    /// generators call this once per executable unit (forward compute,
+    /// loss seed, backward op); strategy frees stay attached to the
+    /// preceding group, which is harmless — [`apply_liveness`] drops
+    /// them and group ends are defined by non-free events only.
+    fn begin_op(&mut self) {
+        self.cur_op += 1;
+    }
+
+    fn push(&mut self, ev: Event) {
+        self.events.push(ev);
+        self.ops.push(self.cur_op);
     }
 
     fn alloc_fwd(&mut self, v: NodeId, recompute: bool) {
@@ -234,7 +337,7 @@ impl<'g> TraceBuilder<'g> {
             self.recompute_time += node.time;
             self.recompute_count += 1;
         }
-        self.events.push(Event::Alloc {
+        self.push(Event::Alloc {
             buffer: Buffer::Fwd { node: v, gen },
             bytes: node.mem,
             compute_time: node.time,
@@ -249,12 +352,12 @@ impl<'g> TraceBuilder<'g> {
                 self.g.node(v).name
             )
         });
-        self.events.push(Event::Use { buffer: Buffer::Fwd { node: v, gen } });
+        self.push(Event::Use { buffer: Buffer::Fwd { node: v, gen } });
     }
 
     fn free_fwd(&mut self, v: NodeId) {
         if let Some(gen) = self.fwd_gen[v.0 as usize].take() {
-            self.events.push(Event::Free { buffer: Buffer::Fwd { node: v, gen } });
+            self.push(Event::Free { buffer: Buffer::Fwd { node: v, gen } });
         }
     }
 
@@ -263,7 +366,7 @@ impl<'g> TraceBuilder<'g> {
             return; // gradient accumulates into the existing buffer
         }
         self.grad_live.insert(v);
-        self.events.push(Event::Alloc {
+        self.push(Event::Alloc {
             buffer: Buffer::Grad { node: v },
             bytes: self.g.node(v).mem,
             compute_time: 0,
@@ -272,7 +375,7 @@ impl<'g> TraceBuilder<'g> {
     }
 
     fn backprop(&mut self, v: NodeId) {
-        self.events.push(Event::Backprop { node: v });
+        self.push(Event::Backprop { node: v });
     }
 
     fn use_grad(&mut self, v: NodeId) {
@@ -281,13 +384,13 @@ impl<'g> TraceBuilder<'g> {
             "use of dead grad({}) — gradient freed too early",
             self.g.node(v).name
         );
-        self.events.push(Event::Use { buffer: Buffer::Grad { node: v } });
+        self.push(Event::Use { buffer: Buffer::Grad { node: v } });
     }
 
     fn free_grad(&mut self, v: NodeId) {
         if self.grad_live.contains(v) {
             self.grad_live.remove(v);
-            self.events.push(Event::Free { buffer: Buffer::Grad { node: v } });
+            self.push(Event::Free { buffer: Buffer::Grad { node: v } });
         }
     }
 
@@ -301,6 +404,7 @@ impl<'g> TraceBuilder<'g> {
         debug_assert!(self.grad_live.is_empty(), "gradient buffers leaked at end of step");
         Trace {
             events: self.events,
+            op_of: self.ops,
             recompute_time: self.recompute_time,
             recompute_count: self.recompute_count,
         }
@@ -367,6 +471,73 @@ mod tests {
                     let _ = canonical_trace(&g, &plan.chain);
                 }
             }
+        }
+    }
+
+    #[test]
+    fn liveness_frees_never_precede_the_consuming_op() {
+        // Chain 0→1→2, vanilla, backward order 2, 1, 0. fwd(1)'s last
+        // read is the backward of node 1 itself (its own output); that op
+        // also reads fwd(0) and allocates grad(0). The rewrite must place
+        // Free(fwd 1) after that *whole* op group — after grad(0) is
+        // allocated, never between the op's reads — and before the next
+        // backward op begins. Likewise the sink's activation dies right
+        // after the sink's own backward, long before the strategy's
+        // end-of-step frees.
+        let g = chain_graph(&[1, 1, 1]);
+        let tr = apply_liveness(&vanilla_trace(&g));
+        let pos = |pred: &dyn Fn(&Event) -> bool| {
+            tr.events.iter().position(|e| pred(e)).expect("event present")
+        };
+        let free_fwd = |id: u32| {
+            pos(&move |e| {
+                matches!(e, Event::Free { buffer: Buffer::Fwd { node, .. } } if node.0 == id)
+            })
+        };
+        let backprop = |id: u32| pos(&move |e| {
+            matches!(e, Event::Backprop { node } if node.0 == id)
+        });
+        let alloc_grad0 = pos(&|e| {
+            matches!(e, Event::Alloc { buffer: Buffer::Grad { node }, .. } if node.0 == 0)
+        });
+        assert!(backprop(2) < free_fwd(2), "sink activation outlives its own backward");
+        assert!(free_fwd(2) < backprop(1), "…but dies before the next backward op");
+        assert!(backprop(1) < free_fwd(1), "freed only after its last consumer runs");
+        assert!(alloc_grad0 < free_fwd(1), "freed after the whole op group, not mid-op");
+        assert!(free_fwd(1) < backprop(0), "freed before the next op begins");
+    }
+
+    #[test]
+    fn liveness_rewrite_is_balanced_and_readable_on_random_plans() {
+        // Every Use in the rewritten trace must target a live buffer and
+        // every Alloc must be balanced by exactly one Free — checked by
+        // replaying the rewrite with a strict interpreter.
+        use crate::planner::{plan_at_min_budget, Family, Objective};
+        use crate::util::rng::Pcg32;
+        use std::collections::HashSet;
+        let mut rng = Pcg32::seeded(61);
+        for _ in 0..12 {
+            let n = rng.range(4, 12);
+            let g = crate::testutil::random_dag(&mut rng, n);
+            let plan = plan_at_min_budget(&g, Family::Approx, Objective::MaxOverhead).unwrap();
+            let tr = apply_liveness(&canonical_trace(&g, &plan.chain));
+            assert_eq!(tr.events.len(), tr.op_of.len());
+            let mut live: HashSet<Buffer> = HashSet::new();
+            for ev in &tr.events {
+                match *ev {
+                    Event::Alloc { buffer, .. } => {
+                        assert!(live.insert(buffer), "double alloc {buffer:?}");
+                    }
+                    Event::Use { buffer } => {
+                        assert!(live.contains(&buffer), "dead read {buffer:?}");
+                    }
+                    Event::Free { buffer } => {
+                        assert!(live.remove(&buffer), "double free {buffer:?}");
+                    }
+                    Event::Backprop { .. } => {}
+                }
+            }
+            assert!(live.is_empty(), "rewrite leaked {} buffers", live.len());
         }
     }
 

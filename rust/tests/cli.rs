@@ -95,6 +95,40 @@ fn plan_accepts_human_readable_budget() {
 }
 
 #[test]
+fn sim_strict_flag_reproduces_the_no_liveness_ablation() {
+    // `--sim strict` must run the zoo executor under strategy-mandated
+    // frees only (paper Table 2) and still hold the observed == predicted
+    // equality.
+    let out = repro()
+        .args([
+            "train", "--model", "unet", "--batch", "2", "--width", "8", "--steps", "1",
+            "--quiet", "--sim", "strict",
+        ])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("sim strict"), "{text}");
+    assert!(text.contains("EQUAL ✓"), "{text}");
+
+    // The planner CLI honors it too…
+    let out = repro()
+        .args(["plan", "--network", "VGG19", "--batch", "4", "--sim", "strict"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    assert!(String::from_utf8_lossy(&out.stdout).contains("measured(strict)"));
+
+    // …and rejects unknown modes with an actionable message.
+    let out = repro()
+        .args(["plan", "--network", "VGG19", "--sim", "eager"])
+        .output()
+        .unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("liveness|strict"));
+}
+
+#[test]
 fn train_accepts_human_readable_budget_and_names_minimum_when_infeasible() {
     // An absurdly small absolute budget must fail actionably…
     let out = repro()

@@ -11,13 +11,17 @@
 //! - after `DagTrainer::train` on a zoo model, live bytes return
 //!   *exactly* to the post-init baseline (parameters + merge
 //!   normalizers) — no activation, gradient or optimizer buffer
-//!   survives the run.
+//!   survives the run;
+//! - under a *liveness* schedule the same census guarantee holds while
+//!   the buffer pool reports nonzero reuse — freed storage is recycled
+//!   into later allocations, never counted as live, never leaked.
 
 use recompute::exec::{DagTrainer, OpProgram, TrainConfig};
 use recompute::models::executable::recost_profiled;
 use recompute::models::zoo;
 use recompute::planner::{plan_at_min_budget, Family, Objective};
 use recompute::runtime::{Backend, NativeBackend};
+use recompute::sim::SimMode;
 
 #[test]
 fn sgd_kernel_hammer_keeps_live_bytes_flat() {
@@ -46,7 +50,7 @@ fn sgd_kernel_hammer_keeps_live_bytes_flat() {
 fn dag_training_returns_live_bytes_to_post_init_baseline() {
     let g = recost_profiled(&zoo::find("resnet").unwrap().build_batch(1), 2, 8);
     let plan = plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap();
-    let prog = OpProgram::from_chain(&g, &plan.chain).unwrap();
+    let prog = OpProgram::from_chain(&g, &plan.chain, SimMode::Strict).unwrap();
 
     let mut t = DagTrainer::new(NativeBackend::new(), &g, 2, 7).unwrap();
     let baseline = t.backend().live_bytes().expect("native backend tracks allocations");
@@ -67,4 +71,36 @@ fn dag_training_returns_live_bytes_to_post_init_baseline() {
     // Parameters were updated in place (old buffers replaced 1:1), so the
     // census still covers exactly the parameter set.
     assert!(after >= t.param_bytes());
+}
+
+#[test]
+fn liveness_training_returns_census_to_baseline_and_recycles_buffers() {
+    // The liveness schedule frees and recomputes far more often than the
+    // strict one — the very churn the buffer pool exists for. Two
+    // guarantees after a multi-step run: the exact live-byte census is
+    // back at the post-init baseline (no activation, gradient or
+    // optimizer buffer survives, pooled storage is *not* live), and the
+    // pool actually recycled (reuse count > 0, so the churn cost no
+    // allocator traffic).
+    let g = recost_profiled(&zoo::find("unet").unwrap().build_batch(1), 2, 8);
+    let plan = plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap();
+    let prog = OpProgram::from_chain(&g, &plan.chain, SimMode::Liveness).unwrap();
+
+    let mut t = DagTrainer::new(NativeBackend::new(), &g, 2, 7).unwrap();
+    let baseline = t.backend().live_bytes().expect("native backend tracks allocations");
+
+    let cfg = TrainConfig { layers: 0, steps: 3, lr: 0.02, seed: 11, log_every: 0 };
+    t.train(&prog, &cfg).unwrap();
+    assert_eq!(
+        t.backend().live_bytes().unwrap(),
+        baseline,
+        "live bytes must return exactly to the post-init baseline after liveness training"
+    );
+    let pool = t.backend().pool_stats().expect("native backend pools");
+    assert!(pool.reuses > 0, "the pool must have recycled buffers: {pool:?}");
+    assert!(pool.allocs > 0, "warm-up allocations must be counted: {pool:?}");
+    assert!(
+        pool.high_water_bytes >= pool.parked_bytes,
+        "high-water covers everything the pool ever administered: {pool:?}"
+    );
 }

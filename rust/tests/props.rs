@@ -23,6 +23,11 @@
 //!    on the native backend under a planner-chosen budget with the
 //!    invariants holding — and with genuinely non-uniform per-node
 //!    activation bytes.
+//! 5. **The liveness invariant chain.** Programs compiled in liveness
+//!    mode observe exactly the liveness-predicted peak (an equality),
+//!    which never exceeds the no-liveness peak, which never exceeds the
+//!    vanilla peak — for every planner family × random DAGs — while the
+//!    gradients stay bit-identical to vanilla.
 
 use std::collections::BTreeMap;
 
@@ -33,7 +38,7 @@ use recompute::planner::{
     chen_plan, exhaustive_search, plan_at_min_budget, Family, LowerSetChain, Objective,
 };
 use recompute::runtime::{Backend, HostTensor, NativeBackend};
-use recompute::sim::{canonical_trace, measure, SimOptions};
+use recompute::sim::{canonical_trace, measure, SimMode, SimOptions};
 use recompute::testutil::{chain_graph, diamond, random_dag};
 use recompute::util::rng::Pcg32;
 use recompute::Graph;
@@ -97,7 +102,7 @@ fn every_planner_matches_vanilla_bit_exactly_on_random_dags() {
         let g = recost(&base, BATCH, WIDTH);
         let (x, targets) = batch_xy(&g, &mut rng);
 
-        let vanilla = OpProgram::vanilla(&g).unwrap();
+        let vanilla = OpProgram::vanilla(&g, SimMode::Strict).unwrap();
         let base_report = run_one(&g, &vanilla, &x, &targets);
         let base_grads = base_report.grads.as_ref().unwrap();
 
@@ -123,7 +128,7 @@ fn every_planner_matches_vanilla_bit_exactly_on_random_dags() {
         }
 
         for (label, chain) in plans {
-            let prog = OpProgram::from_chain(&g, &chain)
+            let prog = OpProgram::from_chain(&g, &chain, SimMode::Strict)
                 .unwrap_or_else(|e| panic!("[{label} case {case}] compile: {e}"));
             let r = run_one(&g, &prog, &x, &targets);
             assert_eq!(
@@ -174,7 +179,7 @@ fn observed_peak_equals_simulator_prediction_on_chains_and_dags() {
             let plan = plan_at_min_budget(g, Family::Exact, obj).unwrap();
             let tr = canonical_trace(g, &plan.chain);
             let prog = OpProgram::compile(g, &tr).unwrap();
-            let sim = measure(g, &tr, SimOptions { liveness: false, include_params: false });
+            let sim = measure(g, &tr, SimOptions { mode: SimMode::Strict, include_params: false });
             let label = format!("graph {gi} {:?}", obj);
             let r = run_one(g, &prog, &x, &targets);
             assert_trajectory_matches(&label, g, &prog, &r);
@@ -190,7 +195,7 @@ fn observed_peak_equals_simulator_prediction_on_chains_and_dags() {
             );
         }
         // Vanilla execution obeys the same equality.
-        let prog = OpProgram::vanilla(g).unwrap();
+        let prog = OpProgram::vanilla(g, SimMode::Strict).unwrap();
         let r = run_one(g, &prog, &x, &targets);
         assert_trajectory_matches(&format!("graph {gi} vanilla"), g, &prog, &r);
     }
@@ -213,7 +218,7 @@ fn heterogeneous_lowerings_hold_invariants_across_planners() {
         }
         let (x, targets) = batch_xy(&g, &mut rng);
 
-        let vanilla_prog = OpProgram::vanilla(&g).unwrap();
+        let vanilla_prog = OpProgram::vanilla(&g, SimMode::Strict).unwrap();
         let rv = run_one(&g, &vanilla_prog, &x, &targets);
         assert_trajectory_matches(&format!("het vanilla case {case}"), &g, &vanilla_prog, &rv);
         let base_grads = rv.grads.as_ref().unwrap();
@@ -227,7 +232,7 @@ fn heterogeneous_lowerings_hold_invariants_across_planners() {
             let plan = plan_at_min_budget(&g, family, obj).unwrap();
             let tr = canonical_trace(&g, &plan.chain);
             let prog = OpProgram::compile(&g, &tr).unwrap();
-            let sim = measure(&g, &tr, SimOptions { liveness: false, include_params: false });
+            let sim = measure(&g, &tr, SimOptions { mode: SimMode::Strict, include_params: false });
             let r = run_one(&g, &prog, &x, &targets);
             assert_trajectory_matches(&label, &g, &prog, &r);
             assert_eq!(r.observed_peak, sim.peak_bytes, "[{label}] observed == predicted");
@@ -243,7 +248,7 @@ fn heterogeneous_lowerings_hold_invariants_across_planners() {
 
         // Chen's baseline executes heterogeneous shapes bit-exactly too.
         let chen = chen_plan(&g, |c| c.peak_mem(&g)).unwrap();
-        let prog = OpProgram::from_chain(&g, &chen.chain).unwrap();
+        let prog = OpProgram::from_chain(&g, &chen.chain, SimMode::Strict).unwrap();
         let r = run_one(&g, &prog, &x, &targets);
         assert_eq!(rv.loss.to_bits(), r.loss.to_bits(), "[het chen case {case}] loss");
         assert_grads_bitwise("het chen", case, base_grads, r.grads.as_ref().unwrap());
@@ -262,10 +267,10 @@ fn diamond_fixture_runs_under_every_schedule() {
     let g = recost(&diamond(), BATCH, WIDTH);
     let mut rng = Pcg32::seeded(0xd1a);
     let (x, targets) = batch_xy(&g, &mut rng);
-    let vanilla = run_one(&g, &OpProgram::vanilla(&g).unwrap(), &x, &targets);
+    let vanilla = run_one(&g, &OpProgram::vanilla(&g, SimMode::Strict).unwrap(), &x, &targets);
     let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
     for chain in [plan.chain, recompute::planner::whole_graph_chain(&g)] {
-        let prog = OpProgram::from_chain(&g, &chain).unwrap();
+        let prog = OpProgram::from_chain(&g, &chain, SimMode::Strict).unwrap();
         let r = run_one(&g, &prog, &x, &targets);
         assert_eq!(vanilla.loss.to_bits(), r.loss.to_bits());
         let (gv, gr) = (vanilla.grads.as_ref().unwrap(), r.grads.as_ref().unwrap());
@@ -284,11 +289,16 @@ fn zoo_resnet_and_unet_train_end_to_end_with_invariants() {
             &cfg,
             BudgetSpec::MinFeasible,
             Objective::MinOverhead,
+            SimMode::Liveness,
             true,
         )
         .unwrap_or_else(|e| panic!("{model}: {e}"));
         assert!(cmp.grads_match, "{model}: planned gradients must match vanilla bit-exactly");
         assert!(cmp.peak_matches_sim, "{model}: observed peak must equal sim prediction");
+        assert!(
+            cmp.sim_peak <= cmp.sim_peak_strict,
+            "{model}: liveness peak must not exceed the no-liveness peak"
+        );
         assert!(cmp.losses_identical, "{model}: loss trajectories must be bit-identical");
         assert!(
             cmp.planned.observed_peak < cmp.vanilla.observed_peak,
@@ -300,6 +310,77 @@ fn zoo_resnet_and_unet_train_end_to_end_with_invariants() {
             cmp.distinct_act_bytes >= 2,
             "{model}: heterogeneous lowering must yield ≥ 2 distinct node byte-sizes"
         );
+    }
+}
+
+#[test]
+fn liveness_invariant_chain_holds_across_planners_on_random_dags() {
+    // The tentpole claim, end to end: executing the liveness-compiled
+    // program of every planner family observes *exactly* the
+    // liveness-predicted peak, which is ≤ the no-liveness peak of the
+    // same plan, which is ≤ the vanilla peak — and none of it perturbs
+    // the numerics (gradients bit-identical to vanilla execution).
+    let mut rng = Pcg32::seeded(0x11fe);
+    for case in 0..6u32 {
+        let n = rng.range(5, 11);
+        let base = random_dag(&mut rng, n);
+        // Heterogeneous lowering: the liveness schedule must hold on
+        // non-uniform per-node byte sizes, not just uniform shapes.
+        let g = recost_profiled(&base, BATCH, 12);
+        let (x, targets) = batch_xy(&g, &mut rng);
+
+        // Vanilla baseline, strict mode: keeps every buffer until the
+        // step ends — the ceiling of the whole chain.
+        let vanilla_prog = OpProgram::vanilla(&g, SimMode::Strict).unwrap();
+        let rv = run_one(&g, &vanilla_prog, &x, &targets);
+        let vanilla_peak = rv.observed_peak;
+        let base_grads = rv.grads.as_ref().unwrap();
+
+        let mut plans: Vec<(&str, LowerSetChain)> = vec![
+            (
+                "exact-tc",
+                plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap().chain,
+            ),
+            (
+                "exact-mc",
+                plan_at_min_budget(&g, Family::Exact, Objective::MaxOverhead).unwrap().chain,
+            ),
+            (
+                "approx-tc",
+                plan_at_min_budget(&g, Family::Approx, Objective::MinOverhead).unwrap().chain,
+            ),
+            ("chen", chen_plan(&g, |c| c.peak_mem(&g)).unwrap().chain),
+        ];
+        for (label, chain) in plans.drain(..) {
+            let label = format!("liveness {label} case {case}");
+            let tr = canonical_trace(&g, &chain);
+            let prog = OpProgram::from_trace(&g, &tr, SimMode::Liveness)
+                .unwrap_or_else(|e| panic!("[{label}] compile: {e}"));
+            let live_sim =
+                measure(&g, &tr, SimOptions { mode: SimMode::Liveness, include_params: false });
+            let strict_sim =
+                measure(&g, &tr, SimOptions { mode: SimMode::Strict, include_params: false });
+            let r = run_one(&g, &prog, &x, &targets);
+            assert_trajectory_matches(&label, &g, &prog, &r);
+            assert_eq!(
+                r.observed_peak, live_sim.peak_bytes,
+                "[{label}] observed == liveness-predicted must be an equality"
+            );
+            assert!(
+                live_sim.peak_bytes <= strict_sim.peak_bytes,
+                "[{label}] liveness {} must not exceed no-liveness {}",
+                live_sim.peak_bytes,
+                strict_sim.peak_bytes
+            );
+            assert!(
+                strict_sim.peak_bytes <= vanilla_peak,
+                "[{label}] no-liveness {} must not exceed vanilla {}",
+                strict_sim.peak_bytes,
+                vanilla_peak
+            );
+            assert_eq!(rv.loss.to_bits(), r.loss.to_bits(), "[{label}] loss diverged");
+            assert_grads_bitwise(&label, case, base_grads, r.grads.as_ref().unwrap());
+        }
     }
 }
 
