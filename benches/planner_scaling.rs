@@ -13,7 +13,8 @@
 use recompute::bench::{bench, bench_report_json, time_once, BenchStats};
 use recompute::graph::{GraphBuilder, NodeId, OpKind};
 use recompute::models::zoo;
-use recompute::planner::{build_context, Family, Objective};
+use recompute::planner::{build_context, Family, Objective, PlanRequest, PlannerId};
+use recompute::session::PlanSession;
 
 fn main() {
     // CI smoke mode: fewer/shorter synthetic chains, one iteration each —
@@ -67,6 +68,38 @@ fn main() {
     );
     collected.push(minimax);
     collected.push(search);
+
+    println!("\n== cold vs warm PlanSession (compiled-plan cache) ==");
+    // Cold: fresh session per request — family enumeration + DP solve +
+    // trace + program compilation every time (the pre-session world).
+    // Warm: one session, repeated request — an Arc clone out of the LRU.
+    let nets: &[&str] = if quick { &["vgg19"] } else { &["vgg19", "resnet50", "unet"] };
+    for name in nets {
+        let e = zoo::find(name).expect("zoo model");
+        let g = e.build_batch(4);
+        let req = PlanRequest::new(PlannerId::ApproxDp, Objective::MinOverhead);
+        let iters = if quick { 1 } else { 5 };
+        let cold = bench(&format!("session_cold_{name}"), 0, iters, || {
+            let session = PlanSession::new(g.clone());
+            session.plan(&req).unwrap().plan.overhead
+        });
+        let warm_session = PlanSession::new(g.clone());
+        warm_session.plan(&req).unwrap();
+        let warm = bench(&format!("session_warm_{name}"), 1, iters.max(3), || {
+            warm_session.plan(&req).unwrap().plan.overhead
+        });
+        println!("{}", cold.summary());
+        println!("{}", warm.summary());
+        println!(
+            "  cold/warm {:.0}×  (hits={} misses={})",
+            cold.median.as_secs_f64() / warm.median.as_secs_f64().max(1e-9),
+            warm_session.stats().hits,
+            warm_session.stats().misses,
+        );
+        assert!(warm_session.stats().hits >= 1, "warm path must be served from the cache");
+        collected.push(cold);
+        collected.push(warm);
+    }
 
     let doc = bench_report_json("planner", &collected);
     std::fs::write("BENCH_planner.json", doc.to_string_pretty())

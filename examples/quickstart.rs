@@ -7,7 +7,7 @@
 //! ```
 
 use recompute::anyhow::Result;
-use recompute::coordinator::train::{schedule_for_mode, BudgetSpec};
+use recompute::coordinator::train::{schedule_for_mode, BudgetSpec, ScheduleMode};
 use recompute::exec::{ChainSchedule, TowerTrainer, TrainConfig};
 use recompute::fmt_bytes;
 use recompute::models::zoo;
@@ -53,7 +53,8 @@ fn main() -> Result<()> {
     //    and watch the measured peak drop while losses match bitwise.
     let (batch, width) = (16usize, 32usize);
     let cfg = TrainConfig { layers: 8, steps: 5, lr: 0.05, seed: 7, log_every: 0 };
-    let tc = schedule_for_mode("tc", cfg.layers, width, batch, BudgetSpec::MinFeasible)?;
+    let tc =
+        schedule_for_mode(ScheduleMode::Tc, cfg.layers, width, batch, BudgetSpec::MinFeasible)?;
     let mut trainer = TowerTrainer::native(batch, width, &cfg)?;
     let planned = trainer.train(&tc, &cfg)?;
     let mut vanilla_t = TowerTrainer::native(batch, width, &cfg)?;

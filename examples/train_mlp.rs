@@ -15,8 +15,10 @@
 //! ```
 
 use recompute::anyhow::Result;
-use recompute::coordinator::report::{loss_summary, report_json};
-use recompute::coordinator::train::{compare_schedules, trajectories_identical, BudgetSpec};
+use recompute::coordinator::report::{loss_summary, report_json, session_json, session_summary};
+use recompute::coordinator::train::{
+    compare_schedules, trajectories_identical, BudgetSpec, ScheduleMode,
+};
 use recompute::exec::{TowerTrainer, TrainConfig};
 use recompute::fmt_bytes;
 use recompute::util::json::Json;
@@ -32,16 +34,17 @@ fn main() -> Result<()> {
     println!(
         "== end-to-end training: {layers}-layer tower (width {width}, batch {batch}), {steps} steps, native backend =="
     );
-    let reports = compare_schedules(
+    let (reports, session_stats) = compare_schedules(
         || TowerTrainer::native(batch, width, &cfg),
         &cfg,
-        &["vanilla", "tc", "mc"],
+        &[ScheduleMode::Vanilla, ScheduleMode::Tc, ScheduleMode::Mc],
         BudgetSpec::MinFeasible,
         false,
     )?;
     for (mode, r) in &reports {
         println!(
-            "{mode:<8} k={:<3} peak_act={:<10} step={:>7.2}ms recompute/step={:<3} {}",
+            "{:<8} k={:<3} peak_act={:<10} step={:>7.2}ms recompute/step={:<3} {}",
+            mode.label(),
             r.k,
             fmt_bytes(r.peak_bytes),
             r.mean_step_ms,
@@ -55,12 +58,14 @@ fn main() -> Result<()> {
     for (mode, r) in &reports[1..] {
         let same = trajectories_identical(v, r);
         println!(
-            "{mode} trajectory vs vanilla: {}",
+            "{} trajectory vs vanilla: {}",
+            mode.label(),
             if same { "IDENTICAL ✓" } else { "DIVERGED ✗" }
         );
         assert!(same, "recomputation must not alter the computation");
         println!(
-            "{mode} peak: {} vs vanilla {} ({:.0}% reduction)",
+            "{} peak: {} vs vanilla {} ({:.0}% reduction)",
+            mode.label(),
             fmt_bytes(r.peak_bytes),
             fmt_bytes(v.peak_bytes),
             100.0 * (1.0 - r.peak_bytes as f64 / v.peak_bytes as f64)
@@ -73,7 +78,14 @@ fn main() -> Result<()> {
     println!("loss trajectory: {first:.4} → {last:.4}");
     assert!(last.is_finite() && last < first, "loss must decrease: {first} → {last}");
 
-    let arr: Vec<Json> = reports.iter().map(|(m, r)| report_json(m, r)).collect();
+    // One session served both planned modes: the tower's lower-set
+    // family and B* were solved once.
+    println!("{}", session_summary(&session_stats));
+    assert_eq!(session_stats.families_built, 1);
+
+    let mut arr: Vec<Json> =
+        reports.iter().map(|(m, r)| report_json(m.label(), r)).collect();
+    arr.push(Json::obj().set("session", session_json(&session_stats)));
     std::fs::write("train_mlp_report.json", Json::Arr(arr).to_string_pretty())?;
     println!("wrote train_mlp_report.json");
     Ok(())

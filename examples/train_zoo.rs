@@ -2,14 +2,16 @@
 //!
 //!     cargo run --release --example train_zoo
 //!
-//! Lowers the ResNet50 topology to heterogeneous `[batch, width_v]`
-//! tensors (per-node widths from the model's own `M_v` profile), plans
-//! it with the approximate DP at the minimal feasible budget, and
-//! trains it under both vanilla and the planned schedule — printing the
-//! executor's verified invariants: the loss/gradients are bit-identical
-//! across schedules, the observed peak equals the simulator's
-//! liveness prediction (and stays below the no-liveness ablation), and
-//! the per-node activation sizes really are non-uniform.
+//! Lowers the ResNet50 / U-Net topologies to heterogeneous
+//! `[batch, width_v]` tensors (per-node widths from the model's own
+//! `M_v` profile), then drives the session API: one `PlanSession` per
+//! model plans *both* objectives (time-centric and memory-centric) from
+//! a single lower-set family, serves the repeated requests from the
+//! compiled-plan cache, and trains vanilla plus both planned schedules —
+//! printing the executor's verified invariants: loss/gradients
+//! bit-identical across schedules, observed peak equal to the
+//! simulator's liveness prediction (and below the no-liveness ablation),
+//! and genuinely non-uniform per-node activation sizes.
 
 use recompute::anyhow::Result;
 use recompute::coordinator::train::{train_zoo_model, BudgetSpec};
@@ -27,25 +29,35 @@ fn main() -> Result<()> {
             16,
             &cfg,
             BudgetSpec::MinFeasible,
-            Objective::MinOverhead,
+            &[Objective::MinOverhead, Objective::MaxOverhead],
             SimMode::Liveness,
             true,
         )?;
-        println!(
-            "{:<28} k={:<3} recompute/step={:<4} peak vanilla {} → planned {} (sim {})",
-            cmp.model,
-            cmp.k,
-            cmp.planned.recomputes_per_step,
-            fmt_bytes(cmp.vanilla.observed_peak),
-            fmt_bytes(cmp.planned.observed_peak),
-            fmt_bytes(cmp.sim_peak),
-        );
-        println!(
-            "  sim {}: liveness peak {} ≤ no-liveness peak {}",
-            cmp.mode.label(),
-            fmt_bytes(cmp.sim_peak),
-            fmt_bytes(cmp.sim_peak_strict),
-        );
+        println!("{} (fingerprint {}):", cmp.model, cmp.fingerprint);
+        for run in &cmp.runs {
+            println!(
+                "  {:<4} k={:<3} recompute/step={:<4} peak vanilla {} → planned {} (sim {})",
+                run.objective.label(),
+                run.k,
+                run.report.recomputes_per_step,
+                fmt_bytes(cmp.vanilla.observed_peak),
+                fmt_bytes(run.report.observed_peak),
+                fmt_bytes(run.sim_peak),
+            );
+            println!(
+                "       sim {}: liveness peak {} ≤ no-liveness peak {}",
+                cmp.mode.label(),
+                fmt_bytes(run.sim_peak),
+                fmt_bytes(run.sim_peak_strict),
+            );
+            println!(
+                "       grads bit-identical: {}   observed peak == sim prediction: {}   \
+                 losses identical: {}   plan served from cache: {}",
+                run.grads_match, run.peak_matches_sim, run.losses_identical, run.cache_hit
+            );
+            assert!(run.grads_match && run.peak_matches_sim && run.losses_identical);
+            assert!(run.cache_hit, "{model}: repeated request must hit the plan cache");
+        }
         println!(
             "  node activation sizes: {} distinct ({} … {})",
             cmp.distinct_act_bytes,
@@ -53,10 +65,10 @@ fn main() -> Result<()> {
             fmt_bytes(cmp.act_bytes_range.1),
         );
         println!(
-            "  gradients bit-identical: {}   observed peak == sim prediction: {}   losses identical: {}",
-            cmp.grads_match, cmp.peak_matches_sim, cmp.losses_identical
+            "  session: hits={} misses={} families_built={}",
+            cmp.stats.hits, cmp.stats.misses, cmp.stats.families_built
         );
-        assert!(cmp.grads_match && cmp.peak_matches_sim && cmp.losses_identical);
+        assert_eq!(cmp.stats.families_built, 1, "{model}: one family for both objectives");
         assert!(cmp.distinct_act_bytes >= 2, "{model}: lowering must be heterogeneous");
     }
     Ok(())

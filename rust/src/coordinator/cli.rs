@@ -24,8 +24,11 @@
 //!   --layers N        hidden layers (default 12; tower only)
 //!   --steps N         training steps (default 50)
 //!   --lr F            learning rate (default 0.1)
-//!   --mode M          vanilla | tc | mc | all (default all; zoo models
-//!                     use tc unless --mode mc)
+//!   --mode M          vanilla | tc | mc | all (default all). Zoo models
+//!                     always run the vanilla baseline; --mode picks the
+//!                     planned objectives (tc, mc, or both with `all`),
+//!                     all served by one PlanSession so the lower-set
+//!                     family is solved once however many modes run
 //!   --sim M           liveness (default) | strict: free schedule the zoo
 //!                     executor and simulator share. liveness frees every
 //!                     buffer at its last use (paper Table 1); strict
@@ -42,7 +45,8 @@
 //!   --report FILE     write a JSON report (tower only)
 //!   --stats           print per-kernel backend timing/byte statistics
 //!                     plus buffer-pool counters (allocs, reuses,
-//!                     high-water bytes)
+//!                     high-water bytes) and the plan-session counters
+//!                     (cache hits/misses, families built)
 //!   --quiet           suppress per-step loss logging
 
 use std::path::PathBuf;
@@ -54,8 +58,10 @@ use crate::sim::SimMode;
 use crate::util::json::Json;
 use crate::{fmt_bytes, parse_budget};
 
-use super::report::{loss_summary, pool_summary, report_json};
-use super::train::{compare_schedules, parse_modes, trajectories_identical, BudgetSpec};
+use super::report::{loss_summary, pool_summary, report_json, session_json, session_summary};
+use super::train::{
+    compare_schedules, parse_modes, trajectories_identical, BudgetSpec, ScheduleMode,
+};
 
 struct TrainArgs {
     model: String,
@@ -154,22 +160,24 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
 
     // Each mode gets a fresh trainer: training mutates parameters, and the
     // schedules must see identical initial conditions for the bitwise
-    // loss comparison.
-    let results: Vec<(String, TrainReport)> = match a.backend.as_str() {
-        "native" => compare_schedules(
-            || TowerTrainer::native(a.batch, a.width, &cfg),
-            &cfg,
-            &modes,
-            budget,
-            a.quiet,
-        )?,
-        "pjrt" => run_pjrt(&a, &cfg, &modes)?,
-        other => bail!("unknown backend '{other}' (native|pjrt)"),
-    };
+    // loss comparison. One PlanSession serves every planned mode.
+    let (results, session_stats): (Vec<(ScheduleMode, TrainReport)>, _) =
+        match a.backend.as_str() {
+            "native" => compare_schedules(
+                || TowerTrainer::native(a.batch, a.width, &cfg),
+                &cfg,
+                &modes,
+                budget,
+                a.quiet,
+            )?,
+            "pjrt" => run_pjrt(&a, &cfg, &modes)?,
+            other => bail!("unknown backend '{other}' (native|pjrt)"),
+        };
 
     for (mode, report) in &results {
         println!(
-            "{mode:<8} [{}] k={:<3} peak_act={:<10} (+params {:<9}) step={:.2}ms recompute/step={} {}",
+            "{:<8} [{}] k={:<3} peak_act={:<10} (+params {:<9}) step={:.2}ms recompute/step={} {}",
+            mode.label(),
             report.backend,
             report.k,
             fmt_bytes(report.peak_bytes),
@@ -182,8 +190,8 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
 
     // Cross-schedule invariants worth asserting out loud.
     if results.len() > 1 {
-        let v = results.iter().find(|(m, _)| m == "vanilla");
-        let tc = results.iter().find(|(m, _)| m == "tc");
+        let v = results.iter().find(|(m, _)| *m == ScheduleMode::Vanilla);
+        let tc = results.iter().find(|(m, _)| *m == ScheduleMode::Tc);
         if let (Some((_, v)), Some((_, t))) = (v, tc) {
             let same = trajectories_identical(v, t);
             println!(
@@ -204,7 +212,7 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
 
     if a.stats {
         for (mode, report) in &results {
-            println!("-- kernel stats ({mode}, {} backend) --", report.backend);
+            println!("-- kernel stats ({}, {} backend) --", mode.label(), report.backend);
             for s in &report.kernel_stats {
                 println!(
                     "  {:<14} calls={:<6} total={:>10.2?} mean={:>9.2?} in={:<10} out={}",
@@ -220,19 +228,23 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
                 println!("  {}", pool_summary(pool));
             }
         }
+        println!("{}", session_summary(&session_stats));
     }
 
     if let Some(path) = a.report {
-        let arr: Vec<Json> = results.iter().map(|(m, r)| report_json(m, r)).collect();
+        let mut arr: Vec<Json> =
+            results.iter().map(|(m, r)| report_json(m.label(), r)).collect();
+        arr.push(Json::obj().set("session", session_json(&session_stats)));
         std::fs::write(&path, Json::Arr(arr).to_string_pretty())?;
         println!("report written to {}", path.display());
     }
     Ok(())
 }
 
-/// Zoo-model path: lower, plan, execute on the general DAG executor, and
-/// hold the run to the executor's two invariants (bit-exact gradients,
-/// observed peak == simulator prediction) — failing loudly otherwise.
+/// Zoo-model path: lower once, plan every requested objective through
+/// one `PlanSession`, execute on the general DAG executor, and hold each
+/// run to the executor's two invariants (bit-exact gradients, observed
+/// peak == simulator prediction) — failing loudly otherwise.
 fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
     use crate::planner::Objective;
 
@@ -246,39 +258,62 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
     if a.report.is_some() {
         bail!("--report is not supported for zoo models yet (tower only)");
     }
-    // Zoo runs always compare vanilla vs the planned schedule; --mode only
-    // picks the planning objective (the vanilla baseline is always run).
-    let objective = match a.mode.as_str() {
-        "mc" => Objective::MaxOverhead,
-        "tc" | "all" | "vanilla" => Objective::MinOverhead,
-        m => bail!("bad mode {m} (vanilla|tc|mc|all)"),
-    };
+    // Zoo runs always compare vanilla vs the planned schedules; --mode
+    // picks the planning objectives (`all` runs tc *and* mc from the
+    // same session, so the family is built once).
+    let mut objectives: Vec<Objective> =
+        parse_modes(&a.mode)?.iter().filter_map(|m| m.objective()).collect();
+    if objectives.is_empty() {
+        objectives.push(Objective::MinOverhead);
+    }
     let cmp = super::train::train_zoo_model(
         &a.model,
         a.batch,
         a.width,
         cfg,
         a.budget_spec()?,
-        objective,
+        &objectives,
         a.sim,
         a.quiet,
     )?;
 
-    for (label, r) in [("vanilla", &cmp.vanilla), ("planned", &cmp.planned)] {
+    let labeled = |r: &super::train::PlannedRun| format!("planned[{}]", r.objective.label());
+    println!(
+        "{:<12} [{}] peak_act={:<10} (+params {:<9}) step={:.2}ms recompute/step={} {}",
+        "vanilla",
+        cmp.vanilla.backend,
+        fmt_bytes(cmp.vanilla.observed_peak),
+        fmt_bytes(cmp.vanilla.param_bytes),
+        cmp.vanilla.mean_step_ms,
+        cmp.vanilla.recomputes_per_step,
+        dag_loss_summary(&cmp.vanilla),
+    );
+    for run in &cmp.runs {
         println!(
-            "{label:<8} [{}] peak_act={:<10} (+params {:<9}) step={:.2}ms recompute/step={} {}",
-            r.backend,
-            fmt_bytes(r.observed_peak),
-            fmt_bytes(r.param_bytes),
-            r.mean_step_ms,
-            r.recomputes_per_step,
-            dag_loss_summary(r),
+            "{:<12} [{}] peak_act={:<10} (+params {:<9}) step={:.2}ms recompute/step={} {}",
+            labeled(run),
+            run.report.backend,
+            fmt_bytes(run.report.observed_peak),
+            fmt_bytes(run.report.param_bytes),
+            run.report.mean_step_ms,
+            run.report.recomputes_per_step,
+            dag_loss_summary(&run.report),
         );
     }
     println!(
-        "model {} ({} nodes): k={} segments, overhead={} T_v units",
-        cmp.model, cmp.nodes, cmp.k, cmp.overhead
+        "model {} ({} nodes, fingerprint {}):",
+        cmp.model, cmp.nodes, cmp.fingerprint
     );
+    for run in &cmp.runs {
+        println!(
+            "  {}: k={} segments, overhead={} T_v units, budget {}{}",
+            labeled(run),
+            run.k,
+            run.overhead,
+            fmt_bytes(run.budget),
+            if run.cache_hit { " (plan cached)" } else { "" },
+        );
+    }
     // `train_zoo_model` refuses uniform lowerings up front, so any
     // comparison that reaches this report is heterogeneous.
     println!(
@@ -287,33 +322,42 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
         fmt_bytes(cmp.act_bytes_range.0),
         fmt_bytes(cmp.act_bytes_range.1),
     );
-    println!(
-        "gradients vanilla vs planned: {}",
-        if cmp.grads_match { "BIT-IDENTICAL ✓" } else { "DIVERGED ✗" }
-    );
-    println!(
-        "observed peak {} vs simulator prediction {} (sim {}): {}",
-        fmt_bytes(cmp.planned.observed_peak),
-        fmt_bytes(cmp.sim_peak),
-        cmp.mode.label(),
-        if cmp.peak_matches_sim { "EQUAL ✓" } else { "MISMATCH ✗" }
-    );
-    if cmp.mode.liveness() {
+    for run in &cmp.runs {
         println!(
-            "liveness saves over strategy-only frees: {} → {} ({:.0}% of the no-liveness peak)",
-            fmt_bytes(cmp.sim_peak_strict),
-            fmt_bytes(cmp.sim_peak),
-            100.0 * cmp.sim_peak as f64 / cmp.sim_peak_strict.max(1) as f64
+            "gradients vanilla vs {}: {}",
+            labeled(run),
+            if run.grads_match { "BIT-IDENTICAL ✓" } else { "DIVERGED ✗" }
+        );
+        println!(
+            "observed peak {} vs simulator prediction {} (sim {}): {}",
+            fmt_bytes(run.report.observed_peak),
+            fmt_bytes(run.sim_peak),
+            cmp.mode.label(),
+            if run.peak_matches_sim { "EQUAL ✓" } else { "MISMATCH ✗" }
+        );
+        if cmp.mode.liveness() {
+            println!(
+                "liveness saves over strategy-only frees: {} → {} ({:.0}% of the no-liveness peak)",
+                fmt_bytes(run.sim_peak_strict),
+                fmt_bytes(run.sim_peak),
+                100.0 * run.sim_peak as f64 / run.sim_peak_strict.max(1) as f64
+            );
+        }
+        println!(
+            "peak activation memory: vanilla {} → {} {} ({:.0}% reduction)",
+            fmt_bytes(cmp.vanilla.observed_peak),
+            labeled(run),
+            fmt_bytes(run.report.observed_peak),
+            100.0
+                * (1.0
+                    - run.report.observed_peak as f64 / cmp.vanilla.observed_peak as f64)
         );
     }
-    println!(
-        "peak activation memory: vanilla {} → planned {} ({:.0}% reduction)",
-        fmt_bytes(cmp.vanilla.observed_peak),
-        fmt_bytes(cmp.planned.observed_peak),
-        100.0 * (1.0 - cmp.planned.observed_peak as f64 / cmp.vanilla.observed_peak as f64)
-    );
     if a.stats {
-        for (label, r) in [("vanilla", &cmp.vanilla), ("planned", &cmp.planned)] {
+        let mut rows: Vec<(String, &crate::exec::DagTrainReport)> =
+            vec![("vanilla".into(), &cmp.vanilla)];
+        rows.extend(cmp.runs.iter().map(|r| (labeled(r), &r.report)));
+        for (label, r) in rows {
             println!("-- kernel stats ({label}, {} backend) --", r.backend);
             for s in &r.kernel_stats {
                 println!(
@@ -330,12 +374,22 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
                 println!("  {}", pool_summary(pool));
             }
         }
+        println!("{}", session_summary(&cmp.stats));
     }
-    if !cmp.grads_match || !cmp.losses_identical {
-        bail!("recomputation changed the training outputs on {}", cmp.model);
-    }
-    if !cmp.peak_matches_sim {
-        bail!("executor-observed peak diverged from the simulator's prediction");
+    for run in &cmp.runs {
+        if !run.grads_match || !run.losses_identical {
+            bail!(
+                "recomputation ({}) changed the training outputs on {}",
+                run.objective.label(),
+                cmp.model
+            );
+        }
+        if !run.peak_matches_sim {
+            bail!(
+                "executor-observed peak diverged from the simulator's prediction ({})",
+                run.objective.label()
+            );
+        }
     }
     Ok(())
 }
@@ -352,8 +406,8 @@ fn dag_loss_summary(r: &crate::exec::DagTrainReport) -> String {
 fn run_pjrt(
     a: &TrainArgs,
     cfg: &TrainConfig,
-    modes: &[&str],
-) -> Result<Vec<(String, TrainReport)>> {
+    modes: &[ScheduleMode],
+) -> Result<(Vec<(ScheduleMode, TrainReport)>, crate::session::SessionStats)> {
     let dir = a.artifacts.clone();
     compare_schedules(
         || TowerTrainer::from_artifacts(&dir, cfg),
@@ -368,8 +422,8 @@ fn run_pjrt(
 fn run_pjrt(
     a: &TrainArgs,
     _cfg: &TrainConfig,
-    _modes: &[&str],
-) -> Result<Vec<(String, TrainReport)>> {
+    _modes: &[ScheduleMode],
+) -> Result<(Vec<(ScheduleMode, TrainReport)>, crate::session::SessionStats)> {
     bail!(
         "the pjrt backend (artifacts at {}) requires `cargo build --features xla` \
          (plus real PJRT libraries and `make artifacts`; see README 'Backend matrix')",

@@ -22,8 +22,9 @@ use crate::anyhow::{anyhow, bail, Context, Result};
 use crate::fmt_bytes;
 use crate::graph::Graph;
 use crate::models::zoo;
-use crate::planner::{build_context, chen_plan, DpContext, Family, Objective};
-use crate::sim::{simulate, simulate_vanilla, SimMode, SimOptions};
+use crate::planner::{Objective, PlanRequest, PlannerId};
+use crate::session::PlanSession;
+use crate::sim::{simulate_vanilla, SimMode, SimOptions};
 use crate::util::json::Json;
 use crate::util::table::Table;
 
@@ -135,58 +136,49 @@ pub struct RunResult {
     pub reduction_pct: f64,
 }
 
-/// Execute the experiment; returns all rows.
+/// Execute the experiment; returns all rows. One [`PlanSession`] per run
+/// spec serves every method: families are built lazily once per family,
+/// `B*` is memoized, and repeated methods hit the compiled-plan cache.
 pub fn run_experiment(exp: &Experiment) -> Result<Vec<RunResult>> {
     let mut out = Vec::new();
     for spec in &exp.runs {
         let entry = zoo::find(&spec.network).expect("validated at parse");
         let batch = spec.batch.unwrap_or(entry.batch);
         let g: Graph = entry.build_batch(batch);
-        let opts =
-            SimOptions { mode: SimMode::from_liveness(exp.liveness), include_params: true };
+        let sim_mode = SimMode::from_liveness(exp.liveness);
         let vanilla_peak =
             simulate_vanilla(&g, SimOptions { mode: SimMode::Liveness, include_params: true })
                 .peak_total;
-
-        // Contexts built lazily, once per family.
-        let mut approx_ctx: Option<DpContext> = None;
-        let mut exact_ctx: Option<DpContext> = None;
+        let session = PlanSession::new(g);
 
         for &method in &spec.methods {
             let (peak, overhead, k) = match method {
                 Method::Vanilla => {
                     // Vanilla keeps its framework-native eager freeing
                     // regardless of the liveness toggle (Appendix C).
-                    (vanilla_peak, 0u64, g.len() as usize)
+                    (vanilla_peak, 0u64, session.graph().len() as usize)
                 }
                 Method::Chen => {
-                    let plan = chen_plan(&g, |c| simulate(&g, c, opts).peak_total)?;
-                    let r = simulate(&g, &plan.chain, opts);
-                    (r.peak_total, r.overhead_time, plan.chain.k())
+                    let req = PlanRequest {
+                        sim_mode,
+                        ..PlanRequest::new(PlannerId::Chen, Objective::MinOverhead)
+                    };
+                    let cp = session.plan(&req)?;
+                    (cp.report.peak_total, cp.report.overhead_time, cp.plan.chain.k())
                 }
                 m => {
-                    let (ctx_slot, obj) = match m {
-                        Method::ApproxTc => (&mut approx_ctx, Objective::MinOverhead),
-                        Method::ApproxMc => (&mut approx_ctx, Objective::MaxOverhead),
-                        Method::ExactTc => (&mut exact_ctx, Objective::MinOverhead),
-                        Method::ExactMc => (&mut exact_ctx, Objective::MaxOverhead),
+                    let (planner, obj) = match m {
+                        Method::ApproxTc => (PlannerId::ApproxDp, Objective::MinOverhead),
+                        Method::ApproxMc => (PlannerId::ApproxDp, Objective::MaxOverhead),
+                        Method::ExactTc => (PlannerId::ExactDp, Objective::MinOverhead),
+                        Method::ExactMc => (PlannerId::ExactDp, Objective::MaxOverhead),
                         _ => unreachable!(),
                     };
-                    if ctx_slot.is_none() {
-                        let family = if matches!(m, Method::ExactTc | Method::ExactMc) {
-                            Family::Exact
-                        } else {
-                            Family::Approx
-                        };
-                        *ctx_slot = Some(build_context(&g, family));
-                    }
-                    let ctx = ctx_slot.as_ref().unwrap();
-                    let b = ctx.min_feasible_budget();
-                    let sol = ctx
-                        .solve(b, obj)
-                        .ok_or_else(|| anyhow!("{}: B* infeasible?!", spec.network))?;
-                    let r = simulate(&g, &sol.chain, opts);
-                    (r.peak_total, sol.overhead, sol.chain.k())
+                    let req = PlanRequest { sim_mode, ..PlanRequest::new(planner, obj) };
+                    let cp = session
+                        .plan(&req)
+                        .map_err(|e| anyhow!("{}: {e}", spec.network))?;
+                    (cp.report.peak_total, cp.plan.overhead, cp.plan.chain.k())
                 }
             };
             out.push(RunResult {

@@ -1,8 +1,10 @@
-//! JSON run reports (loss curve, measured peaks, timings, pool counters).
+//! JSON run reports (loss curve, measured peaks, timings, pool counters,
+//! session amortization counters).
 
 use crate::exec::TrainReport;
 use crate::fmt_bytes;
 use crate::runtime::PoolStats;
+use crate::session::SessionStats;
 use crate::util::json::Json;
 
 /// Serialize a training report for EXPERIMENTS.md / plotting.
@@ -60,6 +62,23 @@ pub fn pool_summary(p: &PoolStats) -> String {
     )
 }
 
+/// Serialize the plan-session amortization counters.
+pub fn session_json(s: &SessionStats) -> Json {
+    Json::obj()
+        .set("hits", s.hits.into())
+        .set("misses", s.misses.into())
+        .set("families_built", s.families_built.into())
+}
+
+/// One-line rendering of the session counters — printed next to the pool
+/// counters by `repro train --stats`.
+pub fn session_summary(s: &SessionStats) -> String {
+    format!(
+        "session: hits={} misses={} families_built={}",
+        s.hits, s.misses, s.families_built
+    )
+}
+
 /// First/last loss summary line.
 pub fn loss_summary(r: &TrainReport) -> String {
     let first = r.losses.first().copied().unwrap_or(f32::NAN);
@@ -112,5 +131,17 @@ mod tests {
         assert!(line.contains("allocs=10"), "{line}");
         assert!(line.contains("75% recycled"), "{line}");
         assert!(line.contains("4.0KiB") || line.contains("4096"), "{line}");
+    }
+
+    #[test]
+    fn session_counters_serialize_and_summarize() {
+        let s = SessionStats { hits: 3, misses: 2, families_built: 1 };
+        let j = session_json(&s);
+        assert_eq!(j.get("hits").as_u64(), Some(3));
+        assert_eq!(j.get("misses").as_u64(), Some(2));
+        assert_eq!(j.get("families_built").as_u64(), Some(1));
+        let line = session_summary(&s);
+        assert!(line.contains("hits=3"), "{line}");
+        assert!(line.contains("families_built=1"), "{line}");
     }
 }

@@ -1,0 +1,135 @@
+//! Structural graph fingerprinting.
+//!
+//! [`Graph::fingerprint`] computes a stable 64-bit hash of a graph's
+//! *structure and costs* — topology, per-node `(op, M_v, T_v, params)` —
+//! while deliberately ignoring node *labels* (names and storage order).
+//! Two isomorphic relabelings of the same network therefore collide,
+//! which is exactly what the compiled-plan cache wants: the plan for a
+//! graph does not depend on how its nodes happen to be numbered, so a
+//! cache keyed by `(fingerprint, request)` can serve a re-traced model
+//! whose frontend emitted the nodes in a different order.
+//!
+//! The hash is a Weisfeiler–Lehman-style color refinement: each node
+//! starts from a hash of its local costs, then absorbs the sorted
+//! multisets of its predecessors' and successors' hashes for
+//! `O(log #V)` rounds, and the fingerprint combines the sorted multiset
+//! of final node hashes with the node and edge counts. Sorting at every
+//! aggregation point is what makes the result invariant under node
+//! permutation. Like any hash it is not an isomorphism *test* — distinct
+//! graphs can collide — but the mixing is 64-bit splitmix, so accidental
+//! collisions are vanishingly unlikely in practice.
+
+use super::Graph;
+
+/// Stable structural hash of a [`Graph`] — the cache key component of
+/// [`crate::session::PlanSession`].
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct GraphFingerprint(pub u64);
+
+impl std::fmt::Display for GraphFingerprint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:016x}", self.0)
+    }
+}
+
+/// splitmix64 finalizer — full-avalanche 64-bit mixing.
+fn splitmix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Order-dependent combine (used only over pre-sorted sequences).
+fn mix(h: u64, v: u64) -> u64 {
+    splitmix(h ^ splitmix(v))
+}
+
+impl Graph {
+    /// Stable structural fingerprint (see module docs). Deterministic
+    /// across runs and processes; invariant under node relabeling and
+    /// renaming; sensitive to any edge or cost change.
+    pub fn fingerprint(&self) -> GraphFingerprint {
+        let n = self.len() as usize;
+        if n == 0 {
+            return GraphFingerprint(splitmix(0));
+        }
+        // Round 0: local costs only. Names are labels, not structure.
+        let mut h: Vec<u64> = self
+            .nodes()
+            .map(|(_, node)| {
+                let mut x = splitmix(0xc0f1);
+                for b in node.op.as_str().bytes() {
+                    x = mix(x, b as u64);
+                }
+                x = mix(x, node.mem);
+                x = mix(x, node.time);
+                x = mix(x, node.param_bytes);
+                x
+            })
+            .collect();
+        // WL refinement: enough rounds to propagate colors across the
+        // graph's diameter for typical DAG shapes.
+        let rounds = 2 + (usize::BITS - n.leading_zeros()) as usize;
+        let mut next = vec![0u64; n];
+        let mut neigh: Vec<u64> = Vec::new();
+        for _ in 0..rounds {
+            for (v, _) in self.nodes() {
+                let mut x = mix(h[v.0 as usize], 0x1);
+                neigh.clear();
+                neigh.extend(self.preds(v).iter().map(|p| h[p.0 as usize]));
+                neigh.sort_unstable();
+                for &p in &neigh {
+                    x = mix(x, p);
+                }
+                x = mix(x, 0x2);
+                neigh.clear();
+                neigh.extend(self.succs(v).iter().map(|s| h[s.0 as usize]));
+                neigh.sort_unstable();
+                for &s in &neigh {
+                    x = mix(x, s);
+                }
+                next[v.0 as usize] = x;
+            }
+            std::mem::swap(&mut h, &mut next);
+        }
+        h.sort_unstable();
+        let mut out = mix(splitmix(n as u64), self.edge_count() as u64);
+        for x in h {
+            out = mix(out, x);
+        }
+        GraphFingerprint(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::testutil::{diamond, diamond_relabeled, diamond_with_mems, diamond_with_skip};
+
+    #[test]
+    fn deterministic_and_name_insensitive() {
+        let a = diamond();
+        assert_eq!(a.fingerprint(), a.fingerprint());
+        // diamond_with_mems names its nodes differently (m{i} vs n{i}).
+        assert_eq!(
+            a.fingerprint(),
+            diamond_with_mems([10, 20, 30, 40]).fingerprint(),
+            "names must not matter"
+        );
+    }
+
+    #[test]
+    fn relabeling_collides_edge_addition_does_not() {
+        let base = diamond();
+        assert_eq!(base.fingerprint(), diamond_relabeled().fingerprint());
+        assert_ne!(base.fingerprint(), diamond_with_skip().fingerprint());
+    }
+
+    #[test]
+    fn cost_changes_change_the_fingerprint() {
+        assert_ne!(
+            diamond().fingerprint(),
+            diamond_with_mems([10, 20, 31, 40]).fingerprint()
+        );
+    }
+}

@@ -9,6 +9,7 @@
 
 mod articulation;
 pub mod builder;
+mod fingerprint;
 mod io;
 mod lowerset;
 mod nodeset;
@@ -16,6 +17,7 @@ mod topo;
 
 pub use articulation::articulation_points;
 pub use builder::GraphBuilder;
+pub use fingerprint::GraphFingerprint;
 pub use lowerset::{addable, enumerate_lower_sets, pruned_lower_sets, EnumerationLimit};
 pub use nodeset::NodeSet;
 pub use topo::{is_acyclic, topological_order};

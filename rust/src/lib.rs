@@ -16,7 +16,14 @@
 //!   problem, the exhaustive DFS oracle, the exact DP (Algorithm 1), the
 //!   approximate DP over `L^Pruned`, time-centric vs memory-centric
 //!   strategies, minimal-budget binary search, and Chen's √n checkpointing
-//!   baseline.
+//!   baseline — all behind the [`planner::Planner`] trait, addressed by
+//!   typed [`planner::PlannerId`]s.
+//! - [`session`] — the serving layer: [`session::PlanSession`] owns a
+//!   graph plus its amortized artifacts (lower-set families, DP
+//!   contexts, memoized `B*`, the vanilla program) and answers
+//!   [`planner::PlanRequest`]s with cached
+//!   [`session::CompiledPlan`]s from an LRU keyed by
+//!   `(graph fingerprint, request)`.
 //! - [`sim`] — an event-accurate execution simulator with liveness
 //!   analysis, measuring true peak memory of any strategy (Tables 1 & 2).
 //!   Liveness is a trace *rewrite* (`apply_liveness`): explicit last-use
@@ -69,14 +76,29 @@
 //! Training quickstart — pure Rust, no setup:
 //!
 //! ```
-//! use recompute::coordinator::train::{schedule_for_mode, BudgetSpec};
+//! use recompute::coordinator::train::{schedule_for_mode, BudgetSpec, ScheduleMode};
 //! use recompute::exec::{TowerTrainer, TrainConfig};
 //!
 //! let cfg = TrainConfig { layers: 4, steps: 2, ..TrainConfig::default() };
-//! let sched = schedule_for_mode("tc", cfg.layers, 16, 4, BudgetSpec::MinFeasible).unwrap();
+//! let sched =
+//!     schedule_for_mode(ScheduleMode::Tc, cfg.layers, 16, 4, BudgetSpec::MinFeasible).unwrap();
 //! let mut trainer = TowerTrainer::native(4, 16, &cfg).unwrap();
 //! let report = trainer.train(&sched, &cfg).unwrap();
 //! assert!(report.losses.iter().all(|l| l.is_finite()));
+//! ```
+//!
+//! Session quickstart — repeated requests are served from the cache:
+//!
+//! ```
+//! use recompute::planner::{Objective, PlanRequest, PlannerId};
+//! use recompute::session::PlanSession;
+//!
+//! let session = PlanSession::new(recompute::models::zoo::vgg19(4, 224));
+//! let req = PlanRequest::new(PlannerId::ApproxDp, Objective::MinOverhead);
+//! let first = session.plan(&req).unwrap(); // planned + compiled
+//! let again = session.plan(&req).unwrap(); // cache hit: same Arc
+//! assert!(std::sync::Arc::ptr_eq(&first, &again));
+//! assert_eq!(session.stats().hits, 1);
 //! ```
 
 pub mod anyhow;
@@ -87,6 +109,7 @@ pub mod graph;
 pub mod models;
 pub mod planner;
 pub mod runtime;
+pub mod session;
 pub mod sim;
 pub mod util;
 

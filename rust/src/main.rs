@@ -8,10 +8,11 @@
 //!   tradeoff sweeps of Figure 3.
 //! - `timing` — §5.1 ExactDP vs ApproxDP planner wall-clock.
 //! - `plan --network NAME [--batch N] [--budget GB|512KiB] [--objective
-//!    tc|mc] [--family exact|approx] [--sim liveness|strict]` — plan one
-//!    network and print the schedule (budgets: bare number = GB, or
-//!    human-readable bytes; `--sim strict` reproduces the Table 2
-//!    no-liveness ablation, default is the Table 1 liveness measurement).
+//!    tc|mc] [--family exact|approx] [--sim liveness|strict] [--json]` —
+//!    plan one network and print the schedule (budgets: bare number = GB,
+//!    or human-readable bytes; `--sim strict` reproduces the Table 2
+//!    no-liveness ablation, default is the Table 1 liveness measurement;
+//!    `--json` emits the compiled-plan summary as machine-readable JSON).
 //! - `plan --graph FILE.json …` — plan a user-supplied graph.
 //! - `train …` — run the real training executor (see `exec`) on the
 //!   pure-Rust native backend by default, or PJRT with `--features xla`;
@@ -24,13 +25,14 @@ use recompute::anyhow::{anyhow, bail, Context, Result};
 
 use recompute::bench::tables;
 use recompute::coordinator;
+use recompute::coordinator::report::session_json;
 use recompute::graph::Graph;
 use recompute::{fmt_bytes, parse_budget};
 use recompute::models::zoo;
-use recompute::planner::{
-    build_context, chen_plan, plan_with_context, Family, Objective, PlannerKind,
-};
-use recompute::sim::{simulate, simulate_vanilla, SimMode, SimOptions};
+use recompute::planner::{BudgetSpec, Family, Objective, PlanRequest, PlannerId};
+use recompute::session::PlanSession;
+use recompute::sim::{simulate_vanilla, SimMode, SimOptions};
+use recompute::util::json::Json;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -113,7 +115,7 @@ fn print_usage() {
            timing                        ExactDP vs ApproxDP planner runtime (§5.1)\n\
            plan --network N [--batch B] [--budget GB|512KiB]\n\
                 [--objective tc|mc] [--family exact|approx] [--chen]\n\
-                [--sim liveness|strict]\n\
+                [--sim liveness|strict] [--json]\n\
            plan --graph FILE.json [...]  plan a user-supplied graph JSON\n\
            experiment --config F.json [--csv out.csv]  declarative sweep runner\n\
            export --network N --out F    dump a zoo graph as JSON\n\
@@ -193,73 +195,111 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
         f => bail!("bad --family {f} (exact|approx)"),
     };
     let mode = SimMode::parse(flags.get("--sim").unwrap_or("liveness"))?;
-    let opts = SimOptions { mode, include_params: true };
+    let json_out = flags.has("--json");
+    let planner = if flags.has("--chen") {
+        PlannerId::Chen
+    } else if family == Family::Exact {
+        PlannerId::ExactDp
+    } else {
+        PlannerId::ApproxDp
+    };
+    let budget_spec = match flags.get("--budget") {
+        Some(s) => BudgetSpec::Bytes(parse_budget(s)?),
+        None => BudgetSpec::MinFeasible,
+    };
 
-    println!(
-        "network {} — #V={} M(V)={} params={} T(V)={}",
-        g.name,
-        g.len(),
-        fmt_bytes(g.total_mem()),
-        fmt_bytes(g.total_param_bytes()),
-        g.total_time()
-    );
+    let session = PlanSession::new(g);
+    let g = session.graph();
+
+    if !json_out {
+        println!(
+            "network {} — #V={} M(V)={} params={} T(V)={}",
+            g.name,
+            g.len(),
+            fmt_bytes(g.total_mem()),
+            fmt_bytes(g.total_param_bytes()),
+            g.total_time()
+        );
+    }
     // Vanilla always keeps its framework-native eager freeing (Appendix C)
     // — the --sim toggle applies to the *strategies* only, matching
     // table1/table2 and the experiment runner.
     let vanilla =
-        simulate_vanilla(&g, SimOptions { mode: SimMode::Liveness, include_params: true });
-    println!("vanilla peak: {} (liveness)", fmt_bytes(vanilla.peak_total));
+        simulate_vanilla(g, SimOptions { mode: SimMode::Liveness, include_params: true });
+    if !json_out {
+        println!("vanilla peak: {} (liveness)", fmt_bytes(vanilla.peak_total));
+        if planner != PlannerId::Chen && budget_spec == BudgetSpec::MinFeasible {
+            // Memoized: the session's plan below reuses this B*.
+            println!(
+                "minimal feasible budget B* = {} (activations)",
+                fmt_bytes(session.min_feasible_budget(family))
+            );
+        }
+    }
 
-    if flags.has("--chen") {
-        let plan = chen_plan(&g, |c| simulate(&g, c, opts).peak_total)?;
-        let r = simulate(&g, &plan.chain, opts);
+    let req = PlanRequest { budget: budget_spec, sim_mode: mode, ..PlanRequest::new(planner, objective) };
+    let before = session.stats();
+    let cp = session.plan(&req)?;
+    let cache_hit = session.stats().hits > before.hits;
+
+    if json_out {
+        let j = Json::obj()
+            .set("network", g.name.as_str().into())
+            .set("nodes", (g.len() as u64).into())
+            .set("fingerprint", format!("{}", cp.fingerprint).into())
+            .set("requested_planner", req.planner.label().into())
+            .set("planner", cp.plan.kind.label().into())
+            .set("objective", objective.label().into())
+            .set("sim", mode.label().into())
+            .set("budget_bytes", cp.plan.budget.into())
+            .set("k_segments", (cp.plan.chain.k() as u64).into())
+            .set("overhead", cp.plan.overhead.into())
+            .set(
+                "overhead_pct",
+                (100.0 * cp.plan.overhead as f64 / g.total_time() as f64).into(),
+            )
+            .set("peak_eq2", cp.plan.peak_eq2.into())
+            .set("predicted_peak", cp.program.predicted_peak().into())
+            .set("measured_peak", cp.report.peak_bytes.into())
+            .set("peak_total", cp.report.peak_total.into())
+            .set("peak_strict", cp.peak_strict.into())
+            .set("vanilla_peak", vanilla.peak_total.into())
+            .set("recompute_count", cp.program.recompute_count.into())
+            .set("cache_hit", cache_hit.into())
+            .set("session", session_json(&session.stats()));
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+
+    if planner == PlannerId::Chen {
         println!(
             "chen: k={} segment_budget={} peak={} (-{:.0}%) overhead={} (+{:.0}% of T(V))",
-            plan.chain.k(),
-            fmt_bytes(plan.segment_budget),
-            fmt_bytes(r.peak_total),
-            100.0 * (1.0 - r.peak_total as f64 / vanilla.peak_total as f64),
-            r.overhead_time,
-            100.0 * r.overhead_time as f64 / g.total_time() as f64,
+            cp.plan.chain.k(),
+            fmt_bytes(cp.plan.budget),
+            fmt_bytes(cp.report.peak_total),
+            100.0 * (1.0 - cp.report.peak_total as f64 / vanilla.peak_total as f64),
+            cp.report.overhead_time,
+            100.0 * cp.report.overhead_time as f64 / g.total_time() as f64,
         );
         return Ok(());
     }
 
-    let ctx = build_context(&g, family);
-    let budget = match flags.get("--budget") {
-        Some(s) => parse_budget(s)?,
-        None => {
-            let b = ctx.min_feasible_budget();
-            println!("minimal feasible budget B* = {} (activations)", fmt_bytes(b));
-            b
-        }
-    };
-    let kind =
-        if family == Family::Exact { PlannerKind::ExactDp } else { PlannerKind::ApproxDp };
-    let plan = plan_with_context(&g, &ctx, kind, budget, objective).with_context(|| {
-        format!(
-            "budget {} infeasible: min_feasible_budget = {}",
-            fmt_bytes(budget),
-            fmt_bytes(ctx.min_feasible_budget())
-        )
-    })?;
-    let r = simulate(&g, &plan.chain, opts);
     println!(
         "{} plan: k={} segments, overhead={} (+{:.0}% of T(V))",
-        plan.kind.label(),
-        plan.chain.k(),
-        plan.overhead,
-        100.0 * plan.overhead as f64 / g.total_time() as f64
+        cp.plan.kind.label(),
+        cp.plan.chain.k(),
+        cp.plan.overhead,
+        100.0 * cp.plan.overhead as f64 / g.total_time() as f64
     );
     println!(
         "peak: eq2={}  measured({})={} (-{:.0}% vs vanilla)",
-        fmt_bytes(plan.peak_eq2 + g.total_param_bytes()),
+        fmt_bytes(cp.plan.peak_eq2 + g.total_param_bytes()),
         mode.label(),
-        fmt_bytes(r.peak_total),
-        100.0 * (1.0 - r.peak_total as f64 / vanilla.peak_total as f64)
+        fmt_bytes(cp.report.peak_total),
+        100.0 * (1.0 - cp.report.peak_total as f64 / vanilla.peak_total as f64)
     );
     if flags.has("--segments") {
-        for (i, l) in plan.chain.lower_sets().iter().enumerate() {
+        for (i, l) in cp.plan.chain.lower_sets().iter().enumerate() {
             println!("  L{} — |L|={}", i + 1, l.len());
         }
     }

@@ -22,14 +22,20 @@
 //! Pareto front of `(cache m, best achievable max-peak)` and reads the
 //! minimal feasible `B*` off the final front directly.
 
+use std::sync::Arc;
+
 use crate::graph::{Graph, NodeSet};
 
 use super::strategy::LowerSetChain;
 use super::Objective;
 
 /// Precomputed per-family quantities reused across DP runs.
-pub struct DpContext<'g> {
-    pub g: &'g Graph,
+///
+/// The context *owns* a shared handle to its graph (no borrowed
+/// lifetime), so it can be cached and handed out by
+/// [`crate::session::PlanSession`] across requests.
+pub struct DpContext {
+    g: Arc<Graph>,
     /// The lower-set family, sorted by cardinality ascending; `family[0]`
     /// must be ∅ and the last element `V`.
     pub family: Vec<NodeSet>,
@@ -65,10 +71,17 @@ pub struct DpSolution {
     pub overhead: u64,
 }
 
-impl<'g> DpContext<'g> {
-    /// Build a context. `family` must contain ∅ and `V`; it is re-sorted
-    /// by cardinality here.
-    pub fn new(g: &'g Graph, mut family: Vec<NodeSet>) -> Self {
+impl DpContext {
+    /// Build a context from a borrowed graph (clones it into a shared
+    /// handle — cheap next to family enumeration). `family` must contain
+    /// ∅ and `V`; it is re-sorted by cardinality here.
+    pub fn new(g: &Graph, family: Vec<NodeSet>) -> Self {
+        Self::from_shared(Arc::new(g.clone()), family)
+    }
+
+    /// Build a context sharing an existing graph handle (the session's
+    /// zero-copy path).
+    pub fn from_shared(g: Arc<Graph>, mut family: Vec<NodeSet>) -> Self {
         family.sort_by(|a, b| a.len().cmp(&b.len()).then_with(|| a.words().cmp(b.words())));
         family.dedup();
         assert!(family.first().map(|l| l.is_empty()).unwrap_or(false), "family must contain ∅");
@@ -104,6 +117,16 @@ impl<'g> DpContext<'g> {
     /// Number of family members.
     pub fn family_len(&self) -> usize {
         self.family.len()
+    }
+
+    /// The graph this context was built for.
+    pub fn graph(&self) -> &Graph {
+        &self.g
+    }
+
+    /// Shared handle to the graph.
+    pub fn shared_graph(&self) -> Arc<Graph> {
+        self.g.clone()
     }
 
     /// Per-transition Eq. 2 terms for `L = family[j] → L' = family[j2]`.
@@ -214,8 +237,8 @@ impl<'g> DpContext<'g> {
             }
         }
         chain_rev.reverse();
-        let chain = LowerSetChain::new_unchecked(self.g, chain_rev);
-        debug_assert_eq!(chain.overhead(self.g), t_star as u64, "DP t matches Eq. 1");
+        let chain = LowerSetChain::new_unchecked(&self.g, chain_rev);
+        debug_assert_eq!(chain.overhead(&self.g), t_star as u64, "DP t matches Eq. 1");
         Some(DpSolution { chain, overhead: t_star as u64 })
     }
 
@@ -404,7 +427,7 @@ mod tests {
         b.build()
     }
 
-    fn full_ctx(g: &Graph) -> DpContext<'_> {
+    fn full_ctx(g: &Graph) -> DpContext {
         let fam = enumerate_lower_sets(g, EnumerationLimit::default()).unwrap();
         DpContext::new(g, fam)
     }

@@ -1,6 +1,19 @@
 //! Recomputation planners — the paper's core contribution.
 //!
-//! Entry points:
+//! The extensible surface is the [`Planner`] **trait**: every in-tree
+//! algorithm family ([`ExactDpPlanner`], [`ApproxDpPlanner`],
+//! [`ChenPlanner`], [`ExhaustivePlanner`]) implements
+//! `plan(&PlanRequest, &PlanContext) -> Result<Plan>` and is addressed by
+//! a typed [`PlannerId`] through the trait-object registry
+//! [`planner_for`]. New families (e.g. re-forwarding divide-and-conquer)
+//! plug in by implementing the trait — no coordinator changes needed.
+//! The serving layer on top — amortized family construction, budget
+//! memoization, and the compiled-plan cache — is
+//! [`crate::session::PlanSession`], which is how the CLI, coordinator,
+//! benches and examples consume planners.
+//!
+//! The original free functions remain as thin shims over the trait
+//! impls / engines:
 //!
 //! - [`exact_dp`] — §4.2, Algorithm 1 over **all** lower sets (optimal
 //!   canonical strategy). Falls back to the approximate family when the
@@ -27,12 +40,14 @@ pub use dfs::exhaustive_search;
 pub use dp::{DpContext, DpSolution};
 pub use strategy::{singleton_chain, whole_graph_chain, LowerSetChain, SegmentCost};
 
-use crate::anyhow::{anyhow, Result};
+use crate::anyhow::{anyhow, bail, Result};
+use crate::fmt_bytes;
 
 use crate::graph::{enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, Graph};
+use crate::sim::{simulate, SimMode, SimOptions};
 
 /// Optimization direction for Algorithm 1's final selection (line 15).
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum Objective {
     /// Time-centric (§4.2/4.3): minimize recomputation overhead.
     MinOverhead,
@@ -41,8 +56,18 @@ pub enum Objective {
     MaxOverhead,
 }
 
+impl Objective {
+    /// CLI rendering (`tc` / `mc`).
+    pub fn label(self) -> &'static str {
+        match self {
+            Objective::MinOverhead => "tc",
+            Objective::MaxOverhead => "mc",
+        }
+    }
+}
+
 /// Which algorithm produced a plan (for reports).
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum PlannerKind {
     ExactDp,
     ApproxDp,
@@ -63,12 +88,295 @@ impl PlannerKind {
     }
 }
 
+/// Typed identifier of a planning algorithm family — the replacement for
+/// the stringly `--family` values and mode names that used to be threaded
+/// through the coordinator. A `PlannerId` names what you *request*;
+/// [`PlannerKind`] reports what actually *ran* (an exact request can
+/// degrade to the approximate family when enumeration overflows).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum PlannerId {
+    /// Algorithm 1 over all lower sets (§4.2).
+    ExactDp,
+    /// Algorithm 1 over `L^Pruned` (§4.3).
+    ApproxDp,
+    /// Chen et al. (2016) √n checkpointing (Appendix B).
+    Chen,
+    /// The DFS oracle (§4.1; tiny graphs only).
+    Exhaustive,
+}
+
+impl PlannerId {
+    pub const ALL: [PlannerId; 4] =
+        [PlannerId::ExactDp, PlannerId::ApproxDp, PlannerId::Chen, PlannerId::Exhaustive];
+
+    /// Human-readable label, matching [`PlannerKind::label`].
+    pub fn label(self) -> &'static str {
+        self.kind().label()
+    }
+
+    /// Stable machine name (CLI / JSON).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PlannerId::ExactDp => "exact",
+            PlannerId::ApproxDp => "approx",
+            PlannerId::Chen => "chen",
+            PlannerId::Exhaustive => "exhaustive",
+        }
+    }
+
+    /// Parse a CLI value (`exact|approx|chen|exhaustive`).
+    pub fn parse(s: &str) -> Result<PlannerId> {
+        match s.to_ascii_lowercase().as_str() {
+            "exact" => Ok(PlannerId::ExactDp),
+            "approx" => Ok(PlannerId::ApproxDp),
+            "chen" => Ok(PlannerId::Chen),
+            "exhaustive" => Ok(PlannerId::Exhaustive),
+            other => bail!("bad planner '{other}' (exact|approx|chen|exhaustive)"),
+        }
+    }
+
+    /// The lower-set family this planner solves over (`None` for
+    /// planners that need no DP context). The exhaustive oracle resolves
+    /// budgets against the exact family — its search space is the full
+    /// lattice.
+    pub fn family(self) -> Option<Family> {
+        match self {
+            PlannerId::ExactDp | PlannerId::Exhaustive => Some(Family::Exact),
+            PlannerId::ApproxDp => Some(Family::Approx),
+            PlannerId::Chen => None,
+        }
+    }
+
+    /// The report kind a successful run of this planner produces (before
+    /// any exact→approx degradation).
+    pub fn kind(self) -> PlannerKind {
+        match self {
+            PlannerId::ExactDp => PlannerKind::ExactDp,
+            PlannerId::ApproxDp => PlannerKind::ApproxDp,
+            PlannerId::Chen => PlannerKind::Chen,
+            PlannerId::Exhaustive => PlannerKind::Exhaustive,
+        }
+    }
+}
+
+/// How the activation budget for a planned schedule is chosen.
+///
+/// Hashable (and therefore usable in [`PlanRequest`] cache keys):
+/// fractional budgets compare by bit pattern.
+#[derive(Clone, Copy, Debug)]
+pub enum BudgetSpec {
+    /// Plan at the minimal feasible budget B*.
+    MinFeasible,
+    /// Absolute activation budget in bytes. Errors (naming B*) if the
+    /// graph cannot be executed under it.
+    Bytes(u64),
+    /// Fraction of the graph's total activation memory, clamped up to
+    /// B* (a fraction can never make the problem infeasible).
+    Frac(f64),
+}
+
+impl PartialEq for BudgetSpec {
+    fn eq(&self, other: &Self) -> bool {
+        match (self, other) {
+            (BudgetSpec::MinFeasible, BudgetSpec::MinFeasible) => true,
+            (BudgetSpec::Bytes(a), BudgetSpec::Bytes(b)) => a == b,
+            (BudgetSpec::Frac(a), BudgetSpec::Frac(b)) => a.to_bits() == b.to_bits(),
+            _ => false,
+        }
+    }
+}
+
+impl Eq for BudgetSpec {}
+
+impl std::hash::Hash for BudgetSpec {
+    fn hash<H: std::hash::Hasher>(&self, state: &mut H) {
+        use std::hash::Hash;
+        match self {
+            BudgetSpec::MinFeasible => 0u8.hash(state),
+            BudgetSpec::Bytes(b) => {
+                1u8.hash(state);
+                b.hash(state);
+            }
+            BudgetSpec::Frac(f) => {
+                2u8.hash(state);
+                f.to_bits().hash(state);
+            }
+        }
+    }
+}
+
+/// One planning request — the unit the session caches on (together with
+/// the graph fingerprint).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub struct PlanRequest {
+    /// Which algorithm family to run.
+    pub planner: PlannerId,
+    /// How to choose the activation budget.
+    pub budget: BudgetSpec,
+    /// Time-centric or memory-centric selection.
+    pub objective: Objective,
+    /// Free schedule the compiled program / simulation honor.
+    pub sim_mode: SimMode,
+}
+
+impl PlanRequest {
+    /// A minimal-budget, liveness-mode request for `planner`.
+    pub fn new(planner: PlannerId, objective: Objective) -> PlanRequest {
+        PlanRequest {
+            planner,
+            budget: BudgetSpec::MinFeasible,
+            objective,
+            sim_mode: SimMode::Liveness,
+        }
+    }
+}
+
+/// Everything a [`Planner`] may need, resolved by the caller (normally
+/// [`crate::session::PlanSession`], or the free-function shims below).
+pub struct PlanContext<'a> {
+    /// The graph being planned.
+    pub graph: &'a Graph,
+    /// Prebuilt DP context over the planner's family (`None` for
+    /// planners that do not run Algorithm 1).
+    pub dp: Option<&'a DpContext>,
+    /// Whether `dp` really holds the full lattice (`false` = degraded to
+    /// the pruned family under the enumeration cap).
+    pub exact_family: bool,
+    /// Resolved activation budget in bytes (0 for planners that ignore
+    /// budgets, i.e. Chen's sweep).
+    pub budget: u64,
+}
+
+/// A planning algorithm family, addressable as a trait object.
+///
+/// Implementations must be pure functions of `(req, ctx)` — determinism
+/// is what makes the session's compiled-plan cache sound.
+pub trait Planner: Sync {
+    /// The typed identifier this implementation serves.
+    fn id(&self) -> PlannerId;
+    /// Produce a plan for `req` against the resolved `ctx`.
+    fn plan(&self, req: &PlanRequest, ctx: &PlanContext<'_>) -> Result<Plan>;
+}
+
+/// Resolve a [`PlannerId`] to its (stateless) trait object.
+pub fn planner_for(id: PlannerId) -> &'static dyn Planner {
+    match id {
+        PlannerId::ExactDp => &ExactDpPlanner,
+        PlannerId::ApproxDp => &ApproxDpPlanner,
+        PlannerId::Chen => &ChenPlanner,
+        PlannerId::Exhaustive => &ExhaustivePlanner,
+    }
+}
+
+/// §4.2 exact DP (degrades to the approximate family when enumeration
+/// overflows — reported through the plan's [`PlannerKind`]).
+pub struct ExactDpPlanner;
+
+/// §4.3 approximate DP over `L^Pruned`.
+pub struct ApproxDpPlanner;
+
+/// Chen et al. (2016) √n checkpointing; ignores the budget and sweeps
+/// per-segment budgets, scoring by the simulator under the request's
+/// [`SimMode`].
+pub struct ChenPlanner;
+
+/// §4.1 DFS oracle; exponential, tiny graphs only.
+pub struct ExhaustivePlanner;
+
+fn solve_dp(req: &PlanRequest, ctx: &PlanContext<'_>, kind: PlannerKind) -> Result<Plan> {
+    let dp = ctx
+        .dp
+        .ok_or_else(|| anyhow!("{} needs a DP context in PlanContext", kind.label()))?;
+    let sol = dp.solve(ctx.budget, req.objective).ok_or_else(|| {
+        anyhow!(
+            "budget {} infeasible for {}: min_feasible_budget = {}",
+            fmt_bytes(ctx.budget),
+            ctx.graph.name,
+            fmt_bytes(dp.min_feasible_budget())
+        )
+    })?;
+    Ok(Plan::from_solution(ctx.graph, sol, kind, req.objective, ctx.budget))
+}
+
+impl Planner for ExactDpPlanner {
+    fn id(&self) -> PlannerId {
+        PlannerId::ExactDp
+    }
+
+    fn plan(&self, req: &PlanRequest, ctx: &PlanContext<'_>) -> Result<Plan> {
+        let kind =
+            if ctx.exact_family { PlannerKind::ExactDp } else { PlannerKind::ApproxDp };
+        solve_dp(req, ctx, kind)
+    }
+}
+
+impl Planner for ApproxDpPlanner {
+    fn id(&self) -> PlannerId {
+        PlannerId::ApproxDp
+    }
+
+    fn plan(&self, req: &PlanRequest, ctx: &PlanContext<'_>) -> Result<Plan> {
+        solve_dp(req, ctx, PlannerKind::ApproxDp)
+    }
+}
+
+impl Planner for ChenPlanner {
+    fn id(&self) -> PlannerId {
+        PlannerId::Chen
+    }
+
+    fn plan(&self, req: &PlanRequest, ctx: &PlanContext<'_>) -> Result<Plan> {
+        let g = ctx.graph;
+        let opts = SimOptions { mode: req.sim_mode, include_params: true };
+        let p = chen_plan(g, |c| simulate(g, c, opts).peak_total)?;
+        let overhead = p.chain.overhead(g);
+        let peak_eq2 = p.chain.peak_mem(g);
+        Ok(Plan {
+            chain: p.chain,
+            kind: PlannerKind::Chen,
+            objective: req.objective,
+            budget: p.segment_budget,
+            overhead,
+            peak_eq2,
+        })
+    }
+}
+
+impl Planner for ExhaustivePlanner {
+    fn id(&self) -> PlannerId {
+        PlannerId::Exhaustive
+    }
+
+    fn plan(&self, req: &PlanRequest, ctx: &PlanContext<'_>) -> Result<Plan> {
+        let g = ctx.graph;
+        let chain = exhaustive_search(g, ctx.budget, req.objective).ok_or_else(|| {
+            anyhow!(
+                "budget {} infeasible for {} (exhaustive oracle)",
+                fmt_bytes(ctx.budget),
+                g.name
+            )
+        })?;
+        let overhead = chain.overhead(g);
+        let peak_eq2 = chain.peak_mem(g);
+        Ok(Plan {
+            chain,
+            kind: PlannerKind::Exhaustive,
+            objective: req.objective,
+            budget: ctx.budget,
+            overhead,
+            peak_eq2,
+        })
+    }
+}
+
 /// A recomputation plan: the canonical strategy plus analytic costs.
+#[derive(Clone, Debug)]
 pub struct Plan {
     pub chain: LowerSetChain,
     pub kind: PlannerKind,
     pub objective: Objective,
-    /// The memory budget `B` the plan was solved under.
+    /// The memory budget `B` the plan was solved under (for Chen's
+    /// planner: the winning per-segment budget of the sweep).
     pub budget: u64,
     /// Recomputation overhead (Eq. 1), in `T_v` units.
     pub overhead: u64,
@@ -90,36 +398,39 @@ impl Plan {
 }
 
 /// Exact DP (§4.2) under memory budget `budget` (activation bytes).
+/// Thin shim over [`ExactDpPlanner`].
 ///
 /// Errors if the budget is infeasible. If the lower-set lattice is larger
 /// than the enumeration cap, degrades to the approximate family (and says
 /// so in the returned plan's `kind`).
 pub fn exact_dp(g: &Graph, budget: u64, objective: Objective) -> Result<Plan> {
     let (ctx, exact) = exact_context(g);
-    let kind = if exact { PlannerKind::ExactDp } else { PlannerKind::ApproxDp };
-    let sol = ctx
-        .solve(budget, objective)
-        .ok_or_else(|| anyhow!("budget {budget} infeasible for {}", g.name))?;
-    Ok(Plan::from_solution(g, sol, kind, objective, budget))
+    let req = PlanRequest { budget: BudgetSpec::Bytes(budget), ..PlanRequest::new(PlannerId::ExactDp, objective) };
+    ExactDpPlanner.plan(
+        &req,
+        &PlanContext { graph: g, dp: Some(&ctx), exact_family: exact, budget },
+    )
 }
 
-/// Approximate DP (§4.3) under memory budget `budget`.
+/// Approximate DP (§4.3) under memory budget `budget`. Thin shim over
+/// [`ApproxDpPlanner`].
 pub fn approx_dp(g: &Graph, budget: u64, objective: Objective) -> Result<Plan> {
     let ctx = DpContext::new(g, pruned_lower_sets(g));
-    let sol = ctx
-        .solve(budget, objective)
-        .ok_or_else(|| anyhow!("budget {budget} infeasible for {}", g.name))?;
-    Ok(Plan::from_solution(g, sol, PlannerKind::ApproxDp, objective, budget))
+    let req = PlanRequest { budget: BudgetSpec::Bytes(budget), ..PlanRequest::new(PlannerId::ApproxDp, objective) };
+    ApproxDpPlanner.plan(
+        &req,
+        &PlanContext { graph: g, dp: Some(&ctx), exact_family: false, budget },
+    )
 }
 
 /// Family selector for [`min_feasible_budget`] / [`plan_at_min_budget`].
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
 pub enum Family {
     Exact,
     Approx,
 }
 
-fn exact_context(g: &Graph) -> (DpContext<'_>, bool) {
+fn exact_context(g: &Graph) -> (DpContext, bool) {
     match enumerate_lower_sets(g, EnumerationLimit::default()) {
         Some(family) => (DpContext::new(g, family), true),
         None => (DpContext::new(g, pruned_lower_sets(g)), false),
@@ -127,8 +438,9 @@ fn exact_context(g: &Graph) -> (DpContext<'_>, bool) {
 }
 
 /// Build the (possibly expensive) DP context for a family once; reuse it
-/// across budget searches and multiple solves.
-pub fn build_context(g: &Graph, family: Family) -> DpContext<'_> {
+/// across budget searches and multiple solves. (Prefer
+/// [`crate::session::PlanSession`], which does this lazily and caches.)
+pub fn build_context(g: &Graph, family: Family) -> DpContext {
     match family {
         Family::Exact => exact_context(g).0,
         Family::Approx => DpContext::new(g, pruned_lower_sets(g)),
@@ -159,7 +471,7 @@ pub fn plan_at_min_budget(g: &Graph, family: Family, objective: Objective) -> Re
 /// Convenience: solve a prebuilt context into a [`Plan`].
 pub fn plan_with_context(
     g: &Graph,
-    ctx: &DpContext<'_>,
+    ctx: &DpContext,
     kind: PlannerKind,
     budget: u64,
     objective: Objective,

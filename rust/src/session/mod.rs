@@ -1,0 +1,453 @@
+//! The plan-serving engine: [`PlanSession`] + the compiled-plan cache.
+//!
+//! The paper's DP is a one-shot offline solve; a serving system answers
+//! *many* planning/training requests against the same graph, so the
+//! expensive artifacts must be amortized, not recomputed per request:
+//!
+//! - the **lower-set families** (exact enumeration / `L^Pruned`) and
+//!   their [`DpContext`]s are built lazily, once per family, and shared
+//!   across every request that needs them;
+//! - the **minimal feasible budget** `B*` per family is memoized, so
+//!   [`BudgetSpec::resolve`] never re-runs the minimax DP;
+//! - the **vanilla program** per [`SimMode`] is compiled once;
+//! - every answered request is a [`CompiledPlan`] — plan + [`SimReport`]
+//!   + the mode-rewritten [`Trace`] + a ready-to-run [`OpProgram`] —
+//!   held in an LRU [`PlanCache`] keyed by `(graph fingerprint,
+//!   request)` and handed out as `Arc`, so a repeated [`PlanRequest`]
+//!   is a pointer clone.
+//!
+//! The cache key uses [`Graph::fingerprint`], which is invariant under
+//! node relabeling and renaming: a shared cache (see
+//! [`PlanSession::with_cache`]) serves repeated re-traces of the same
+//! model across sessions. **Caveat:** a cached plan's node ids are
+//! those of the session that *compiled* it. Share a cache only across
+//! sessions whose frontends emit a stable node numbering (re-traces of
+//! the same model normally do); if your frontend renumbers nodes
+//! between traces, keep the default per-session cache — executing a
+//! program against a permuted labeling would break the
+//! observed-equals-predicted accounting.
+//!
+//! [`SessionStats`] (`hits` / `misses` / `families_built`) is the
+//! observable evidence of the amortization, reported by `repro train
+//! --stats` and the JSON reports next to the allocator pool counters.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::anyhow::{bail, Result};
+use crate::exec::OpProgram;
+use crate::fmt_bytes;
+use crate::graph::{
+    enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, Graph, GraphFingerprint,
+};
+use crate::planner::{
+    planner_for, BudgetSpec, DpContext, Family, Plan, PlanContext, PlanRequest,
+};
+use crate::sim::{
+    apply_liveness, canonical_trace, measure, vanilla_trace, SimMode, SimOptions, SimReport,
+    Trace,
+};
+
+/// Default capacity of a session's private [`PlanCache`].
+pub const DEFAULT_CACHE_CAPACITY: usize = 128;
+
+/// Counters describing how much work a session amortized.
+#[derive(Clone, Copy, Default, PartialEq, Eq, Debug)]
+pub struct SessionStats {
+    /// Requests served straight from the compiled-plan cache.
+    pub hits: u64,
+    /// Requests that had to be planned and compiled.
+    pub misses: u64,
+    /// Lower-set families (and their DP contexts) actually constructed —
+    /// at most one per [`Family`] per session, however many requests ran.
+    pub families_built: u64,
+}
+
+/// Everything a served plan request produces, compiled once and shared.
+#[derive(Clone, Debug)]
+pub struct CompiledPlan {
+    /// The request this plan answers.
+    pub request: PlanRequest,
+    /// Fingerprint of the graph it was compiled against.
+    pub fingerprint: GraphFingerprint,
+    /// The canonical strategy plus analytic (Eq. 1 / Eq. 2) costs.
+    pub plan: Plan,
+    /// Simulator measurement under the request's [`SimMode`]
+    /// (`peak_bytes` = activations only, `peak_total` adds parameters).
+    pub report: SimReport,
+    /// Strict-mode (no-liveness, Table 2) activation peak of the same
+    /// plan — the ablation ceiling the liveness peak must stay under.
+    pub peak_strict: u64,
+    /// The mode-rewritten event trace the program was compiled from.
+    pub trace: Trace,
+    /// Ready-to-run executable program for [`crate::exec::DagTrainer`].
+    pub program: OpProgram,
+}
+
+struct CacheEntry {
+    value: Arc<CompiledPlan>,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<(GraphFingerprint, PlanRequest), CacheEntry>,
+    tick: u64,
+}
+
+/// A bounded LRU cache of compiled plans, keyed by
+/// `(graph fingerprint, request)`. Sessions own a private one by
+/// default; share one across sessions with [`PlanSession::with_cache`]
+/// to serve repeated requests for the same (or isomorphic) graph from
+/// different entry points.
+pub struct PlanCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+}
+
+impl PlanCache {
+    /// A cache holding at most `capacity` compiled plans (≥ 1).
+    pub fn new(capacity: usize) -> PlanCache {
+        assert!(capacity >= 1, "cache capacity must be positive");
+        PlanCache {
+            capacity,
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+        }
+    }
+
+    /// Shared handle with the given capacity.
+    pub fn shared(capacity: usize) -> Arc<PlanCache> {
+        Arc::new(PlanCache::new(capacity))
+    }
+
+    /// Number of cached plans.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn get(&self, key: &(GraphFingerprint, PlanRequest)) -> Option<Arc<CompiledPlan>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.get_mut(key).map(|e| {
+            e.last_used = tick;
+            e.value.clone()
+        })
+    }
+
+    /// Insert-if-absent: when two concurrent compilations race on the
+    /// same key, the first insert wins and the loser is handed the
+    /// canonical `Arc` — identical requests always end up sharing one
+    /// compiled plan.
+    fn insert(
+        &self,
+        key: (GraphFingerprint, PlanRequest),
+        value: Arc<CompiledPlan>,
+    ) -> Arc<CompiledPlan> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(existing) = inner.map.get_mut(&key) {
+            existing.last_used = tick;
+            return existing.value.clone();
+        }
+        if inner.map.len() >= self.capacity {
+            // Evict the least-recently-used entry (linear scan: the cache
+            // is small and insertion is the cold path by construction).
+            if let Some(evict) =
+                inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k)
+            {
+                inner.map.remove(&evict);
+            }
+        }
+        inner.map.insert(key, CacheEntry { value: value.clone(), last_used: tick });
+        value
+    }
+}
+
+struct FamilySlot {
+    ctx: Arc<DpContext>,
+    /// Whether exact enumeration succeeded (false = degraded to pruned).
+    exact: bool,
+    /// Memoized minimal feasible budget.
+    min_budget: Option<u64>,
+}
+
+#[derive(Default)]
+struct Inner {
+    exact: Option<FamilySlot>,
+    approx: Option<FamilySlot>,
+    vanilla: HashMap<SimMode, Arc<OpProgram>>,
+    stats: SessionStats,
+}
+
+/// A long-lived planning session over one graph: owns the graph, its
+/// fingerprint, the lazily built per-family artifacts, and a compiled-
+/// plan cache. See the module docs for what gets amortized.
+///
+/// Thread-safe (`&self` everywhere, internal mutexes), so future
+/// parallel-planning work can share one session across workers.
+pub struct PlanSession {
+    graph: Arc<Graph>,
+    fingerprint: GraphFingerprint,
+    limit: EnumerationLimit,
+    cache: Arc<PlanCache>,
+    inner: Mutex<Inner>,
+}
+
+impl PlanSession {
+    /// A session with the default enumeration limit and a private cache.
+    pub fn new(graph: Graph) -> PlanSession {
+        PlanSession::with_limit(graph, EnumerationLimit::default())
+    }
+
+    /// A session with a custom enumeration cap for the exact family.
+    pub fn with_limit(graph: Graph, limit: EnumerationLimit) -> PlanSession {
+        PlanSession::with_cache(graph, limit, PlanCache::shared(DEFAULT_CACHE_CAPACITY))
+    }
+
+    /// A session backed by a shared [`PlanCache`] — the cross-request
+    /// serving configuration (cache keys carry the graph fingerprint, so
+    /// sessions over different graphs coexist in one cache).
+    pub fn with_cache(
+        graph: Graph,
+        limit: EnumerationLimit,
+        cache: Arc<PlanCache>,
+    ) -> PlanSession {
+        let fingerprint = graph.fingerprint();
+        PlanSession {
+            graph: Arc::new(graph),
+            fingerprint,
+            limit,
+            cache,
+            inner: Mutex::new(Inner::default()),
+        }
+    }
+
+    /// The graph this session plans.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Shared handle to the graph (for executors that outlive borrows).
+    pub fn shared_graph(&self) -> Arc<Graph> {
+        self.graph.clone()
+    }
+
+    /// The graph's structural fingerprint (the cache-key component).
+    pub fn fingerprint(&self) -> GraphFingerprint {
+        self.fingerprint
+    }
+
+    /// The cache this session serves from.
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    /// Snapshot of the amortization counters.
+    pub fn stats(&self) -> SessionStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    /// The lazily built DP context for `family` (and whether it really
+    /// is the exact lattice). Constructed at most once per family.
+    pub fn family_context(&self, family: Family) -> (Arc<DpContext>, bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let Inner { exact, approx, stats, .. } = &mut *inner;
+        let slot = match family {
+            Family::Exact => exact,
+            Family::Approx => approx,
+        };
+        if slot.is_none() {
+            let (ctx, is_exact) = match family {
+                Family::Exact => match enumerate_lower_sets(&self.graph, self.limit) {
+                    Some(fam) => (DpContext::from_shared(self.graph.clone(), fam), true),
+                    None => (
+                        DpContext::from_shared(
+                            self.graph.clone(),
+                            pruned_lower_sets(&self.graph),
+                        ),
+                        false,
+                    ),
+                },
+                Family::Approx => (
+                    DpContext::from_shared(self.graph.clone(), pruned_lower_sets(&self.graph)),
+                    false,
+                ),
+            };
+            stats.families_built += 1;
+            *slot = Some(FamilySlot { ctx: Arc::new(ctx), exact: is_exact, min_budget: None });
+        }
+        let s = slot.as_ref().unwrap();
+        (s.ctx.clone(), s.exact)
+    }
+
+    /// The minimal feasible budget `B*` for `family`, computed once and
+    /// memoized — the deduplicated home of every former
+    /// `min_feasible_budget` call site.
+    pub fn min_feasible_budget(&self, family: Family) -> u64 {
+        let (ctx, _) = self.family_context(family);
+        {
+            let inner = self.inner.lock().unwrap();
+            let slot = match family {
+                Family::Exact => inner.exact.as_ref(),
+                Family::Approx => inner.approx.as_ref(),
+            };
+            if let Some(b) = slot.and_then(|s| s.min_budget) {
+                return b;
+            }
+        }
+        let b = ctx.min_feasible_budget();
+        let mut inner = self.inner.lock().unwrap();
+        let slot = match family {
+            Family::Exact => inner.exact.as_mut(),
+            Family::Approx => inner.approx.as_mut(),
+        };
+        if let Some(s) = slot {
+            s.min_budget = Some(b);
+        }
+        b
+    }
+
+    /// The vanilla (no-recomputation) program under `mode`, compiled
+    /// once per mode and shared — the baseline every comparison run
+    /// reuses instead of recompiling per CLI mode.
+    pub fn vanilla_program(&self, mode: SimMode) -> Result<Arc<OpProgram>> {
+        if let Some(p) = self.inner.lock().unwrap().vanilla.get(&mode) {
+            return Ok(p.clone());
+        }
+        let prog =
+            Arc::new(OpProgram::from_trace(&self.graph, &vanilla_trace(&self.graph), mode)?);
+        self.inner.lock().unwrap().vanilla.insert(mode, prog.clone());
+        Ok(prog)
+    }
+
+    /// Answer a planning request: served from the cache when the same
+    /// `(fingerprint, request)` was compiled before, otherwise planned,
+    /// simulated, compiled, cached and returned. Identical requests
+    /// return the *same* `Arc` — bit-identical plans by construction.
+    pub fn plan(&self, req: &PlanRequest) -> Result<Arc<CompiledPlan>> {
+        let key = (self.fingerprint, *req);
+        if let Some(hit) = self.cache.get(&key) {
+            self.inner.lock().unwrap().stats.hits += 1;
+            return Ok(hit);
+        }
+        self.inner.lock().unwrap().stats.misses += 1;
+        let compiled = Arc::new(self.compile(req)?);
+        Ok(self.cache.insert(key, compiled))
+    }
+
+    fn compile(&self, req: &PlanRequest) -> Result<CompiledPlan> {
+        let g = &*self.graph;
+        let (dp, exact_family, budget) = match req.planner.family() {
+            Some(family) => {
+                let (ctx, exact) = self.family_context(family);
+                let budget = req.budget.resolve(self, family)?;
+                (Some(ctx), exact, budget)
+            }
+            None => (None, false, 0),
+        };
+        let plan = planner_for(req.planner).plan(
+            req,
+            &PlanContext { graph: g, dp: dp.as_deref(), exact_family, budget },
+        )?;
+        // One trace drives everything downstream: the simulator report,
+        // the strict-ablation peak, and the executable program all view
+        // the same event stream, so "observed == predicted" stays an
+        // equality between two views of one schedule.
+        let raw = canonical_trace(g, &plan.chain);
+        let report = measure(g, &raw, SimOptions { mode: req.sim_mode, include_params: true });
+        let peak_strict =
+            measure(g, &raw, SimOptions { mode: SimMode::Strict, include_params: false })
+                .peak_bytes;
+        let trace = match req.sim_mode {
+            SimMode::Liveness => apply_liveness(&raw),
+            SimMode::Strict => raw,
+        };
+        let program = OpProgram::compile(g, &trace)?;
+        debug_assert_eq!(
+            program.predicted_peak(),
+            report.peak_bytes,
+            "program and simulator must agree on the peak"
+        );
+        Ok(CompiledPlan {
+            request: *req,
+            fingerprint: self.fingerprint,
+            plan,
+            report,
+            peak_strict,
+            trace,
+            program,
+        })
+    }
+}
+
+impl BudgetSpec {
+    /// Resolve the spec against a session, which memoizes the minimal
+    /// feasible budget per family — infeasible absolute budgets report
+    /// the graph's `min_feasible_budget` instead of a bare failure.
+    pub fn resolve(self, session: &PlanSession, family: Family) -> Result<u64> {
+        let g = session.graph();
+        let min_b = session.min_feasible_budget(family);
+        match self {
+            BudgetSpec::MinFeasible => Ok(min_b),
+            BudgetSpec::Frac(f) => Ok(((g.total_mem() as f64 * f) as u64).max(min_b)),
+            BudgetSpec::Bytes(b) if b < min_b => bail!(
+                "budget {} infeasible for {}: min_feasible_budget = {}",
+                fmt_bytes(b),
+                g.name,
+                fmt_bytes(min_b)
+            ),
+            BudgetSpec::Bytes(b) => Ok(b),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{Objective, PlannerId};
+    use crate::testutil::diamond;
+
+    fn req() -> PlanRequest {
+        PlanRequest::new(PlannerId::ExactDp, Objective::MinOverhead)
+    }
+
+    #[test]
+    fn identical_requests_share_one_compilation() {
+        let s = PlanSession::new(diamond());
+        let a = s.plan(&req()).unwrap();
+        let b = s.plan(&req()).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(s.stats(), SessionStats { hits: 1, misses: 1, families_built: 1 });
+    }
+
+    #[test]
+    fn vanilla_program_compiled_once_per_mode() {
+        let s = PlanSession::new(diamond());
+        let a = s.vanilla_program(SimMode::Liveness).unwrap();
+        let b = s.vanilla_program(SimMode::Liveness).unwrap();
+        let c = s.vanilla_program(SimMode::Strict).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(s.stats().families_built, 0, "vanilla needs no family");
+    }
+
+    #[test]
+    fn budget_resolution_memoizes_b_star() {
+        let s = PlanSession::new(diamond());
+        let b1 = BudgetSpec::MinFeasible.resolve(&s, Family::Exact).unwrap();
+        let b2 = BudgetSpec::MinFeasible.resolve(&s, Family::Exact).unwrap();
+        assert_eq!(b1, b2);
+        assert_eq!(s.stats().families_built, 1);
+        // An absolute budget below B* names the minimum.
+        let err = BudgetSpec::Bytes(1).resolve(&s, Family::Exact).unwrap_err().to_string();
+        assert!(err.contains("infeasible"), "{err}");
+        assert!(err.contains("min_feasible_budget"), "{err}");
+        // A fraction clamps up to feasibility.
+        assert!(BudgetSpec::Frac(0.0).resolve(&s, Family::Exact).unwrap() >= b1);
+    }
+}

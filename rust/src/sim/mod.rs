@@ -24,7 +24,7 @@ use crate::graph::Graph;
 use crate::planner::LowerSetChain;
 
 /// Which free schedule a measurement (or a compiled program) honors.
-#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug, Default)]
 pub enum SimMode {
     /// Free each buffer at the end of the op that last uses it
     /// (Table 1 / Chainer-style eager freeing) — the default, and what

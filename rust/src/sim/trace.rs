@@ -82,6 +82,7 @@ pub enum Event {
 }
 
 /// The step trace plus bookkeeping totals.
+#[derive(Clone, Debug)]
 pub struct Trace {
     pub events: Vec<Event>,
     /// Op-group id of each event (parallel to `events`, nondecreasing).

@@ -46,6 +46,15 @@ pub fn chain_graph(mems: &[u64]) -> Graph {
     b.build()
 }
 
+/// The diamond's edge list `0 → {1, 2} → 3`, shared by the fixture
+/// variants below.
+pub const DIAMOND_EDGES: [(NodeId, NodeId); 4] = [
+    (NodeId(0), NodeId(1)),
+    (NodeId(0), NodeId(2)),
+    (NodeId(1), NodeId(3)),
+    (NodeId(2), NodeId(3)),
+];
+
 /// The diamond / fan-in fixture `0 → {1, 2} → 3` with `M_v = 10·(v+1)`
 /// and unit times — the smallest graph exercising both fan-out (node 0
 /// read twice) and fan-in (node 3 merges two branches). Shared by the
@@ -61,14 +70,50 @@ pub fn diamond() -> Graph {
             param_bytes: 0,
         })
         .collect();
-    Graph::new(
-        "diamond",
-        nodes,
-        &[
-            (NodeId(0), NodeId(1)),
-            (NodeId(0), NodeId(2)),
-            (NodeId(1), NodeId(3)),
-            (NodeId(2), NodeId(3)),
-        ],
-    )
+    Graph::new("diamond", nodes, &DIAMOND_EDGES)
+}
+
+/// Diamond topology with explicit per-node memory costs. Names (`m{i}`)
+/// deliberately differ from [`diamond`]'s `n{i}`, so fingerprint tests
+/// can also assert name insensitivity.
+pub fn diamond_with_mems(mems: [u64; 4]) -> Graph {
+    let nodes = mems
+        .iter()
+        .enumerate()
+        .map(|(i, &m)| Node {
+            name: format!("m{i}"),
+            op: OpKind::Other,
+            mem: m,
+            time: 1,
+            shape: vec![],
+            param_bytes: 0,
+        })
+        .collect();
+    Graph::new("diamond", nodes, &DIAMOND_EDGES)
+}
+
+/// An isomorphic relabeling of [`diamond`]: the two branch nodes are
+/// stored in the opposite index order (node 1 carries `M = 30`, node 2
+/// carries `M = 20`) and everything is renamed — the same graph up to
+/// node numbering. Fingerprints must collide with [`diamond`]'s.
+pub fn diamond_relabeled() -> Graph {
+    diamond_with_mems([10, 30, 20, 40])
+}
+
+/// The diamond plus a skip edge `0 → 3` — one structural edit away from
+/// [`diamond`], so fingerprints must differ.
+pub fn diamond_with_skip() -> Graph {
+    let mut edges = DIAMOND_EDGES.to_vec();
+    edges.push((NodeId(0), NodeId(3)));
+    let nodes = (0..4)
+        .map(|i| Node {
+            name: format!("n{i}"),
+            op: OpKind::Other,
+            mem: 10 * (i + 1) as u64,
+            time: 1,
+            shape: vec![],
+            param_bytes: 0,
+        })
+        .collect();
+    Graph::new("diamond+skip", nodes, &edges)
 }

@@ -288,28 +288,34 @@ fn zoo_resnet_and_unet_train_end_to_end_with_invariants() {
             8,
             &cfg,
             BudgetSpec::MinFeasible,
-            Objective::MinOverhead,
+            &[Objective::MinOverhead],
             SimMode::Liveness,
             true,
         )
         .unwrap_or_else(|e| panic!("{model}: {e}"));
-        assert!(cmp.grads_match, "{model}: planned gradients must match vanilla bit-exactly");
-        assert!(cmp.peak_matches_sim, "{model}: observed peak must equal sim prediction");
+        assert_eq!(cmp.runs.len(), 1);
+        let run = &cmp.runs[0];
+        assert!(run.grads_match, "{model}: planned gradients must match vanilla bit-exactly");
+        assert!(run.peak_matches_sim, "{model}: observed peak must equal sim prediction");
         assert!(
-            cmp.sim_peak <= cmp.sim_peak_strict,
+            run.sim_peak <= run.sim_peak_strict,
             "{model}: liveness peak must not exceed the no-liveness peak"
         );
-        assert!(cmp.losses_identical, "{model}: loss trajectories must be bit-identical");
+        assert!(run.losses_identical, "{model}: loss trajectories must be bit-identical");
         assert!(
-            cmp.planned.observed_peak < cmp.vanilla.observed_peak,
+            run.report.observed_peak < cmp.vanilla.observed_peak,
             "{model}: recomputation must reduce the measured peak"
         );
-        assert!(cmp.planned.losses.iter().all(|l| l.is_finite()), "{model}: finite losses");
-        assert!(cmp.planned.recomputes_per_step > 0, "{model}: plan actually recomputes");
+        assert!(run.report.losses.iter().all(|l| l.is_finite()), "{model}: finite losses");
+        assert!(run.report.recomputes_per_step > 0, "{model}: plan actually recomputes");
         assert!(
             cmp.distinct_act_bytes >= 2,
             "{model}: heterogeneous lowering must yield ≥ 2 distinct node byte-sizes"
         );
+        // The session amortized: one family built, and the training run's
+        // repeated request was a cache hit.
+        assert_eq!(cmp.stats.families_built, 1, "{model}");
+        assert!(run.cache_hit, "{model}: repeated PlanRequest must be cached");
     }
 }
 

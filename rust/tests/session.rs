@@ -1,0 +1,161 @@
+//! Session-API integration suite: determinism, caching, fingerprinting.
+//!
+//! The contract under test (ISSUE 5 acceptance):
+//! - the same `PlanRequest` twice returns bit-identical plans with
+//!   `hits == 1` (and in fact the *same* `Arc`);
+//! - different budgets miss separately while sharing one family;
+//! - the graph fingerprint changes when an edge is added and collides
+//!   for isomorphic relabelings of the diamond fixture.
+
+use std::sync::Arc;
+
+use recompute::graph::EnumerationLimit;
+use recompute::planner::{
+    min_feasible_budget, BudgetSpec, Family, Objective, PlanRequest, PlannerId,
+};
+use recompute::session::{PlanCache, PlanSession, SessionStats};
+use recompute::sim::SimMode;
+use recompute::testutil::{diamond, diamond_relabeled, diamond_with_mems, diamond_with_skip};
+
+fn exact_req(budget: BudgetSpec) -> PlanRequest {
+    PlanRequest { budget, ..PlanRequest::new(PlannerId::ExactDp, Objective::MinOverhead) }
+}
+
+#[test]
+fn same_request_twice_is_one_hit_and_bit_identical() {
+    let session = PlanSession::new(diamond());
+    let req = exact_req(BudgetSpec::MinFeasible);
+    let first = session.plan(&req).unwrap();
+    let second = session.plan(&req).unwrap();
+    assert!(Arc::ptr_eq(&first, &second), "a cache hit returns the same compiled plan");
+    assert_eq!(
+        session.stats(),
+        SessionStats { hits: 1, misses: 1, families_built: 1 }
+    );
+
+    // Determinism across *sessions*: an independent session over an
+    // identically built graph produces bit-identical artifacts.
+    let other = PlanSession::new(diamond());
+    let third = other.plan(&req).unwrap();
+    assert_eq!(first.fingerprint, third.fingerprint);
+    assert_eq!(first.plan.chain.lower_sets(), third.plan.chain.lower_sets());
+    assert_eq!(first.plan.overhead, third.plan.overhead);
+    assert_eq!(first.plan.peak_eq2, third.plan.peak_eq2);
+    assert_eq!(first.program.steps, third.program.steps);
+    assert_eq!(first.program.predicted_live, third.program.predicted_live);
+    assert_eq!(first.report.peak_bytes, third.report.peak_bytes);
+}
+
+#[test]
+fn different_budgets_miss_while_sharing_one_family() {
+    let session = PlanSession::new(diamond());
+    let b_star = session.min_feasible_budget(Family::Exact);
+    let a = session.plan(&exact_req(BudgetSpec::Bytes(b_star))).unwrap();
+    let b = session.plan(&exact_req(BudgetSpec::Bytes(b_star + 16))).unwrap();
+    assert!(!Arc::ptr_eq(&a, &b));
+    let stats = session.stats();
+    assert_eq!(stats.hits, 0);
+    assert_eq!(stats.misses, 2, "distinct budgets are distinct cache keys");
+    assert_eq!(stats.families_built, 1, "…but the family is solved once");
+    // Request shape matters too: a different objective misses again.
+    let req_mc = PlanRequest {
+        budget: BudgetSpec::Bytes(b_star),
+        ..PlanRequest::new(PlannerId::ExactDp, Objective::MaxOverhead)
+    };
+    session.plan(&req_mc).unwrap();
+    assert_eq!(session.stats().misses, 3);
+    assert_eq!(session.stats().families_built, 1);
+}
+
+#[test]
+fn min_feasible_budget_is_memoized_and_agrees_with_the_free_function() {
+    let session = PlanSession::new(diamond());
+    let b = session.min_feasible_budget(Family::Exact);
+    assert_eq!(b, session.min_feasible_budget(Family::Exact));
+    assert_eq!(b, min_feasible_budget(&diamond(), Family::Exact));
+    assert_eq!(session.stats().families_built, 1);
+    // The approx family is a second (and last) family build.
+    let ba = session.min_feasible_budget(Family::Approx);
+    assert!(ba >= b, "exact family ⊇ approx family ⇒ B*_exact ≤ B*_approx");
+    assert_eq!(session.stats().families_built, 2);
+}
+
+#[test]
+fn fingerprint_changes_when_an_edge_is_added() {
+    assert_ne!(diamond().fingerprint(), diamond_with_skip().fingerprint());
+}
+
+#[test]
+fn fingerprint_collides_for_isomorphic_relabelings_of_the_diamond() {
+    // The relabeled fixture stores the two branch nodes in the opposite
+    // index order and renames everything: the same graph up to node
+    // numbering.
+    assert_eq!(diamond().fingerprint(), diamond_relabeled().fingerprint());
+    // Sanity: it is not an everything-collides hash.
+    assert_ne!(
+        diamond().fingerprint(),
+        diamond_with_mems([10, 20, 30, 41]).fingerprint()
+    );
+}
+
+#[test]
+fn compiled_plans_verify_against_their_own_reports() {
+    // The CompiledPlan bundle is internally consistent: the program's
+    // predicted peak is the simulator's activation peak, under both
+    // sim modes.
+    for mode in [SimMode::Liveness, SimMode::Strict] {
+        let session = PlanSession::new(diamond());
+        let req = PlanRequest {
+            sim_mode: mode,
+            ..PlanRequest::new(PlannerId::ExactDp, Objective::MinOverhead)
+        };
+        let cp = session.plan(&req).unwrap();
+        assert_eq!(cp.program.predicted_peak(), cp.report.peak_bytes, "{mode:?}");
+        assert!(cp.report.peak_bytes <= cp.peak_strict, "liveness ≤ strict ({mode:?})");
+        assert_eq!(cp.plan.overhead, cp.report.overhead_time, "{mode:?}");
+    }
+}
+
+#[test]
+fn shared_cache_serves_repeated_traces_across_sessions() {
+    let cache = PlanCache::shared(8);
+    let s1 =
+        PlanSession::with_cache(diamond(), EnumerationLimit::default(), cache.clone());
+    let req = exact_req(BudgetSpec::MinFeasible);
+    let a = s1.plan(&req).unwrap();
+    assert_eq!(cache.len(), 1);
+
+    // A second session over a re-trace of the same model (same node
+    // numbering, different names): same fingerprint, so the shared
+    // cache serves it without building any family. (Sharing across
+    // *renumbered* labelings is unsound for execution — see the session
+    // module docs — which is why the default cache is per-session.)
+    let retrace = diamond_with_mems([10, 20, 30, 40]);
+    let s2 = PlanSession::with_cache(retrace, EnumerationLimit::default(), cache.clone());
+    let b = s2.plan(&req).unwrap();
+    assert!(Arc::ptr_eq(&a, &b));
+    assert_eq!(s2.stats(), SessionStats { hits: 1, misses: 0, families_built: 0 });
+}
+
+#[test]
+fn plan_cache_is_lru_bounded() {
+    let cache = PlanCache::shared(2);
+    let session =
+        PlanSession::with_cache(diamond(), EnumerationLimit::default(), cache.clone());
+    let b_star = session.min_feasible_budget(Family::Exact);
+    let r1 = exact_req(BudgetSpec::Bytes(b_star));
+    let r2 = exact_req(BudgetSpec::Bytes(b_star + 8));
+    let r3 = exact_req(BudgetSpec::Bytes(b_star + 16));
+    session.plan(&r1).unwrap();
+    session.plan(&r2).unwrap();
+    // Touch r1 so r2 becomes the LRU entry, then insert r3.
+    session.plan(&r1).unwrap();
+    session.plan(&r3).unwrap();
+    assert_eq!(cache.len(), 2, "capacity bound holds");
+    // r1 survived (recently used); r2 was evicted and must recompile.
+    let before = session.stats();
+    session.plan(&r1).unwrap();
+    assert_eq!(session.stats().hits, before.hits + 1, "r1 still cached");
+    session.plan(&r2).unwrap();
+    assert_eq!(session.stats().misses, before.misses + 1, "r2 was evicted");
+}
