@@ -10,11 +10,17 @@
 //! BENCH_QUICK=1 cargo bench --bench planner_scaling   # CI smoke: smaller chains
 //! ```
 
+use std::sync::Arc;
+
 use recompute::bench::{bench, bench_report_json, time_once, BenchStats};
-use recompute::graph::{GraphBuilder, NodeId, OpKind};
+use recompute::graph::{
+    enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, GraphBuilder, NodeId, NodeSet,
+    OpKind,
+};
 use recompute::models::zoo;
-use recompute::planner::{build_context, Family, Objective, PlanRequest, PlannerId};
+use recompute::planner::{build_context, DpContext, Family, Objective, PlanRequest, PlannerId};
 use recompute::session::PlanSession;
+use recompute::util::pool::WorkerPool;
 
 fn main() {
     // CI smoke mode: fewer/shorter synthetic chains, one iteration each —
@@ -99,6 +105,53 @@ fn main() {
         assert!(warm_session.stats().hits >= 1, "warm path must be served from the cache");
         collected.push(cold);
         collected.push(warm);
+    }
+
+    println!("\n== threaded planner: exact-DP family precompute + budget frontier ==");
+    // The two hot loops the worker pool shards: per-member family
+    // precompute (DpContext construction) and the per-budget DP frontier.
+    // Each t1/t4 pair runs the identical workload; the closure asserts the
+    // frontier overheads are thread-count invariant before timing counts.
+    let nets: &[&str] = if quick { &["vgg19"] } else { &["vgg19", "resnet50"] };
+    for name in nets {
+        let e = zoo::find(name).expect("zoo model");
+        let g = Arc::new(e.build_batch(4));
+        let family = enumerate_lower_sets(&g, EnumerationLimit::default())
+            .unwrap_or_else(|| pruned_lower_sets(&g));
+        let serial = WorkerPool::with_threads(1);
+        let probe = DpContext::from_shared_with(g.clone(), family.clone(), &serial);
+        let b_star = probe.min_feasible_budget();
+        let top = probe.graph().mem_of(&NodeSet::full(probe.graph().len())).max(b_star + 1);
+        let budgets: Vec<u64> = (0..32).map(|i| b_star + (top - b_star) * i / 31).collect();
+        let reference: Vec<Option<u64>> = probe
+            .solve_frontier(&budgets, Objective::MinOverhead, &serial)
+            .into_iter()
+            .map(|s| s.map(|sol| sol.overhead))
+            .collect();
+        let iters = if quick { 1 } else { 5 };
+        let mut medians: Vec<f64> = Vec::new();
+        for threads in [1usize, 4] {
+            let pool = WorkerPool::with_threads(threads);
+            let stats = bench(&format!("exact_family_frontier_{name}_t{threads}"), 1, iters, || {
+                let ctx = DpContext::from_shared_with(g.clone(), family.clone(), &pool);
+                let rows: Vec<Option<u64>> = ctx
+                    .solve_frontier(&budgets, Objective::MinOverhead, &pool)
+                    .into_iter()
+                    .map(|s| s.map(|sol| sol.overhead))
+                    .collect();
+                assert_eq!(rows, reference, "frontier must be thread-count invariant");
+                rows.len()
+            });
+            println!("{}", stats.summary());
+            medians.push(stats.median.as_secs_f64());
+            collected.push(stats);
+        }
+        println!(
+            "  family={} budgets={}  t1/t4 {:.1}×",
+            family.len(),
+            budgets.len(),
+            medians[0] / medians[1].max(1e-9)
+        );
     }
 
     let doc = bench_report_json("planner", &collected);

@@ -17,7 +17,8 @@ use recompute::exec::{ChainSchedule, DagTask, DagTrainer, OpProgram, TowerTraine
 use recompute::models::executable::recost_profiled;
 use recompute::models::{mlp_tower, zoo};
 use recompute::planner::{build_context, Family, Objective};
-use recompute::runtime::{Backend, NativeBackend};
+use recompute::runtime::backend::gemm;
+use recompute::runtime::{Backend, MemoryPool, NativeBackend};
 use recompute::sim::{canonical_trace, measure, SimMode, SimOptions};
 
 /// `BENCH_QUICK=1` scales every (warmup, iters) pair down for the CI
@@ -95,6 +96,41 @@ fn main() {
     record(run_bench("native_layer_bwd_32x64", 5, 30, || {
         be.run("layer_bwd", &[x.clone(), w.clone(), bias.clone(), x.clone()]).unwrap()
     }));
+
+    // -- GEMM tiers at 256×256×256 (the kernel-rewrite hot shape) ----------
+    // naive = the pre-rewrite reference triple loop; blocked = the
+    // register-tiled + panel-packed kernel; dispatched = whatever tier
+    // `active_tier()` picked for this host (AVX2 → simd). The shape stays
+    // fixed in quick mode so result names are stable across bench runs.
+    let dim = 256usize;
+    let mpool = MemoryPool::default();
+    let a256: Vec<f32> = (0..dim * dim).map(|i| ((i % 17) as f32) * 0.013 - 0.1).collect();
+    let b256: Vec<f32> = (0..dim * dim).map(|i| ((i % 23) as f32) * 0.009 - 0.09).collect();
+    let gemm_flops = 2.0 * (dim * dim * dim) as f64;
+    let naive = run_bench("matmul_256_naive", 1, 10, || {
+        gemm::matmul_naive(&mpool, &a256, &b256, dim, dim, dim)
+    });
+    let blocked = run_bench("matmul_256_blocked", 1, 10, || {
+        gemm::matmul(&mpool, &a256, &b256, dim, dim, dim, false)
+    });
+    let dispatched = run_bench("matmul_256_dispatched", 1, 10, || {
+        gemm::matmul_auto(&mpool, &a256, &b256, dim, dim, dim)
+    });
+    let t_naive = naive.median.as_secs_f64();
+    let t_blocked = blocked.median.as_secs_f64();
+    let t_dispatched = dispatched.median.as_secs_f64();
+    record(naive);
+    record(blocked);
+    record(dispatched);
+    println!(
+        "  tier={}  {:.2} → {:.2} → {:.2} GFLOP/s  (blocked {:.1}×, dispatched {:.1}× vs naive)",
+        gemm::active_tier().name(),
+        gemm_flops / t_naive / 1e9,
+        gemm_flops / t_blocked / 1e9,
+        gemm_flops / t_dispatched / 1e9,
+        t_naive / t_blocked.max(1e-12),
+        t_naive / t_dispatched.max(1e-12),
+    );
 
     // -- real executor step (native backend, 12-layer tower) ---------------
     let cfg = TrainConfig { layers: 12, steps: 1, lr: 0.05, seed: 1, log_every: 0 };

@@ -1,0 +1,86 @@
+//! Guard against silent bench-schema drift: compare a committed
+//! `BENCH_*.json` against a freshly generated one (usually from a
+//! `BENCH_QUICK=1` run in CI) and fail if the fresh file introduces
+//! result names or keys the committed file does not carry.
+//!
+//! Rules (quick mode trims iteration counts, never renames):
+//!   * both files must describe the same `suite`;
+//!   * every fresh result name must exist in the committed file — a new
+//!     or renamed benchmark means the committed JSON is stale;
+//!   * every result (both files) must carry exactly the canonical keys
+//!     `{name, iters, min_ms, median_ms, mean_ms, max_ms}` with positive
+//!     finite timings and `iters ≥ 1`.
+//!
+//! ```sh
+//! cargo run --example bench_schema_check -- committed.json fresh.json
+//! ```
+
+use recompute::anyhow::{anyhow, bail, Result};
+use recompute::util::json::Json;
+
+const KEYS: [&str; 6] = ["name", "iters", "min_ms", "median_ms", "mean_ms", "max_ms"];
+
+/// Parse one bench report, validate every result row, and return
+/// `(suite, result names)` in file order.
+fn load(path: &str) -> Result<(String, Vec<String>)> {
+    let text = std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| anyhow!("parsing {path}: {e}"))?;
+    let suite = doc
+        .get("suite")
+        .as_str()
+        .ok_or_else(|| anyhow!("{path}: missing string field 'suite'"))?
+        .to_string();
+    let results =
+        doc.get("results").as_arr().ok_or_else(|| anyhow!("{path}: missing 'results' array"))?;
+    let mut names = Vec::with_capacity(results.len());
+    for (i, r) in results.iter().enumerate() {
+        let obj = r.as_obj().ok_or_else(|| anyhow!("{path}: results[{i}] is not an object"))?;
+        let keys: Vec<&str> = obj.keys().map(String::as_str).collect();
+        let mut want = KEYS.to_vec();
+        want.sort_unstable();
+        if keys != want {
+            bail!("{path}: results[{i}] keys {keys:?} differ from the schema {want:?}");
+        }
+        let name = r
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("{path}: results[{i}].name is not a string"))?;
+        if r.get("iters").as_u64().unwrap_or(0) < 1 {
+            bail!("{path}: {name}: iters must be ≥ 1");
+        }
+        for key in ["min_ms", "median_ms", "mean_ms", "max_ms"] {
+            let v = r.get(key).as_f64().unwrap_or(f64::NAN);
+            if !v.is_finite() || v <= 0.0 {
+                bail!("{path}: {name}: {key} must be positive and finite, got {v}");
+            }
+        }
+        names.push(name.to_string());
+    }
+    Ok((suite, names))
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let [committed, fresh] = args.as_slice() else {
+        bail!("usage: bench_schema_check <committed.json> <fresh.json>");
+    };
+    let (committed_suite, committed_names) = load(committed)?;
+    let (fresh_suite, fresh_names) = load(fresh)?;
+    if committed_suite != fresh_suite {
+        bail!("suite mismatch: committed '{committed_suite}' vs fresh '{fresh_suite}'");
+    }
+    let missing: Vec<&String> =
+        fresh_names.iter().filter(|n| !committed_names.contains(*n)).collect();
+    if !missing.is_empty() {
+        bail!(
+            "fresh results not present in {committed}: {missing:?} — \
+             re-run the full bench and commit the refreshed JSON"
+        );
+    }
+    println!(
+        "schema ok: suite '{committed_suite}', {}/{} fresh results covered by the committed file",
+        fresh_names.len(),
+        committed_names.len(),
+    );
+    Ok(())
+}

@@ -3,6 +3,11 @@
 //! overhead at each point — the tradeoff the general recomputation
 //! problem (§3) formalizes.
 //!
+//! The sweep runs through [`recompute::planner::DpContext::solve_frontier`]:
+//! every budget row is an independent DP solve, sharded across the
+//! worker pool (`REPRO_THREADS` controls the width; the rows are
+//! bit-identical at any thread count).
+//!
 //! ```sh
 //! cargo run --release --example memory_frontier -- [network]
 //! ```
@@ -10,6 +15,7 @@
 use recompute::fmt_bytes;
 use recompute::models::zoo;
 use recompute::planner::{build_context, Family, Objective};
+use recompute::util::pool;
 
 fn main() -> recompute::anyhow::Result<()> {
     let name = std::env::args().nth(1).unwrap_or_else(|| "ResNet50".into());
@@ -19,16 +25,24 @@ fn main() -> recompute::anyhow::Result<()> {
     let ctx = build_context(&g, Family::Approx);
     let b_star = ctx.min_feasible_budget();
     let fwd = g.total_time() as f64;
-    println!("== {} — overhead vs budget frontier (B* = {}) ==", e.name, fmt_bytes(b_star));
+    let pool = pool::global();
+    println!(
+        "== {} — overhead vs budget frontier (B* = {}, {} threads) ==",
+        e.name,
+        fmt_bytes(b_star),
+        pool.threads()
+    );
     println!("{:>12} {:>10} {:>8}  bar", "budget", "overhead", "+fwd%");
-    for pct in [100u64, 110, 125, 150, 200, 300, 400, 600, 800] {
-        let budget = b_star * pct / 100;
-        let sol = ctx.solve(budget, Objective::MinOverhead).unwrap();
+    let pcts = [100u64, 110, 125, 150, 200, 300, 400, 600, 800];
+    let budgets: Vec<u64> = pcts.iter().map(|pct| b_star * pct / 100).collect();
+    let rows = ctx.solve_frontier(&budgets, Objective::MinOverhead, &pool);
+    for (budget, sol) in budgets.iter().zip(rows) {
+        let sol = sol.expect("budgets ≥ B* are feasible");
         let frac = sol.overhead as f64 / fwd;
         let bar = "#".repeat((frac * 50.0) as usize);
         println!(
             "{:>12} {:>10} {:>7.0}%  {bar}",
-            fmt_bytes(budget),
+            fmt_bytes(*budget),
             sol.overhead,
             frac * 100.0
         );

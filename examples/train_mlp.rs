@@ -15,7 +15,9 @@
 //! ```
 
 use recompute::anyhow::Result;
-use recompute::coordinator::report::{loss_summary, report_json, session_json, session_summary};
+use recompute::coordinator::report::{
+    loss_summary, report_json, session_json, session_summary, timing_summary,
+};
 use recompute::coordinator::train::{
     compare_schedules, trajectories_identical, BudgetSpec, ScheduleMode,
 };
@@ -34,7 +36,7 @@ fn main() -> Result<()> {
     println!(
         "== end-to-end training: {layers}-layer tower (width {width}, batch {batch}), {steps} steps, native backend =="
     );
-    let (reports, session_stats) = compare_schedules(
+    let (reports, session_stats, session_timing) = compare_schedules(
         || TowerTrainer::native(batch, width, &cfg),
         &cfg,
         &[ScheduleMode::Vanilla, ScheduleMode::Tc, ScheduleMode::Mc],
@@ -81,6 +83,7 @@ fn main() -> Result<()> {
     // One session served both planned modes: the tower's lower-set
     // family and B* were solved once.
     println!("{}", session_summary(&session_stats));
+    println!("{}", timing_summary(&session_timing));
     assert_eq!(session_stats.families_built, 1);
 
     let mut arr: Vec<Json> =

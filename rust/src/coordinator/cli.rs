@@ -43,10 +43,16 @@
 //!   --budget-frac F   activation budget as a fraction of vanilla
 //!                     (default without either flag: minimal feasible)
 //!   --report FILE     write a JSON report (tower only)
-//!   --stats           print per-kernel backend timing/byte statistics
-//!                     plus buffer-pool counters (allocs, reuses,
-//!                     high-water bytes) and the plan-session counters
-//!                     (cache hits/misses, families built)
+//!   --threads N       worker threads for the planner's parallel family
+//!                     construction / DP sweeps (overrides the
+//!                     REPRO_THREADS environment variable; default:
+//!                     available parallelism). Plans are bit-identical
+//!                     at any thread count
+//!   --stats           print per-kernel backend timing/byte/GFLOP-s
+//!                     statistics plus buffer-pool counters (allocs,
+//!                     reuses, high-water bytes), the plan-session
+//!                     counters (cache hits/misses, families built) and
+//!                     the planner wall-time (family build, compile)
 //!   --quiet           suppress per-step loss logging
 
 use std::path::PathBuf;
@@ -58,7 +64,9 @@ use crate::sim::SimMode;
 use crate::util::json::Json;
 use crate::{fmt_bytes, parse_budget};
 
-use super::report::{loss_summary, pool_summary, report_json, session_json, session_summary};
+use super::report::{
+    loss_summary, pool_summary, report_json, session_json, session_summary, timing_summary,
+};
 use super::train::{
     compare_schedules, parse_modes, trajectories_identical, BudgetSpec, ScheduleMode,
 };
@@ -77,6 +85,7 @@ struct TrainArgs {
     budget: Option<u64>,
     budget_frac: Option<f64>,
     report: Option<PathBuf>,
+    threads: Option<usize>,
     stats: bool,
     quiet: bool,
 }
@@ -108,6 +117,7 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
         budget: None,
         budget_frac: None,
         report: None,
+        threads: None,
         stats: false,
         quiet: false,
     };
@@ -128,10 +138,11 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
             "--budget" => out.budget = Some(parse_budget(val()?)?),
             "--budget-frac" => out.budget_frac = Some(val()?.parse()?),
             "--report" => out.report = Some(PathBuf::from(val()?)),
+            "--threads" => out.threads = Some(val()?.parse()?),
             "--stats" => out.stats = true,
             "--quiet" => out.quiet = true,
             "--help" | "-h" => {
-                bail!("see module docs: repro train [--model tower|<zoo>] [--backend native|pjrt] [--batch N] [--width N] [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--sim liveness|strict] [--budget GB|512KiB] [--budget-frac F] [--report FILE] [--stats] [--quiet]")
+                bail!("see module docs: repro train [--model tower|<zoo>] [--backend native|pjrt] [--batch N] [--width N] [--artifacts DIR] [--layers N] [--steps N] [--lr F] [--mode vanilla|tc|mc|all] [--sim liveness|strict] [--budget GB|512KiB] [--budget-frac F] [--report FILE] [--threads N] [--stats] [--quiet]")
             }
             other => bail!("unknown train flag {other}"),
         }
@@ -145,6 +156,10 @@ fn parse_args(args: &[String]) -> Result<TrainArgs> {
 /// Entry point for `repro train`.
 pub fn cmd_train(args: &[String]) -> Result<()> {
     let a = parse_args(args)?;
+    if let Some(t) = a.threads {
+        // Latch the planner pool width before any session spins it up.
+        crate::util::pool::set_global_threads(t);
+    }
     let cfg = TrainConfig {
         layers: a.layers,
         steps: a.steps,
@@ -161,7 +176,7 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
     // Each mode gets a fresh trainer: training mutates parameters, and the
     // schedules must see identical initial conditions for the bitwise
     // loss comparison. One PlanSession serves every planned mode.
-    let (results, session_stats): (Vec<(ScheduleMode, TrainReport)>, _) =
+    let (results, session_stats, session_timing): (Vec<(ScheduleMode, TrainReport)>, _, _) =
         match a.backend.as_str() {
             "native" => compare_schedules(
                 || TowerTrainer::native(a.batch, a.width, &cfg),
@@ -214,21 +229,14 @@ pub fn cmd_train(args: &[String]) -> Result<()> {
         for (mode, report) in &results {
             println!("-- kernel stats ({}, {} backend) --", mode.label(), report.backend);
             for s in &report.kernel_stats {
-                println!(
-                    "  {:<14} calls={:<6} total={:>10.2?} mean={:>9.2?} in={:<10} out={}",
-                    s.kernel,
-                    s.calls,
-                    s.total,
-                    s.mean(),
-                    fmt_bytes(s.bytes_in),
-                    fmt_bytes(s.bytes_out),
-                );
+                println!("  {}", kernel_stat_line(s));
             }
             if let Some(pool) = &report.pool {
                 println!("  {}", pool_summary(pool));
             }
         }
         println!("{}", session_summary(&session_stats));
+        println!("{}", timing_summary(&session_timing));
     }
 
     if let Some(path) = a.report {
@@ -360,21 +368,14 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
         for (label, r) in rows {
             println!("-- kernel stats ({label}, {} backend) --", r.backend);
             for s in &r.kernel_stats {
-                println!(
-                    "  {:<14} calls={:<6} total={:>10.2?} mean={:>9.2?} in={:<10} out={}",
-                    s.kernel,
-                    s.calls,
-                    s.total,
-                    s.mean(),
-                    fmt_bytes(s.bytes_in),
-                    fmt_bytes(s.bytes_out),
-                );
+                println!("  {}", kernel_stat_line(s));
             }
             if let Some(pool) = &r.pool {
                 println!("  {}", pool_summary(pool));
             }
         }
         println!("{}", session_summary(&cmp.stats));
+        println!("{}", timing_summary(&cmp.timing));
     }
     for run in &cmp.runs {
         if !run.grads_match || !run.losses_identical {
@@ -394,6 +395,22 @@ fn train_zoo(a: &TrainArgs, cfg: &TrainConfig) -> Result<()> {
     Ok(())
 }
 
+/// One `--stats` row for a kernel: calls, wall-clock, bytes and the
+/// achieved GFLOP/s (0.00 when the backend attributes no flops, e.g.
+/// PJRT's opaque artifacts).
+fn kernel_stat_line(s: &crate::runtime::KernelStat) -> String {
+    format!(
+        "{:<14} calls={:<6} total={:>10.2?} mean={:>9.2?} in={:<10} out={:<10} {:>8.2} GFLOP/s",
+        s.kernel,
+        s.calls,
+        s.total,
+        s.mean(),
+        fmt_bytes(s.bytes_in),
+        fmt_bytes(s.bytes_out),
+        s.gflops(),
+    )
+}
+
 /// Loss summary for DAG reports (first → last).
 fn dag_loss_summary(r: &crate::exec::DagTrainReport) -> String {
     match (r.losses.first(), r.losses.last()) {
@@ -407,7 +424,11 @@ fn run_pjrt(
     a: &TrainArgs,
     cfg: &TrainConfig,
     modes: &[ScheduleMode],
-) -> Result<(Vec<(ScheduleMode, TrainReport)>, crate::session::SessionStats)> {
+) -> Result<(
+    Vec<(ScheduleMode, TrainReport)>,
+    crate::session::SessionStats,
+    crate::session::SessionTiming,
+)> {
     let dir = a.artifacts.clone();
     compare_schedules(
         || TowerTrainer::from_artifacts(&dir, cfg),
@@ -423,7 +444,11 @@ fn run_pjrt(
     a: &TrainArgs,
     _cfg: &TrainConfig,
     _modes: &[ScheduleMode],
-) -> Result<(Vec<(ScheduleMode, TrainReport)>, crate::session::SessionStats)> {
+) -> Result<(
+    Vec<(ScheduleMode, TrainReport)>,
+    crate::session::SessionStats,
+    crate::session::SessionTiming,
+)> {
     bail!(
         "the pjrt backend (artifacts at {}) requires `cargo build --features xla` \
          (plus real PJRT libraries and `make artifacts`; see README 'Backend matrix')",

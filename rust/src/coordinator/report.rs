@@ -4,7 +4,7 @@
 use crate::exec::TrainReport;
 use crate::fmt_bytes;
 use crate::runtime::PoolStats;
-use crate::session::SessionStats;
+use crate::session::{SessionStats, SessionTiming};
 use crate::util::json::Json;
 
 /// Serialize a training report for EXPERIMENTS.md / plotting.
@@ -19,6 +19,8 @@ pub fn report_json(label: &str, r: &TrainReport) -> Json {
                 .set("total_ms", (s.total.as_secs_f64() * 1000.0).into())
                 .set("bytes_in", s.bytes_in.into())
                 .set("bytes_out", s.bytes_out.into())
+                .set("flops", s.flops.into())
+                .set("gflops", s.gflops().into())
         })
         .collect();
     let mut out = Json::obj()
@@ -79,6 +81,15 @@ pub fn session_summary(s: &SessionStats) -> String {
     )
 }
 
+/// One-line rendering of the planner wall-time counters — printed next
+/// to the session counters by `--stats` (`repro plan` and `repro train`).
+pub fn timing_summary(t: &SessionTiming) -> String {
+    format!(
+        "planner: family_build={:.2?} compile={:.2?}",
+        t.family_build, t.compile
+    )
+}
+
 /// First/last loss summary line.
 pub fn loss_summary(r: &TrainReport) -> String {
     let first = r.losses.first().copied().unwrap_or(f32::NAN);
@@ -120,6 +131,8 @@ mod tests {
         let ks = j.get("kernel_stats").as_arr().unwrap();
         assert_eq!(ks[0].get("kernel").as_str(), Some("layer_fwd"));
         assert_eq!(ks[0].get("calls").as_u64(), Some(12));
+        assert_eq!(ks[0].get("flops").as_u64(), Some(0));
+        assert_eq!(ks[0].get("gflops").as_f64(), Some(0.0));
         assert_eq!(j.get("pool").get("reuses").as_u64(), Some(30));
         assert_eq!(j.get("pool").get("high_water_bytes").as_u64(), Some(4096));
         assert!(loss_summary(&r).contains("1.0000 → 0.5000"));
@@ -131,6 +144,18 @@ mod tests {
         assert!(line.contains("allocs=10"), "{line}");
         assert!(line.contains("75% recycled"), "{line}");
         assert!(line.contains("4.0KiB") || line.contains("4096"), "{line}");
+    }
+
+    #[test]
+    fn timing_summary_renders_both_counters() {
+        let t = SessionTiming {
+            family_build: std::time::Duration::from_millis(12),
+            compile: std::time::Duration::from_micros(340),
+        };
+        let line = timing_summary(&t);
+        assert!(line.contains("planner:"), "{line}");
+        assert!(line.contains("family_build="), "{line}");
+        assert!(line.contains("compile="), "{line}");
     }
 
     #[test]

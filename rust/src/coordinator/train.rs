@@ -45,7 +45,7 @@ use crate::models::{mlp_tower, zoo};
 use crate::planner::{Objective, PlanRequest, PlannerId};
 pub use crate::planner::BudgetSpec;
 use crate::runtime::NativeBackend;
-use crate::session::{PlanSession, SessionStats};
+use crate::session::{PlanSession, SessionStats, SessionTiming};
 use crate::sim::SimMode;
 
 /// Typed schedule selector — replaces the stringly `"vanilla"`/`"tc"`/
@@ -121,15 +121,16 @@ pub fn schedule_for_mode(
 /// Train `cfg` under each schedule in `modes`, each on a **fresh** trainer
 /// from `make_trainer` so all runs share identical initial conditions.
 /// One [`PlanSession`] serves every planned mode (the tower's lower-set
-/// family and `B*` are solved once); its stats are returned alongside
-/// the `(mode, report)` pairs, in the order requested.
+/// family and `B*` are solved once); its stats and wall-time counters
+/// are returned alongside the `(mode, report)` pairs, in the order
+/// requested.
 pub fn compare_schedules<B, F>(
     make_trainer: F,
     cfg: &TrainConfig,
     modes: &[ScheduleMode],
     budget: BudgetSpec,
     quiet: bool,
-) -> Result<(Vec<(ScheduleMode, TrainReport)>, SessionStats)>
+) -> Result<(Vec<(ScheduleMode, TrainReport)>, SessionStats, SessionTiming)>
 where
     B: crate::runtime::Backend,
     F: Fn() -> Result<TowerTrainer<B>>,
@@ -164,7 +165,8 @@ where
         let report = trainer.train(&sched, cfg)?;
         results.push((mode, report));
     }
-    Ok((results, session.map(|s| s.stats()).unwrap_or_default()))
+    let (stats, timing) = session.map(|s| (s.stats(), s.timing())).unwrap_or_default();
+    Ok((results, stats, timing))
 }
 
 /// Recomputation's defining property: two schedules of the same
@@ -235,6 +237,9 @@ pub struct ZooComparison {
     /// The session's amortization counters: for `--mode all`,
     /// `families_built == 1` even though two objectives were planned.
     pub stats: SessionStats,
+    /// Wall-clock the session spent on family construction and plan
+    /// compilation (the `--stats` planner line).
+    pub timing: SessionTiming,
 }
 
 impl ZooComparison {
@@ -394,6 +399,7 @@ pub fn train_zoo_model(
         vanilla,
         runs,
         stats: session.stats(),
+        timing: session.timing(),
     })
 }
 
@@ -521,7 +527,7 @@ mod tests {
     #[test]
     fn native_compare_runs_all_modes() {
         let cfg = TrainConfig { layers: 6, steps: 2, lr: 0.05, seed: 9, log_every: 0 };
-        let (results, stats) = compare_schedules(
+        let (results, stats, timing) = compare_schedules(
             || TowerTrainer::native(4, 16, &cfg),
             &cfg,
             &[ScheduleMode::Vanilla, ScheduleMode::Tc],
@@ -533,5 +539,9 @@ mod tests {
         assert!(trajectories_identical(&results[0].1, &results[1].1));
         assert!(results[1].1.peak_bytes < results[0].1.peak_bytes);
         assert_eq!(stats.families_built, 1, "one tower session for the planned mode");
+        assert!(
+            timing.family_build > std::time::Duration::ZERO,
+            "planned mode must accrue family-build wall-time"
+        );
     }
 }

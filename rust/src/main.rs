@@ -8,11 +8,15 @@
 //!   tradeoff sweeps of Figure 3.
 //! - `timing` — §5.1 ExactDP vs ApproxDP planner wall-clock.
 //! - `plan --network NAME [--batch N] [--budget GB|512KiB] [--objective
-//!    tc|mc] [--family exact|approx] [--sim liveness|strict] [--json]` —
+//!    tc|mc] [--family exact|approx] [--sim liveness|strict] [--json]
+//!    [--threads N] [--stats]` —
 //!    plan one network and print the schedule (budgets: bare number = GB,
 //!    or human-readable bytes; `--sim strict` reproduces the Table 2
 //!    no-liveness ablation, default is the Table 1 liveness measurement;
-//!    `--json` emits the compiled-plan summary as machine-readable JSON).
+//!    `--json` emits the compiled-plan summary as machine-readable JSON;
+//!    `--threads` sets the planner worker-pool width, overriding
+//!    `REPRO_THREADS` — plans are bit-identical at any thread count;
+//!    `--stats` prints the session counters + planner wall-time).
 //! - `plan --graph FILE.json …` — plan a user-supplied graph.
 //! - `train …` — run the real training executor (see `exec`) on the
 //!   pure-Rust native backend by default, or PJRT with `--features xla`;
@@ -25,7 +29,7 @@ use recompute::anyhow::{anyhow, bail, Context, Result};
 
 use recompute::bench::tables;
 use recompute::coordinator;
-use recompute::coordinator::report::session_json;
+use recompute::coordinator::report::{session_json, session_summary, timing_summary};
 use recompute::graph::Graph;
 use recompute::{fmt_bytes, parse_budget};
 use recompute::models::zoo;
@@ -115,7 +119,7 @@ fn print_usage() {
            timing                        ExactDP vs ApproxDP planner runtime (§5.1)\n\
            plan --network N [--batch B] [--budget GB|512KiB]\n\
                 [--objective tc|mc] [--family exact|approx] [--chen]\n\
-                [--sim liveness|strict] [--json]\n\
+                [--sim liveness|strict] [--json] [--threads N] [--stats]\n\
            plan --graph FILE.json [...]  plan a user-supplied graph JSON\n\
            experiment --config F.json [--csv out.csv]  declarative sweep runner\n\
            export --network N --out F    dump a zoo graph as JSON\n\
@@ -174,6 +178,10 @@ fn summarize_figure3(e: &zoo::ZooEntry, batches: &[u64], device: u64) {
 }
 
 fn cmd_plan(flags: &Flags) -> Result<()> {
+    if let Some(t) = flags.parse::<usize>("--threads")? {
+        // Latch the planner pool width before the session spins it up.
+        recompute::util::pool::set_global_threads(t);
+    }
     let g: Graph = if let Some(path) = flags.get("--graph") {
         Graph::from_json_file(std::path::Path::new(path))?
     } else if let Some(name) = flags.get("--network") {
@@ -196,6 +204,7 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
     };
     let mode = SimMode::parse(flags.get("--sim").unwrap_or("liveness"))?;
     let json_out = flags.has("--json");
+    let stats_out = flags.has("--stats");
     let planner = if flags.has("--chen") {
         PlannerId::Chen
     } else if family == Family::Exact {
@@ -281,6 +290,9 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
             cp.report.overhead_time,
             100.0 * cp.report.overhead_time as f64 / g.total_time() as f64,
         );
+        if stats_out {
+            print_plan_stats(&session);
+        }
         return Ok(());
     }
 
@@ -303,7 +315,20 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
             println!("  L{} — |L|={}", i + 1, l.len());
         }
     }
+    if stats_out {
+        print_plan_stats(&session);
+    }
     Ok(())
+}
+
+/// `plan --stats`: the session's amortization counters, the planner
+/// wall-time (family build + compile) and the worker-pool width that
+/// produced them. Deliberately absent from `--json` output, whose bytes
+/// must be identical at any thread count.
+fn print_plan_stats(session: &PlanSession) {
+    println!("{}", session_summary(&session.stats()));
+    println!("{}", timing_summary(&session.timing()));
+    println!("threads: {}", session.pool().threads());
 }
 
 fn cmd_experiment(flags: &Flags) -> Result<()> {

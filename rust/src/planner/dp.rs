@@ -25,6 +25,7 @@
 use std::sync::Arc;
 
 use crate::graph::{Graph, NodeSet};
+use crate::util::pool::WorkerPool;
 
 use super::strategy::LowerSetChain;
 use super::Objective;
@@ -80,24 +81,43 @@ impl DpContext {
     }
 
     /// Build a context sharing an existing graph handle (the session's
-    /// zero-copy path).
-    pub fn from_shared(g: Arc<Graph>, mut family: Vec<NodeSet>) -> Self {
+    /// zero-copy path). Runs the per-member precompute on the process-wide
+    /// [`crate::util::pool::global`] worker pool.
+    pub fn from_shared(g: Arc<Graph>, family: Vec<NodeSet>) -> Self {
+        Self::from_shared_with(g, family, &crate::util::pool::global())
+    }
+
+    /// [`Self::from_shared`] with an explicit worker pool.
+    ///
+    /// The per-member quantities (boundary, Eq. 2 extra memory, `M(L)` /
+    /// `T(L)` prefix values) are independent across family members, so
+    /// they shard across the pool; [`WorkerPool::map`] returns them in
+    /// family order, making the built context — and every plan derived
+    /// from it — bit-identical at any thread count.
+    pub fn from_shared_with(g: Arc<Graph>, mut family: Vec<NodeSet>, pool: &WorkerPool) -> Self {
         family.sort_by(|a, b| a.len().cmp(&b.len()).then_with(|| a.words().cmp(b.words())));
         family.dedup();
         assert!(family.first().map(|l| l.is_empty()).unwrap_or(false), "family must contain ∅");
         assert_eq!(family.last().map(|l| l.len()), Some(g.len()), "family must contain V");
-        let boundaries: Vec<NodeSet> = family.iter().map(|l| g.boundary(l)).collect();
-        let extra_mem: Vec<u64> = family
-            .iter()
-            .map(|l| g.mem_of(&g.frontier(l)) + g.mem_of(&g.frontier_coinputs(l)))
-            .collect();
+        let per_member: Vec<(Vec<u32>, u64, u64, u64)> = pool.map(family.len(), |i| {
+            let l = &family[i];
+            let boundary: Vec<u32> = g.boundary(l).iter().map(|v| v.0).collect();
+            let extra = g.mem_of(&g.frontier(l)) + g.mem_of(&g.frontier_coinputs(l));
+            (boundary, extra, g.mem_of(l), g.time_of(l))
+        });
+        let mut boundary_nodes: Vec<Vec<u32>> = Vec::with_capacity(per_member.len());
+        let mut extra_mem: Vec<u64> = Vec::with_capacity(per_member.len());
+        let mut mem_cum: Vec<u64> = Vec::with_capacity(per_member.len());
+        let mut time_cum: Vec<u64> = Vec::with_capacity(per_member.len());
+        for (b, e, m, t) in per_member {
+            boundary_nodes.push(b);
+            extra_mem.push(e);
+            mem_cum.push(m);
+            time_cum.push(t);
+        }
         let sizes: Vec<u32> = family.iter().map(|l| l.len()).collect();
         let next_size_start: Vec<usize> =
             sizes.iter().map(|&s| sizes.partition_point(|&x| x <= s)).collect();
-        let mem_cum: Vec<u64> = family.iter().map(|l| g.mem_of(l)).collect();
-        let time_cum: Vec<u64> = family.iter().map(|l| g.time_of(l)).collect();
-        let boundary_nodes: Vec<Vec<u32>> =
-            boundaries.iter().map(|b| b.iter().map(|v| v.0).collect()).collect();
         let node_mem: Vec<u64> = (0..g.len()).map(|v| g.node(crate::graph::NodeId(v)).mem).collect();
         let node_time: Vec<u64> =
             (0..g.len()).map(|v| g.node(crate::graph::NodeId(v)).time).collect();
@@ -242,6 +262,23 @@ impl DpContext {
         Some(DpSolution { chain, overhead: t_star as u64 })
     }
 
+    /// Solve the DP at every budget in `budgets`, sharded across the
+    /// worker pool — the budget↔overhead *frontier* of §3.
+    ///
+    /// Each budget row is an independent [`Self::solve`] run over the
+    /// shared (read-only) context, so the sweep is embarrassingly
+    /// parallel; results come back in `budgets` order and each row is the
+    /// very `DpSolution` the serial call would produce, at any thread
+    /// count.
+    pub fn solve_frontier(
+        &self,
+        budgets: &[u64],
+        objective: Objective,
+        pool: &WorkerPool,
+    ) -> Vec<Option<DpSolution>> {
+        pool.map(budgets.len(), |i| self.solve(budgets[i], objective))
+    }
+
     /// Smallest budget for which `solve` succeeds.
     ///
     /// One **minimax DP** pass instead of the paper's binary search: per
@@ -294,7 +331,11 @@ impl DpContext {
     }
 
     /// Reference implementation of the minimal budget by binary search
-    /// (the paper's §5.1 method) — used to validate the minimax DP.
+    /// (the paper's §5.1 method) — the serial **cross-check oracle** for
+    /// the fast paths: the one-pass minimax DP validates against it in
+    /// the unit tests, the planner-scaling bench times both in release,
+    /// and the threaded-planner determinism suite re-derives `B*`
+    /// through it before sweeping the parallel frontier.
     pub fn min_feasible_budget_by_search(&self) -> u64 {
         let mut hi = 2 * self.g.total_mem() + self.extra_mem.iter().copied().max().unwrap_or(0);
         let mut lo = 0u64;
@@ -546,5 +587,57 @@ mod tests {
         }
         assert!(ts.contains(&(7, 5)) && ts.contains(&(3, 2)) && ts.contains(&(6, 3)));
         assert!(!ts.contains(&(5, 10)), "{ts:?}");
+    }
+
+    #[test]
+    fn parallel_context_build_is_bit_identical_to_serial() {
+        use crate::util::pool::WorkerPool;
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(0x715);
+        let serial = WorkerPool::with_threads(1);
+        let four = WorkerPool::with_threads(4);
+        for _ in 0..12 {
+            let n = rng.range(3, 11);
+            let g = Arc::new(crate::testutil::random_dag(&mut rng, n));
+            let fam = enumerate_lower_sets(&g, EnumerationLimit::default()).unwrap();
+            let c1 = DpContext::from_shared_with(g.clone(), fam.clone(), &serial);
+            let c4 = DpContext::from_shared_with(g.clone(), fam, &four);
+            assert_eq!(c1.family, c4.family);
+            assert_eq!(c1.extra_mem, c4.extra_mem);
+            assert_eq!(c1.boundary_nodes, c4.boundary_nodes);
+            assert_eq!(c1.mem_cum, c4.mem_cum);
+            assert_eq!(c1.time_cum, c4.time_cum);
+            assert_eq!(c1.min_feasible_budget(), c4.min_feasible_budget());
+        }
+    }
+
+    #[test]
+    fn frontier_rows_match_serial_solves_at_any_thread_count() {
+        use crate::util::pool::WorkerPool;
+        let g = chain_graph(&[4, 7, 2, 9, 5, 3, 8, 6], &[2, 1, 3, 1, 2, 1, 2, 1]);
+        let ctx = full_ctx(&g);
+        // Anchor the sweep at the oracle's B* — the binary-search
+        // reference cross-checks the minimax DP on the same context the
+        // frontier runs over.
+        let b_star = ctx.min_feasible_budget_by_search();
+        assert_eq!(b_star, ctx.min_feasible_budget());
+        let budgets: Vec<u64> = (0..16).map(|i| b_star.saturating_sub(2) + i * 3).collect();
+        for obj in [Objective::MinOverhead, Objective::MaxOverhead] {
+            let serial: Vec<Option<(Vec<NodeSet>, u64)>> = budgets
+                .iter()
+                .map(|&b| {
+                    ctx.solve(b, obj).map(|s| (s.chain.lower_sets().to_vec(), s.overhead))
+                })
+                .collect();
+            for t in [1usize, 4] {
+                let pool = WorkerPool::with_threads(t);
+                let rows = ctx.solve_frontier(&budgets, obj, &pool);
+                let got: Vec<Option<(Vec<NodeSet>, u64)>> = rows
+                    .into_iter()
+                    .map(|r| r.map(|s| (s.chain.lower_sets().to_vec(), s.overhead)))
+                    .collect();
+                assert_eq!(serial, got, "threads={t} obj={obj:?}");
+            }
+        }
     }
 }

@@ -438,7 +438,10 @@ fn exact_context(g: &Graph) -> (DpContext, bool) {
 }
 
 /// Build the (possibly expensive) DP context for a family once; reuse it
-/// across budget searches and multiple solves. (Prefer
+/// across budget searches and multiple solves. The per-member precompute
+/// shards across the process-wide [`crate::util::pool::global`] worker
+/// pool (`--threads` / `REPRO_THREADS`); the result is bit-identical at
+/// any thread count. (Prefer
 /// [`crate::session::PlanSession`], which does this lazily and caches.)
 pub fn build_context(g: &Graph, family: Family) -> DpContext {
     match family {

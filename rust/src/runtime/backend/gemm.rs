@@ -1,0 +1,502 @@
+//! Tiered GEMM kernels behind the native backend's dense path.
+//!
+//! Every dense kernel of [`super::native::NativeBackend`] bottoms out in
+//! one of three matrix products — `A·B` (forward), `A·Bᵀ` (input
+//! gradient) and `Aᵀ·B` (weight gradient). This module owns all three in
+//! three implementation tiers:
+//!
+//! - [`GemmTier::Naive`] — the straightforward triple loops
+//!   ([`matmul_naive`] and friends), always available and kept as the
+//!   reference the fast paths are property-tested against.
+//! - [`GemmTier::Blocked`] — a register-tiled micro-kernel
+//!   ([`MR`]`×`[`NR`] accumulator tile) over operands packed into
+//!   contiguous panels, portable scalar code.
+//! - [`GemmTier::Simd`] — the *same* micro-kernel body compiled inside a
+//!   `#[target_feature(enable = "avx2")]` function on `x86_64`, letting
+//!   LLVM vectorize the [`NR`]-wide inner loop with 256-bit lanes.
+//!   Selected only when the CPU reports AVX2 at runtime.
+//!
+//! **Bit-exactness contract.** The k dimension is deliberately left
+//! unblocked and every output element accumulates its `k` products in
+//! ascending order — exactly the order of the naive loops. Rust never
+//! contracts separate f32 mul/add into a fused multiply-add, so the
+//! Blocked and Simd tiers are bit-identical to each other, and identical
+//! to Naive up to the sign of zero (the naive loops skip `a == 0.0`
+//! rows, which can preserve a `-0.0` the tiled path rounds to `+0.0`).
+//! Within one process a single tier serves every call (see
+//! [`active_tier`]), so the trainer's bit-exact vanilla-vs-recompute
+//! gradient invariants hold under any tier.
+//!
+//! Pack buffers are drawn from — and returned to — the backend's
+//! [`MemoryPool`], so the tiled path adds no steady-state allocator
+//! traffic on top of the naive one.
+
+use std::sync::OnceLock;
+
+use super::native::MemoryPool;
+
+/// Rows of the register accumulator tile.
+pub const MR: usize = 4;
+/// Columns of the register accumulator tile — two 256-bit f32 lanes.
+pub const NR: usize = 16;
+
+/// The implementation tier the dense kernels dispatch to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GemmTier {
+    /// Reference triple loops; always available.
+    Naive,
+    /// Register-tiled micro-kernel over packed panels (portable scalar).
+    Blocked,
+    /// The tiled micro-kernel compiled with AVX2 enabled (`x86_64` with
+    /// runtime feature detection only).
+    Simd,
+}
+
+impl GemmTier {
+    /// Stable lower-case name (`naive` / `blocked` / `simd`) — the
+    /// values `REPRO_GEMM` accepts and what `--stats` reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            GemmTier::Naive => "naive",
+            GemmTier::Blocked => "blocked",
+            GemmTier::Simd => "simd",
+        }
+    }
+}
+
+/// Parse a `REPRO_GEMM` value (case-insensitive tier name).
+pub fn parse_tier(s: &str) -> Option<GemmTier> {
+    match s.to_ascii_lowercase().as_str() {
+        "naive" => Some(GemmTier::Naive),
+        "blocked" => Some(GemmTier::Blocked),
+        "simd" => Some(GemmTier::Simd),
+        _ => None,
+    }
+}
+
+/// The best tier this CPU supports: `Simd` when AVX2 is reported,
+/// otherwise `Blocked`.
+fn detected_tier() -> GemmTier {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            return GemmTier::Simd;
+        }
+    }
+    GemmTier::Blocked
+}
+
+/// The tier every dense kernel in this process dispatches to, latched on
+/// first use: the `REPRO_GEMM` environment variable when set to a valid
+/// tier name, otherwise the best tier the CPU supports. Requesting
+/// `simd` on a machine without AVX2 degrades to `blocked` — the override
+/// can never select an unsupported instruction set.
+pub fn active_tier() -> GemmTier {
+    static TIER: OnceLock<GemmTier> = OnceLock::new();
+    *TIER.get_or_init(|| {
+        match std::env::var("REPRO_GEMM").ok().as_deref().and_then(parse_tier) {
+            Some(GemmTier::Simd) | None => detected_tier(),
+            Some(tier) => tier,
+        }
+    })
+}
+
+// ---- naive reference kernels ---------------------------------------------
+
+/// `a[m,k] @ b[k,n]` → `[m,n]` — reference triple loop (output drawn
+/// from the pool).
+pub fn matmul_naive(
+    pool: &MemoryPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = pool.zeroed(m * n);
+    for (arow, orow) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
+        for (&av, brow) in arow.iter().zip(b.chunks_exact(n)) {
+            if av != 0.0 {
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// `a[m,k] @ b[n,k]ᵀ` → `[m,n]` — reference row-by-row dot products.
+pub fn matmul_nt_naive(
+    pool: &MemoryPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    let mut out = pool.writable(m * n);
+    for arow in a.chunks_exact(k) {
+        for brow in b.chunks_exact(k) {
+            out.push(arow.iter().zip(brow).map(|(&x, &y)| x * y).sum());
+        }
+    }
+    out
+}
+
+/// `a[k,m]ᵀ @ b[k,n]` → `[m,n]` — reference rank-1 accumulation.
+pub fn matmul_tn_naive(
+    pool: &MemoryPool,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    let mut out = pool.zeroed(m * n);
+    for (arow, brow) in a.chunks_exact(m).zip(b.chunks_exact(n)) {
+        for (&av, orow) in arow.iter().zip(out.chunks_exact_mut(n)) {
+            if av != 0.0 {
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+// ---- tiled path ----------------------------------------------------------
+
+/// A strided read-only 2-d view over a flat buffer: element `(r, c)`
+/// lives at `data[r·rs + c·cs]`. All three transpose variants are plain
+/// views of their row-major inputs, so one packing routine serves
+/// `A·B`, `A·Bᵀ` and `Aᵀ·B`.
+#[derive(Clone, Copy)]
+struct View<'a> {
+    data: &'a [f32],
+    rs: usize,
+    cs: usize,
+}
+
+impl View<'_> {
+    #[inline(always)]
+    fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.rs + c * self.cs]
+    }
+}
+
+/// The register-tiled micro-kernel: accumulate a full `MR×NR` output
+/// tile over all `k` — ascending `p`, matching the naive accumulation
+/// order (the bit-exactness contract). `apanel` is `k` columns of `MR`
+/// packed A values; `bpanel` is `k` rows of `NR` packed B values.
+#[inline(always)]
+fn tile_body(apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    for (acol, brow) in apanel.chunks_exact(MR).zip(bpanel.chunks_exact(NR)) {
+        for (&av, accrow) in acol.iter().zip(acc.iter_mut()) {
+            for (c, &bv) in accrow.iter_mut().zip(brow) {
+                *c += av * bv;
+            }
+        }
+    }
+}
+
+/// [`tile_body`] compiled with AVX2 enabled: LLVM vectorizes the
+/// `NR`-wide inner loop into 256-bit mul/add (no FMA contraction, so the
+/// result stays bit-identical to the scalar tier).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn tile_avx2(apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    tile_body(apanel, bpanel, acc);
+}
+
+#[inline]
+fn run_tile(simd: bool, apanel: &[f32], bpanel: &[f32], acc: &mut [[f32; NR]; MR]) {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if simd {
+            // SAFETY: callers pass `simd == true` only after runtime
+            // detection reported AVX2 (the `active_tier` probe, or a
+            // test that checked `detected_tier()` itself).
+            unsafe { tile_avx2(apanel, bpanel, acc) };
+            return;
+        }
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    let _ = simd;
+    tile_body(apanel, bpanel, acc);
+}
+
+/// The blocked GEMM core: pack A into `MR`-row panels and B into
+/// `NR`-column panels (both drawn from — and returned to — the pool,
+/// zero-padded at the edges), then sweep the micro-kernel over the
+/// output tiles.
+fn gemm(pool: &MemoryPool, a: View, b: View, m: usize, k: usize, n: usize, simd: bool) -> Vec<f32> {
+    let mut out = pool.zeroed(m * n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let mpanels = m.div_ceil(MR);
+    let mut apack = pool.writable(mpanels * MR * k);
+    apack.resize(mpanels * MR * k, 0.0);
+    for (ip, panel) in apack.chunks_exact_mut(MR * k).enumerate() {
+        let i0 = ip * MR;
+        let mr = (m - i0).min(MR);
+        for (p, col) in panel.chunks_exact_mut(MR).enumerate() {
+            for (i, slot) in col.iter_mut().enumerate() {
+                *slot = if i < mr { a.at(i0 + i, p) } else { 0.0 };
+            }
+        }
+    }
+    let mut bpack = pool.writable(k * NR);
+    bpack.resize(k * NR, 0.0);
+    for j0 in (0..n).step_by(NR) {
+        let nr = (n - j0).min(NR);
+        for (p, row) in bpack.chunks_exact_mut(NR).enumerate() {
+            for (j, slot) in row.iter_mut().enumerate() {
+                *slot = if j < nr { b.at(p, j0 + j) } else { 0.0 };
+            }
+        }
+        for (ip, panel) in apack.chunks_exact(MR * k).enumerate() {
+            let i0 = ip * MR;
+            let mr = (m - i0).min(MR);
+            let mut acc = [[0.0f32; NR]; MR];
+            run_tile(simd, panel, &bpack, &mut acc);
+            for (i, accrow) in acc.iter().enumerate().take(mr) {
+                let row0 = (i0 + i) * n + j0;
+                out[row0..row0 + nr].copy_from_slice(&accrow[..nr]);
+            }
+        }
+    }
+    pool.give(bpack);
+    pool.give(apack);
+    out
+}
+
+/// `a[m,k] @ b[k,n]` → `[m,n]` through the tiled path (`simd` selects
+/// the AVX2-compiled micro-kernel; pass `active_tier() == Simd`).
+pub fn matmul(
+    pool: &MemoryPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    simd: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), k * n);
+    gemm(pool, View { data: a, rs: k, cs: 1 }, View { data: b, rs: n, cs: 1 }, m, k, n, simd)
+}
+
+/// `a[m,k] @ b[n,k]ᵀ` → `[m,n]` through the tiled path — `b`'s
+/// transpose is absorbed into the packing strides, no materialization.
+pub fn matmul_nt(
+    pool: &MemoryPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    simd: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(b.len(), n * k);
+    gemm(pool, View { data: a, rs: k, cs: 1 }, View { data: b, rs: 1, cs: k }, m, k, n, simd)
+}
+
+/// `a[k,m]ᵀ @ b[k,n]` → `[m,n]` through the tiled path — `a`'s
+/// transpose is absorbed into the packing strides, no materialization.
+pub fn matmul_tn(
+    pool: &MemoryPool,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+    simd: bool,
+) -> Vec<f32> {
+    debug_assert_eq!(a.len(), k * m);
+    debug_assert_eq!(b.len(), k * n);
+    gemm(pool, View { data: a, rs: 1, cs: m }, View { data: b, rs: n, cs: 1 }, m, k, n, simd)
+}
+
+// ---- tier-dispatched entry points (what the native kernels call) ---------
+
+/// `a[m,k] @ b[k,n]` through the process-wide [`active_tier`].
+pub fn matmul_auto(
+    pool: &MemoryPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    match active_tier() {
+        GemmTier::Naive => matmul_naive(pool, a, b, m, k, n),
+        tier => matmul(pool, a, b, m, k, n, tier == GemmTier::Simd),
+    }
+}
+
+/// `a[m,k] @ b[n,k]ᵀ` through the process-wide [`active_tier`].
+pub fn matmul_nt_auto(
+    pool: &MemoryPool,
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    match active_tier() {
+        GemmTier::Naive => matmul_nt_naive(pool, a, b, m, k, n),
+        tier => matmul_nt(pool, a, b, m, k, n, tier == GemmTier::Simd),
+    }
+}
+
+/// `a[k,m]ᵀ @ b[k,n]` through the process-wide [`active_tier`].
+pub fn matmul_tn_auto(
+    pool: &MemoryPool,
+    a: &[f32],
+    b: &[f32],
+    k: usize,
+    m: usize,
+    n: usize,
+) -> Vec<f32> {
+    match active_tier() {
+        GemmTier::Naive => matmul_tn_naive(pool, a, b, k, m, n),
+        tier => matmul_tn(pool, a, b, k, m, n, tier == GemmTier::Simd),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn randn(rng: &mut Pcg32, n: usize) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    /// Shapes that exercise every edge: unit dims, non-multiples of the
+    /// MR×NR tile in each direction, and a deep-k skinny output.
+    const SHAPES: [(usize, usize, usize); 8] = [
+        (1, 1, 1),
+        (1, 7, 5),
+        (3, 1, 8),
+        (4, 16, 16),
+        (5, 256, 2),
+        (17, 33, 65),
+        (2, 9, 31),
+        (64, 64, 64),
+    ];
+
+    fn transpose(src: &[f32], rows: usize, cols: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; src.len()];
+        for r in 0..rows {
+            for c in 0..cols {
+                out[c * rows + r] = src[r * cols + c];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matches_naive_on_awkward_shapes_for_all_transposes() {
+        let pool = MemoryPool::default();
+        let mut rng = Pcg32::seeded(99);
+        for &(m, k, n) in &SHAPES {
+            let a = randn(&mut rng, m * k);
+            let b = randn(&mut rng, k * n);
+            let want = matmul_naive(&pool, &a, &b, m, k, n);
+
+            let nn = matmul(&pool, &a, &b, m, k, n, false);
+            assert_eq!(nn, want, "nn mismatch at ({m},{k},{n})");
+
+            // A·Bᵀ with bt = Bᵀ laid out [n,k] must reproduce A·B.
+            let bt = transpose(&b, k, n);
+            let nt = matmul_nt(&pool, &a, &bt, m, k, n, false);
+            assert_eq!(nt, want, "nt mismatch at ({m},{k},{n})");
+            let nt_ref = matmul_nt_naive(&pool, &a, &bt, m, k, n);
+            assert_eq!(nt, nt_ref, "nt vs naive-nt at ({m},{k},{n})");
+
+            // Aᵀ·B with at = Aᵀ laid out [k,m] must reproduce A·B.
+            let at = transpose(&a, m, k);
+            let tn = matmul_tn(&pool, &at, &b, k, m, n, false);
+            assert_eq!(tn, want, "tn mismatch at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn simd_tier_is_bit_identical_to_blocked() {
+        if detected_tier() != GemmTier::Simd {
+            return; // no AVX2 on this machine — nothing to compare
+        }
+        let pool = MemoryPool::default();
+        let mut rng = Pcg32::seeded(7);
+        for &(m, k, n) in &SHAPES {
+            let a = randn(&mut rng, m * k);
+            let b = randn(&mut rng, k * n);
+            let blocked = matmul(&pool, &a, &b, m, k, n, false);
+            let simd = matmul(&pool, &a, &b, m, k, n, true);
+            let same = blocked.iter().zip(&simd).all(|(x, y)| x.to_bits() == y.to_bits());
+            assert!(same, "simd not bit-identical to blocked at ({m},{k},{n})");
+        }
+    }
+
+    #[test]
+    fn zero_extent_products_are_empty_or_zero() {
+        let pool = MemoryPool::default();
+        assert_eq!(matmul(&pool, &[], &[1.0; 12], 0, 3, 4, false), Vec::<f32>::new());
+        assert_eq!(matmul(&pool, &[], &[], 3, 0, 2, false), vec![0.0; 6]);
+        assert_eq!(matmul_nt(&pool, &[], &[], 2, 0, 3, false), vec![0.0; 6]);
+        assert_eq!(matmul_tn(&pool, &[], &[], 0, 2, 3, false), vec![0.0; 6]);
+    }
+
+    #[test]
+    fn pack_scratch_returns_to_the_pool() {
+        let pool = MemoryPool::default();
+        let mut rng = Pcg32::seeded(3);
+        let (m, k, n) = (9, 17, 21);
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let _ = matmul(&pool, &a, &b, m, k, n, false);
+        let s1 = pool.stats();
+        assert!(s1.parked_bytes > 0, "pack panels must park back into the pool");
+        let _ = matmul(&pool, &a, &b, m, k, n, false);
+        let s2 = pool.stats();
+        assert!(s2.reuses > s1.reuses, "second call must reuse the parked panels");
+    }
+
+    #[test]
+    fn tier_parsing_and_names() {
+        assert_eq!(parse_tier("naive"), Some(GemmTier::Naive));
+        assert_eq!(parse_tier("Blocked"), Some(GemmTier::Blocked));
+        assert_eq!(parse_tier("SIMD"), Some(GemmTier::Simd));
+        assert_eq!(parse_tier(""), None);
+        assert_eq!(parse_tier("fast"), None);
+        for tier in [GemmTier::Naive, GemmTier::Blocked, GemmTier::Simd] {
+            assert_eq!(parse_tier(tier.name()), Some(tier));
+        }
+    }
+
+    #[test]
+    fn auto_entry_points_agree_with_the_reference() {
+        let pool = MemoryPool::default();
+        let mut rng = Pcg32::seeded(41);
+        let (m, k, n) = (6, 13, 10);
+        let a = randn(&mut rng, m * k);
+        let b = randn(&mut rng, k * n);
+        let want = matmul_naive(&pool, &a, &b, m, k, n);
+        assert_eq!(matmul_auto(&pool, &a, &b, m, k, n), want);
+        let bt = transpose(&b, k, n);
+        assert_eq!(matmul_nt_auto(&pool, &a, &bt, m, k, n), want);
+        let at = transpose(&a, m, k);
+        assert_eq!(matmul_tn_auto(&pool, &at, &b, k, m, n), want);
+    }
+}

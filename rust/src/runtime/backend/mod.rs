@@ -36,6 +36,7 @@ use std::time::Duration;
 
 use crate::anyhow::Result;
 
+pub mod gemm;
 pub mod native;
 #[cfg(feature = "xla")]
 pub mod pjrt;
@@ -88,6 +89,11 @@ pub struct KernelStat {
     pub bytes_in: u64,
     /// Bytes of tensor outputs produced across all calls.
     pub bytes_out: u64,
+    /// Floating-point operations performed across all calls (2·m·k·n per
+    /// dense matmul, counted from the kernel's argument shapes). Zero for
+    /// backends that cannot attribute flops (PJRT executes opaque
+    /// artifacts).
+    pub flops: u64,
 }
 
 impl KernelStat {
@@ -97,6 +103,17 @@ impl KernelStat {
             Duration::ZERO
         } else {
             self.total / self.calls as u32
+        }
+    }
+
+    /// Achieved throughput in GFLOP/s over the accumulated wall-clock
+    /// (zero if no flops were attributed or no time elapsed).
+    pub fn gflops(&self) -> f64 {
+        let secs = self.total.as_secs_f64();
+        if self.flops == 0 || secs <= 0.0 {
+            0.0
+        } else {
+            self.flops as f64 / secs / 1e9
         }
     }
 }
@@ -109,6 +126,7 @@ pub(crate) fn record_call(
     elapsed: Duration,
     bytes_in: u64,
     bytes_out: u64,
+    flops: u64,
 ) {
     let entry = stats
         .entry(kernel.to_string())
@@ -117,6 +135,7 @@ pub(crate) fn record_call(
     entry.total += elapsed;
     entry.bytes_in += bytes_in;
     entry.bytes_out += bytes_out;
+    entry.flops += flops;
 }
 
 /// An execution backend: owns device buffers, runs named kernels, and

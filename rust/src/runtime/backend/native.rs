@@ -35,6 +35,7 @@ use std::time::Instant;
 
 use crate::anyhow::{bail, Result};
 
+use super::gemm::{matmul_auto as matmul, matmul_nt_auto as matmul_nt, matmul_tn_auto as matmul_tn};
 use super::{Backend, KernelStat, PoolStats, DAG_KERNELS, TOWER_KERNELS};
 
 /// A size-classed recycling allocator for f32 host buffers.
@@ -114,11 +115,13 @@ impl MemoryPool {
     }
 
     /// Park a dropped tensor's storage for reuse (called from
-    /// [`TensorBuf`]'s `Drop`). The class is recomputed from the length,
-    /// which never changes after adoption — tensors are immutable.
-    /// `saturating_sub` keeps the ledger safe even for storage that was
-    /// built outside the pool and adopted later.
-    fn give(&self, v: Vec<f32>) {
+    /// [`TensorBuf`]'s `Drop`, by kernels returning scratch buffers, and
+    /// by the GEMM pack panels in [`super::gemm`]). The class is
+    /// recomputed from the length, which never changes after adoption —
+    /// tensors are immutable. `saturating_sub` keeps the ledger safe
+    /// even for storage that was built outside the pool and adopted
+    /// later.
+    pub(crate) fn give(&self, v: Vec<f32>) {
         if v.capacity() == 0 {
             return;
         }
@@ -226,8 +229,15 @@ impl NativeBackend {
         NativeBackend::default()
     }
 
-    fn record(&self, kernel: &str, t0: Instant, bytes_in: u64, bytes_out: u64) {
-        super::record_call(&mut self.stats.borrow_mut(), kernel, t0.elapsed(), bytes_in, bytes_out);
+    fn record(&self, kernel: &str, t0: Instant, bytes_in: u64, bytes_out: u64, flops: u64) {
+        super::record_call(
+            &mut self.stats.borrow_mut(),
+            kernel,
+            t0.elapsed(),
+            bytes_in,
+            bytes_out,
+            flops,
+        );
     }
 
     /// Attach the live-byte tracker and the pool to a freshly built
@@ -280,6 +290,7 @@ impl Backend for NativeBackend {
     fn run(&self, name: &str, args: &[HostTensor]) -> Result<Vec<HostTensor>> {
         let t0 = Instant::now();
         let bytes_in: u64 = args.iter().map(HostTensor::bytes).sum();
+        let flops = flops_of(name, args);
         let pool = &self.pool;
         let outs = match name {
             "layer_fwd" => layer_fwd(pool, args)?,
@@ -297,7 +308,7 @@ impl Backend for NativeBackend {
         };
         let outs: Vec<HostTensor> = outs.into_iter().map(|t| self.adopt(t)).collect();
         let bytes_out: u64 = outs.iter().map(HostTensor::bytes).sum();
-        self.record(name, t0, bytes_in, bytes_out);
+        self.record(name, t0, bytes_in, bytes_out, flops);
         Ok(outs)
     }
 
@@ -310,6 +321,26 @@ impl Backend for NativeBackend {
 
     fn stats(&self) -> Vec<KernelStat> {
         self.stats.borrow().values().cloned().collect()
+    }
+}
+
+/// Attributed floating-point operations of one kernel call, read from
+/// the argument shapes *before* validation (malformed calls attribute 0
+/// and then fail inside the kernel). Dense kernels count `2·m·k·n` per
+/// matmul — one forward product, or three products (`dz`-recompute +
+/// `gx` + `gw`) for the backward passes; elementwise kernels count one
+/// flop per input element. These feed `KernelStat::gflops()`.
+fn flops_of(name: &str, args: &[HostTensor]) -> u64 {
+    let dense_mkn = || -> u64 {
+        match (args.first().map(HostTensor::dims), args.get(1).map(HostTensor::dims)) {
+            (Some([m, k]), Some([k2, n])) if k == k2 => (m * k * n) as u64,
+            _ => 0,
+        }
+    };
+    match name {
+        "layer_fwd" | "loss_head_fwd" => 2 * dense_mkn(),
+        "layer_bwd" | "loss_head_bwd" => 6 * dense_mkn(),
+        _ => args.first().map_or(0, |t| t.len() as u64),
     }
 }
 
@@ -333,52 +364,10 @@ fn gelu_prime(x: f32) -> f32 {
     0.5 * (1.0 + t) + 0.5 * x * (1.0 - t * t) * GELU_C * (1.0 + 3.0 * GELU_A * x * x)
 }
 
-/// `a[m,k] @ b[k,n]` → `[m,n]` (output drawn from the pool).
-fn matmul(pool: &MemoryPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = pool.zeroed(m * n);
-    for (arow, orow) in a.chunks_exact(k).zip(out.chunks_exact_mut(n)) {
-        for (&av, brow) in arow.iter().zip(b.chunks_exact(n)) {
-            if av != 0.0 {
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
-    out
-}
-
-/// `a[m,k] @ b[n,k]ᵀ` → `[m,n]` (row-by-row dot products).
-fn matmul_nt(pool: &MemoryPool, a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), m * k);
-    debug_assert_eq!(b.len(), n * k);
-    let mut out = pool.writable(m * n);
-    for arow in a.chunks_exact(k) {
-        for brow in b.chunks_exact(k) {
-            out.push(arow.iter().zip(brow).map(|(&x, &y)| x * y).sum());
-        }
-    }
-    out
-}
-
-/// `a[k,m]ᵀ @ b[k,n]` → `[m,n]` (accumulate rank-1 updates per row pair).
-fn matmul_tn(pool: &MemoryPool, a: &[f32], b: &[f32], k: usize, m: usize, n: usize) -> Vec<f32> {
-    debug_assert_eq!(a.len(), k * m);
-    debug_assert_eq!(b.len(), k * n);
-    let mut out = pool.zeroed(m * n);
-    for (arow, brow) in a.chunks_exact(m).zip(b.chunks_exact(n)) {
-        for (&av, orow) in arow.iter().zip(out.chunks_exact_mut(n)) {
-            if av != 0.0 {
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
-        }
-    }
-    out
-}
+// The three matrix products (`A·B`, `A·Bᵀ`, `Aᵀ·B`) live in
+// [`super::gemm`], imported above under their historical local names:
+// each dispatches to the blocked/SIMD tiled path (or the naive
+// reference loops) per the process-wide `gemm::active_tier()`.
 
 /// `z[m,n] += bias[n]` broadcast over rows.
 fn add_bias(z: &mut [f32], bias: &[f32]) {
@@ -811,6 +800,9 @@ mod tests {
         assert_eq!(stats[0].calls, 3);
         assert_eq!(stats[0].bytes_in, 3 * (12 + 16 + 4) * 4);
         assert_eq!(stats[0].bytes_out, 3 * 12 * 4);
+        // layer_fwd on [3,4]×[4,4] attributes 2·m·k·n = 96 flops per call.
+        assert_eq!(stats[0].flops, 3 * 96);
+        assert!(stats[0].gflops() > 0.0, "nonzero flops over nonzero time");
         assert_eq!(b.kernels().len(), TOWER_KERNELS.len() + DAG_KERNELS.len());
     }
 

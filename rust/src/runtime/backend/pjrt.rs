@@ -282,7 +282,15 @@ impl Backend for PjrtBackend {
         let bytes_in: u64 = args.iter().map(literal_bytes).sum();
         let outs = self.arts.run(name, args)?;
         let bytes_out: u64 = outs.iter().map(literal_bytes).sum();
-        super::record_call(&mut self.stats.borrow_mut(), name, t0.elapsed(), bytes_in, bytes_out);
+        // PJRT executes opaque artifacts — no flop attribution (0).
+        super::record_call(
+            &mut self.stats.borrow_mut(),
+            name,
+            t0.elapsed(),
+            bytes_in,
+            bytes_out,
+            0,
+        );
         Ok(outs)
     }
 

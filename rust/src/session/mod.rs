@@ -33,6 +33,7 @@
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::anyhow::{bail, Result};
 use crate::exec::OpProgram;
@@ -47,6 +48,7 @@ use crate::sim::{
     apply_liveness, canonical_trace, measure, vanilla_trace, SimMode, SimOptions, SimReport,
     Trace,
 };
+use crate::util::pool::WorkerPool;
 
 /// Default capacity of a session's private [`PlanCache`].
 pub const DEFAULT_CACHE_CAPACITY: usize = 128;
@@ -61,6 +63,21 @@ pub struct SessionStats {
     /// Lower-set families (and their DP contexts) actually constructed —
     /// at most one per [`Family`] per session, however many requests ran.
     pub families_built: u64,
+}
+
+/// Wall-clock the session spent on planner work — kept *separate* from
+/// [`SessionStats`] so the stats stay comparable across runs and thread
+/// counts (the determinism suite asserts `SessionStats` equality;
+/// timings are inherently run-dependent). Reported by `--stats`.
+#[derive(Clone, Copy, Default, Debug)]
+pub struct SessionTiming {
+    /// Time spent enumerating lower-set families and building their
+    /// [`DpContext`]s (the worker-pool-sharded per-member precompute).
+    pub family_build: Duration,
+    /// Total time spent answering cache misses end to end (plan + DP
+    /// solve + simulate + program compile; includes `family_build` work
+    /// triggered by a first miss).
+    pub compile: Duration,
 }
 
 /// Everything a served plan request produces, compiled once and shared.
@@ -182,6 +199,7 @@ struct Inner {
     approx: Option<FamilySlot>,
     vanilla: HashMap<SimMode, Arc<OpProgram>>,
     stats: SessionStats,
+    timing: SessionTiming,
 }
 
 /// A long-lived planning session over one graph: owns the graph, its
@@ -195,6 +213,7 @@ pub struct PlanSession {
     fingerprint: GraphFingerprint,
     limit: EnumerationLimit,
     cache: Arc<PlanCache>,
+    pool: Arc<WorkerPool>,
     inner: Mutex<Inner>,
 }
 
@@ -211,11 +230,25 @@ impl PlanSession {
 
     /// A session backed by a shared [`PlanCache`] — the cross-request
     /// serving configuration (cache keys carry the graph fingerprint, so
-    /// sessions over different graphs coexist in one cache).
+    /// sessions over different graphs coexist in one cache). Planner
+    /// work runs on the process-wide [`crate::util::pool::global`] pool.
     pub fn with_cache(
         graph: Graph,
         limit: EnumerationLimit,
         cache: Arc<PlanCache>,
+    ) -> PlanSession {
+        PlanSession::with_pool(graph, limit, cache, crate::util::pool::global())
+    }
+
+    /// A session with an explicit worker pool (the fully spelled-out
+    /// constructor — used by the thread-count determinism tests, which
+    /// need two in-process sessions with *different* parallelism).
+    /// Plans are bit-identical at any thread count; only timings differ.
+    pub fn with_pool(
+        graph: Graph,
+        limit: EnumerationLimit,
+        cache: Arc<PlanCache>,
+        pool: Arc<WorkerPool>,
     ) -> PlanSession {
         let fingerprint = graph.fingerprint();
         PlanSession {
@@ -223,6 +256,7 @@ impl PlanSession {
             fingerprint,
             limit,
             cache,
+            pool,
             inner: Mutex::new(Inner::default()),
         }
     }
@@ -252,33 +286,53 @@ impl PlanSession {
         self.inner.lock().unwrap().stats
     }
 
+    /// Snapshot of the planner wall-clock spent so far (`--stats`).
+    pub fn timing(&self) -> SessionTiming {
+        self.inner.lock().unwrap().timing
+    }
+
+    /// The worker pool planner work runs on.
+    pub fn pool(&self) -> &Arc<WorkerPool> {
+        &self.pool
+    }
+
     /// The lazily built DP context for `family` (and whether it really
     /// is the exact lattice). Constructed at most once per family.
     pub fn family_context(&self, family: Family) -> (Arc<DpContext>, bool) {
         let mut inner = self.inner.lock().unwrap();
-        let Inner { exact, approx, stats, .. } = &mut *inner;
+        let Inner { exact, approx, stats, timing, .. } = &mut *inner;
         let slot = match family {
             Family::Exact => exact,
             Family::Approx => approx,
         };
         if slot.is_none() {
+            let t0 = Instant::now();
             let (ctx, is_exact) = match family {
                 Family::Exact => match enumerate_lower_sets(&self.graph, self.limit) {
-                    Some(fam) => (DpContext::from_shared(self.graph.clone(), fam), true),
+                    Some(fam) => (
+                        DpContext::from_shared_with(self.graph.clone(), fam, &self.pool),
+                        true,
+                    ),
                     None => (
-                        DpContext::from_shared(
+                        DpContext::from_shared_with(
                             self.graph.clone(),
                             pruned_lower_sets(&self.graph),
+                            &self.pool,
                         ),
                         false,
                     ),
                 },
                 Family::Approx => (
-                    DpContext::from_shared(self.graph.clone(), pruned_lower_sets(&self.graph)),
+                    DpContext::from_shared_with(
+                        self.graph.clone(),
+                        pruned_lower_sets(&self.graph),
+                        &self.pool,
+                    ),
                     false,
                 ),
             };
             stats.families_built += 1;
+            timing.family_build += t0.elapsed();
             *slot = Some(FamilySlot { ctx: Arc::new(ctx), exact: is_exact, min_budget: None });
         }
         let s = slot.as_ref().unwrap();
@@ -336,7 +390,9 @@ impl PlanSession {
             return Ok(hit);
         }
         self.inner.lock().unwrap().stats.misses += 1;
+        let t0 = Instant::now();
         let compiled = Arc::new(self.compile(req)?);
+        self.inner.lock().unwrap().timing.compile += t0.elapsed();
         Ok(self.cache.insert(key, compiled))
     }
 
@@ -449,5 +505,33 @@ mod tests {
         assert!(err.contains("min_feasible_budget"), "{err}");
         // A fraction clamps up to feasibility.
         assert!(BudgetSpec::Frac(0.0).resolve(&s, Family::Exact).unwrap() >= b1);
+    }
+
+    #[test]
+    fn sessions_agree_bitwise_across_thread_counts() {
+        let mk = |threads| {
+            PlanSession::with_pool(
+                diamond(),
+                EnumerationLimit::default(),
+                PlanCache::shared(DEFAULT_CACHE_CAPACITY),
+                Arc::new(WorkerPool::with_threads(threads)),
+            )
+        };
+        let (s1, s4) = (mk(1), mk(4));
+        for r in [
+            PlanRequest::new(PlannerId::ExactDp, Objective::MinOverhead),
+            PlanRequest::new(PlannerId::ExactDp, Objective::MaxOverhead),
+            PlanRequest::new(PlannerId::ApproxDp, Objective::MinOverhead),
+        ] {
+            let (a, b) = (s1.plan(&r).unwrap(), s4.plan(&r).unwrap());
+            assert_eq!(a.plan.chain.lower_sets(), b.plan.chain.lower_sets(), "{r:?}");
+            assert_eq!(a.plan.overhead, b.plan.overhead, "{r:?}");
+            assert_eq!(a.report.peak_bytes, b.report.peak_bytes, "{r:?}");
+        }
+        assert_eq!(s1.stats(), s4.stats(), "amortization counters are thread-count invariant");
+        // Timing is collected (run-dependent, so only sanity-checked):
+        // three misses were compiled, so some wall-clock accrued.
+        assert!(s1.timing().compile > Duration::ZERO);
+        assert!(s1.timing().family_build > Duration::ZERO);
     }
 }

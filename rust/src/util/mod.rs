@@ -5,10 +5,13 @@
 //!
 //! - [`json`] — JSON value model + parser + serializer (graph files, the
 //!   AOT artifact manifest, configs, reports).
+//! - [`pool`] — zero-dependency worker pool with deterministic indexed
+//!   maps (the threaded planner's substrate).
 //! - [`rng`] — deterministic PCG32 generator (synthetic data, random-DAG
 //!   property tests, workload generation).
 //! - [`table`] — plain-text table rendering for the paper-style reports.
 
 pub mod json;
+pub mod pool;
 pub mod rng;
 pub mod table;

@@ -1,0 +1,284 @@
+//! Zero-dependency worker pool for deterministic data-parallel maps.
+//!
+//! The build environment is offline (no `rayon`), so this is a minimal
+//! `std::thread` + `mpsc` pool shaped for exactly what the planner
+//! needs: [`WorkerPool::map`], an indexed map over `0..n` whose output
+//! is **always in index order and bit-identical to the serial loop** at
+//! any thread count. Work is claimed in contiguous chunks off a shared
+//! atomic counter, each chunk's results are sent back tagged with its
+//! start index, and the caller reassembles them by position — the
+//! schedule is nondeterministic, the merge never is.
+//!
+//! Thread-count resolution (used by [`global`]):
+//! 1. `set_global_threads` (the CLI's `--threads` flag), if called
+//!    before the global pool is first used;
+//! 2. the `REPRO_THREADS` environment variable;
+//! 3. [`std::thread::available_parallelism`].
+//!
+//! A pool with `threads == 1` spawns no workers and runs every map
+//! inline, so the serial path stays the trivially-auditable reference.
+
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex, OnceLock};
+use std::thread;
+
+/// A unit of work shipped to a worker thread.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// One chunk's results: the chunk's start index plus either the mapped
+/// values or the payload of a panic raised while computing them.
+type ChunkResult<R> = (usize, thread::Result<Vec<R>>);
+
+/// A fixed-size pool of persistent worker threads.
+///
+/// `threads` counts the *caller* as one of the workers: a pool of `t`
+/// threads spawns `t - 1` background workers and the mapping thread
+/// claims chunks alongside them (so `with_threads(1)` is exactly the
+/// serial loop, and a map never deadlocks even when every background
+/// worker is busy with somebody else's jobs).
+pub struct WorkerPool {
+    threads: usize,
+    tx: Option<mpsc::Sender<Job>>,
+    workers: Vec<thread::JoinHandle<()>>,
+}
+
+impl std::fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("WorkerPool").field("threads", &self.threads).finish()
+    }
+}
+
+impl WorkerPool {
+    /// Build a pool with the given total parallelism (clamped to ≥ 1).
+    pub fn with_threads(threads: usize) -> WorkerPool {
+        let threads = threads.max(1);
+        let (tx, rx) = mpsc::channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let workers = (1..threads)
+            .map(|i| {
+                let rx = Arc::clone(&rx);
+                thread::Builder::new()
+                    .name(format!("repro-pool-{i}"))
+                    .spawn(move || loop {
+                        // Hold the lock only while *receiving*; jobs run
+                        // unlocked so workers drain the queue in parallel.
+                        let job = rx.lock().expect("pool queue lock").recv();
+                        match job {
+                            Ok(job) => job(),
+                            Err(_) => break, // sender dropped: pool shut down
+                        }
+                    })
+                    .expect("spawning pool worker thread")
+            })
+            .collect();
+        WorkerPool { threads, tx: Some(tx), workers }
+    }
+
+    /// Total parallelism of this pool (background workers + the caller).
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Map `f` over `0..n`, returning results in index order.
+    ///
+    /// The output is the same `Vec` the serial loop `(0..n).map(f)`
+    /// produces, at any thread count — chunks are tagged with their
+    /// start index and reassembled by position, so scheduling order
+    /// never leaks into the result. A panic inside `f` is re-raised on
+    /// the calling thread (after every in-flight chunk has finished,
+    /// keeping the pool reusable).
+    pub fn map<R, F>(&self, n: usize, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(usize) -> R + Sync,
+    {
+        if self.threads <= 1 || n <= 1 || self.workers.is_empty() {
+            return (0..n).map(f).collect();
+        }
+        // ~4 chunks per thread: coarse enough to amortize channel
+        // traffic, fine enough to balance uneven per-item cost.
+        let chunk = n.div_ceil(self.threads * 4).max(1);
+        let nchunks = n.div_ceil(chunk);
+        let next = AtomicUsize::new(0);
+        let (res_tx, res_rx) = mpsc::channel::<ChunkResult<R>>();
+        let (done_tx, done_rx) = mpsc::channel::<()>();
+
+        // Claim chunks off the shared counter until none remain. Run by
+        // the helper jobs *and* by the calling thread below.
+        let run_chunks = |tx: &mpsc::Sender<ChunkResult<R>>| loop {
+            let start = next.fetch_add(chunk, Ordering::Relaxed);
+            if start >= n {
+                break;
+            }
+            let end = (start + chunk).min(n);
+            let out = catch_unwind(AssertUnwindSafe(|| (start..end).map(&f).collect::<Vec<R>>()));
+            let _ = tx.send((start, out));
+        };
+
+        let helpers = self.workers.len();
+        {
+            let pool_tx = self.tx.as_ref().expect("pool alive while borrowed");
+            let run = &run_chunks;
+            for _ in 0..helpers {
+                let res_tx = res_tx.clone();
+                let done_tx = done_tx.clone();
+                let job: Box<dyn FnOnce() + Send + '_> = Box::new(move || {
+                    run(&res_tx);
+                    // Termination signal — sent only after the job's last
+                    // use of anything borrowed from this stack frame.
+                    let _ = done_tx.send(());
+                });
+                // SAFETY: the job borrows `run_chunks` (and through it
+                // `next`, `f`, `chunk`, `n`) from this stack frame. We
+                // erase that lifetime to ship it through the 'static job
+                // queue, which is sound because this function does not
+                // return until `done_rx` has received one signal per
+                // helper job — i.e. until every job has finished its last
+                // use of those borrows. Box<dyn FnOnce> layout does not
+                // depend on the lifetime parameter.
+                let job = unsafe { std::mem::transmute::<Box<dyn FnOnce() + Send + '_>, Job>(job) };
+                pool_tx.send(job).expect("pool workers alive");
+            }
+        }
+
+        // The caller works too — this also guarantees progress when the
+        // background workers are saturated (e.g. nested maps).
+        run_chunks(&res_tx);
+
+        // Every start index < n is claimed exactly once and reported
+        // exactly once, so exactly `nchunks` messages arrive.
+        let mut parts: Vec<ChunkResult<R>> = Vec::with_capacity(nchunks);
+        for _ in 0..nchunks {
+            parts.push(res_rx.recv().expect("every claimed chunk reports a result"));
+        }
+        // Wait for job *termination* (not just chunk completion) before
+        // returning: the borrows erased above must outlive the jobs.
+        for _ in 0..helpers {
+            done_rx.recv().expect("every helper job terminates");
+        }
+
+        parts.sort_by_key(|&(start, _)| start);
+        let mut out: Vec<R> = Vec::with_capacity(n);
+        let mut panic_payload = None;
+        for (_, part) in parts {
+            match part {
+                Ok(mut v) => out.append(&mut v),
+                Err(payload) => {
+                    // Keep the *first* panic in index order — deterministic
+                    // even when several chunks panic concurrently.
+                    panic_payload.get_or_insert(payload);
+                }
+            }
+        }
+        if let Some(payload) = panic_payload {
+            resume_unwind(payload);
+        }
+        debug_assert_eq!(out.len(), n);
+        out
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.tx.take(); // closes the queue: workers see Err(recv) and exit
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Arc<WorkerPool>> = OnceLock::new();
+static OVERRIDE: OnceLock<usize> = OnceLock::new();
+
+/// Parse a `REPRO_THREADS`-style value; `Some(n ≥ 1)` on success.
+fn parse_threads(v: &str) -> Option<usize> {
+    v.trim().parse::<usize>().ok().map(|n| n.max(1))
+}
+
+/// Thread count the global pool will use absent a CLI override:
+/// `REPRO_THREADS` if set and parseable, else available parallelism.
+fn env_threads() -> usize {
+    std::env::var("REPRO_THREADS")
+        .ok()
+        .as_deref()
+        .and_then(parse_threads)
+        .unwrap_or_else(|| thread::available_parallelism().map(|n| n.get()).unwrap_or(1))
+}
+
+/// Override the global pool's thread count (the CLI's `--threads`).
+///
+/// Returns `true` if the override takes effect — i.e. it was the first
+/// override and the global pool had not been built yet. Call it before
+/// any planning work.
+pub fn set_global_threads(threads: usize) -> bool {
+    OVERRIDE.set(threads.max(1)).is_ok() && GLOBAL.get().is_none()
+}
+
+/// The process-wide shared pool, built on first use (see the module
+/// docs for thread-count resolution).
+pub fn global() -> Arc<WorkerPool> {
+    Arc::clone(GLOBAL.get_or_init(|| {
+        let t = OVERRIDE.get().copied().unwrap_or_else(env_threads);
+        Arc::new(WorkerPool::with_threads(t))
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_matches_serial_at_any_thread_count() {
+        let want: Vec<u64> = (0..257).map(|i| (i as u64) * 3 + 1).collect();
+        for t in [1, 2, 4, 7] {
+            let pool = WorkerPool::with_threads(t);
+            assert_eq!(pool.map(257, |i| (i as u64) * 3 + 1), want, "threads={t}");
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_maps_run_inline() {
+        let pool = WorkerPool::with_threads(4);
+        assert_eq!(pool.map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(pool.map(1, |i| i + 5), vec![5]);
+    }
+
+    #[test]
+    fn results_may_borrow_from_the_closure_environment() {
+        let data: Vec<String> = (0..40).map(|i| format!("s{i}")).collect();
+        let pool = WorkerPool::with_threads(3);
+        let refs: Vec<&str> = pool.map(data.len(), |i| data[i].as_str());
+        assert_eq!(refs.len(), 40);
+        assert_eq!(refs[7], "s7");
+    }
+
+    #[test]
+    fn panics_propagate_and_the_pool_survives() {
+        let pool = WorkerPool::with_threads(4);
+        let r = catch_unwind(AssertUnwindSafe(|| {
+            pool.map(64, |i| {
+                assert_ne!(i, 33, "boom");
+                i
+            })
+        }));
+        assert!(r.is_err(), "the chunk panic must reach the caller");
+        assert_eq!(pool.map(8, |i| i), (0..8).collect::<Vec<_>>(), "pool reusable after panic");
+    }
+
+    #[test]
+    fn nested_maps_complete_without_deadlock() {
+        let pool = WorkerPool::with_threads(2);
+        let sums = pool.map(6, |i| pool.map(5, |j| i * j).into_iter().sum::<usize>());
+        assert_eq!(sums, (0..6).map(|i| i * 10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn thread_count_parsing() {
+        assert_eq!(parse_threads("4"), Some(4));
+        assert_eq!(parse_threads(" 2 "), Some(2));
+        assert_eq!(parse_threads("0"), Some(1), "zero clamps to one");
+        assert_eq!(parse_threads("many"), None);
+        assert_eq!(parse_threads(""), None);
+    }
+}

@@ -155,6 +155,79 @@ fn train_mode_all_builds_the_family_once_and_serves_repeats_from_cache() {
     // exits nonzero otherwise; the markers make it legible here).
     assert_eq!(text.matches("EQUAL ✓").count(), 2, "{text}");
     assert_eq!(text.matches("BIT-IDENTICAL ✓").count(), 2, "{text}");
+    // --stats also reports kernel throughput and the planner wall-time.
+    assert!(text.contains("GFLOP/s"), "{text}");
+    assert!(text.contains("planner: family_build="), "{text}");
+    assert!(text.contains("compile="), "{text}");
+}
+
+#[test]
+fn plan_stats_reports_planner_wall_time_and_thread_count() {
+    let out = repro()
+        .args(["plan", "--network", "VGG19", "--batch", "4", "--stats", "--threads", "2"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("session: hits="), "{text}");
+    assert!(text.contains("planner: family_build="), "{text}");
+    assert!(text.contains("compile="), "{text}");
+    assert!(text.contains("threads: 2"), "{text}");
+}
+
+#[test]
+fn plan_json_is_byte_identical_across_thread_counts() {
+    // The threaded planner's core guarantee: the same request must
+    // produce the same plan — byte for byte — at any worker-pool width.
+    let run = |threads: &str| {
+        let out = repro()
+            .args(["plan", "--network", "ResNet50", "--batch", "8", "--json"])
+            .env("REPRO_THREADS", threads)
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        out.stdout
+    };
+    let serial = run("1");
+    let wide = run("4");
+    assert_eq!(
+        serial,
+        wide,
+        "plan --json diverged between REPRO_THREADS=1 and 4:\n{}\nvs\n{}",
+        String::from_utf8_lossy(&serial),
+        String::from_utf8_lossy(&wide)
+    );
+}
+
+#[test]
+fn train_accepts_threads_flag_with_identical_outputs() {
+    // A planned training run through `--threads 1` and `--threads 4`
+    // must print identical results (same plan, bit-exact execution).
+    // Wall-clock tokens (`step=…ms`) are stripped before comparing —
+    // they are the only nondeterministic part of the output.
+    let run = |threads: &str| -> String {
+        let out = repro()
+            .args([
+                "train", "--model", "unet", "--batch", "2", "--width", "8", "--steps", "1",
+                "--mode", "tc", "--quiet", "--threads", threads,
+            ])
+            .output()
+            .unwrap();
+        assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout)
+            .lines()
+            .map(|l| {
+                l.split_whitespace()
+                    .filter(|tok| !tok.starts_with("step="))
+                    .collect::<Vec<_>>()
+                    .join(" ")
+            })
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let serial = run("1");
+    assert!(serial.contains("BIT-IDENTICAL ✓"), "{serial}");
+    assert_eq!(serial, run("4"), "train output diverged across thread counts");
 }
 
 #[test]
