@@ -1,0 +1,236 @@
+//! Smoke driver for a running `repro serve` daemon: hammer it with
+//! concurrent well-formed clients while a hostile corpus runs on a
+//! parallel connection, then check the daemon's own `stats` agree.
+//!
+//! Start the daemon first (with default limits — the oversize probe
+//! assumes the stock 1 MiB request cap), then point the driver at it:
+//!
+//! ```sh
+//! repro serve --addr 127.0.0.1:7878 &
+//! cargo run --release --example serve_smoke -- 127.0.0.1:7878 --shutdown
+//! ```
+//!
+//! Checks (the process exits non-zero on any failure):
+//!   * 8 concurrent clients upload isomorphic relabelings of one graph
+//!     and plan it twice each — every fingerprint matches and every
+//!     repeat plan is a cache hit;
+//!   * hostile lines (broken JSON, 50k-deep nesting, an overflowing
+//!     byte budget, invalid UTF-8) each draw a structured `ok:false`
+//!     reply on a connection that stays up, and an over-cap request is
+//!     answered before the server hangs up;
+//!   * `stats` reflects the traffic: cache hits > 0, ordered latency
+//!     percentiles, and at least the stats request itself in flight;
+//!   * with `--shutdown`, the daemon acknowledges and stops.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use recompute::anyhow::{anyhow, bail, Result};
+use recompute::serve::ServeConfig;
+use recompute::testutil::{diamond, diamond_relabeled};
+use recompute::util::json::Json;
+
+const CLIENTS: usize = 8;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_read_timeout(Some(Duration::from_secs(30)))?;
+        Ok(Client { writer: stream.try_clone()?, reader: BufReader::new(stream) })
+    }
+
+    fn send(&mut self, line: &str) -> Result<Json> {
+        self.send_bytes(line.as_bytes())
+    }
+
+    fn send_bytes(&mut self, line: &[u8]) -> Result<Json> {
+        self.writer.write_all(line)?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        self.recv()
+    }
+
+    fn recv(&mut self) -> Result<Json> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            bail!("server closed the connection");
+        }
+        Json::parse(line.trim()).map_err(|e| anyhow!("unparseable reply {line:?}: {e}"))
+    }
+
+    /// True once the server has closed this connection.
+    fn at_eof(&mut self) -> Result<bool> {
+        let mut probe = String::new();
+        Ok(self.reader.read_line(&mut probe)? == 0)
+    }
+}
+
+fn expect_ok(reply: &Json, what: &str) -> Result<()> {
+    if reply.get("ok").as_bool() != Some(true) {
+        bail!("{what} failed: {}", reply.to_string());
+    }
+    Ok(())
+}
+
+fn expect_err(reply: &Json, want_code: &str, what: &str) -> Result<()> {
+    if reply.get("ok").as_bool() != Some(false) {
+        bail!("{what}: expected a structured error, got {}", reply.to_string());
+    }
+    if reply.get("error").get("code").as_str() != Some(want_code) {
+        bail!("{what}: expected code {want_code}, got {}", reply.to_string());
+    }
+    Ok(())
+}
+
+/// Poll the daemon with pings until it answers (or ~10 s pass).
+fn await_daemon(addr: &str) -> Result<()> {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        let up = Client::connect(addr)
+            .and_then(|mut c| c.send(r#"{"cmd":"ping"}"#))
+            .map(|r| r.get("reply").as_str() == Some("pong"));
+        match up {
+            Ok(true) => return Ok(()),
+            _ if Instant::now() >= deadline => bail!("no daemon answering at {addr} after 10s"),
+            _ => std::thread::sleep(Duration::from_millis(100)),
+        }
+    }
+}
+
+/// Eight concurrent clients, two isomorphic relabelings of one graph:
+/// everyone must see the same fingerprint and repeat plans must hit.
+fn hammer_clients(addr: &str) -> Result<()> {
+    let fps: Vec<String> = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..CLIENTS)
+            .map(|i| {
+                s.spawn(move || -> Result<String> {
+                    let mut c = Client::connect(addr)?;
+                    let g = if i % 2 == 0 { diamond() } else { diamond_relabeled() };
+                    // Graph::to_json is pretty-printed; the protocol is
+                    // one request per line, so compact it first.
+                    let graph = Json::parse(&g.to_json())?;
+                    let upload = Json::obj().set("cmd", "graph_upload".into()).set("graph", graph);
+                    let up = c.send(&upload.to_string())?;
+                    expect_ok(&up, "graph_upload")?;
+                    let fp = up
+                        .get("fingerprint")
+                        .as_str()
+                        .ok_or_else(|| anyhow!("upload reply without a fingerprint"))?
+                        .to_string();
+                    let plan =
+                        format!(r#"{{"cmd":"plan","fingerprint":"{fp}","planner":"exact"}}"#);
+                    expect_ok(&c.send(&plan)?, "first plan")?;
+                    let second = c.send(&plan)?;
+                    expect_ok(&second, "second plan")?;
+                    if second.get("cache_hit").as_bool() != Some(true) {
+                        bail!("repeat plan was not a cache hit: {}", second.to_string());
+                    }
+                    Ok(fp)
+                })
+            })
+            .collect();
+        workers
+            .into_iter()
+            .map(|w| w.join().map_err(|_| anyhow!("client thread panicked"))?)
+            .collect::<Result<Vec<String>>>()
+    })?;
+    if fps.iter().any(|fp| *fp != fps[0]) {
+        bail!("isomorphic graphs produced different fingerprints: {fps:?}");
+    }
+    println!("  {CLIENTS} clients agreed on fingerprint {} and repeat plans hit", fps[0]);
+    Ok(())
+}
+
+/// Abuse one connection and verify every line draws a structured error
+/// while the connection stays usable; then confirm the oversize path
+/// replies before hanging up.
+fn hostile_corpus(addr: &str) -> Result<()> {
+    let mut c = Client::connect(addr)?;
+    expect_err(&c.send("definitely not json")?, "bad-json", "broken JSON")?;
+    expect_err(&c.send(&"[".repeat(50_000))?, "bad-json", "50k-deep nesting")?;
+    expect_err(&c.send(r#"{"cmd":"warp"}"#)?, "unknown-cmd", "unknown command")?;
+    expect_err(
+        &c.send(r#"{"cmd":"plan","network":"unet","budget":"99999999999999GiB"}"#)?,
+        "bad-request",
+        "overflowing byte budget",
+    )?;
+    expect_err(&c.send_bytes(b"\"\xff\xfe\"")?, "bad-utf8", "invalid UTF-8")?;
+    expect_ok(&c.send(r#"{"cmd":"ping"}"#)?, "ping after the abuse")?;
+
+    let mut big = Client::connect(addr)?;
+    let cap = ServeConfig::default().max_request_bytes;
+    let reply = big.send(&"a".repeat(cap + 4096))?;
+    expect_err(&reply, "request-too-large", "oversized request")?;
+    if !big.at_eof()? {
+        bail!("the connection must be closed after an over-cap request");
+    }
+    println!("  hostile corpus: structured errors throughout, oversize reply before close");
+    Ok(())
+}
+
+/// The daemon's own accounting must reflect what we just did to it.
+fn check_stats(addr: &str) -> Result<()> {
+    let mut c = Client::connect(addr)?;
+    let stats = c.send(r#"{"cmd":"stats"}"#)?;
+    expect_ok(&stats, "stats")?;
+    let hits = stats.get("cache").get("hits").as_u64().unwrap_or(0);
+    if hits == 0 {
+        bail!("expected cache hits after the hammering: {}", stats.to_string());
+    }
+    if stats.get("errors").as_u64().unwrap_or(0) < 5 {
+        bail!("the hostile corpus should be counted: {}", stats.to_string());
+    }
+    if stats.get("inflight").as_u64().unwrap_or(0) < 1 {
+        bail!("the stats request itself holds an admission slot: {}", stats.to_string());
+    }
+    let lat = stats.get("latency_us");
+    let count = lat.get("count").as_u64().unwrap_or(0);
+    let p50 = lat.get("p50_us").as_u64().unwrap_or(u64::MAX);
+    let p90 = lat.get("p90_us").as_u64().unwrap_or(0);
+    let p99 = lat.get("p99_us").as_u64().unwrap_or(0);
+    let max = lat.get("max_us").as_u64().unwrap_or(0);
+    if count == 0 || p50 > p90 || p90 > p99 || p99 > max {
+        bail!("latency percentiles must be populated and ordered: {}", stats.to_string());
+    }
+    println!(
+        "  stats: {} requests, {hits} cache hits, latency p50={p50}us p90={p90}us p99={p99}us",
+        stats.get("requests").as_u64().unwrap_or(0)
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Some(bad) = args.iter().find(|a| a.starts_with("--") && a.as_str() != "--shutdown") {
+        bail!("unknown flag {bad}; usage: serve_smoke <host:port> [--shutdown]");
+    }
+    let addr = args
+        .iter()
+        .find(|a| !a.starts_with("--"))
+        .cloned()
+        .ok_or_else(|| anyhow!("usage: serve_smoke <host:port> [--shutdown]"))?;
+
+    await_daemon(&addr)?;
+    println!("daemon up at {addr}");
+    // Hostile traffic runs concurrently with the well-formed clients:
+    // abuse on one connection must not perturb its neighbours.
+    std::thread::scope(|s| -> Result<()> {
+        let hostile = s.spawn(|| hostile_corpus(&addr));
+        hammer_clients(&addr)?;
+        hostile.join().map_err(|_| anyhow!("hostile-corpus thread panicked"))?
+    })?;
+    check_stats(&addr)?;
+    if args.iter().any(|a| a == "--shutdown") {
+        let bye = Client::connect(&addr)?.send(r#"{"cmd":"shutdown"}"#)?;
+        expect_ok(&bye, "shutdown")?;
+        println!("  daemon acknowledged shutdown");
+    }
+    println!("serve smoke ok");
+    Ok(())
+}

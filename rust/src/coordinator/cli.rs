@@ -411,8 +411,9 @@ fn kernel_stat_line(s: &crate::runtime::KernelStat) -> String {
     )
 }
 
-/// Loss summary for DAG reports (first → last).
-fn dag_loss_summary(r: &crate::exec::DagTrainReport) -> String {
+/// Loss summary for DAG reports (first → last) — shared with the serve
+/// router's `train` replies.
+pub(crate) fn dag_loss_summary(r: &crate::exec::DagTrainReport) -> String {
     match (r.losses.first(), r.losses.last()) {
         (Some(f), Some(l)) => format!("loss {f:.4}→{l:.4}"),
         _ => "no steps".into(),

@@ -45,7 +45,7 @@ use crate::models::{mlp_tower, zoo};
 use crate::planner::{Objective, PlanRequest, PlannerId};
 pub use crate::planner::BudgetSpec;
 use crate::runtime::NativeBackend;
-use crate::session::{PlanSession, SessionStats, SessionTiming};
+use crate::session::{PlanSession, SessionRegistry, SessionStats, SessionTiming};
 use crate::sim::SimMode;
 
 /// Typed schedule selector — replaces the stringly `"vanilla"`/`"tc"`/
@@ -287,6 +287,26 @@ pub fn train_zoo_model(
     mode: SimMode,
     quiet: bool,
 ) -> Result<ZooComparison> {
+    train_zoo_model_in(None, name, batch, max_width, cfg, budget, objectives, mode, quiet)
+}
+
+/// [`train_zoo_model`], optionally serving its session from a
+/// [`SessionRegistry`] — the `repro serve` configuration, where repeated
+/// `train` requests for the same lowered graph reuse the registered
+/// session (families, `B*`, compiled plans) instead of rebuilding it,
+/// and planned runs land in the registry's shared [`PlanCache`].
+#[allow(clippy::too_many_arguments)]
+pub fn train_zoo_model_in(
+    registry: Option<&SessionRegistry>,
+    name: &str,
+    batch: usize,
+    max_width: usize,
+    cfg: &TrainConfig,
+    budget: BudgetSpec,
+    objectives: &[Objective],
+    mode: SimMode,
+    quiet: bool,
+) -> Result<ZooComparison> {
     if objectives.is_empty() {
         bail!("train_zoo_model needs at least one planning objective");
     }
@@ -308,7 +328,10 @@ pub fn train_zoo_model(
             lowered.name
         );
     }
-    let session = PlanSession::new(lowered);
+    let session = match registry {
+        Some(r) => r.get_or_insert(lowered).0,
+        None => Arc::new(PlanSession::new(lowered)),
+    };
     let g = session.shared_graph();
     // The vanilla baseline program is compiled once and reused by the
     // verification step and the reported run.

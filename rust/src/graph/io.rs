@@ -53,6 +53,14 @@ impl Graph {
     /// Parse from JSON produced by [`Graph::to_json`] (or hand-written).
     pub fn from_json(s: &str) -> Result<Graph> {
         let v = Json::parse(s).context("parsing graph JSON")?;
+        Graph::from_json_value(&v)
+    }
+
+    /// Build from an already-parsed [`Json`] value — the entry point for
+    /// callers that embed a graph inside a larger message (the serve
+    /// router's `graph_upload` command) and must not re-serialize just to
+    /// re-parse.
+    pub fn from_json_value(v: &Json) -> Result<Graph> {
         let name = v.get("name").as_str().unwrap_or("unnamed").to_string();
         let nodes_json = v.get("nodes").as_arr().context("graph JSON: missing 'nodes' array")?;
         let mut nodes = Vec::with_capacity(nodes_json.len());

@@ -48,6 +48,13 @@
 //!   following a recomputation plan exactly as the canonical strategy
 //!   prescribes, with measured live-byte accounting cross-checked against
 //!   the simulator.
+//! - [`serve`] — the plan-serving daemon behind `repro serve`: a
+//!   zero-dependency newline-delimited-JSON-over-TCP listener that
+//!   multiplexes many concurrent clients onto one shared
+//!   [`session::SessionRegistry`] (upload a graph, plan it, train a zoo
+//!   model, read cache/latency stats), with admission control, bounded
+//!   hostile-input handling (every bad request gets a structured JSON
+//!   error, never a panic or a silent disconnect) and graceful shutdown.
 //! - [`testutil`] — shared seeded fixtures (`random_dag`, `chain_graph`,
 //!   `diamond`) used by the unit, integration and property suites.
 //! - [`coordinator`] — the training-loop driver: backend selection,
@@ -109,6 +116,7 @@ pub mod graph;
 pub mod models;
 pub mod planner;
 pub mod runtime;
+pub mod serve;
 pub mod session;
 pub mod sim;
 pub mod util;
@@ -132,15 +140,57 @@ pub fn fmt_bytes(b: u64) -> String {
     }
 }
 
+/// End of the numeric prefix of a byte-size string: digits, dots, and an
+/// exponent (`e`/`E` with optional sign) — so `"1e3KiB"` splits as
+/// `("1e3", "KiB")` rather than at the `e`.
+fn numeric_prefix_len(t: &str) -> usize {
+    let b = t.as_bytes();
+    let mut i = 0;
+    while i < b.len() && (b[i].is_ascii_digit() || b[i] == b'.') {
+        i += 1;
+    }
+    if i > 0 && i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+        let mut j = i + 1;
+        if j < b.len() && (b[j] == b'+' || b[j] == b'-') {
+            j += 1;
+        }
+        // Only consume the exponent if digits actually follow — "1KiB"
+        // must not lose its 'K' to a half-parsed exponent... and "1e" /
+        // "1eGiB" stay unit errors rather than silently dropping bytes.
+        if j < b.len() && b[j].is_ascii_digit() {
+            i = j;
+            while i < b.len() && b[i].is_ascii_digit() {
+                i += 1;
+            }
+        }
+    }
+    i
+}
+
+/// Reject byte counts that do not fit in `u64` instead of silently
+/// saturating: `f64 → u64` casts clamp, so `"99999999999999GiB"` would
+/// otherwise come back as `u64::MAX` and sail through budget checks.
+fn checked_bytes(bytes: f64, s: &str) -> anyhow::Result<u64> {
+    // `u64::MAX as f64` rounds up to 2^64 exactly; every finite f64
+    // strictly below it casts losslessly into range.
+    if !bytes.is_finite() || bytes >= u64::MAX as f64 {
+        return Err(anyhow::Error::msg(format!(
+            "byte size '{s}' overflows the u64 byte range (max ~16 EiB)"
+        )));
+    }
+    Ok(bytes.round() as u64)
+}
+
 /// Parse a human-readable byte size: `"512"`, `"64KiB"`, `"1.5MiB"`,
-/// `"2GiB"`. Units are binary; `KB`/`MB`/`GB` (and bare `K`/`M`/`G`)
-/// are accepted as aliases of the binary units, matching how
-/// [`fmt_bytes`] renders. The inverse direction of `fmt_bytes`, used by
-/// the CLI's `--budget` flags.
+/// `"2GiB"`, `"1e3KiB"`. Units are binary; `KB`/`MB`/`GB` (and bare
+/// `K`/`M`/`G`) are accepted as aliases of the binary units, matching
+/// how [`fmt_bytes`] renders. The inverse direction of `fmt_bytes`,
+/// used by the CLI's `--budget` flags and the serve request router.
+/// Values whose byte count exceeds `u64::MAX` are rejected with a named
+/// overflow error (no silent saturation).
 pub fn parse_bytes(s: &str) -> anyhow::Result<u64> {
     let t = s.trim();
-    let unit_start = t.find(|c: char| !(c.is_ascii_digit() || c == '.')).unwrap_or(t.len());
-    let (num, unit) = t.split_at(unit_start);
+    let (num, unit) = t.split_at(numeric_prefix_len(t));
     let mult: f64 = match unit.trim().to_ascii_lowercase().as_str() {
         "" | "b" => 1.0,
         "k" | "kb" | "kib" => (1u64 << 10) as f64,
@@ -158,20 +208,21 @@ pub fn parse_bytes(s: &str) -> anyhow::Result<u64> {
     if !value.is_finite() || value < 0.0 {
         return Err(anyhow::Error::msg(format!("bad byte size '{s}'")));
     }
-    Ok((value * mult).round() as u64)
+    checked_bytes(value * mult, s)
 }
 
 /// Parse a CLI `--budget` value, shared by `repro plan` and `repro
 /// train` so the flag means the same thing everywhere: a bare number is
 /// **gigabytes** (the CLI's original contract), a value with a unit
 /// suffix goes through [`parse_bytes`] (`512KiB`, `1.5MiB`, `2GiB`).
+/// Budgets beyond the `u64` byte range error (see [`parse_bytes`]).
 pub fn parse_budget(s: &str) -> anyhow::Result<u64> {
     let s = s.trim();
     if let Ok(gb) = s.parse::<f64>() {
         if !gb.is_finite() || gb < 0.0 {
             return Err(anyhow::Error::msg(format!("bad budget '{s}'")));
         }
-        return Ok((gb * (1u64 << 30) as f64) as u64);
+        return checked_bytes(gb * (1u64 << 30) as f64, s);
     }
     parse_bytes(s)
 }
@@ -202,6 +253,37 @@ mod tests {
     }
 
     #[test]
+    fn parse_bytes_rejects_u64_overflow_instead_of_saturating() {
+        // The original bug: f64 → u64 casts clamp, so this returned
+        // u64::MAX instead of erroring.
+        let err = super::parse_bytes("99999999999999GiB").unwrap_err().to_string();
+        assert!(err.contains("overflow"), "{err}");
+        for s in ["1e30KiB", "20000000000GiB", "18446744073709551616", "1e100"] {
+            let err = super::parse_bytes(s).unwrap_err().to_string();
+            assert!(err.contains("overflow"), "{s}: {err}");
+        }
+        // Near the boundary: in-range values still parse (u64::MAX
+        // itself is not representable in f64; the largest representable
+        // value below 2^64 is fine).
+        assert_eq!(super::parse_bytes("9223372036854775808").unwrap(), 1u64 << 63);
+        assert_eq!(super::parse_bytes("8589934592GiB").unwrap(), 8_589_934_592u64 << 30);
+    }
+
+    #[test]
+    fn parse_bytes_exponent_inputs() {
+        // Scientific-notation numerics split before the unit, not at 'e'.
+        assert_eq!(super::parse_bytes("1e3KiB").unwrap(), 1000 << 10);
+        assert_eq!(super::parse_bytes("1E3KiB").unwrap(), 1000 << 10);
+        assert_eq!(super::parse_bytes("2.5e2MiB").unwrap(), 250 << 20);
+        assert_eq!(super::parse_bytes("1e-3KiB").unwrap(), 1, "rounded from 1.024 bytes");
+        assert_eq!(super::parse_bytes("1e3").unwrap(), 1000);
+        // A half-formed exponent is a unit error, not a silent truncation.
+        assert!(super::parse_bytes("1e").is_err());
+        assert!(super::parse_bytes("1eGiB").is_err());
+        assert!(super::parse_bytes("1e+GiB").is_err());
+    }
+
+    #[test]
     fn parse_budget_bare_is_gb_suffixed_is_bytes() {
         assert_eq!(super::parse_budget("2").unwrap(), 2 << 30);
         assert_eq!(super::parse_budget(" 2 ").unwrap(), 2 << 30, "whitespace still means GB");
@@ -209,5 +291,10 @@ mod tests {
         assert_eq!(super::parse_budget("512KiB").unwrap(), 512 << 10);
         assert!(super::parse_budget("-1").is_err());
         assert!(super::parse_budget("chonk").is_err());
+        // GB values that overflow the u64 byte range error by name on
+        // the bare-number path too.
+        let err = super::parse_budget("1e30").unwrap_err().to_string();
+        assert!(err.contains("overflow"), "{err}");
+        assert!(super::parse_budget("99999999999999GiB").is_err());
     }
 }

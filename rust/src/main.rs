@@ -22,6 +22,10 @@
 //!   pure-Rust native backend by default, or PJRT with `--features xla`;
 //!   `repro train --help` for its flags.
 //! - `export --network NAME --out FILE.json` — dump a zoo graph as JSON.
+//! - `serve [--addr HOST:PORT] …` — long-running plan-serving daemon:
+//!   newline-delimited JSON over TCP, many concurrent clients sharing
+//!   one plan cache (`repro serve --help` for its flags; see the
+//!   `recompute::serve` module docs for the protocol).
 
 use std::process::ExitCode;
 
@@ -99,6 +103,7 @@ fn run(args: &[String]) -> Result<()> {
         "experiment" => cmd_experiment(&flags),
         "export" => cmd_export(&flags),
         "train" => coordinator::cli::cmd_train(&args[1..]),
+        "serve" => recompute::serve::cmd_serve(&args[1..]),
         "help" | "--help" | "-h" => {
             print_usage();
             Ok(())
@@ -127,7 +132,10 @@ fn print_usage() {
                                          (--model tower or any zoo name, e.g.\n\
                                          'train --model resnet'; native backend by\n\
                                          default, --backend pjrt needs --features\n\
-                                         xla; 'repro train --help')"
+                                         xla; 'repro train --help')\n\
+           serve [--addr HOST:PORT]      plan-serving daemon: JSON lines over TCP,\n\
+                                         concurrent clients, shared plan cache\n\
+                                         ('repro serve --help')"
     );
 }
 

@@ -1,0 +1,531 @@
+//! `repro serve` — the long-running plan-serving daemon.
+//!
+//! A zero-dependency newline-delimited-JSON-over-TCP listener: each
+//! client connection sends one JSON object per line and receives exactly
+//! one JSON object per line back (see [`protocol`] for the command set).
+//! Every connection runs on its own thread, but all of them are
+//! multiplexed onto **one** [`SessionRegistry`] — fingerprint-keyed
+//! [`crate::session::PlanSession`]s over one shared
+//! [`crate::session::PlanCache`] — so a plan compiled for one client is
+//! a cache hit for every other client asking for the same (isomorphic)
+//! graph and request.
+//!
+//! Hardening, because the listener faces arbitrary bytes:
+//!
+//! - **admission control** — a global in-flight request cap
+//!   ([`ServeConfig::max_inflight`]) and a connection cap
+//!   ([`ServeConfig::max_connections`]); refused work gets a structured
+//!   `busy` reply, not a hang;
+//! - **bounded reads** — request lines are capped at
+//!   [`ServeConfig::max_request_bytes`] (the read itself is bounded via
+//!   `Read::take`, so an endless line cannot exhaust memory), and a
+//!   connection idle past [`ServeConfig::read_timeout`] is told so and
+//!   closed;
+//! - **total replies** — malformed JSON, invalid UTF-8, unknown
+//!   commands, out-of-cap requests and even handler panics all come back
+//!   as `{"ok": false, "error": {...}}`; the daemon never answers a
+//!   request with a disconnect;
+//! - **graceful shutdown** — SIGINT or a `shutdown` command stops the
+//!   accept loop, joins every connection thread and returns from
+//!   [`Server::run`] normally.
+//!
+//! ```text
+//! $ repro serve --addr 127.0.0.1:7878
+//! repro serve listening on 127.0.0.1:7878
+//!
+//! $ printf '{"cmd":"plan","network":"unet"}\n' | nc 127.0.0.1 7878
+//! {"ok":true,"reply":"plan","cache_hit":false,...}
+//! ```
+
+pub mod protocol;
+pub mod stats;
+
+pub use protocol::{error_reply, Routed, Router, RouterConfig};
+pub use stats::{LatencyPercentiles, LatencyRing, ServeMetrics, LATENCY_RING_CAPACITY};
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::anyhow::{anyhow, bail, Context, Result};
+use crate::session::{PlanCache, SessionRegistry};
+use crate::util::json::Json;
+
+/// Daemon configuration: where to listen and the resource caps.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Listen address (`host:port`; port 0 picks a free port).
+    pub addr: String,
+    /// Maximum simultaneously open client connections.
+    pub max_connections: usize,
+    /// Maximum requests processing at once across all connections.
+    pub max_inflight: usize,
+    /// Maximum bytes in one request line (longer lines are refused and
+    /// the connection closed — framing can't be trusted past that).
+    pub max_request_bytes: usize,
+    /// How long a connection may sit idle (or stall mid-request) before
+    /// it is told `idle-timeout` and closed.
+    pub read_timeout: Duration,
+    /// Capacity of the shared compiled-plan LRU.
+    pub cache_capacity: usize,
+    /// Maximum live sessions in the registry (LRU beyond that).
+    pub max_sessions: usize,
+    /// Per-request caps enforced by the [`Router`].
+    pub router: RouterConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            addr: "127.0.0.1:7878".to_string(),
+            max_connections: 64,
+            max_inflight: 8,
+            max_request_bytes: 1 << 20,
+            read_timeout: Duration::from_secs(30),
+            cache_capacity: 256,
+            max_sessions: 64,
+            router: RouterConfig::default(),
+        }
+    }
+}
+
+/// Per-connection limits, copied out of [`ServeConfig`] for the worker
+/// threads.
+#[derive(Clone, Copy)]
+struct ConnLimits {
+    max_request_bytes: usize,
+    idle: Duration,
+    /// Socket read timeout — the granularity at which a blocked reader
+    /// re-checks the shutdown flag and the idle deadline.
+    poll: Duration,
+    max_inflight: usize,
+}
+
+/// A handle for stopping a running [`Server`] from another thread (or
+/// inspecting whether it has been stopped).
+#[derive(Clone)]
+pub struct ServerHandle {
+    stop: Arc<AtomicBool>,
+    addr: SocketAddr,
+}
+
+impl ServerHandle {
+    /// The address the server actually bound (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Ask the accept loop and every connection thread to stop.
+    pub fn shutdown(&self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+
+    /// True once shutdown has been requested.
+    pub fn is_shutdown(&self) -> bool {
+        self.stop.load(Ordering::SeqCst)
+    }
+}
+
+/// The bound daemon: a nonblocking listener plus the shared [`Router`].
+pub struct Server {
+    listener: TcpListener,
+    local_addr: SocketAddr,
+    router: Arc<Router>,
+    metrics: Arc<ServeMetrics>,
+    stop: Arc<AtomicBool>,
+    cfg: ServeConfig,
+}
+
+impl Server {
+    /// Bind `cfg.addr` and build the shared serving state (registry,
+    /// cache, metrics, router). The listener is nonblocking so the
+    /// accept loop can poll the shutdown flag.
+    pub fn bind(cfg: ServeConfig) -> Result<Server> {
+        if cfg.max_inflight == 0 || cfg.max_connections == 0 || cfg.max_request_bytes == 0 {
+            bail!("serve caps must be positive (connections, inflight, request bytes)");
+        }
+        let listener = TcpListener::bind(cfg.addr.as_str())
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true).context("setting listener nonblocking")?;
+        let local_addr = listener.local_addr().context("reading bound address")?;
+        let cache = PlanCache::shared(cfg.cache_capacity.max(1));
+        let registry = SessionRegistry::new(cfg.max_sessions.max(1), cache);
+        let metrics = Arc::new(ServeMetrics::new());
+        let router = Arc::new(Router::new(registry, metrics.clone(), cfg.router));
+        Ok(Server {
+            listener,
+            local_addr,
+            router,
+            metrics,
+            stop: Arc::new(AtomicBool::new(false)),
+            cfg,
+        })
+    }
+
+    /// The address the listener actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// A clonable handle that can stop this server from another thread.
+    pub fn handle(&self) -> ServerHandle {
+        ServerHandle { stop: self.stop.clone(), addr: self.local_addr }
+    }
+
+    /// The shared router (tests inspect its registry).
+    pub fn router(&self) -> &Arc<Router> {
+        &self.router
+    }
+
+    /// Accept connections until shutdown is requested (via
+    /// [`ServerHandle::shutdown`], a client's `shutdown` command, or
+    /// SIGINT when installed by [`cmd_serve`]), then join every
+    /// connection thread and return.
+    pub fn run(self) -> Result<()> {
+        let (poll_min, poll_max) = (Duration::from_millis(1), Duration::from_millis(100));
+        let lim = ConnLimits {
+            max_request_bytes: self.cfg.max_request_bytes,
+            idle: self.cfg.read_timeout,
+            poll: self.cfg.read_timeout.clamp(poll_min, poll_max),
+            max_inflight: self.cfg.max_inflight,
+        };
+        let mut workers: Vec<std::thread::JoinHandle<()>> = Vec::new();
+        let mut next_id = 0u64;
+        loop {
+            if sigint::pending() {
+                self.stop.store(true, Ordering::SeqCst);
+            }
+            if self.stop.load(Ordering::SeqCst) {
+                break;
+            }
+            match self.listener.accept() {
+                Ok((stream, _peer)) => {
+                    workers.retain(|h| !h.is_finished());
+                    self.metrics.connections_total.fetch_add(1, Ordering::Relaxed);
+                    if workers.len() >= self.cfg.max_connections {
+                        self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        refuse(stream);
+                        continue;
+                    }
+                    self.metrics.connections.fetch_add(1, Ordering::SeqCst);
+                    let router = self.router.clone();
+                    let metrics = self.metrics.clone();
+                    let stop = self.stop.clone();
+                    next_id += 1;
+                    let spawned = std::thread::Builder::new()
+                        .name(format!("repro-serve-{next_id}"))
+                        .spawn(move || {
+                            let _ = serve_connection(stream, &router, &metrics, &stop, lim);
+                            metrics.connections.fetch_sub(1, Ordering::SeqCst);
+                        });
+                    match spawned {
+                        Ok(h) => workers.push(h),
+                        Err(_) => {
+                            // Could not get a thread: shed the connection.
+                            self.metrics.connections.fetch_sub(1, Ordering::SeqCst);
+                            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                        }
+                    }
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    std::thread::sleep(Duration::from_millis(25));
+                }
+                Err(e) => return Err(anyhow!("accept failed: {e}")),
+            }
+        }
+        for h in workers {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+/// Refuse a connection over the cap with one `busy` line.
+fn refuse(mut stream: TcpStream) {
+    let mut s = error_reply("busy", "server is at its connection limit; retry later").to_string();
+    s.push('\n');
+    let _ = stream.write_all(s.as_bytes());
+}
+
+fn write_reply(w: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
+    let mut s = reply.to_string();
+    s.push('\n');
+    w.write_all(s.as_bytes())?;
+    w.flush()
+}
+
+/// One connection's request loop: read a bounded line, route it, write
+/// the reply, repeat until EOF / idle timeout / shutdown.
+fn serve_connection(
+    stream: TcpStream,
+    router: &Router,
+    metrics: &ServeMetrics,
+    stop: &AtomicBool,
+    lim: ConnLimits,
+) -> std::io::Result<()> {
+    // Short read timeouts turn the blocking read into a poll so the
+    // thread can observe shutdown and the idle deadline.
+    stream.set_read_timeout(Some(lim.poll))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    loop {
+        let mut buf: Vec<u8> = Vec::new();
+        let deadline = Instant::now() + lim.idle;
+        loop {
+            if stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            // Cap the read at one byte past the limit: a line that fills
+            // the whole allowance is over-long, detected below without
+            // ever buffering more than `max_request_bytes + 1` bytes.
+            let allowance = (lim.max_request_bytes + 1).saturating_sub(buf.len());
+            if allowance == 0 {
+                break;
+            }
+            match (&mut reader).take(allowance as u64).read_until(b'\n', &mut buf) {
+                // EOF: a clean close between requests, or a final
+                // unterminated line to process.
+                Ok(0) => {
+                    if buf.is_empty() {
+                        return Ok(());
+                    }
+                    break;
+                }
+                Ok(_) => {
+                    if buf.last() == Some(&b'\n') {
+                        break;
+                    }
+                    // No newline yet: the `take` allowance ran out (next
+                    // iteration flags the oversize) or EOF follows.
+                }
+                // Timeout expiry — note `read_until` has already
+                // appended any bytes it got before the timeout, so
+                // partial requests accumulate across retries.
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        std::io::ErrorKind::WouldBlock
+                            | std::io::ErrorKind::TimedOut
+                            | std::io::ErrorKind::Interrupted
+                    ) =>
+                {
+                    if Instant::now() >= deadline {
+                        let msg = if buf.is_empty() {
+                            "connection idle past the server's read timeout"
+                        } else {
+                            "request stalled mid-line past the server's read timeout"
+                        };
+                        let _ = write_reply(&mut writer, &error_reply("idle-timeout", msg));
+                        return Ok(());
+                    }
+                }
+                Err(e) => return Err(e),
+            }
+        }
+        if buf.len() > lim.max_request_bytes {
+            // The line framing can't be trusted past the cap (we'd have
+            // to skip unbounded bytes to resync), so reply and close.
+            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            let reply = error_reply(
+                "request-too-large",
+                &format!("request exceeds {} bytes", lim.max_request_bytes),
+            );
+            let _ = write_reply(&mut writer, &reply);
+            // Drain whatever the client already sent before closing:
+            // dropping a socket with unread receive data turns the close
+            // into an RST, which can destroy the reply in flight.
+            let mut sink = [0u8; 4096];
+            let mut drained = 0usize;
+            loop {
+                match reader.read(&mut sink) {
+                    Ok(0) | Err(_) => break,
+                    Ok(n) => {
+                        drained += n;
+                        // Bounded courtesy: a firehose client gets cut off.
+                        if drained > lim.max_request_bytes {
+                            break;
+                        }
+                    }
+                }
+            }
+            return Ok(());
+        }
+        while matches!(buf.last(), Some(&b'\n') | Some(&b'\r')) {
+            buf.pop();
+        }
+        if buf.is_empty() {
+            continue;
+        }
+        let Ok(line) = std::str::from_utf8(&buf) else {
+            metrics.record(Duration::ZERO, true);
+            write_reply(&mut writer, &error_reply("bad-utf8", "request line is not valid UTF-8"))?;
+            continue;
+        };
+        if !metrics.try_admit(lim.max_inflight) {
+            metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            let reply =
+                error_reply("busy", "server is at its in-flight request limit; retry shortly");
+            write_reply(&mut writer, &reply)?;
+            continue;
+        }
+        let t0 = Instant::now();
+        let routed = router.route_line(line);
+        metrics.release();
+        metrics.record(t0.elapsed(), routed.is_error);
+        write_reply(&mut writer, &routed.reply)?;
+        if routed.shutdown {
+            stop.store(true, Ordering::SeqCst);
+            return Ok(());
+        }
+    }
+}
+
+/// Zero-dependency SIGINT latch: a C `signal` handler that flips an
+/// atomic the accept loop polls. On non-Unix targets this is a no-op
+/// (Ctrl-C then terminates the process the default way).
+#[cfg(unix)]
+mod sigint {
+    use std::sync::atomic::{AtomicBool, Ordering};
+
+    static PENDING: AtomicBool = AtomicBool::new(false);
+
+    extern "C" fn on_sigint(_signum: i32) {
+        // Only async-signal-safe work here: one atomic store.
+        PENDING.store(true, Ordering::SeqCst);
+    }
+
+    /// Install the handler (idempotent).
+    pub fn install() {
+        const SIGINT: i32 = 2;
+        extern "C" {
+            fn signal(signum: i32, handler: extern "C" fn(i32)) -> usize;
+        }
+        unsafe {
+            signal(SIGINT, on_sigint);
+        }
+    }
+
+    /// True once SIGINT has been received.
+    pub fn pending() -> bool {
+        PENDING.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(not(unix))]
+mod sigint {
+    pub fn install() {}
+
+    pub fn pending() -> bool {
+        false
+    }
+}
+
+fn parse_num<T: std::str::FromStr>(flag: &str, v: &str) -> Result<T>
+where
+    T::Err: std::fmt::Display,
+{
+    v.parse::<T>().map_err(|e| anyhow!("bad value for {flag}: {e}"))
+}
+
+const SERVE_USAGE: &str = "\
+repro serve — long-running plan-serving daemon (newline-delimited JSON over TCP)
+
+USAGE: repro serve [flags]
+
+FLAGS:
+  --addr HOST:PORT        listen address (default 127.0.0.1:7878; port 0 = auto)
+  --max-connections N     simultaneous client connections (default 64)
+  --max-inflight N        requests processing at once (default 8)
+  --max-request-bytes N   request line size cap (default 1048576)
+  --read-timeout-ms N     per-connection idle/stall timeout (default 30000)
+  --cache-capacity N      shared compiled-plan LRU capacity (default 256)
+  --max-sessions N        live sessions kept in the registry (default 64)
+  --max-budget BYTES      largest budget a request may name (default 64GiB)
+  --max-graph-nodes N     largest accepted graph (default 4096)
+  --max-train-steps N     largest training request (default 50)
+  --threads N             planner worker-pool width (default: REPRO_THREADS)
+
+PROTOCOL: one JSON object per line; commands
+  ping | graph_upload | plan | train | stats | shutdown
+(see the serve module docs / README 'Serving' for fields and examples)";
+
+/// `repro serve` entry point: parse flags, bind, print the bound
+/// address, serve until SIGINT or a `shutdown` command.
+pub fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut cfg = ServeConfig::default();
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        if a == "--help" || a == "-h" {
+            println!("{SERVE_USAGE}");
+            return Ok(());
+        }
+        let mut val = || it.next().ok_or_else(|| anyhow!("{a} needs a value"));
+        match a.as_str() {
+            "--addr" => cfg.addr = val()?.clone(),
+            "--max-connections" => cfg.max_connections = parse_num(a, val()?)?,
+            "--max-inflight" => cfg.max_inflight = parse_num(a, val()?)?,
+            "--max-request-bytes" => cfg.max_request_bytes = parse_num(a, val()?)?,
+            "--read-timeout-ms" => cfg.read_timeout = Duration::from_millis(parse_num(a, val()?)?),
+            "--cache-capacity" => cfg.cache_capacity = parse_num(a, val()?)?,
+            "--max-sessions" => cfg.max_sessions = parse_num(a, val()?)?,
+            "--max-budget" => cfg.router.max_budget_bytes = crate::parse_bytes(val()?)?,
+            "--max-graph-nodes" => cfg.router.max_graph_nodes = parse_num(a, val()?)?,
+            "--max-train-steps" => cfg.router.max_train_steps = parse_num(a, val()?)?,
+            "--threads" => crate::util::pool::set_global_threads(parse_num(a, val()?)?),
+            other => bail!("unknown serve flag '{other}' (try 'repro serve --help')"),
+        }
+    }
+    sigint::install();
+    let server = Server::bind(cfg)?;
+    // One parseable line on stdout so scripts (and the CI smoke job) can
+    // learn the bound port before connecting.
+    println!("repro serve listening on {}", server.local_addr());
+    std::io::stdout().flush().ok();
+    server.run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn server_binds_port_zero_and_shuts_down_cleanly() {
+        let cfg = ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() };
+        let server = Server::bind(cfg).unwrap();
+        let handle = server.handle();
+        assert_ne!(handle.addr().port(), 0, "port 0 must resolve to a real port");
+        assert!(!handle.is_shutdown());
+        let t = std::thread::spawn(move || server.run());
+        handle.shutdown();
+        assert!(handle.is_shutdown());
+        t.join().unwrap().unwrap();
+    }
+
+    #[test]
+    fn zero_caps_are_rejected() {
+        let cfg = ServeConfig {
+            addr: "127.0.0.1:0".to_string(),
+            max_inflight: 0,
+            ..ServeConfig::default()
+        };
+        assert!(Server::bind(cfg).is_err());
+    }
+
+    #[test]
+    fn serve_flags_parse_and_unknown_flags_error() {
+        let bad = ["--warp".to_string()];
+        let err = cmd_serve(&bad).unwrap_err().to_string();
+        assert!(err.contains("unknown serve flag"), "{err}");
+        let missing = ["--addr".to_string()];
+        assert!(cmd_serve(&missing).is_err(), "--addr without a value must error");
+        let badnum = ["--max-inflight".to_string(), "chonk".to_string()];
+        assert!(cmd_serve(&badnum).is_err());
+    }
+}

@@ -1,0 +1,572 @@
+//! The serve request router: one newline-delimited JSON request in, one
+//! JSON reply out — **always**.
+//!
+//! Every reply is an object with `"ok": true` plus command-specific
+//! fields, or `"ok": false` with a structured
+//! `{"error": {"code": …, "msg": …}}`. The router never panics outward:
+//! requests are parsed by the hardened [`Json::parse`] (depth-limited,
+//! positioned errors), every handler returns typed rejections, and the
+//! dispatch is wrapped in `catch_unwind` as a last line of defense, so a
+//! bug in a handler degrades to an `"internal"` error reply instead of a
+//! dead connection.
+//!
+//! Commands (the `"cmd"` field):
+//!
+//! | command        | fields                                              |
+//! |----------------|-----------------------------------------------------|
+//! | `ping`         | —                                                   |
+//! | `graph_upload` | `graph` (the [`Graph::to_json`] object)             |
+//! | `plan`         | `fingerprint` \| `network` (+`batch`), `planner`, `objective`, `sim`, `budget` \| `budget_frac` |
+//! | `train`        | `network`, `batch`, `width`, `steps`, `mode`, `sim`, `budget` \| `budget_frac`, `lr` |
+//! | `stats`        | —                                                   |
+//! | `shutdown`     | —                                                   |
+//!
+//! The router multiplexes every client onto one [`SessionRegistry`]
+//! (fingerprint-keyed sessions over one shared plan cache), which is
+//! what makes the daemon an amortizer: two clients uploading isomorphic
+//! relabelings of a graph plan against the same session, and the second
+//! identical request is a cache hit whoever sent the first.
+
+use std::panic::AssertUnwindSafe;
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::coordinator::cli::dag_loss_summary;
+use crate::coordinator::report::session_json;
+use crate::coordinator::train::train_zoo_model_in;
+use crate::exec::TrainConfig;
+use crate::graph::{Graph, GraphFingerprint};
+use crate::models::zoo;
+use crate::planner::{BudgetSpec, Objective, PlanRequest, PlannerId};
+use crate::session::{PlanSession, SessionRegistry};
+use crate::sim::SimMode;
+use crate::util::json::Json;
+use crate::{fmt_bytes, parse_bytes};
+
+use super::stats::ServeMetrics;
+
+/// Per-request resource caps the router enforces before doing any work —
+/// one hostile request must not be able to occupy the daemon with an
+/// enormous graph, budget, or training run.
+#[derive(Clone, Copy, Debug)]
+pub struct RouterConfig {
+    /// Largest absolute activation budget a request may name.
+    pub max_budget_bytes: u64,
+    /// Largest graph (in nodes) accepted for upload or zoo construction.
+    pub max_graph_nodes: u32,
+    /// Largest `batch` accepted for zoo construction / training.
+    pub max_batch: u64,
+    /// Largest per-node `width` accepted for training.
+    pub max_train_width: usize,
+    /// Largest `steps` accepted for one training request.
+    pub max_train_steps: usize,
+}
+
+impl Default for RouterConfig {
+    fn default() -> RouterConfig {
+        RouterConfig {
+            max_budget_bytes: 64 << 30,
+            max_graph_nodes: 4096,
+            max_batch: 4096,
+            max_train_width: 256,
+            max_train_steps: 50,
+        }
+    }
+}
+
+/// One routed request's outcome.
+pub struct Routed {
+    /// The JSON reply to write back (always exactly one object).
+    pub reply: Json,
+    /// The request asked the daemon to shut down.
+    pub shutdown: bool,
+    /// The reply is an `"ok": false` error.
+    pub is_error: bool,
+}
+
+/// A typed rejection: becomes the `{"code", "msg"}` of an error reply.
+struct Reject {
+    code: &'static str,
+    msg: String,
+}
+
+fn reject(code: &'static str, msg: impl std::fmt::Display) -> Reject {
+    Reject { code, msg: msg.to_string() }
+}
+
+/// Build an `"ok": false` reply with a structured error object.
+pub fn error_reply(code: &str, msg: &str) -> Json {
+    Json::obj()
+        .set("ok", false.into())
+        .set("error", Json::obj().set("code", code.into()).set("msg", msg.into()))
+}
+
+fn ok_reply(cmd: &str) -> Json {
+    Json::obj().set("ok", true.into()).set("reply", cmd.into())
+}
+
+/// The daemon's request dispatcher. Owns the cross-client
+/// [`SessionRegistry`] and a handle to the shared [`ServeMetrics`];
+/// thread-safe (`&self` everywhere), shared across connection threads
+/// via `Arc`.
+pub struct Router {
+    registry: SessionRegistry,
+    metrics: Arc<ServeMetrics>,
+    cfg: RouterConfig,
+    started: Instant,
+}
+
+impl Router {
+    pub fn new(registry: SessionRegistry, metrics: Arc<ServeMetrics>, cfg: RouterConfig) -> Router {
+        Router { registry, metrics, cfg, started: Instant::now() }
+    }
+
+    /// The registry this router serves from (tests inspect it).
+    pub fn registry(&self) -> &SessionRegistry {
+        &self.registry
+    }
+
+    /// Route one request line to a reply. Total: every input — hostile
+    /// bytes included — produces exactly one JSON reply object.
+    pub fn route_line(&self, line: &str) -> Routed {
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| self.dispatch(line)));
+        let (reply, shutdown, is_error) = match outcome {
+            Ok(Ok((reply, shutdown))) => (reply, shutdown, false),
+            Ok(Err(r)) => (error_reply(r.code, &r.msg), false, true),
+            Err(_) => (error_reply("internal", "request handler panicked"), false, true),
+        };
+        Routed { reply, shutdown, is_error }
+    }
+
+    fn dispatch(&self, line: &str) -> Result<(Json, bool), Reject> {
+        let req = Json::parse(line).map_err(|e| reject("bad-json", e))?;
+        let cmd = req
+            .get("cmd")
+            .as_str()
+            .ok_or_else(|| reject("bad-request", "missing string field 'cmd'"))?;
+        match cmd {
+            "ping" => Ok((ok_reply("pong"), false)),
+            "graph_upload" => self.graph_upload(&req).map(|j| (j, false)),
+            "plan" => self.plan(&req).map(|j| (j, false)),
+            "train" => self.train(&req).map(|j| (j, false)),
+            "stats" => Ok((self.stats(), false)),
+            "shutdown" => Ok((ok_reply("shutting down"), true)),
+            other => Err(reject(
+                "unknown-cmd",
+                format!("unknown command '{other}' (ping|graph_upload|plan|train|stats|shutdown)"),
+            )),
+        }
+    }
+
+    // ---- graph_upload ---------------------------------------------------
+
+    fn graph_upload(&self, req: &Json) -> Result<Json, Reject> {
+        let gj = req.get("graph");
+        if gj == &Json::Null {
+            return Err(reject("bad-request", "graph_upload needs a 'graph' object"));
+        }
+        let g = Graph::from_json_value(gj).map_err(|e| reject("bad-graph", e))?;
+        if g.len() == 0 {
+            return Err(reject("bad-graph", "graph has no nodes"));
+        }
+        if g.len() > self.cfg.max_graph_nodes {
+            return Err(reject(
+                "graph-too-large",
+                format!("{} nodes exceeds this server's cap {}", g.len(), self.cfg.max_graph_nodes),
+            ));
+        }
+        let (name, nodes, total_mem) = (g.name.clone(), g.len(), g.total_mem());
+        let (session, reused) = self.registry.get_or_insert(g);
+        Ok(ok_reply("graph_upload")
+            .set("fingerprint", session.fingerprint().to_string().into())
+            .set("name", name.into())
+            .set("nodes", nodes.into())
+            .set("total_mem", total_mem.into())
+            .set("reused", reused.into()))
+    }
+
+    // ---- plan -----------------------------------------------------------
+
+    fn plan(&self, req: &Json) -> Result<Json, Reject> {
+        let session = self.resolve_session(req)?;
+        let planner = match req.get("planner").as_str() {
+            None => PlannerId::ApproxDp,
+            Some(s) => PlannerId::parse(s).map_err(|e| reject("bad-request", e))?,
+        };
+        let objective = parse_objective(req.get("objective").as_str().unwrap_or("tc"))?;
+        let sim_mode = match req.get("sim").as_str() {
+            None => SimMode::Liveness,
+            Some(s) => SimMode::parse(s).map_err(|e| reject("bad-request", e))?,
+        };
+        let budget = self.budget_spec(req)?;
+        let r = PlanRequest { planner, budget, objective, sim_mode };
+        let (cp, cache_hit) = session.plan_tracked(&r).map_err(|e| reject("plan-failed", e))?;
+        Ok(ok_reply("plan")
+            .set("fingerprint", cp.fingerprint.to_string().into())
+            .set("planner", cp.plan.kind.label().into())
+            .set("objective", objective.label().into())
+            .set("sim", sim_mode.label().into())
+            .set("budget_bytes", cp.plan.budget.into())
+            .set("k_segments", (cp.plan.chain.k() as u64).into())
+            .set("overhead", cp.plan.overhead.into())
+            .set("predicted_peak", cp.program.predicted_peak().into())
+            .set("measured_peak", cp.report.peak_bytes.into())
+            .set("peak_total", cp.report.peak_total.into())
+            .set("cache_hit", cache_hit.into()))
+    }
+
+    /// A `plan` request addresses its graph by `fingerprint` (from a
+    /// prior `graph_upload` — possibly another client's: fingerprints
+    /// are relabeling-invariant) or by zoo `network` name (+ `batch`).
+    fn resolve_session(&self, req: &Json) -> Result<Arc<PlanSession>, Reject> {
+        if let Some(h) = req.get("fingerprint").as_str() {
+            let fp = u64::from_str_radix(h.trim(), 16).map_err(|_| {
+                reject("bad-request", format!("bad fingerprint '{h}' (expected hex digits)"))
+            })?;
+            return self.registry.get(GraphFingerprint(fp)).ok_or_else(|| {
+                reject(
+                    "unknown-fingerprint",
+                    format!("no session registered for fingerprint {h} (graph_upload it first)"),
+                )
+            });
+        }
+        if let Some(name) = req.get("network").as_str() {
+            let e = zoo::find(name)
+                .ok_or_else(|| reject("unknown-network", format!("unknown zoo network '{name}'")))?;
+            let batch = match req.get("batch") {
+                Json::Null => e.batch,
+                b => b
+                    .as_u64()
+                    .filter(|&b| b >= 1)
+                    .ok_or_else(|| reject("bad-request", "'batch' must be a positive integer"))?,
+            };
+            if batch > self.cfg.max_batch {
+                return Err(reject(
+                    "request-cap",
+                    format!("batch {batch} exceeds this server's cap {}", self.cfg.max_batch),
+                ));
+            }
+            let g = e.build_batch(batch);
+            if g.len() > self.cfg.max_graph_nodes {
+                return Err(reject(
+                    "graph-too-large",
+                    format!(
+                        "{} nodes exceeds this server's cap {}",
+                        g.len(),
+                        self.cfg.max_graph_nodes
+                    ),
+                ));
+            }
+            return Ok(self.registry.get_or_insert(g).0);
+        }
+        Err(reject("bad-request", "plan needs 'fingerprint' (from graph_upload) or 'network'"))
+    }
+
+    /// `budget` (string like `"512KiB"`, or an integer byte count) /
+    /// `budget_frac` → [`BudgetSpec`], capped at the server's limit.
+    fn budget_spec(&self, req: &Json) -> Result<BudgetSpec, Reject> {
+        let b = req.get("budget");
+        let spec = match b {
+            Json::Null => match req.get("budget_frac") {
+                Json::Null => BudgetSpec::MinFeasible,
+                f => match f.as_f64() {
+                    Some(f) if f.is_finite() && (0.0..=1.0).contains(&f) => BudgetSpec::Frac(f),
+                    _ => {
+                        return Err(reject(
+                            "bad-request",
+                            "'budget_frac' must be a number in [0, 1]",
+                        ))
+                    }
+                },
+            },
+            Json::Str(s) => {
+                BudgetSpec::Bytes(parse_bytes(s).map_err(|e| reject("bad-request", e))?)
+            }
+            Json::Num(_) => BudgetSpec::Bytes(b.as_u64().ok_or_else(|| {
+                reject("bad-request", "numeric 'budget' must be a non-negative integer byte count")
+            })?),
+            _ => {
+                return Err(reject(
+                    "bad-request",
+                    "'budget' must be a string (\"512KiB\") or a byte count",
+                ))
+            }
+        };
+        if let BudgetSpec::Bytes(bytes) = spec {
+            if bytes > self.cfg.max_budget_bytes {
+                return Err(reject(
+                    "budget-cap",
+                    format!(
+                        "requested budget {} exceeds this server's cap {}",
+                        fmt_bytes(bytes),
+                        fmt_bytes(self.cfg.max_budget_bytes)
+                    ),
+                ));
+            }
+        }
+        Ok(spec)
+    }
+
+    // ---- train ----------------------------------------------------------
+
+    fn train(&self, req: &Json) -> Result<Json, Reject> {
+        let name = req
+            .get("network")
+            .as_str()
+            .ok_or_else(|| reject("bad-request", "train needs 'network' (a zoo name)"))?;
+        if zoo::find(name).is_none() {
+            return Err(reject("unknown-network", format!("unknown zoo network '{name}'")));
+        }
+        let batch = opt_usize(req, "batch", 2)?;
+        let width = opt_usize(req, "width", 8)?;
+        let steps = opt_usize(req, "steps", 2)?;
+        if batch as u64 > self.cfg.max_batch
+            || width > self.cfg.max_train_width
+            || steps > self.cfg.max_train_steps
+        {
+            return Err(reject(
+                "request-cap",
+                format!(
+                    "train request exceeds this server's caps \
+                     (batch ≤ {}, width ≤ {}, steps ≤ {})",
+                    self.cfg.max_batch, self.cfg.max_train_width, self.cfg.max_train_steps
+                ),
+            ));
+        }
+        let lr = match req.get("lr") {
+            Json::Null => 0.05_f32,
+            v => match v.as_f64() {
+                Some(f) if f.is_finite() && f > 0.0 && f <= 10.0 => f as f32,
+                _ => return Err(reject("bad-request", "'lr' must be a number in (0, 10]")),
+            },
+        };
+        let objectives: Vec<Objective> = match req.get("mode").as_str().unwrap_or("tc") {
+            "all" => vec![Objective::MinOverhead, Objective::MaxOverhead],
+            m => vec![parse_objective(m)?],
+        };
+        let sim = match req.get("sim").as_str() {
+            None => SimMode::Liveness,
+            Some(s) => SimMode::parse(s).map_err(|e| reject("bad-request", e))?,
+        };
+        let budget = self.budget_spec(req)?;
+        let cfg = TrainConfig { layers: 0, steps, lr, seed: 7, log_every: 0 };
+        let cmp = train_zoo_model_in(
+            Some(&self.registry),
+            name,
+            batch,
+            width,
+            &cfg,
+            budget,
+            &objectives,
+            sim,
+            true,
+        )
+        .map_err(|e| reject("train-failed", e))?;
+        let runs: Vec<Json> = cmp
+            .runs
+            .iter()
+            .map(|r| {
+                Json::obj()
+                    .set("objective", r.objective.label().into())
+                    .set("k_segments", (r.k as u64).into())
+                    .set("overhead", r.overhead.into())
+                    .set("budget_bytes", r.budget.into())
+                    .set("peak", r.report.observed_peak.into())
+                    .set("grads_match", r.grads_match.into())
+                    .set("peak_matches_sim", r.peak_matches_sim.into())
+                    .set("losses_identical", r.losses_identical.into())
+                    .set("cache_hit", r.cache_hit.into())
+                    .set("loss", dag_loss_summary(&r.report).into())
+            })
+            .collect();
+        Ok(ok_reply("train")
+            .set("model", cmp.model.as_str().into())
+            .set("fingerprint", cmp.fingerprint.to_string().into())
+            .set("nodes", cmp.nodes.into())
+            .set("sim", cmp.mode.label().into())
+            .set("steps", (steps as u64).into())
+            .set("vanilla_peak", cmp.vanilla.observed_peak.into())
+            .set("vanilla_loss", dag_loss_summary(&cmp.vanilla).into())
+            .set("all_verified", cmp.all_verified().into())
+            .set("runs", Json::Arr(runs)))
+    }
+
+    // ---- stats ----------------------------------------------------------
+
+    fn stats(&self) -> Json {
+        let cs = self.registry.cache().stats();
+        let agg = self.registry.aggregate_stats();
+        let m = &*self.metrics;
+        let latency = match m.latency.percentiles() {
+            None => Json::Null,
+            Some(p) => Json::obj()
+                .set("count", p.count.into())
+                .set("p50_us", p.p50_us.into())
+                .set("p90_us", p.p90_us.into())
+                .set("p99_us", p.p99_us.into())
+                .set("max_us", p.max_us.into()),
+        };
+        ok_reply("stats")
+            .set("uptime_ms", (self.started.elapsed().as_millis() as u64).into())
+            .set("requests", m.requests.load(Ordering::Relaxed).into())
+            .set("errors", m.errors.load(Ordering::Relaxed).into())
+            .set("rejected", m.rejected.load(Ordering::Relaxed).into())
+            .set("inflight", (m.inflight.load(Ordering::SeqCst) as u64).into())
+            .set("connections", (m.connections.load(Ordering::SeqCst) as u64).into())
+            .set("connections_total", m.connections_total.load(Ordering::Relaxed).into())
+            .set("sessions", (self.registry.len() as u64).into())
+            .set(
+                "cache",
+                Json::obj()
+                    .set("hits", cs.hits.into())
+                    .set("misses", cs.misses.into())
+                    .set("evictions", cs.evictions.into())
+                    .set("entries", cs.entries.into())
+                    .set("hit_rate", cs.hit_rate().into()),
+            )
+            .set("session_totals", session_json(&agg))
+            .set("latency_us", latency)
+    }
+}
+
+fn parse_objective(s: &str) -> Result<Objective, Reject> {
+    match s {
+        "tc" => Ok(Objective::MinOverhead),
+        "mc" => Ok(Objective::MaxOverhead),
+        o => Err(reject("bad-request", format!("bad objective '{o}' (tc|mc)"))),
+    }
+}
+
+/// Optional positive-integer field with a default.
+fn opt_usize(req: &Json, key: &str, default: usize) -> Result<usize, Reject> {
+    match req.get(key) {
+        Json::Null => Ok(default),
+        v => v
+            .as_u64()
+            .filter(|&n| n >= 1)
+            .and_then(|n| usize::try_from(n).ok())
+            .ok_or_else(|| reject("bad-request", format!("'{key}' must be a positive integer"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{PlanCache, SessionRegistry};
+    use crate::testutil::{diamond, diamond_relabeled};
+
+    fn router() -> Router {
+        Router::new(
+            SessionRegistry::new(8, PlanCache::shared(64)),
+            Arc::new(ServeMetrics::new()),
+            RouterConfig::default(),
+        )
+    }
+
+    fn ok(r: &Routed) -> &Json {
+        assert!(!r.is_error, "expected ok reply, got {}", r.reply.to_string());
+        assert_eq!(r.reply.get("ok").as_bool(), Some(true));
+        &r.reply
+    }
+
+    fn err_code(r: &Routed) -> String {
+        assert!(r.is_error, "expected error reply, got {}", r.reply.to_string());
+        assert_eq!(r.reply.get("ok").as_bool(), Some(false));
+        r.reply.get("error").get("code").as_str().unwrap_or_default().to_string()
+    }
+
+    #[test]
+    fn ping_pongs_and_unknown_cmds_error() {
+        let rt = router();
+        let r = rt.route_line(r#"{"cmd":"ping"}"#);
+        assert_eq!(ok(&r).get("reply").as_str(), Some("pong"));
+        assert!(!r.shutdown);
+        assert_eq!(err_code(&rt.route_line(r#"{"cmd":"warp"}"#)), "unknown-cmd");
+        assert_eq!(err_code(&rt.route_line(r#"{"nope":1}"#)), "bad-request");
+        assert_eq!(err_code(&rt.route_line("not json")), "bad-json");
+        assert_eq!(err_code(&rt.route_line(&"[".repeat(100_000))), "bad-json");
+    }
+
+    #[test]
+    fn upload_plan_roundtrip_shares_sessions_across_relabelings() {
+        let rt = router();
+        let up = |g: &crate::graph::Graph| {
+            let line = Json::obj()
+                .set("cmd", "graph_upload".into())
+                .set("graph", Json::parse(&g.to_json()).unwrap())
+                .to_string();
+            rt.route_line(&line)
+        };
+        let a = up(&diamond());
+        let fp = ok(&a).get("fingerprint").as_str().unwrap().to_string();
+        assert_eq!(a.reply.get("reused").as_bool(), Some(false));
+        // The isomorphic relabeling lands on the same session.
+        let b = up(&diamond_relabeled());
+        assert_eq!(ok(&b).get("fingerprint").as_str(), Some(fp.as_str()));
+        assert_eq!(b.reply.get("reused").as_bool(), Some(true));
+        assert_eq!(rt.registry().len(), 1);
+
+        // Plan by fingerprint: first is a miss, repeat is a cache hit.
+        let plan_line = format!(r#"{{"cmd":"plan","fingerprint":"{fp}","planner":"exact"}}"#);
+        let p1 = rt.route_line(&plan_line);
+        assert_eq!(ok(&p1).get("cache_hit").as_bool(), Some(false));
+        assert!(p1.reply.get("k_segments").as_u64().unwrap() >= 1);
+        let p2 = rt.route_line(&plan_line);
+        assert_eq!(ok(&p2).get("cache_hit").as_bool(), Some(true));
+        assert_eq!(p1.reply.get("budget_bytes").as_u64(), p2.reply.get("budget_bytes").as_u64());
+    }
+
+    #[test]
+    fn plan_rejections_are_structured() {
+        let rt = router();
+        for (line, code) in [
+            (r#"{"cmd":"plan"}"#.to_string(), "bad-request"),
+            (r#"{"cmd":"plan","fingerprint":"zzzz"}"#.into(), "bad-request"),
+            (r#"{"cmd":"plan","fingerprint":"00ddba11deadbeef"}"#.into(), "unknown-fingerprint"),
+            (r#"{"cmd":"plan","network":"nosuchnet"}"#.into(), "unknown-network"),
+            (r#"{"cmd":"plan","network":"unet","budget":"12parsecs"}"#.into(), "bad-request"),
+            (
+                r#"{"cmd":"plan","network":"unet","budget":"99999999999999GiB"}"#.into(),
+                "bad-request",
+            ),
+            (r#"{"cmd":"plan","network":"unet","budget":"1B"}"#.into(), "plan-failed"),
+            (r#"{"cmd":"plan","network":"unet","budget":"65GiB"}"#.into(), "budget-cap"),
+            (r#"{"cmd":"plan","network":"unet","budget_frac":7}"#.into(), "bad-request"),
+            (r#"{"cmd":"plan","network":"unet","batch":0}"#.into(), "bad-request"),
+            (r#"{"cmd":"plan","network":"unet","batch":99999999}"#.into(), "request-cap"),
+            (r#"{"cmd":"plan","network":"unet","objective":"zz"}"#.into(), "bad-request"),
+        ] {
+            assert_eq!(err_code(&rt.route_line(&line)), code, "{line}");
+        }
+    }
+
+    #[test]
+    fn zoo_plan_and_stats_shapes() {
+        let rt = router();
+        let p = rt.route_line(r#"{"cmd":"plan","network":"unet","objective":"mc"}"#);
+        let reply = ok(&p);
+        assert_eq!(reply.get("objective").as_str(), Some("mc"));
+        assert!(reply.get("measured_peak").as_u64().unwrap() > 0);
+
+        let s = rt.route_line(r#"{"cmd":"stats"}"#);
+        let reply = ok(&s);
+        assert_eq!(reply.get("sessions").as_u64(), Some(1));
+        let cache = reply.get("cache");
+        assert_eq!(cache.get("misses").as_u64(), Some(1));
+        assert_eq!(cache.get("entries").as_u64(), Some(1));
+        assert!(cache.get("hit_rate").as_f64().is_some());
+        // The router itself records no latency (the connection loop
+        // does), so the ring is empty here.
+        assert_eq!(reply.get("latency_us"), &Json::Null);
+        assert_eq!(reply.get("requests").as_u64(), Some(0));
+    }
+
+    #[test]
+    fn shutdown_is_flagged() {
+        let rt = router();
+        let r = rt.route_line(r#"{"cmd":"shutdown"}"#);
+        assert!(ok(&r).get("ok").as_bool().unwrap());
+        assert!(r.shutdown);
+    }
+}

@@ -1,0 +1,217 @@
+//! Serve-side observability: a fixed-capacity latency ring buffer and
+//! the daemon's atomic counters/gauges.
+//!
+//! The ring keeps the last [`LATENCY_RING_CAPACITY`] request latencies
+//! (as whole microseconds) and answers nearest-rank percentiles over a
+//! sorted snapshot — O(capacity log capacity) per `stats` request, which
+//! is the cold path; recording on the hot path is one mutex-guarded
+//! slot write, no allocation after construction.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Number of most-recent request latencies the ring retains.
+pub const LATENCY_RING_CAPACITY: usize = 4096;
+
+struct Ring {
+    buf: Vec<u64>,
+    cap: usize,
+    /// Next slot to overwrite once the buffer is full.
+    next: usize,
+}
+
+/// Fixed-capacity ring of request latencies in microseconds.
+pub struct LatencyRing {
+    ring: Mutex<Ring>,
+}
+
+/// Nearest-rank percentiles over the ring's current window.
+#[derive(Clone, Copy, Debug)]
+pub struct LatencyPercentiles {
+    /// Samples in the window (≤ ring capacity).
+    pub count: usize,
+    pub p50_us: u64,
+    pub p90_us: u64,
+    pub p99_us: u64,
+    pub max_us: u64,
+}
+
+impl LatencyRing {
+    /// A ring holding the last `capacity` samples (≥ 1).
+    pub fn new(capacity: usize) -> LatencyRing {
+        assert!(capacity >= 1, "latency ring capacity must be positive");
+        LatencyRing {
+            ring: Mutex::new(Ring { buf: Vec::with_capacity(capacity), cap: capacity, next: 0 }),
+        }
+    }
+
+    /// Record one request latency (saturating to whole microseconds).
+    pub fn record(&self, latency: Duration) {
+        let us = u64::try_from(latency.as_micros()).unwrap_or(u64::MAX);
+        let mut r = self.ring.lock().unwrap();
+        if r.buf.len() < r.cap {
+            r.buf.push(us);
+        } else {
+            let slot = r.next;
+            r.buf[slot] = us;
+            r.next = (slot + 1) % r.cap;
+        }
+    }
+
+    /// Nearest-rank p50/p90/p99/max over the current window, or `None`
+    /// when no requests have been recorded yet.
+    pub fn percentiles(&self) -> Option<LatencyPercentiles> {
+        let mut sorted = self.ring.lock().unwrap().buf.clone();
+        if sorted.is_empty() {
+            return None;
+        }
+        sorted.sort_unstable();
+        let nearest_rank = |p: f64| -> u64 {
+            // ceil(p·n) as a 1-based rank, clamped into the window.
+            let rank = (p * sorted.len() as f64).ceil() as usize;
+            sorted[rank.clamp(1, sorted.len()) - 1]
+        };
+        Some(LatencyPercentiles {
+            count: sorted.len(),
+            p50_us: nearest_rank(0.50),
+            p90_us: nearest_rank(0.90),
+            p99_us: nearest_rank(0.99),
+            max_us: *sorted.last().unwrap(),
+        })
+    }
+}
+
+/// The daemon's shared counters: request totals, admission-control
+/// rejections, live gauges, and the latency ring. All lock-free except
+/// the ring; shared by every connection thread via `Arc`.
+pub struct ServeMetrics {
+    /// Requests routed (including ones answered with an error reply).
+    pub requests: AtomicU64,
+    /// Requests answered with an `"ok": false` reply.
+    pub errors: AtomicU64,
+    /// Requests (or connections) refused by admission control.
+    pub rejected: AtomicU64,
+    /// Requests currently being processed.
+    pub inflight: AtomicUsize,
+    /// Currently open connections.
+    pub connections: AtomicUsize,
+    /// Connections accepted over the daemon's lifetime.
+    pub connections_total: AtomicU64,
+    /// Recent request latencies.
+    pub latency: LatencyRing,
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            requests: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            inflight: AtomicUsize::new(0),
+            connections: AtomicUsize::new(0),
+            connections_total: AtomicU64::new(0),
+            latency: LatencyRing::new(LATENCY_RING_CAPACITY),
+        }
+    }
+
+    /// Count one routed request and its latency.
+    pub fn record(&self, latency: Duration, is_error: bool) {
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        if is_error {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.latency.record(latency);
+    }
+
+    /// Reserve an in-flight slot if fewer than `max` requests are
+    /// currently processing — the admission-control gate. Pair every
+    /// successful call with [`ServeMetrics::release`].
+    pub fn try_admit(&self, max: usize) -> bool {
+        self.inflight
+            .fetch_update(Ordering::SeqCst, Ordering::SeqCst, |v| {
+                if v < max {
+                    Some(v + 1)
+                } else {
+                    None
+                }
+            })
+            .is_ok()
+    }
+
+    /// Release a slot reserved by [`ServeMetrics::try_admit`].
+    pub fn release(&self) {
+        self.inflight.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+impl Default for ServeMetrics {
+    fn default() -> ServeMetrics {
+        ServeMetrics::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn us(n: u64) -> Duration {
+        Duration::from_micros(n)
+    }
+
+    #[test]
+    fn percentiles_empty_then_filled() {
+        let ring = LatencyRing::new(8);
+        assert!(ring.percentiles().is_none());
+        for n in [10, 20, 30, 40] {
+            ring.record(us(n));
+        }
+        let p = ring.percentiles().unwrap();
+        assert_eq!(p.count, 4);
+        assert_eq!(p.p50_us, 20, "nearest rank: ceil(0.5·4)=2nd of [10,20,30,40]");
+        assert_eq!(p.p90_us, 40);
+        assert_eq!(p.p99_us, 40);
+        assert_eq!(p.max_us, 40);
+    }
+
+    #[test]
+    fn ring_wraps_keeping_the_most_recent_window() {
+        let ring = LatencyRing::new(4);
+        for n in 1..=10u64 {
+            ring.record(us(n));
+        }
+        let p = ring.percentiles().unwrap();
+        // Window is the last 4 samples: 7, 8, 9, 10.
+        assert_eq!(p.count, 4);
+        assert_eq!(p.p50_us, 8);
+        assert_eq!(p.max_us, 10);
+    }
+
+    #[test]
+    fn record_from_many_threads() {
+        let m = ServeMetrics::new();
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                s.spawn(|| {
+                    for i in 0..100 {
+                        m.record(us(i), i % 10 == 0);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.requests.load(Ordering::Relaxed), 400);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 40);
+        assert_eq!(m.latency.percentiles().unwrap().count, 400);
+    }
+
+    #[test]
+    fn admission_caps_inflight() {
+        let m = ServeMetrics::new();
+        assert!(m.try_admit(2));
+        assert!(m.try_admit(2));
+        assert!(!m.try_admit(2), "third admission must be refused");
+        m.release();
+        assert!(m.try_admit(2), "released slot is reusable");
+        assert_eq!(m.inflight.load(Ordering::SeqCst), 2);
+    }
+}

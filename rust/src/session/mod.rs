@@ -109,6 +109,36 @@ struct CacheEntry {
 struct CacheInner {
     map: HashMap<(GraphFingerprint, PlanRequest), CacheEntry>,
     tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// Cache-level counters, aggregated across every session sharing the
+/// cache — the serving daemon's hit-rate source (session-level
+/// [`SessionStats`] only see one session's traffic).
+#[derive(Clone, Copy, Default, PartialEq, Eq, Debug)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: u64,
+    /// Lookups that found nothing (the caller compiled and inserted).
+    pub misses: u64,
+    /// Entries evicted by the LRU policy.
+    pub evictions: u64,
+    /// Live entries at snapshot time.
+    pub entries: usize,
+}
+
+impl CacheStats {
+    /// Fraction of lookups served from the cache (0.0 when idle).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
 }
 
 /// A bounded LRU cache of compiled plans, keyed by
@@ -127,7 +157,13 @@ impl PlanCache {
         assert!(capacity >= 1, "cache capacity must be positive");
         PlanCache {
             capacity,
-            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0 }),
+            inner: Mutex::new(CacheInner {
+                map: HashMap::new(),
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
         }
     }
 
@@ -145,14 +181,31 @@ impl PlanCache {
         self.len() == 0
     }
 
+    /// Snapshot of the cache-level counters (see [`CacheStats`]).
+    pub fn stats(&self) -> CacheStats {
+        let inner = self.inner.lock().unwrap();
+        CacheStats {
+            hits: inner.hits,
+            misses: inner.misses,
+            evictions: inner.evictions,
+            entries: inner.map.len(),
+        }
+    }
+
     fn get(&self, key: &(GraphFingerprint, PlanRequest)) -> Option<Arc<CompiledPlan>> {
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
-        inner.map.get_mut(key).map(|e| {
+        let hit = inner.map.get_mut(key).map(|e| {
             e.last_used = tick;
             e.value.clone()
-        })
+        });
+        if hit.is_some() {
+            inner.hits += 1;
+        } else {
+            inner.misses += 1;
+        }
+        hit
     }
 
     /// Insert-if-absent: when two concurrent compilations race on the
@@ -178,6 +231,7 @@ impl PlanCache {
                 inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k)
             {
                 inner.map.remove(&evict);
+                inner.evictions += 1;
             }
         }
         inner.map.insert(key, CacheEntry { value: value.clone(), last_used: tick });
@@ -384,16 +438,24 @@ impl PlanSession {
     /// simulated, compiled, cached and returned. Identical requests
     /// return the *same* `Arc` — bit-identical plans by construction.
     pub fn plan(&self, req: &PlanRequest) -> Result<Arc<CompiledPlan>> {
+        self.plan_tracked(req).map(|(plan, _)| plan)
+    }
+
+    /// [`PlanSession::plan`], also reporting whether the answer came
+    /// from the cache — the race-free hit signal the serving layer puts
+    /// in its replies (comparing counters before/after is racy when many
+    /// connections share one session).
+    pub fn plan_tracked(&self, req: &PlanRequest) -> Result<(Arc<CompiledPlan>, bool)> {
         let key = (self.fingerprint, *req);
         if let Some(hit) = self.cache.get(&key) {
             self.inner.lock().unwrap().stats.hits += 1;
-            return Ok(hit);
+            return Ok((hit, true));
         }
         self.inner.lock().unwrap().stats.misses += 1;
         let t0 = Instant::now();
         let compiled = Arc::new(self.compile(req)?);
         self.inner.lock().unwrap().timing.compile += t0.elapsed();
-        Ok(self.cache.insert(key, compiled))
+        Ok((self.cache.insert(key, compiled), false))
     }
 
     fn compile(&self, req: &PlanRequest) -> Result<CompiledPlan> {
@@ -441,6 +503,137 @@ impl PlanSession {
     }
 }
 
+struct RegistryEntry {
+    session: Arc<PlanSession>,
+    last_used: u64,
+}
+
+struct RegistryInner {
+    map: HashMap<GraphFingerprint, RegistryEntry>,
+    tick: u64,
+}
+
+/// A bounded, fingerprint-keyed registry of live [`PlanSession`]s that
+/// all serve from **one shared** [`PlanCache`] — the cross-client
+/// serving surface behind `repro serve`.
+///
+/// Keying by [`Graph::fingerprint`] means two clients uploading
+/// isomorphic relabelings of the same network land on the *same*
+/// session (the second upload reports `reused`), so the expensive
+/// amortized artifacts — lower-set families, DP contexts, memoized
+/// `B*`, compiled plans — are built once per structure, not once per
+/// client. When the registry is full the least-recently-used session is
+/// dropped (its compiled plans stay in the shared cache until the cache
+/// itself evicts them).
+pub struct SessionRegistry {
+    capacity: usize,
+    limit: EnumerationLimit,
+    cache: Arc<PlanCache>,
+    inner: Mutex<RegistryInner>,
+}
+
+impl SessionRegistry {
+    /// A registry holding at most `capacity` live sessions (≥ 1), all
+    /// sharing `cache`.
+    pub fn new(capacity: usize, cache: Arc<PlanCache>) -> SessionRegistry {
+        SessionRegistry::with_limit(capacity, cache, EnumerationLimit::default())
+    }
+
+    /// [`SessionRegistry::new`] with a custom exact-enumeration cap for
+    /// the sessions it creates.
+    pub fn with_limit(
+        capacity: usize,
+        cache: Arc<PlanCache>,
+        limit: EnumerationLimit,
+    ) -> SessionRegistry {
+        assert!(capacity >= 1, "registry capacity must be positive");
+        SessionRegistry {
+            capacity,
+            limit,
+            cache,
+            inner: Mutex::new(RegistryInner { map: HashMap::new(), tick: 0 }),
+        }
+    }
+
+    /// The shared compiled-plan cache every registered session serves
+    /// from.
+    pub fn cache(&self) -> &Arc<PlanCache> {
+        &self.cache
+    }
+
+    /// Number of live sessions.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The session for `fingerprint`, if one is registered (bumps its
+    /// LRU recency).
+    pub fn get(&self, fingerprint: GraphFingerprint) -> Option<Arc<PlanSession>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.get_mut(&fingerprint).map(|e| {
+            e.last_used = tick;
+            e.session.clone()
+        })
+    }
+
+    /// The session for `graph`'s fingerprint, creating (and registering)
+    /// one when absent. Returns `(session, reused)` — `reused` is true
+    /// when an isomorphic graph was already registered, in which case
+    /// `graph` is dropped and the existing session (with its amortized
+    /// artifacts) answers. Evicts the least-recently-used session past
+    /// capacity.
+    pub fn get_or_insert(&self, graph: Graph) -> (Arc<PlanSession>, bool) {
+        let fingerprint = graph.fingerprint();
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.map.get_mut(&fingerprint) {
+            e.last_used = tick;
+            return (e.session.clone(), true);
+        }
+        if inner.map.len() >= self.capacity {
+            if let Some(evict) =
+                inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k)
+            {
+                inner.map.remove(&evict);
+            }
+        }
+        let session =
+            Arc::new(PlanSession::with_cache(graph, self.limit, self.cache.clone()));
+        inner.map.insert(
+            fingerprint,
+            RegistryEntry { session: session.clone(), last_used: tick },
+        );
+        (session, false)
+    }
+
+    /// Sum of the per-session amortization counters across every *live*
+    /// session (evicted sessions take their counters with them; the
+    /// shared cache's [`PlanCache::stats`] is the durable aggregate).
+    pub fn aggregate_stats(&self) -> SessionStats {
+        let inner = self.inner.lock().unwrap();
+        let mut total = SessionStats::default();
+        for e in inner.map.values() {
+            let s = e.session.stats();
+            total.hits += s.hits;
+            total.misses += s.misses;
+            total.families_built += s.families_built;
+        }
+        total
+    }
+
+    /// Fingerprints of the live sessions (unordered).
+    pub fn fingerprints(&self) -> Vec<GraphFingerprint> {
+        self.inner.lock().unwrap().map.keys().copied().collect()
+    }
+}
+
 impl BudgetSpec {
     /// Resolve the spec against a session, which memoizes the minimal
     /// feasible budget per family — infeasible absolute budgets report
@@ -466,10 +659,14 @@ impl BudgetSpec {
 mod tests {
     use super::*;
     use crate::planner::{Objective, PlannerId};
-    use crate::testutil::diamond;
+    use crate::testutil::{chain_graph, diamond, diamond_relabeled, diamond_with_skip};
 
     fn req() -> PlanRequest {
         PlanRequest::new(PlannerId::ExactDp, Objective::MinOverhead)
+    }
+
+    fn session_on(graph: Graph, cache: &Arc<PlanCache>) -> Arc<PlanSession> {
+        Arc::new(PlanSession::with_cache(graph, EnumerationLimit::default(), cache.clone()))
     }
 
     #[test]
@@ -505,6 +702,117 @@ mod tests {
         assert!(err.contains("min_feasible_budget"), "{err}");
         // A fraction clamps up to feasibility.
         assert!(BudgetSpec::Frac(0.0).resolve(&s, Family::Exact).unwrap() >= b1);
+    }
+
+    #[test]
+    fn cache_capacity_and_counters_survive_concurrent_hammering() {
+        // Many connections hammering one small shared cache through two
+        // isomorphic sessions: the capacity bound, the LRU accounting
+        // and the hit/miss counters must all stay coherent.
+        const THREADS: u64 = 8;
+        const OPS: u64 = 32;
+        const CAPACITY: usize = 4;
+        let cache = PlanCache::shared(CAPACITY);
+        let s1 = session_on(diamond(), &cache);
+        let s2 = session_on(diamond_relabeled(), &cache);
+        assert_eq!(s1.fingerprint(), s2.fingerprint(), "isomorphic by construction");
+        let min_b = s1.min_feasible_budget(Family::Exact);
+        std::thread::scope(|scope| {
+            for t in 0..THREADS {
+                let (s1, s2) = (s1.clone(), s2.clone());
+                scope.spawn(move || {
+                    for i in 0..OPS {
+                        // 8 distinct budgets → 8 distinct keys cycling
+                        // through a 4-entry cache, from both sessions.
+                        let delta = (t + i) % 8;
+                        let r = PlanRequest {
+                            budget: BudgetSpec::Bytes(min_b + delta),
+                            ..req()
+                        };
+                        let s = if (t + i) % 2 == 0 { &s1 } else { &s2 };
+                        let plan = s.plan(&r).expect("planning never fails here");
+                        assert_eq!(plan.plan.budget, min_b + delta, "no cross-key mixups");
+                        assert!(cache.len() <= CAPACITY, "capacity bound violated");
+                    }
+                });
+            }
+        });
+        let cs = cache.stats();
+        assert!(cache.len() <= CAPACITY);
+        assert_eq!(cs.entries, cache.len());
+        assert_eq!(cs.hits + cs.misses, THREADS * OPS, "every lookup counted exactly once");
+        assert!(cs.hits > 0, "repeated keys must hit");
+        assert!(cs.evictions > 0, "8 keys through a 4-entry cache must evict");
+        // The per-session counters add up to the cache's view.
+        let agg_hits = s1.stats().hits + s2.stats().hits;
+        let agg_misses = s1.stats().misses + s2.stats().misses;
+        assert_eq!(agg_hits, cs.hits);
+        assert_eq!(agg_misses, cs.misses);
+    }
+
+    #[test]
+    fn racing_identical_requests_converge_on_one_canonical_plan() {
+        // The double-insert race: several threads miss on the same key
+        // before any of them inserts. Insert-if-absent must hand every
+        // loser the winner's Arc — one compiled plan, however many
+        // concurrent compilations raced past `get`.
+        let cache = PlanCache::shared(64);
+        let sessions: Vec<Arc<PlanSession>> = (0..4)
+            .map(|i| {
+                session_on(
+                    if i % 2 == 0 { diamond() } else { diamond_relabeled() },
+                    &cache,
+                )
+            })
+            .collect();
+        let plans: Vec<Arc<CompiledPlan>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|t: usize| {
+                    let s = sessions[t % sessions.len()].clone();
+                    scope.spawn(move || s.plan(&req()).unwrap())
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        for p in &plans[1..] {
+            assert!(
+                Arc::ptr_eq(&plans[0], p),
+                "all racers must share the canonical compiled plan"
+            );
+        }
+        assert_eq!(cache.len(), 1, "one key, one entry — no double insert");
+    }
+
+    #[test]
+    fn registry_shares_sessions_across_isomorphic_uploads() {
+        let reg = SessionRegistry::new(2, PlanCache::shared(16));
+        let (a, reused_a) = reg.get_or_insert(diamond());
+        assert!(!reused_a);
+        let (b, reused_b) = reg.get_or_insert(diamond_relabeled());
+        assert!(reused_b, "isomorphic relabeling must land on the existing session");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(reg.len(), 1);
+        assert!(reg.get(a.fingerprint()).is_some());
+        assert!(reg.get(GraphFingerprint(0xdead_beef)).is_none());
+
+        // Distinct structures get their own sessions; the registry stays
+        // bounded by evicting the least-recently-used one.
+        let (_c, reused_c) = reg.get_or_insert(diamond_with_skip());
+        assert!(!reused_c);
+        assert_eq!(reg.len(), 2);
+        let (_d, _) = reg.get_or_insert(chain_graph(&[5, 5, 5]));
+        assert_eq!(reg.len(), 2, "capacity bound");
+
+        // All registered sessions serve from the one shared cache, and
+        // aggregate_stats sums their counters.
+        let (d, _) = reg.get_or_insert(chain_graph(&[5, 5, 5]));
+        d.plan(&PlanRequest::new(PlannerId::ApproxDp, Objective::MinOverhead)).unwrap();
+        d.plan(&PlanRequest::new(PlannerId::ApproxDp, Objective::MinOverhead)).unwrap();
+        let agg = reg.aggregate_stats();
+        assert!(agg.hits >= 1, "{agg:?}");
+        assert!(agg.misses >= 1, "{agg:?}");
+        assert!(reg.cache().stats().hits >= 1);
+        assert!(!reg.fingerprints().is_empty());
     }
 
     #[test]

@@ -6,9 +6,26 @@
 //! by this self-contained module. It implements the full JSON grammar
 //! (RFC 8259) minus some exotic float corner cases, with precise error
 //! positions.
+//!
+//! The parser also feeds the `repro serve` daemon, i.e. it faces
+//! **untrusted input**: every malformed byte must come back as a
+//! [`JsonError`], never a panic. In particular, nesting depth is capped
+//! at [`MAX_DEPTH`] so `[[[[…` cannot blow the recursive-descent stack.
+//!
+//! Serialization policy for non-finite numbers: RFC 8259 has no NaN or
+//! infinity literal, so `Json::Num(f64::NAN)` (and ±∞) serialize as
+//! `null` — the report writers prefer a lossy-but-valid document over
+//! emitting `NaN`, which no conforming parser (including this one)
+//! would accept back.
 
 use std::collections::BTreeMap;
 use std::fmt;
+
+/// Maximum container nesting depth [`Json::parse`] accepts. Deep enough
+/// for any report or graph file the repo emits (whose nesting is ≤ 8),
+/// shallow enough that hostile `[[[[…` input errors out long before the
+/// parser's recursion threatens the stack.
+pub const MAX_DEPTH: usize = 128;
 
 /// A parsed JSON value. Objects use a `BTreeMap` so serialization is
 /// deterministic (stable key order) — reports diff cleanly across runs.
@@ -132,7 +149,10 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literal (see module docs).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 2f64.powi(53) {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -178,7 +198,7 @@ impl Json {
     // ---- parsing -----------------------------------------------------------
 
     pub fn parse(input: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: input.as_bytes(), pos: 0 };
+        let mut p = Parser { b: input.as_bytes(), pos: 0, depth: 0 };
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -265,11 +285,24 @@ fn write_escaped(out: &mut String, s: &str) {
 struct Parser<'a> {
     b: &'a [u8],
     pos: usize,
+    /// Current container nesting depth, capped at [`MAX_DEPTH`].
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
     fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), pos: self.pos }
+    }
+
+    /// Enter one level of container nesting, erroring past [`MAX_DEPTH`]
+    /// — the guard that keeps hostile `[[[[…` input from overflowing the
+    /// recursive-descent stack.
+    fn descend(&mut self) -> Result<(), JsonError> {
+        self.depth += 1;
+        if self.depth > MAX_DEPTH {
+            return Err(self.err("nesting too deep"));
+        }
+        Ok(())
     }
 
     fn skip_ws(&mut self) {
@@ -317,10 +350,12 @@ impl<'a> Parser<'a> {
 
     fn array(&mut self) -> Result<Json, JsonError> {
         self.expect(b'[')?;
+        self.descend()?;
         let mut out = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Arr(out));
         }
         loop {
@@ -331,6 +366,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Arr(out));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -340,10 +376,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Json, JsonError> {
         self.expect(b'{')?;
+        self.descend()?;
         let mut out = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Json::Obj(out));
         }
         loop {
@@ -359,6 +397,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Json::Obj(out));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -405,10 +444,13 @@ impl<'a> Parser<'a> {
                     self.pos += 1;
                 }
                 Some(_) => {
-                    // Consume one UTF-8 scalar.
+                    // Consume one UTF-8 scalar. The input arrived as
+                    // `&str` so this cannot fail mid-document, but the
+                    // error path stays a positioned JsonError (not an
+                    // unwrap) in case a byte-slice entry point appears.
                     let rest = std::str::from_utf8(&self.b[self.pos..])
                         .map_err(|_| self.err("invalid UTF-8"))?;
-                    let c = rest.chars().next().unwrap();
+                    let c = rest.chars().next().ok_or_else(|| self.err("unterminated string"))?;
                     out.push(c);
                     self.pos += c.len_utf8();
                 }
@@ -439,7 +481,10 @@ impl<'a> Parser<'a> {
                 self.pos += 1;
             }
         }
-        let text = std::str::from_utf8(&self.b[start..self.pos]).unwrap();
+        // The scanned range is ASCII digits/signs/dots by construction;
+        // still, no unwrap on the parse path.
+        let text = std::str::from_utf8(&self.b[start..self.pos])
+            .map_err(|_| self.err("bad number"))?;
         text.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
     }
 }
@@ -627,6 +672,44 @@ mod tests {
         assert_eq!(Json::parse(r#""a\/b""#).unwrap().as_str(), Some("a/b"));
         // Lone surrogates degrade to the replacement character, not a panic.
         assert_eq!(Json::parse(r#""\ud800""#).unwrap().as_str(), Some("\u{fffd}"));
+    }
+
+    #[test]
+    fn nesting_depth_is_limited() {
+        // At the limit: parses fine.
+        let ok = "[".repeat(MAX_DEPTH) + "1" + &"]".repeat(MAX_DEPTH);
+        assert!(Json::parse(&ok).is_ok());
+        // One past the limit: positioned error, not a stack overflow.
+        let deep = "[".repeat(MAX_DEPTH + 1) + "1" + &"]".repeat(MAX_DEPTH + 1);
+        let e = Json::parse(&deep).unwrap_err();
+        assert!(e.to_string().contains("nesting too deep"), "{e}");
+        assert_eq!(e.pos, MAX_DEPTH + 1);
+        // Far past the limit (the hostile case): still just an error.
+        let hostile = "[".repeat(200_000);
+        assert!(Json::parse(&hostile).is_err());
+        let hostile_obj = "{\"a\":".repeat(200_000);
+        assert!(Json::parse(&hostile_obj).is_err());
+        // Mixed arrays/objects share one depth budget.
+        let mixed: String = (0..MAX_DEPTH).map(|_| "{\"a\":[").collect();
+        assert!(Json::parse(&mixed).is_err());
+        // Depth is released on the way out: many *sibling* containers at
+        // modest depth are fine.
+        let wide = format!("[{}1]", "[[[]]],".repeat(10_000));
+        assert!(Json::parse(&wide).is_ok());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        for v in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            assert_eq!(Json::Num(v).to_string(), "null");
+        }
+        // In context: the document stays valid JSON and round-trips
+        // (lossily: the slot comes back as Json::Null).
+        let j = Json::obj().set("rate", Json::Num(f64::NAN)).set("ok", 1u64.into());
+        let s = j.to_string();
+        assert_eq!(s, r#"{"ok":1,"rate":null}"#);
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.get("rate"), &Json::Null);
     }
 
     #[test]

@@ -14,9 +14,63 @@ fn help_lists_subcommands() {
     let out = repro().arg("help").output().unwrap();
     assert!(out.status.success());
     let text = String::from_utf8_lossy(&out.stdout);
-    for cmd in ["table1", "table2", "figure3", "plan", "train", "export"] {
+    for cmd in ["table1", "table2", "figure3", "plan", "train", "export", "serve"] {
         assert!(text.contains(cmd), "missing {cmd} in help");
     }
+}
+
+#[test]
+fn serve_daemon_answers_over_tcp_and_shuts_down_cleanly() {
+    use std::io::{BufRead, BufReader, Write};
+
+    let mut child = repro()
+        .args(["serve", "--addr", "127.0.0.1:0"])
+        .stdout(std::process::Stdio::piped())
+        .spawn()
+        .unwrap();
+    // The daemon prints one parseable line naming the bound port.
+    let mut stdout = BufReader::new(child.stdout.take().unwrap());
+    let mut banner = String::new();
+    stdout.read_line(&mut banner).unwrap();
+    let addr = banner.trim().rsplit(' ').next().unwrap().to_string();
+    assert!(banner.contains("listening on"), "{banner}");
+
+    let stream = std::net::TcpStream::connect(&addr).unwrap();
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(30))).unwrap();
+    let mut writer = stream.try_clone().unwrap();
+    let mut reader = BufReader::new(stream);
+    let mut roundtrip = |line: &str| -> recompute::util::json::Json {
+        writer.write_all(line.as_bytes()).unwrap();
+        writer.write_all(b"\n").unwrap();
+        writer.flush().unwrap();
+        let mut reply = String::new();
+        reader.read_line(&mut reply).unwrap();
+        Json::parse(reply.trim()).unwrap_or_else(|e| panic!("bad reply {reply:?}: {e}"))
+    };
+
+    let pong = roundtrip(r#"{"cmd":"ping"}"#);
+    assert_eq!(pong.get("reply").as_str(), Some("pong"));
+    // Hostile input over the real socket: structured error, no crash.
+    let err = roundtrip("certainly not json");
+    assert_eq!(err.get("ok").as_bool(), Some(false));
+    assert_eq!(err.get("error").get("code").as_str(), Some("bad-json"));
+    // A `shutdown` command must end the process with exit code 0.
+    let bye = roundtrip(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("ok").as_bool(), Some(true));
+    let status = child.wait().unwrap();
+    assert!(status.success(), "daemon must exit cleanly after shutdown: {status:?}");
+}
+
+#[test]
+fn serve_rejects_bad_flags_without_binding() {
+    let out = repro().args(["serve", "--max-inflight", "zero"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("bad value"), "actionable flag error");
+    let out = repro().args(["serve", "--help"]).output().unwrap();
+    assert!(out.status.success());
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("--addr"), "{text}");
+    assert!(text.contains("graph_upload"), "{text}");
 }
 
 #[test]

@@ -1,0 +1,171 @@
+//! Fuzz-style hostile-input corpus against the two byte-facing surfaces:
+//! the hardened JSON parser (`util::json`) and the serve request router.
+//!
+//! A seeded generator mutates valid seed documents — truncation, byte
+//! flips (mangled UTF-8 included, fed through lossy replacement since
+//! both surfaces take `&str`), noise insertion, slice duplication — plus
+//! hand-picked pathologies (deep nesting, over-long inputs, NUL bytes,
+//! lone surrogates). The invariants under test:
+//!
+//! - `Json::parse` never panics: every input returns `Ok` or a
+//!   positioned `JsonError`;
+//! - `Router::route_line` is total: every input produces exactly one
+//!   reply object with an `"ok"` bool, and error replies carry a
+//!   structured `{"code", "msg"}`.
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::Arc;
+
+use recompute::serve::{Router, RouterConfig, ServeMetrics};
+use recompute::session::{PlanCache, SessionRegistry};
+use recompute::testutil::diamond;
+use recompute::util::json::Json;
+use recompute::util::rng::Pcg32;
+
+fn router() -> Router {
+    Router::new(
+        SessionRegistry::new(4, PlanCache::shared(32)),
+        Arc::new(ServeMetrics::new()),
+        RouterConfig::default(),
+    )
+}
+
+/// Valid seed documents the mutator starts from — a graph export, real
+/// serve commands, and a value exercising every JSON type.
+fn seeds() -> Vec<String> {
+    vec![
+        diamond().to_json(),
+        r#"{"cmd":"ping"}"#.to_string(),
+        format!(r#"{{"cmd":"graph_upload","graph":{}}}"#, diamond().to_json()),
+        r#"{"cmd":"plan","network":"unet","budget":"512KiB","objective":"tc"}"#.to_string(),
+        r#"{"cmd":"stats"}"#.to_string(),
+        r#"[1,2.5,-3e7,true,false,null,"café \"quoted\"",{"k":[{}]}]"#.to_string(),
+    ]
+}
+
+/// One seeded mutation: truncate, flip bytes, insert noise, or duplicate
+/// a slice. Byte flips routinely produce invalid UTF-8; the lossy
+/// conversion models what the connection layer admits to `&str` surfaces.
+fn mutate(rng: &mut Pcg32, s: &str) -> String {
+    let mut b = s.as_bytes().to_vec();
+    match rng.below(4) {
+        0 => {
+            if !b.is_empty() {
+                let cut = rng.below(b.len() as u32) as usize;
+                b.truncate(cut);
+            }
+        }
+        1 => {
+            for _ in 0..=rng.below(8) {
+                if b.is_empty() {
+                    break;
+                }
+                let i = rng.below(b.len() as u32) as usize;
+                b[i] = (rng.next_u32() & 0xff) as u8;
+            }
+        }
+        2 => {
+            let i = rng.below(b.len() as u32 + 1) as usize;
+            let n = rng.below(16) + 1;
+            let noise: Vec<u8> = (0..n).map(|_| (rng.next_u32() & 0xff) as u8).collect();
+            b.splice(i..i, noise);
+        }
+        _ => {
+            if b.len() >= 2 {
+                let i = rng.below(b.len() as u32 - 1) as usize;
+                let j = i + 1 + rng.below((b.len() - i - 1) as u32) as usize;
+                let chunk: Vec<u8> = b[i..j].to_vec();
+                b.extend_from_slice(&chunk);
+            }
+        }
+    }
+    String::from_utf8_lossy(&b).into_owned()
+}
+
+#[test]
+fn corpus_generator_is_deterministic() {
+    let (mut a, mut b) = (Pcg32::seeded(99), Pcg32::seeded(99));
+    let seed = &seeds()[0];
+    for _ in 0..50 {
+        assert_eq!(mutate(&mut a, seed), mutate(&mut b, seed));
+    }
+}
+
+#[test]
+fn mutated_corpus_never_panics_the_json_parser() {
+    let seeds = seeds();
+    let mut rng = Pcg32::seeded(0x4a50);
+    for round in 0..600 {
+        let seed = &seeds[rng.below(seeds.len() as u32) as usize];
+        let input = mutate(&mut rng, seed);
+        let outcome = catch_unwind(AssertUnwindSafe(|| Json::parse(&input).map(drop)));
+        let result = outcome.unwrap_or_else(|_| panic!("round {round} panicked on {input:?}"));
+        // Whatever parses must re-serialize and re-parse cleanly.
+        if result.is_ok() {
+            let v = Json::parse(&input).unwrap();
+            assert!(Json::parse(&v.to_string()).is_ok(), "round {round}: unstable roundtrip");
+        }
+    }
+}
+
+#[test]
+fn mutated_corpus_gets_structured_replies_from_the_router() {
+    let rt = router();
+    let seeds = seeds();
+    let mut rng = Pcg32::seeded(0x5e17);
+    for round in 0..300 {
+        let seed = &seeds[rng.below(seeds.len() as u32) as usize];
+        let line = mutate(&mut rng, seed);
+        let outcome = catch_unwind(AssertUnwindSafe(|| rt.route_line(&line)));
+        let routed = outcome.unwrap_or_else(|_| panic!("round {round} panicked on {line:?}"));
+        let ok = routed.reply.get("ok").as_bool();
+        assert!(ok.is_some(), "round {round}: reply without 'ok': {}", routed.reply.to_string());
+        assert_eq!(ok == Some(false), routed.is_error);
+        if routed.is_error {
+            let code = routed.reply.get("error").get("code").as_str().unwrap_or("");
+            assert!(!code.is_empty(), "round {round}: error reply without a code");
+        }
+        assert!(!routed.shutdown, "mutations never form a shutdown command");
+    }
+}
+
+#[test]
+fn deep_nesting_is_rejected_not_overflowed() {
+    let rt = router();
+    let arrays = "[".repeat(100_000);
+    let objects = format!("{}1", r#"{"a":"#.repeat(50_000));
+    let mixed = format!("{}0", r#"[{"x":"#.repeat(40_000));
+    let closed = format!("{}{}", "[".repeat(10_000), "]".repeat(10_000));
+    for hostile in [&arrays, &objects, &mixed, &closed] {
+        assert!(Json::parse(hostile).is_err(), "depth limit must reject {} bytes", hostile.len());
+        let routed = rt.route_line(hostile);
+        assert!(routed.is_error);
+        assert_eq!(routed.reply.get("error").get("code").as_str(), Some("bad-json"));
+    }
+}
+
+#[test]
+fn overlong_and_malformed_inputs_never_panic() {
+    let rt = router();
+    let cases = [
+        "a".repeat(2 << 20),
+        format!(r#"{{"cmd":"{}"}}"#, "x".repeat(1 << 20)),
+        format!("[{}1]", "1,".repeat(200_000)),
+        "\u{0}\u{0}\u{0}".to_string(),
+        "{\"k\":\u{fffd}\u{fffd}}".to_string(),
+        r#""\ud800""#.to_string(),
+        r#"{"cmd":"plan","network":"unet","budget":"99999999999999GiB"}"#.to_string(),
+        r#"{"cmd":"plan","network":"unet","batch":1e999}"#.to_string(),
+        r#"{"cmd":123}"#.to_string(),
+        r#"{"cmd":"graph_upload","graph":{"nodes":"nope","edges":[]}}"#.to_string(),
+        r#"{"cmd":"graph_upload","graph":{"nodes":[],"edges":[]}}"#.to_string(),
+        r#"{"cmd":"train","network":"unet","steps":100000}"#.to_string(),
+    ];
+    for input in &cases {
+        let parse = catch_unwind(AssertUnwindSafe(|| Json::parse(input).map(drop)));
+        assert!(parse.is_ok(), "parser panicked on {} bytes", input.len());
+        let routed = catch_unwind(AssertUnwindSafe(|| rt.route_line(input)))
+            .unwrap_or_else(|_| panic!("router panicked on {} bytes", input.len()));
+        assert!(routed.reply.get("ok").as_bool().is_some());
+    }
+}

@@ -1,0 +1,258 @@
+//! Serve daemon integration: an in-process [`Server`] on an ephemeral
+//! port, driven by real TCP clients — concurrent isomorphic uploads
+//! sharing one plan cache, hostile lines answered with structured
+//! errors on a surviving connection, stats shape, admission control,
+//! idle timeout and shutdown.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use recompute::anyhow::Result;
+use recompute::serve::{ServeConfig, Server, ServerHandle};
+use recompute::testutil::{diamond, diamond_relabeled};
+use recompute::util::json::Json;
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let stream = TcpStream::connect(addr).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        Client { writer: stream.try_clone().unwrap(), reader: BufReader::new(stream) }
+    }
+
+    fn send(&mut self, line: &str) -> Json {
+        self.send_bytes(line.as_bytes())
+    }
+
+    fn send_bytes(&mut self, line: &[u8]) -> Json {
+        self.writer.write_all(line).unwrap();
+        self.writer.write_all(b"\n").unwrap();
+        self.writer.flush().unwrap();
+        self.recv()
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        Json::parse(line.trim()).unwrap_or_else(|e| panic!("bad reply {line:?}: {e}"))
+    }
+
+    /// True once the server has closed this connection.
+    fn at_eof(&mut self) -> bool {
+        let mut line = String::new();
+        matches!(self.reader.read_line(&mut line), Ok(0))
+    }
+}
+
+fn start(cfg: ServeConfig) -> (ServerHandle, JoinHandle<Result<()>>) {
+    let server = Server::bind(cfg).unwrap();
+    let handle = server.handle();
+    let join = std::thread::spawn(move || server.run());
+    (handle, join)
+}
+
+fn cfg_on_free_port() -> ServeConfig {
+    ServeConfig { addr: "127.0.0.1:0".to_string(), ..ServeConfig::default() }
+}
+
+/// Compact (single-line) upload command for a graph.
+fn upload_line(graph_json: &str) -> String {
+    Json::obj()
+        .set("cmd", "graph_upload".into())
+        .set("graph", Json::parse(graph_json).unwrap())
+        .to_string()
+}
+
+fn err_code(reply: &Json) -> &str {
+    assert_eq!(reply.get("ok").as_bool(), Some(false), "expected error: {}", reply.to_string());
+    reply.get("error").get("code").as_str().unwrap()
+}
+
+#[test]
+fn concurrent_isomorphic_clients_share_one_plan_cache() {
+    const CLIENTS: usize = 8;
+    let (handle, join) = start(cfg_on_free_port());
+    let addr = handle.addr();
+
+    let results: Vec<(String, bool, bool)> = std::thread::scope(|s| {
+        let workers: Vec<_> = (0..CLIENTS)
+            .map(|i| {
+                s.spawn(move || {
+                    let mut c = Client::connect(addr);
+                    // Even clients upload the diamond, odd ones an
+                    // isomorphic relabeling — same fingerprint, so all
+                    // traffic lands on one shared session.
+                    let g = if i % 2 == 0 { diamond() } else { diamond_relabeled() };
+                    let up = c.send(&upload_line(&g.to_json()));
+                    assert_eq!(up.get("ok").as_bool(), Some(true), "{}", up.to_string());
+                    let fp = up.get("fingerprint").as_str().unwrap().to_string();
+                    let plan =
+                        format!(r#"{{"cmd":"plan","fingerprint":"{fp}","planner":"exact"}}"#);
+                    let first = c.send(&plan);
+                    assert_eq!(first.get("ok").as_bool(), Some(true), "{}", first.to_string());
+                    let second = c.send(&plan);
+                    assert_eq!(second.get("ok").as_bool(), Some(true));
+                    (
+                        fp,
+                        first.get("cache_hit").as_bool().unwrap(),
+                        second.get("cache_hit").as_bool().unwrap(),
+                    )
+                })
+            })
+            .collect();
+        workers.into_iter().map(|w| w.join().unwrap()).collect()
+    });
+
+    // Relabeling-invariant fingerprints: every client saw the same one.
+    let fp0 = &results[0].0;
+    assert!(results.iter().all(|(fp, _, _)| fp == fp0), "fingerprints diverged: {results:?}");
+    // A client's repeated request is always a hit, whoever compiled it.
+    assert!(results.iter().all(|&(_, _, second)| second), "second plan must be a cache hit");
+
+    let mut c = Client::connect(addr);
+    let stats = c.send(r#"{"cmd":"stats"}"#);
+    assert_eq!(stats.get("ok").as_bool(), Some(true));
+    assert_eq!(stats.get("sessions").as_u64(), Some(1), "one session for both relabelings");
+    let cache = stats.get("cache");
+    assert!(cache.get("hits").as_u64().unwrap() >= CLIENTS as u64, "{}", stats.to_string());
+    assert_eq!(cache.get("entries").as_u64(), Some(1), "one compiled plan serves everyone");
+    assert!(cache.get("hit_rate").as_f64().unwrap() > 0.0);
+    // 3 requests per client have been recorded by the time stats runs.
+    assert!(stats.get("requests").as_u64().unwrap() >= (3 * CLIENTS) as u64);
+    assert_eq!(stats.get("errors").as_u64(), Some(0));
+    // The stats request itself occupies an admission slot.
+    assert!(stats.get("inflight").as_u64().unwrap() >= 1);
+    assert!(stats.get("connections_total").as_u64().unwrap() >= (CLIENTS + 1) as u64);
+    let lat = stats.get("latency_us");
+    assert!(lat.get("count").as_u64().unwrap() >= (3 * CLIENTS) as u64, "{}", stats.to_string());
+    let (p50, p90, p99) = (
+        lat.get("p50_us").as_u64().unwrap(),
+        lat.get("p90_us").as_u64().unwrap(),
+        lat.get("p99_us").as_u64().unwrap(),
+    );
+    assert!(p50 <= p90 && p90 <= p99 && p99 <= lat.get("max_us").as_u64().unwrap());
+
+    handle.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn hostile_lines_get_structured_errors_and_the_connection_survives() {
+    let (handle, join) = start(cfg_on_free_port());
+    let mut c = Client::connect(handle.addr());
+
+    assert_eq!(err_code(&c.send("not json")), "bad-json");
+    assert_eq!(err_code(&c.send(&"[".repeat(50_000))), "bad-json");
+    assert_eq!(err_code(&c.send(r#"{"cmd":"warp"}"#)), "unknown-cmd");
+    assert_eq!(err_code(&c.send(r#"{"cmd":"plan"}"#)), "bad-request");
+    assert_eq!(err_code(&c.send(r#"{"cmd":"plan","fingerprint":"feed"}"#)), "unknown-fingerprint");
+    assert_eq!(
+        err_code(&c.send(r#"{"cmd":"plan","network":"unet","budget":"99999999999999GiB"}"#)),
+        "bad-request"
+    );
+    // Invalid UTF-8 bytes get a structured reply, not a reset.
+    assert_eq!(err_code(&c.send_bytes(b"\"\xff\xfe\"")), "bad-utf8");
+    // Blank lines are skipped silently; the connection still works.
+    c.writer.write_all(b"\r\n\n").unwrap();
+    let pong = c.send(r#"{"cmd":"ping"}"#);
+    assert_eq!(pong.get("reply").as_str(), Some("pong"), "connection must survive the abuse");
+
+    let stats = c.send(r#"{"cmd":"stats"}"#);
+    assert!(stats.get("errors").as_u64().unwrap() >= 7, "{}", stats.to_string());
+
+    handle.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn oversize_requests_are_refused_and_the_connection_closed() {
+    let cfg = ServeConfig { max_request_bytes: 4096, ..cfg_on_free_port() };
+    let (handle, join) = start(cfg);
+    let mut c = Client::connect(handle.addr());
+    let reply = c.send(&"a".repeat(10_000));
+    assert_eq!(err_code(&reply), "request-too-large");
+    assert!(c.at_eof(), "framing can't be trusted past the cap: server must close");
+    handle.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn connection_cap_refuses_with_busy() {
+    let cfg = ServeConfig { max_connections: 1, ..cfg_on_free_port() };
+    let (handle, join) = start(cfg);
+    let mut first = Client::connect(handle.addr());
+    // Ensure the first connection's worker is up before the second dials.
+    assert_eq!(first.send(r#"{"cmd":"ping"}"#).get("ok").as_bool(), Some(true));
+    let mut second = Client::connect(handle.addr());
+    assert_eq!(err_code(&second.recv()), "busy");
+    assert!(second.at_eof());
+    // The admitted connection keeps working.
+    assert_eq!(first.send(r#"{"cmd":"ping"}"#).get("ok").as_bool(), Some(true));
+    handle.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn idle_connections_time_out_with_a_structured_reply() {
+    let cfg = ServeConfig { read_timeout: Duration::from_millis(200), ..cfg_on_free_port() };
+    let (handle, join) = start(cfg);
+    let mut c = Client::connect(handle.addr());
+    // Send nothing: the server must speak first, naming the timeout.
+    assert_eq!(err_code(&c.recv()), "idle-timeout");
+    assert!(c.at_eof());
+    handle.shutdown();
+    join.join().unwrap().unwrap();
+}
+
+#[test]
+fn shutdown_command_stops_the_daemon() {
+    let (handle, join) = start(cfg_on_free_port());
+    let mut c = Client::connect(handle.addr());
+    let bye = c.send(r#"{"cmd":"shutdown"}"#);
+    assert_eq!(bye.get("ok").as_bool(), Some(true));
+    join.join().unwrap().unwrap();
+    assert!(handle.is_shutdown());
+}
+
+#[test]
+fn train_request_verifies_and_repeats_hit_the_shared_session() {
+    let (handle, join) = start(cfg_on_free_port());
+    let mut c = Client::connect(handle.addr());
+    let line = r#"{"cmd":"train","network":"unet","batch":2,"width":8,"steps":1}"#;
+    let reply = c.send(line);
+    assert_eq!(reply.get("ok").as_bool(), Some(true), "{}", reply.to_string());
+    assert_eq!(reply.get("all_verified").as_bool(), Some(true));
+    let runs = reply.get("runs").as_arr().unwrap();
+    assert_eq!(runs.len(), 1);
+    assert_eq!(runs[0].get("grads_match").as_bool(), Some(true));
+    assert_eq!(runs[0].get("losses_identical").as_bool(), Some(true));
+    assert!(
+        runs[0].get("peak").as_u64().unwrap() < reply.get("vanilla_peak").as_u64().unwrap(),
+        "planned peak must undercut vanilla"
+    );
+    let fp = reply.get("fingerprint").as_str().unwrap().to_string();
+
+    // A repeated train request reuses the registered session: its plan
+    // requests are cache hits, visible in the session totals.
+    let again = c.send(line);
+    assert_eq!(again.get("ok").as_bool(), Some(true));
+    assert_eq!(again.get("fingerprint").as_str(), Some(fp.as_str()));
+    let stats = c.send(r#"{"cmd":"stats"}"#);
+    assert_eq!(stats.get("sessions").as_u64(), Some(1));
+    let totals = stats.get("session_totals");
+    assert!(totals.get("hits").as_u64().unwrap() > totals.get("misses").as_u64().unwrap());
+
+    // The training graph is addressable for direct plan requests too.
+    let plan = c.send(&format!(r#"{{"cmd":"plan","fingerprint":"{fp}"}}"#));
+    assert_eq!(plan.get("ok").as_bool(), Some(true), "{}", plan.to_string());
+    assert_eq!(plan.get("cache_hit").as_bool(), Some(true), "train already compiled this plan");
+
+    handle.shutdown();
+    join.join().unwrap().unwrap();
+}
