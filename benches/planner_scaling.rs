@@ -18,8 +18,12 @@ use recompute::graph::{
     OpKind,
 };
 use recompute::models::zoo;
-use recompute::planner::{build_context, DpContext, Family, Objective, PlanRequest, PlannerId};
+use recompute::planner::{
+    build_context, exact_dp, planner_for, BudgetSpec, DpContext, Family, Objective, PlanContext,
+    PlanRequest, Planner, PlannerId,
+};
 use recompute::session::PlanSession;
+use recompute::sim::SimMode;
 use recompute::util::pool::WorkerPool;
 
 fn main() {
@@ -153,6 +157,78 @@ fn main() {
             medians[0] / medians[1].max(1e-9)
         );
     }
+
+    println!("\n== divide-and-conquer: decomposed vs whole-graph exact ==");
+    // Chains are the cleanest apples-to-apples case: the whole-graph
+    // lattice is linear (n+1 prefixes), so exact DP stays *feasible* at
+    // n=2048 — it is just quadratically slower than solving 32-node
+    // pieces and stitching at the cuts. Both plan at the same generous
+    // budget, and the decomposed closure asserts it reaches the same
+    // optimal overhead, so the wall-clock gap is at equal quality.
+    let n = 2048u32;
+    let mut b = GraphBuilder::new(format!("chain{n}"), 1);
+    let mut prev: Option<NodeId> = None;
+    for i in 0..n {
+        let inputs: Vec<NodeId> = prev.into_iter().collect();
+        prev = Some(b.add_raw(format!("n{i}"), OpKind::Conv, 1000 + (i as u64 % 7), 10, &inputs));
+    }
+    let g = b.build();
+    let budget = g.total_mem() * 4;
+    let iters = if quick { 1 } else { 5 };
+    let req = PlanRequest {
+        planner: PlannerId::Decomposed,
+        budget: BudgetSpec::Bytes(budget),
+        objective: Objective::MinOverhead,
+        sim_mode: SimMode::Liveness,
+    };
+    let (exact_ref, _) =
+        time_once(|| exact_dp(&g, budget, Objective::MinOverhead).unwrap().overhead);
+    let whole = bench("exact_chain_2048", 0, iters, || {
+        exact_dp(&g, budget, Objective::MinOverhead).unwrap().overhead
+    });
+    let dec = bench("decomposed_exact_chain_2048", 0, iters, || {
+        let plan =
+            planner_for(PlannerId::Decomposed).plan(&req, &PlanContext::bare(&g, 0)).unwrap();
+        assert_eq!(plan.overhead, exact_ref, "stitched plan must match the whole-graph optimum");
+        plan.overhead
+    });
+    println!("{}", whole.summary());
+    println!("{}", dec.summary());
+    println!(
+        "  whole/decomposed {:.1}× at equal overhead",
+        whole.median.as_secs_f64() / dec.median.as_secs_f64().max(1e-9)
+    );
+    collected.push(whole);
+    collected.push(dec);
+
+    // ResNet-50: the realistic shape. Whole-graph exact planning pays
+    // family enumeration + one global DP; the decomposed planner solves
+    // per-component families between the skip-free cut vertices.
+    let g = zoo::find("resnet50").expect("zoo model").build_batch(4);
+    let whole = bench("exact_whole_resnet50", 0, iters, || {
+        let ctx = build_context(&g, Family::Exact);
+        let b = ctx.min_feasible_budget();
+        ctx.solve(b, Objective::MinOverhead).map(|s| s.overhead)
+    });
+    let dec = bench("decomposed_vs_exact_resnet50", 0, iters, || {
+        let req = PlanRequest::new(PlannerId::Decomposed, Objective::MinOverhead);
+        planner_for(PlannerId::Decomposed).plan(&req, &PlanContext::bare(&g, 0)).unwrap().overhead
+    });
+    let (info, _) = time_once(|| {
+        let req = PlanRequest::new(PlannerId::Decomposed, Objective::MinOverhead);
+        let plan =
+            planner_for(PlannerId::Decomposed).plan(&req, &PlanContext::bare(&g, 0)).unwrap();
+        plan.decomposition.expect("decomposed plan reports its split")
+    });
+    println!("{}", whole.summary());
+    println!("{}", dec.summary());
+    println!(
+        "  whole/decomposed {:.1}×  (components={} cache-free solve)",
+        whole.median.as_secs_f64() / dec.median.as_secs_f64().max(1e-9),
+        info.components
+    );
+    collected.push(whole);
+    collected.push(dec);
 
     let doc = bench_report_json("planner", &collected);
     std::fs::write("BENCH_planner.json", doc.to_string_pretty())

@@ -9,7 +9,9 @@
 //!     or renamed benchmark means the committed JSON is stale;
 //!   * every result (both files) must carry exactly the canonical keys
 //!     `{name, iters, min_ms, median_ms, mean_ms, max_ms}` with positive
-//!     finite timings and `iters ≥ 1`.
+//!     finite timings and `iters ≥ 1`;
+//!   * the `planner` suite must keep at least one `decomposed_*` result
+//!     — the divide-and-conquer section must not silently drop out.
 //!
 //! ```sh
 //! cargo run --example bench_schema_check -- committed.json fresh.json
@@ -76,6 +78,12 @@ fn main() -> Result<()> {
             "fresh results not present in {committed}: {missing:?} — \
              re-run the full bench and commit the refreshed JSON"
         );
+    }
+    // The name-subset rule above would pass trivially if a refactor
+    // dropped a whole section; pin the one this repo's perf story
+    // depends on.
+    if fresh_suite == "planner" && !fresh_names.iter().any(|n| n.starts_with("decomposed_")) {
+        bail!("planner suite lost its decomposed_* results — keep the divide-and-conquer section");
     }
     println!(
         "schema ok: suite '{committed_suite}', {}/{} fresh results covered by the committed file",

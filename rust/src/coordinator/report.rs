@@ -70,15 +70,26 @@ pub fn session_json(s: &SessionStats) -> Json {
         .set("hits", s.hits.into())
         .set("misses", s.misses.into())
         .set("families_built", s.families_built.into())
+        .set("components", s.components.into())
+        .set("component_cache_hits", s.component_cache_hits.into())
 }
 
 /// One-line rendering of the session counters — printed next to the pool
-/// counters by `repro train --stats`.
+/// counters by `repro train --stats`. The component counters only render
+/// when the decomposed planner actually ran (they would be noise for the
+/// whole-graph planners).
 pub fn session_summary(s: &SessionStats) -> String {
-    format!(
+    let mut line = format!(
         "session: hits={} misses={} families_built={}",
         s.hits, s.misses, s.families_built
-    )
+    );
+    if s.components > 0 {
+        line.push_str(&format!(
+            " components={} component_cache_hits={}",
+            s.components, s.component_cache_hits
+        ));
+    }
+    line
 }
 
 /// One-line rendering of the planner wall-time counters — printed next
@@ -160,13 +171,26 @@ mod tests {
 
     #[test]
     fn session_counters_serialize_and_summarize() {
-        let s = SessionStats { hits: 3, misses: 2, families_built: 1 };
+        let s = SessionStats {
+            hits: 3,
+            misses: 2,
+            families_built: 1,
+            components: 0,
+            component_cache_hits: 0,
+        };
         let j = session_json(&s);
         assert_eq!(j.get("hits").as_u64(), Some(3));
         assert_eq!(j.get("misses").as_u64(), Some(2));
         assert_eq!(j.get("families_built").as_u64(), Some(1));
+        assert_eq!(j.get("components").as_u64(), Some(0));
         let line = session_summary(&s);
         assert!(line.contains("hits=3"), "{line}");
         assert!(line.contains("families_built=1"), "{line}");
+        assert!(!line.contains("components="), "quiet without decomposed runs: {line}");
+
+        let d = SessionStats { components: 7, component_cache_hits: 4, ..s };
+        let dline = session_summary(&d);
+        assert!(dline.contains("components=7"), "{dline}");
+        assert!(dline.contains("component_cache_hits=4"), "{dline}");
     }
 }

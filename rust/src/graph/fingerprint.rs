@@ -19,7 +19,7 @@
 //! graphs can collide — but the mixing is 64-bit splitmix, so accidental
 //! collisions are vanishingly unlikely in practice.
 
-use super::Graph;
+use super::{Graph, NodeSet};
 
 /// Stable structural hash of a [`Graph`] — the cache key component of
 /// [`crate::session::PlanSession`].
@@ -100,6 +100,70 @@ impl Graph {
         }
         GraphFingerprint(out)
     }
+
+    /// Fingerprint of the sub-DAG induced by `set`, without materializing
+    /// it: the same WL refinement restricted to members, with neighbor
+    /// multisets intersected with `set` and the node/edge counts taken
+    /// within the set. Guaranteed equal to
+    /// `induced_subgraph(self, set).0.fingerprint()` — the per-component
+    /// plan cache of the decomposed planner keys on this, so editing one
+    /// branch of a model invalidates only that branch's components.
+    pub fn subgraph_fingerprint(&self, set: &NodeSet) -> GraphFingerprint {
+        let members: Vec<_> = set.iter().collect();
+        let n = members.len();
+        if n == 0 {
+            return GraphFingerprint(splitmix(0));
+        }
+        let cap = self.len() as usize;
+        let mut h: Vec<u64> = vec![0; cap];
+        let mut internal_edges = 0usize;
+        for &v in &members {
+            let node = self.node(v);
+            let mut x = splitmix(0xc0f1);
+            for b in node.op.as_str().bytes() {
+                x = mix(x, b as u64);
+            }
+            x = mix(x, node.mem);
+            x = mix(x, node.time);
+            x = mix(x, node.param_bytes);
+            h[v.0 as usize] = x;
+            internal_edges += self.succs(v).iter().filter(|s| set.contains(**s)).count();
+        }
+        let rounds = 2 + (usize::BITS - n.leading_zeros()) as usize;
+        let mut next = vec![0u64; cap];
+        let mut neigh: Vec<u64> = Vec::new();
+        for _ in 0..rounds {
+            for &v in &members {
+                let mut x = mix(h[v.0 as usize], 0x1);
+                neigh.clear();
+                neigh.extend(
+                    self.preds(v).iter().filter(|p| set.contains(**p)).map(|p| h[p.0 as usize]),
+                );
+                neigh.sort_unstable();
+                for &p in &neigh {
+                    x = mix(x, p);
+                }
+                x = mix(x, 0x2);
+                neigh.clear();
+                neigh.extend(
+                    self.succs(v).iter().filter(|s| set.contains(**s)).map(|s| h[s.0 as usize]),
+                );
+                neigh.sort_unstable();
+                for &s in &neigh {
+                    x = mix(x, s);
+                }
+                next[v.0 as usize] = x;
+            }
+            std::mem::swap(&mut h, &mut next);
+        }
+        let mut finals: Vec<u64> = members.iter().map(|v| h[v.0 as usize]).collect();
+        finals.sort_unstable();
+        let mut out = mix(splitmix(n as u64), internal_edges as u64);
+        for x in finals {
+            out = mix(out, x);
+        }
+        GraphFingerprint(out)
+    }
 }
 
 #[cfg(test)]
@@ -131,5 +195,36 @@ mod tests {
             diamond().fingerprint(),
             diamond_with_mems([10, 20, 31, 40]).fingerprint()
         );
+    }
+
+    #[test]
+    fn subgraph_fingerprint_equals_materialized_induced_graph() {
+        use crate::graph::{induced_subgraph, NodeSet};
+        use crate::testutil::random_dag;
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(0x5f9);
+        for _ in 0..12 {
+            let n = rng.range(3, 12);
+            let g = random_dag(&mut rng, n);
+            // Random member subset (keep at least one node).
+            let mut set = NodeSet::empty(g.len());
+            for (v, _) in g.nodes() {
+                if rng.next_u64() % 3 != 0 {
+                    set.insert(v);
+                }
+            }
+            if set.is_empty() {
+                set.insert(crate::graph::NodeId(0));
+            }
+            let (sub, _) = induced_subgraph(&g, &set);
+            assert_eq!(g.subgraph_fingerprint(&set), sub.fingerprint());
+        }
+    }
+
+    #[test]
+    fn subgraph_fingerprint_full_set_matches_whole_graph() {
+        use crate::graph::NodeSet;
+        let g = diamond();
+        assert_eq!(g.subgraph_fingerprint(&NodeSet::full(g.len())), g.fingerprint());
     }
 }

@@ -9,6 +9,7 @@
 
 mod articulation;
 pub mod builder;
+mod decompose;
 mod fingerprint;
 mod io;
 mod lowerset;
@@ -17,6 +18,7 @@ mod topo;
 
 pub use articulation::articulation_points;
 pub use builder::GraphBuilder;
+pub use decompose::{block_cut_tree, decompose, induced_subgraph, BlockCutTree, Decomposition};
 pub use fingerprint::GraphFingerprint;
 pub use lowerset::{addable, enumerate_lower_sets, pruned_lower_sets, EnumerationLimit};
 pub use nodeset::NodeSet;

@@ -8,10 +8,14 @@
 //!   tradeoff sweeps of Figure 3.
 //! - `timing` — §5.1 ExactDP vs ApproxDP planner wall-clock.
 //! - `plan --network NAME [--batch N] [--budget GB|512KiB] [--objective
-//!    tc|mc] [--family exact|approx] [--sim liveness|strict] [--json]
-//!    [--threads N] [--stats]` —
+//!    tc|mc] [--planner exact|approx|chen|exhaustive|decomposed]
+//!    [--sim liveness|strict] [--json] [--threads N] [--stats]` —
 //!    plan one network and print the schedule (budgets: bare number = GB,
-//!    or human-readable bytes; `--sim strict` reproduces the Table 2
+//!    or human-readable bytes; `--planner decomposed` splits at the
+//!    graph's gate vertices and solves per-component — the scalable way
+//!    to get exact-quality plans on deep networks; `--family
+//!    exact|approx` and `--chen` remain as back-compat aliases;
+//!    `--sim strict` reproduces the Table 2
 //!    no-liveness ablation, default is the Table 1 liveness measurement;
 //!    `--json` emits the compiled-plan summary as machine-readable JSON;
 //!    `--threads` sets the planner worker-pool width, overriding
@@ -123,7 +127,9 @@ fn print_usage() {
            figure3 [--network N] [--device GB]   batch-vs-runtime sweeps\n\
            timing                        ExactDP vs ApproxDP planner runtime (§5.1)\n\
            plan --network N [--batch B] [--budget GB|512KiB]\n\
-                [--objective tc|mc] [--family exact|approx] [--chen]\n\
+                [--objective tc|mc]\n\
+                [--planner exact|approx|chen|exhaustive|decomposed]\n\
+                [--family exact|approx] [--chen]  (back-compat aliases)\n\
                 [--sim liveness|strict] [--json] [--threads N] [--stats]\n\
            plan --graph FILE.json [...]  plan a user-supplied graph JSON\n\
            experiment --config F.json [--csv out.csv]  declarative sweep runner\n\
@@ -213,7 +219,11 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
     let mode = SimMode::parse(flags.get("--sim").unwrap_or("liveness"))?;
     let json_out = flags.has("--json");
     let stats_out = flags.has("--stats");
-    let planner = if flags.has("--chen") {
+    // `--planner` is the first-class selector; `--family`/`--chen` stay
+    // as back-compat aliases for scripts written before it existed.
+    let planner = if let Some(p) = flags.get("--planner") {
+        PlannerId::parse(p)?
+    } else if flags.has("--chen") {
         PlannerId::Chen
     } else if family == Family::Exact {
         PlannerId::ExactDp
@@ -245,12 +255,17 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
         simulate_vanilla(g, SimOptions { mode: SimMode::Liveness, include_params: true });
     if !json_out {
         println!("vanilla peak: {} (liveness)", fmt_bytes(vanilla.peak_total));
-        if planner != PlannerId::Chen && budget_spec == BudgetSpec::MinFeasible {
-            // Memoized: the session's plan below reuses this B*.
-            println!(
-                "minimal feasible budget B* = {} (activations)",
-                fmt_bytes(session.min_feasible_budget(family))
-            );
+        // Whole-graph B* is only meaningful (and only affordable) for the
+        // planners that solve over a whole-graph family — Chen sweeps its
+        // own budgets and the decomposed planner resolves per component.
+        if let Some(fam) = planner.family() {
+            if budget_spec == BudgetSpec::MinFeasible {
+                // Memoized: the session's plan below reuses this B*.
+                println!(
+                    "minimal feasible budget B* = {} (activations)",
+                    fmt_bytes(session.min_feasible_budget(fam))
+                );
+            }
         }
     }
 
@@ -260,7 +275,7 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
     let cache_hit = session.stats().hits > before.hits;
 
     if json_out {
-        let j = Json::obj()
+        let mut j = Json::obj()
             .set("network", g.name.as_str().into())
             .set("nodes", (g.len() as u64).into())
             .set("fingerprint", format!("{}", cp.fingerprint).into())
@@ -284,6 +299,9 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
             .set("recompute_count", cp.program.recompute_count.into())
             .set("cache_hit", cache_hit.into())
             .set("session", session_json(&session.stats()));
+        if let Some(info) = &cp.plan.decomposition {
+            j = j.set("decomposition", decomposition_json(info));
+        }
         println!("{}", j.to_string_pretty());
         return Ok(());
     }
@@ -318,6 +336,17 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
         fmt_bytes(cp.report.peak_total),
         100.0 * (1.0 - cp.report.peak_total as f64 / vanilla.peak_total as f64)
     );
+    if let Some(info) = &cp.plan.decomposition {
+        let kinds: Vec<&str> = info.kinds.iter().map(|k| k.label()).collect();
+        println!(
+            "decomposition: components={} cut_vertices={} cache_hits={} sizes={:?} kinds={}",
+            info.components,
+            info.cut_vertices,
+            info.cache_hits,
+            info.sizes,
+            kinds.join(",")
+        );
+    }
     if flags.has("--segments") {
         for (i, l) in cp.plan.chain.lower_sets().iter().enumerate() {
             println!("  L{} — |L|={}", i + 1, l.len());
@@ -327,6 +356,24 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
         print_plan_stats(&session);
     }
     Ok(())
+}
+
+/// Machine-readable rendering of a decomposed plan's per-component
+/// statistics (`plan --json`, mirrored by the serve protocol).
+fn decomposition_json(info: &recompute::planner::DecompositionInfo) -> Json {
+    Json::obj()
+        .set("components", info.components.into())
+        .set("cut_vertices", info.cut_vertices.into())
+        .set("cache_hits", info.cache_hits.into())
+        .set("sizes", Json::Arr(info.sizes.iter().map(|&s| Json::from(s)).collect()))
+        .set(
+            "family_sizes",
+            Json::Arr(info.family_sizes.iter().map(|&s| Json::from(s)).collect()),
+        )
+        .set(
+            "kinds",
+            Json::Arr(info.kinds.iter().map(|k| Json::from(k.label())).collect()),
+        )
 }
 
 /// `plan --stats`: the session's amortization counters, the planner

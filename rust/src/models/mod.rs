@@ -17,11 +17,13 @@ mod googlenet;
 mod mobilenet;
 mod pspnet;
 mod resnet;
+mod synthetic;
 mod towers;
 mod unet;
 mod vgg;
 pub mod zoo;
 
+pub use synthetic::block_stack;
 pub use towers::{mlp_tower, transformer_tower};
 
 #[cfg(test)]

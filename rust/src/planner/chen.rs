@@ -38,6 +38,10 @@ pub struct ChenPlan {
 /// once it exceeds `b` the segment is closed at the next articulation
 /// point (splitting elsewhere would sever a skip connection — Chen's
 /// heuristic only cuts where the graph is 1-connected).
+///
+/// Computes the articulation set on every call; when sweeping budgets
+/// (or when the session already has the set cached), use
+/// [`chen_segmentation_with`] instead.
 pub fn chen_segmentation(g: &Graph, b: u64) -> LowerSetChain {
     let arts: NodeSet = {
         let mut s = NodeSet::empty(g.len());
@@ -46,6 +50,14 @@ pub fn chen_segmentation(g: &Graph, b: u64) -> LowerSetChain {
         }
         s
     };
+    chen_segmentation_with(g, &arts, b)
+}
+
+/// [`chen_segmentation`] with a precomputed articulation set — the shared
+/// decomposition of the skeleton. The budget sweep in [`chen_plan_with`]
+/// and the session-cached set both route through here so the Tarjan pass
+/// runs once per graph, not once per candidate budget.
+pub fn chen_segmentation_with(g: &Graph, arts: &NodeSet, b: u64) -> LowerSetChain {
     let topo = g.topo_order();
     let mut chain: Vec<NodeSet> = Vec::new();
     let mut cur = NodeSet::empty(g.len()); // cumulative lower set
@@ -72,7 +84,28 @@ pub fn chen_segmentation(g: &Graph, b: u64) -> LowerSetChain {
 /// peak (per `score`, typically the liveness-aware simulator). The sweep
 /// is geometric from the largest single node to `M(V)`, which covers the
 /// √n sweet spot Chen's analysis targets.
-pub fn chen_plan<F>(g: &Graph, mut score: F) -> Result<ChenPlan>
+///
+/// Computes the articulation set once up front and hands it to
+/// [`chen_plan_with`]; callers that already hold the set (the session,
+/// the decomposed planner) should call that directly.
+pub fn chen_plan<F>(g: &Graph, score: F) -> Result<ChenPlan>
+where
+    F: FnMut(&LowerSetChain) -> u64,
+{
+    let arts: NodeSet = {
+        let mut s = NodeSet::empty(g.len());
+        for v in articulation_points(g) {
+            s.insert(v);
+        }
+        s
+    };
+    chen_plan_with(g, &arts, score)
+}
+
+/// [`chen_plan`] with a precomputed articulation set. The sweep tries
+/// ~`log₁.₃(M(V))` budgets; sharing one Tarjan pass across all of them
+/// (and with whatever else the session runs) is the point of the split.
+pub fn chen_plan_with<F>(g: &Graph, arts: &NodeSet, mut score: F) -> Result<ChenPlan>
 where
     F: FnMut(&LowerSetChain) -> u64,
 {
@@ -92,7 +125,7 @@ where
     budgets.push(total);
     let mut best: Option<(u64, u64, LowerSetChain)> = None;
     for b in budgets {
-        let chain = chen_segmentation(g, b);
+        let chain = chen_segmentation_with(g, arts, b);
         let peak = score(&chain);
         if best.as_ref().map(|(p, _, _)| peak < *p).unwrap_or(true) {
             best = Some((peak, b, chain));
@@ -162,6 +195,28 @@ mod tests {
         let c = chen_segmentation(&g, 10);
         assert_eq!(c.k(), 2, "one interior cut at node 3 plus the final segment");
         assert_eq!(c.lower_sets()[0].len(), 4); // {0,1,2,3}
+    }
+
+    #[test]
+    fn with_variants_match_recomputing_ones() {
+        let g = chain_graph(20, 10);
+        let arts: NodeSet = {
+            let mut s = NodeSet::empty(g.len());
+            for v in articulation_points(&g) {
+                s.insert(v);
+            }
+            s
+        };
+        for b in [10u64, 50, 120] {
+            assert_eq!(
+                chen_segmentation(&g, b).lower_sets(),
+                chen_segmentation_with(&g, &arts, b).lower_sets()
+            );
+        }
+        let a = chen_plan(&g, |c| c.peak_mem(&g)).unwrap();
+        let w = chen_plan_with(&g, &arts, |c| c.peak_mem(&g)).unwrap();
+        assert_eq!(a.segment_budget, w.segment_budget);
+        assert_eq!(a.chain.lower_sets(), w.chain.lower_sets());
     }
 
     #[test]

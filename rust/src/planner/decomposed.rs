@@ -1,0 +1,744 @@
+//! Divide-and-conquer planning (the decomposition layer).
+//!
+//! The exact DP's lower-set family explodes with graph width, capping
+//! exact-quality plans at a few hundred nodes. Feng & Huang (*Optimal
+//! Gradient Checkpoint Search for Arbitrary Computation Graphs*) observe
+//! that dividing a network at separators keeps optimal search tractable:
+//! pieces that communicate through a single vertex can be planned
+//! independently and stitched, for the *sum* — not the product — of the
+//! per-piece family sizes.
+//!
+//! [`DecomposedPlanner`] implements that idea on top of the gate
+//! decomposition of [`crate::graph::decompose`]:
+//!
+//! 1. split `V` at its **gates** (articulation points whose ancestor
+//!    closure has boundary exactly `{gate}` — the sound stitch points
+//!    for lower-set chains), then coalesce consecutive slices into units
+//!    of at least [`COMPONENT_NODE_TARGET`] nodes so a plain chain does
+//!    not shatter into singletons;
+//! 2. solve every unit through the degradation ladder — exact DP while
+//!    its lower-set family fits under [`COMPONENT_IDEAL_CAP`], else
+//!    approx DP over `L^Pruned`, else (beyond [`COMPONENT_CHEN_CAP`]
+//!    nodes) Chen's √n sweep — sharded across the worker pool, since
+//!    units are embarrassingly parallel;
+//! 3. stitch the local chains at the gates: each local lower set, mapped
+//!    to global ids and unioned with the prefix of earlier units, is a
+//!    global lower set, so the concatenation is a valid global chain.
+//!    The stitched chain is re-validated by the checked
+//!    [`LowerSetChain::new`] and its reported overhead / peak are the
+//!    *exact* Eq. 1 / Eq. 2 values of the global chain — no
+//!    compositional approximation leaks into the reports.
+//!
+//! Budget accounting charges each gate's checkpoint bytes exactly once:
+//! under an absolute budget the units are solved in topological order
+//! and unit `i` plans under `B − carryᵢ`, where `carryᵢ` is the memory
+//! of everything units `< i` decided to cache (their cache sets plus
+//! their gates). Because the local Eq. 2 cannot see cross-unit frontier
+//! terms, the stitched chain's true global peak is checked against `B`
+//! at the end and the planner fails honestly if it overflows.
+//!
+//! Per-unit plans are cached in a [`ComponentCache`] keyed by the unit's
+//! [`Graph::subgraph_fingerprint`], so a session editing one branch of a
+//! model re-plans only the components that changed.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::anyhow::{anyhow, bail, Result};
+use crate::fmt_bytes;
+use crate::graph::{
+    articulation_points, decompose, enumerate_lower_sets, induced_subgraph, pruned_lower_sets,
+    Decomposition, EnumerationLimit, Graph, GraphFingerprint, NodeId, NodeSet,
+};
+use crate::util::pool::WorkerPool;
+
+use super::dp::DpContext;
+use super::strategy::LowerSetChain;
+use super::{
+    chen_plan, BudgetSpec, Objective, Plan, PlanContext, PlanRequest, Planner, PlannerId,
+    PlannerKind,
+};
+
+/// Coalescing threshold: consecutive gate slices merge until a unit
+/// holds at least this many nodes. On a plain chain *every* interior
+/// node is a gate, and stitching at all of them would force caching
+/// every cut vertex; coalescing keeps the per-gate checkpoint cost
+/// amortized. A fixed constant — never derived from the thread count —
+/// so plans are bit-identical at any parallelism.
+pub const COMPONENT_NODE_TARGET: u32 = 32;
+
+/// Per-unit lower-set enumeration cap for the exact rung of the ladder.
+/// Units whose family overflows it degrade to the approximate family.
+pub const COMPONENT_IDEAL_CAP: usize = 65_536;
+
+/// Units larger than this skip the DP ladder entirely and take the Chen
+/// √n rung (building even the pruned family would be quadratic).
+pub const COMPONENT_CHEN_CAP: u32 = 2_048;
+
+/// Tunable knobs of the decomposed planner. Production uses
+/// [`DecomposeCfg::default`]; unit tests shrink the caps to force every
+/// ladder rung on small fixtures.
+#[derive(Clone, Copy, Debug)]
+struct DecomposeCfg {
+    node_target: u32,
+    ideal_cap: usize,
+    chen_cap: u32,
+}
+
+impl Default for DecomposeCfg {
+    fn default() -> DecomposeCfg {
+        DecomposeCfg {
+            node_target: COMPONENT_NODE_TARGET,
+            ideal_cap: COMPONENT_IDEAL_CAP,
+            chen_cap: COMPONENT_CHEN_CAP,
+        }
+    }
+}
+
+/// Per-component statistics of a decomposed plan, surfaced through
+/// [`Plan::decomposition`](super::Plan), the CLI report and the session
+/// stats.
+#[derive(Clone, PartialEq, Eq, Debug)]
+pub struct DecompositionInfo {
+    /// Number of coalesced components the graph was split into.
+    pub components: u32,
+    /// Gate (cut) vertices used as stitch points (`components − 1`).
+    pub cut_vertices: u32,
+    /// Node count per component, in topological order.
+    pub sizes: Vec<u32>,
+    /// Lower-set family size per component (0 for the Chen rung, which
+    /// builds no family).
+    pub family_sizes: Vec<usize>,
+    /// Ladder rung each component was solved on.
+    pub kinds: Vec<PlannerKind>,
+    /// Components whose plan was reused — from the [`ComponentCache`]
+    /// or from an identical component earlier in the same graph.
+    pub cache_hits: u32,
+}
+
+/// A solved component: its local lower-set chain plus provenance.
+#[derive(Debug)]
+pub(crate) struct ComponentPlan {
+    /// Cumulative lower sets in the component's local id space.
+    sets: Vec<NodeSet>,
+    kind: PlannerKind,
+    family_len: usize,
+}
+
+/// Cache key: the component's structural fingerprint plus what was asked
+/// of it — objective, local budget (`None` = minimal feasible), and
+/// whether fractional "clamp up to feasible" semantics applied.
+type Key = (GraphFingerprint, Objective, Option<u64>, bool);
+
+struct CacheEntry {
+    plan: Arc<ComponentPlan>,
+    last_used: u64,
+}
+
+struct CacheInner {
+    map: HashMap<Key, CacheEntry>,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+}
+
+/// LRU cache of solved component plans, keyed by the component's
+/// [`Graph::subgraph_fingerprint`] plus the objective and local budget.
+/// [`crate::session::PlanSession`] owns one alongside its compiled-plan
+/// cache, so sessions serving many model variants re-plan only the
+/// components that actually changed.
+pub struct ComponentCache {
+    capacity: usize,
+    inner: Mutex<CacheInner>,
+}
+
+/// Counters of a [`ComponentCache`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug, Default)]
+pub struct ComponentCacheStats {
+    /// Live entries.
+    pub entries: usize,
+    /// Component plans reused instead of solved (includes reuse between
+    /// identical components of a single graph).
+    pub hits: u64,
+    /// Components that had to be solved.
+    pub misses: u64,
+}
+
+impl ComponentCache {
+    /// Create a cache holding at most `capacity` component plans
+    /// (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> ComponentCache {
+        ComponentCache {
+            capacity: capacity.max(1),
+            inner: Mutex::new(CacheInner { map: HashMap::new(), tick: 0, hits: 0, misses: 0 }),
+        }
+    }
+
+    /// Current counters.
+    pub fn stats(&self) -> ComponentCacheStats {
+        let inner = self.inner.lock().expect("component cache lock");
+        ComponentCacheStats { entries: inner.map.len(), hits: inner.hits, misses: inner.misses }
+    }
+
+    /// Fetch an entry, refreshing its LRU stamp. Does not touch the
+    /// hit/miss counters — the planner validates the entry against the
+    /// concrete component first and reports the outcome via
+    /// [`ComponentCache::record`].
+    fn lookup(&self, key: &Key) -> Option<Arc<ComponentPlan>> {
+        let mut inner = self.inner.lock().expect("component cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.get_mut(key).map(|e| {
+            e.last_used = tick;
+            Arc::clone(&e.plan)
+        })
+    }
+
+    /// Insert a solved plan, evicting least-recently-used entries down
+    /// to capacity.
+    fn insert(&self, key: Key, plan: Arc<ComponentPlan>) {
+        let mut inner = self.inner.lock().expect("component cache lock");
+        inner.tick += 1;
+        let tick = inner.tick;
+        inner.map.insert(key, CacheEntry { plan, last_used: tick });
+        while inner.map.len() > self.capacity {
+            // Ticks are unique, so the victim is deterministic.
+            match inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k) {
+                Some(victim) => {
+                    inner.map.remove(&victim);
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// Fold one planning call's hit/miss counts into the cache stats.
+    fn record(&self, hits: u64, misses: u64) {
+        let mut inner = self.inner.lock().expect("component cache lock");
+        inner.hits += hits;
+        inner.misses += misses;
+    }
+}
+
+/// One coalesced slice of the decomposition.
+struct Unit {
+    nodes: NodeSet,
+    /// The trailing gate joining this unit to the next (`None` on the
+    /// last unit).
+    gate: Option<NodeId>,
+}
+
+/// Merge consecutive gate slices into units of at least `target` nodes.
+/// A unit can only close at a gate boundary, so each unit but the last
+/// carries the gate of its last merged slice.
+fn coalesce(d: &Decomposition, target: u32) -> Vec<Unit> {
+    let mut units: Vec<Unit> = Vec::new();
+    let mut acc: Option<NodeSet> = None;
+    for (i, c) in d.components.iter().enumerate() {
+        match acc.as_mut() {
+            Some(a) => a.union_with(c),
+            None => acc = Some(c.clone()),
+        }
+        if i < d.gates.len() && acc.as_ref().map(|a| a.len() >= target).unwrap_or(false) {
+            let nodes = acc.take().expect("accumulator set");
+            units.push(Unit { nodes, gate: Some(d.gates[i]) });
+        }
+    }
+    if let Some(a) = acc {
+        units.push(Unit { nodes: a, gate: None });
+    }
+    units
+}
+
+/// A cached (or duplicate) chain is only reusable when it is a valid
+/// chain of *this* component's labeling — guards against fingerprint
+/// collisions and isomorphic-but-relabeled twins.
+fn chain_fits(sub: &Graph, sets: &[NodeSet]) -> bool {
+    sets.last().map(|l| l.capacity() == sub.len()).unwrap_or(false)
+        && LowerSetChain::new(sub, sets.to_vec()).is_ok()
+}
+
+/// Solve one component through the degradation ladder: exact DP while
+/// the family fits under `cfg.ideal_cap`, else approx DP over
+/// `L^Pruned`, else (beyond `cfg.chen_cap` nodes) Chen's √n sweep
+/// (which resolves its own per-segment budget and ignores `budget`; the
+/// stitched chain's global budget check still applies).
+///
+/// `budget = None` plans at the component's minimal feasible budget;
+/// `Some(b)` caps it, clamping up to feasible when `clamp` is set
+/// (fractional-budget semantics) and failing otherwise.
+fn plan_component(
+    sub: &Graph,
+    pool: &WorkerPool,
+    objective: Objective,
+    budget: Option<u64>,
+    clamp: bool,
+    cfg: DecomposeCfg,
+) -> Result<ComponentPlan> {
+    if sub.len() > cfg.chen_cap {
+        let p = chen_plan(sub, |c| c.peak_mem(sub))?;
+        return Ok(ComponentPlan {
+            sets: p.chain.lower_sets().to_vec(),
+            kind: PlannerKind::Chen,
+            family_len: 0,
+        });
+    }
+    let limit = EnumerationLimit { max_ideals: cfg.ideal_cap };
+    let (family, kind) = match enumerate_lower_sets(sub, limit) {
+        Some(f) => (f, PlannerKind::ExactDp),
+        None => (pruned_lower_sets(sub), PlannerKind::ApproxDp),
+    };
+    let dp = DpContext::from_shared_with(Arc::new(sub.clone()), family, pool);
+    let family_len = dp.family_len();
+    let b = match budget {
+        None => dp.min_feasible_budget(),
+        Some(b) => {
+            let min = dp.min_feasible_budget();
+            if b >= min {
+                b
+            } else if clamp {
+                min
+            } else {
+                bail!(
+                    "budget {} infeasible for {}: min feasible {}",
+                    fmt_bytes(b),
+                    sub.name,
+                    fmt_bytes(min)
+                );
+            }
+        }
+    };
+    let sol = dp.solve(b, objective).ok_or_else(|| {
+        anyhow!("solve at budget {} for {} must succeed", fmt_bytes(b), sub.name)
+    })?;
+    Ok(ComponentPlan { sets: sol.chain.lower_sets().to_vec(), kind, family_len })
+}
+
+/// Shared state of one decomposed planning call.
+struct Solver<'a> {
+    g: &'a Graph,
+    units: &'a [Unit],
+    preps: &'a [(Graph, Vec<NodeId>, GraphFingerprint)],
+    objective: Objective,
+    cache: Option<&'a ComponentCache>,
+    pool: &'a WorkerPool,
+    cfg: DecomposeCfg,
+}
+
+/// Per-unit plans plus this call's reuse accounting.
+struct Solved {
+    plans: Vec<Arc<ComponentPlan>>,
+    hits: u64,
+    misses: u64,
+}
+
+impl Solver<'_> {
+    /// Minimal-feasible-budget path: every unit plans at its own local
+    /// `B*`, independently — fully parallel across the pool. Cache
+    /// probes and intra-graph deduplication run sequentially *before*
+    /// the parallel solve so hit/miss accounting (and therefore the
+    /// session stats) never depends on the thread count.
+    fn min_feasible(&self) -> Result<Solved> {
+        let n = self.units.len();
+        let mut plans: Vec<Option<Arc<ComponentPlan>>> = vec![None; n];
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut rep_for_key: HashMap<Key, usize> = HashMap::new();
+        let mut to_solve: Vec<usize> = Vec::new();
+        let mut followers: Vec<(usize, usize)> = Vec::new();
+        for i in 0..n {
+            let key = (self.preps[i].2, self.objective, None, false);
+            if let Some(cc) = self.cache {
+                if let Some(p) = cc.lookup(&key) {
+                    if chain_fits(&self.preps[i].0, &p.sets) {
+                        plans[i] = Some(p);
+                        hits += 1;
+                        continue;
+                    }
+                }
+            }
+            match rep_for_key.get(&key) {
+                Some(&rep) => followers.push((i, rep)),
+                None => {
+                    rep_for_key.insert(key, i);
+                    to_solve.push(i);
+                }
+            }
+        }
+        // Solve the unique misses in parallel; results come back in
+        // index order, so everything downstream stays deterministic.
+        let solved: Vec<Result<ComponentPlan>> = self.pool.map(to_solve.len(), |k| {
+            plan_component(
+                &self.preps[to_solve[k]].0,
+                self.pool,
+                self.objective,
+                None,
+                false,
+                self.cfg,
+            )
+        });
+        for (k, r) in solved.into_iter().enumerate() {
+            let i = to_solve[k];
+            let plan = Arc::new(r?);
+            if let Some(cc) = self.cache {
+                cc.insert((self.preps[i].2, self.objective, None, false), Arc::clone(&plan));
+            }
+            plans[i] = Some(plan);
+            misses += 1;
+        }
+        // Duplicates reuse their representative's plan when it fits
+        // their labeling; isomorphic-but-relabeled twins solve solo.
+        for (i, rep) in followers {
+            let p = plans[rep].as_ref().expect("representative solved").clone();
+            if chain_fits(&self.preps[i].0, &p.sets) {
+                plans[i] = Some(p);
+                hits += 1;
+            } else {
+                plans[i] = Some(Arc::new(plan_component(
+                    &self.preps[i].0,
+                    self.pool,
+                    self.objective,
+                    None,
+                    false,
+                    self.cfg,
+                )?));
+                misses += 1;
+            }
+        }
+        let plans = plans.into_iter().map(|p| p.expect("every unit resolved")).collect();
+        Ok(Solved { plans, hits, misses })
+    }
+
+    /// Absolute-budget path: units solve in topological order, each
+    /// under `budget − carry`, where `carry` is the checkpoint memory
+    /// committed by earlier units — their cache sets plus their gates,
+    /// each charged exactly once. Sequential across units (the carry is
+    /// a data dependency); each unit's DP still shards its own family
+    /// precompute across the pool.
+    fn budgeted(&self, budget: u64, clamp: bool) -> Result<Solved> {
+        let n = self.units.len();
+        let mut plans: Vec<Arc<ComponentPlan>> = Vec::with_capacity(n);
+        let mut hits = 0u64;
+        let mut misses = 0u64;
+        let mut carry = 0u64;
+        for i in 0..n {
+            let sub = &self.preps[i].0;
+            let local_b = budget.saturating_sub(carry);
+            let key = (self.preps[i].2, self.objective, Some(local_b), clamp);
+            let mut plan: Option<Arc<ComponentPlan>> = None;
+            if let Some(cc) = self.cache {
+                if let Some(p) = cc.lookup(&key) {
+                    if chain_fits(sub, &p.sets) {
+                        hits += 1;
+                        plan = Some(p);
+                    }
+                }
+            }
+            let plan = match plan {
+                Some(p) => p,
+                None => {
+                    let obj = self.objective;
+                    let solved = plan_component(sub, self.pool, obj, Some(local_b), clamp, self.cfg)
+                        .map_err(|e| {
+                            e.context(format!(
+                                "component {} of {} (budget {} after {} checkpointed upstream)",
+                                i,
+                                self.g.name,
+                                fmt_bytes(local_b),
+                                fmt_bytes(carry),
+                            ))
+                        })?;
+                    misses += 1;
+                    let p = Arc::new(solved);
+                    if let Some(cc) = self.cache {
+                        cc.insert(key, Arc::clone(&p));
+                    }
+                    p
+                }
+            };
+            // Advance the carry: this unit's cache set (its local U_k)
+            // plus the gate joining it to the next unit.
+            let mut u = NodeSet::empty(sub.len());
+            for l in &plan.sets {
+                u.union_with(&sub.boundary(l));
+            }
+            carry += sub.mem_of(&u);
+            if let Some(gate) = self.units[i].gate {
+                carry += self.g.node(gate).mem;
+            }
+            plans.push(plan);
+        }
+        Ok(Solved { plans, hits, misses })
+    }
+}
+
+/// The decomposition planner behind [`PlannerId::Decomposed`] — see the
+/// module docs for the algorithm. Registered in
+/// [`super::planner_for`]; [`crate::session::PlanSession`] supplies the
+/// worker pool, the cached articulation set and the [`ComponentCache`]
+/// through [`PlanContext`].
+pub struct DecomposedPlanner;
+
+impl Planner for DecomposedPlanner {
+    fn id(&self) -> PlannerId {
+        PlannerId::Decomposed
+    }
+
+    fn plan(&self, req: &PlanRequest, ctx: &PlanContext<'_>) -> Result<Plan> {
+        plan_decomposed(req, ctx, DecomposeCfg::default())
+    }
+}
+
+fn plan_decomposed(req: &PlanRequest, ctx: &PlanContext<'_>, cfg: DecomposeCfg) -> Result<Plan> {
+    let g = ctx.graph;
+    if g.len() == 0 {
+        bail!("empty graph");
+    }
+    let arts: Vec<NodeId> = match ctx.arts {
+        Some(set) => set.iter().collect(),
+        None => articulation_points(g),
+    };
+    let units = coalesce(&decompose(g, &arts), cfg.node_target);
+
+    let global_pool;
+    let pool: &WorkerPool = match ctx.pool {
+        Some(p) => p,
+        None => {
+            global_pool = crate::util::pool::global();
+            &global_pool
+        }
+    };
+
+    // Materialize subgraphs + fingerprints in parallel (index order).
+    let preps: Vec<(Graph, Vec<NodeId>, GraphFingerprint)> = pool.map(units.len(), |i| {
+        let (sub, map) = induced_subgraph(g, &units[i].nodes);
+        let fp = g.subgraph_fingerprint(&units[i].nodes);
+        (sub, map, fp)
+    });
+
+    let (global_budget, clamp) = match req.budget {
+        BudgetSpec::MinFeasible => (None, false),
+        BudgetSpec::Bytes(b) => (Some(b), false),
+        BudgetSpec::Frac(f) => (Some((g.total_mem() as f64 * f) as u64), true),
+    };
+
+    let solver = Solver {
+        g,
+        units: &units,
+        preps: &preps,
+        objective: req.objective,
+        cache: ctx.components,
+        pool,
+        cfg,
+    };
+    let solved = match global_budget {
+        None => solver.min_feasible()?,
+        Some(b) => solver.budgeted(b, clamp)?,
+    };
+    if let Some(cc) = ctx.components {
+        cc.record(solved.hits, solved.misses);
+    }
+
+    // Stitch: each local lower set, mapped to global ids and unioned
+    // with the prefix of earlier units, extends the global chain.
+    let mut global_sets: Vec<NodeSet> = Vec::new();
+    let mut prefix = NodeSet::empty(g.len());
+    for (i, plan) in solved.plans.iter().enumerate() {
+        let map = &preps[i].1;
+        for l in &plan.sets {
+            let mut s = prefix.clone();
+            for v in l.iter() {
+                s.insert(map[v.0 as usize]);
+            }
+            global_sets.push(s);
+        }
+        prefix = global_sets.last().expect("non-empty local chain").clone();
+    }
+    let chain = LowerSetChain::new(g, global_sets)?;
+    let overhead = chain.overhead(g);
+    let peak_eq2 = chain.peak_mem(g);
+    let budget = match (global_budget, clamp) {
+        (Some(b), false) => {
+            if peak_eq2 > b {
+                bail!(
+                    "decomposed plan for {} exceeds budget {}: stitched Eq. 2 peak {}",
+                    g.name,
+                    fmt_bytes(b),
+                    fmt_bytes(peak_eq2)
+                );
+            }
+            b
+        }
+        (Some(b), true) => b.max(peak_eq2),
+        (None, _) => peak_eq2,
+    };
+    let info = DecompositionInfo {
+        components: units.len() as u32,
+        cut_vertices: (units.len() - 1) as u32,
+        sizes: units.iter().map(|u| u.nodes.len()).collect(),
+        family_sizes: solved.plans.iter().map(|p| p.family_len).collect(),
+        kinds: solved.plans.iter().map(|p| p.kind).collect(),
+        cache_hits: solved.hits as u32,
+    };
+    Ok(Plan {
+        chain,
+        kind: PlannerKind::Decomposed,
+        objective: req.objective,
+        budget,
+        overhead,
+        peak_eq2,
+        decomposition: Some(info),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{exact_dp, planner_for};
+    use crate::sim::SimMode;
+    use crate::testutil::chain_graph;
+
+    fn small_cfg() -> DecomposeCfg {
+        DecomposeCfg { node_target: 3, ideal_cap: 4096, chen_cap: 2048 }
+    }
+
+    fn req(budget: BudgetSpec) -> PlanRequest {
+        PlanRequest {
+            planner: PlannerId::Decomposed,
+            budget,
+            objective: Objective::MinOverhead,
+            sim_mode: SimMode::Liveness,
+        }
+    }
+
+    #[test]
+    fn decomposes_and_stitches_a_chain() {
+        let g = chain_graph(&[10; 12]);
+        let ctx = PlanContext::bare(&g, 0);
+        let plan = plan_decomposed(&req(BudgetSpec::MinFeasible), &ctx, small_cfg()).unwrap();
+        let info = plan.decomposition.as_ref().unwrap();
+        assert!(info.components >= 3, "12-node chain at target 3 must split: {info:?}");
+        assert_eq!(info.components, info.cut_vertices + 1);
+        assert_eq!(info.sizes.iter().sum::<u32>(), 12);
+        assert!(info.kinds.iter().all(|k| *k == PlannerKind::ExactDp), "{:?}", info.kinds);
+        assert!(info.family_sizes.iter().all(|&s| s > 0));
+        // The stitched chain revalidates and the reported metrics are
+        // the exact Eq. 1 / Eq. 2 values of the global chain.
+        let c = LowerSetChain::new(&g, plan.chain.lower_sets().to_vec()).unwrap();
+        assert_eq!(plan.overhead, c.overhead(&g));
+        assert_eq!(plan.peak_eq2, c.peak_mem(&g));
+        assert_eq!(plan.budget, plan.peak_eq2);
+        assert_eq!(plan.kind, PlannerKind::Decomposed);
+    }
+
+    #[test]
+    fn matches_exact_overhead_on_chain_at_generous_budget() {
+        let g = chain_graph(&[7, 3, 9, 4, 6, 8, 2, 5, 10, 4, 6, 3]);
+        let b = g.total_mem() * 4;
+        let ctx = PlanContext::bare(&g, 0);
+        let plan = plan_decomposed(&req(BudgetSpec::Bytes(b)), &ctx, small_cfg()).unwrap();
+        let exact = exact_dp(&g, b, Objective::MinOverhead).unwrap();
+        assert_eq!(plan.overhead, exact.overhead, "generous budget: both reach the optimum");
+        assert!(plan.peak_eq2 <= b);
+        assert_eq!(plan.budget, b);
+    }
+
+    #[test]
+    fn ladder_degrades_per_component() {
+        let g = chain_graph(&[10; 12]);
+        let ctx = PlanContext::bare(&g, 0);
+        // A 2-ideal cap cannot hold any unit's family: approx rung.
+        let approx = DecomposeCfg { node_target: 3, ideal_cap: 2, chen_cap: 2048 };
+        let p = plan_decomposed(&req(BudgetSpec::MinFeasible), &ctx, approx).unwrap();
+        let info = p.decomposition.unwrap();
+        assert!(info.kinds.iter().all(|k| *k == PlannerKind::ApproxDp), "{:?}", info.kinds);
+        // Units of 3 nodes overflow a 2-node Chen cap: Chen rung.
+        let chen = DecomposeCfg { node_target: 3, ideal_cap: 4096, chen_cap: 2 };
+        let p = plan_decomposed(&req(BudgetSpec::MinFeasible), &ctx, chen).unwrap();
+        let info = p.decomposition.unwrap();
+        assert!(info.kinds.iter().all(|k| *k == PlannerKind::Chen), "{:?}", info.kinds);
+        assert!(info.family_sizes.iter().all(|&s| s == 0));
+    }
+
+    #[test]
+    fn identical_components_dedupe_and_cache_across_calls() {
+        let g = chain_graph(&[10; 9]);
+        let cache = ComponentCache::new(16);
+        let ctx = PlanContext { components: Some(&cache), ..PlanContext::bare(&g, 0) };
+        let p1 = plan_decomposed(&req(BudgetSpec::MinFeasible), &ctx, small_cfg()).unwrap();
+        let i1 = p1.decomposition.unwrap();
+        assert_eq!(i1.components, 3);
+        assert_eq!(i1.cache_hits, 2, "two duplicate components reuse the first solve");
+        let p2 = plan_decomposed(&req(BudgetSpec::MinFeasible), &ctx, small_cfg()).unwrap();
+        let i2 = p2.decomposition.unwrap();
+        assert_eq!(i2.cache_hits, 3, "second call is served entirely from the cache");
+        assert_eq!(p1.chain.lower_sets(), p2.chain.lower_sets());
+        let s = cache.stats();
+        assert_eq!(s.entries, 1, "three identical components share one entry");
+        assert_eq!(s.hits, 5);
+        assert_eq!(s.misses, 1);
+    }
+
+    #[test]
+    fn cache_evicts_lru_beyond_capacity() {
+        let cache = ComponentCache::new(2);
+        let mk = |n: u32| {
+            Arc::new(ComponentPlan {
+                sets: vec![NodeSet::full(n)],
+                kind: PlannerKind::ExactDp,
+                family_len: 1,
+            })
+        };
+        let key = |x: u64| (GraphFingerprint(x), Objective::MinOverhead, None, false);
+        cache.insert(key(1), mk(1));
+        cache.insert(key(2), mk(2));
+        assert!(cache.lookup(&key(1)).is_some()); // touch 1 ⇒ 2 is LRU
+        cache.insert(key(3), mk(3));
+        assert!(cache.lookup(&key(2)).is_none(), "LRU entry evicted");
+        assert!(cache.lookup(&key(1)).is_some());
+        assert!(cache.lookup(&key(3)).is_some());
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn identical_plans_at_any_thread_count() {
+        let g = chain_graph(&[5, 9, 3, 7, 11, 2, 8, 6, 4, 10, 7, 3, 9, 5]);
+        let p1 = WorkerPool::with_threads(1);
+        let p4 = WorkerPool::with_threads(4);
+        for budget in
+            [BudgetSpec::MinFeasible, BudgetSpec::Bytes(g.total_mem() * 3), BudgetSpec::Frac(0.5)]
+        {
+            let ctx1 = PlanContext { pool: Some(&p1), ..PlanContext::bare(&g, 0) };
+            let ctx4 = PlanContext { pool: Some(&p4), ..PlanContext::bare(&g, 0) };
+            let a = plan_decomposed(&req(budget), &ctx1, small_cfg()).unwrap();
+            let b = plan_decomposed(&req(budget), &ctx4, small_cfg()).unwrap();
+            assert_eq!(a.chain.lower_sets(), b.chain.lower_sets(), "{budget:?}");
+            assert_eq!(a.overhead, b.overhead);
+            assert_eq!(a.peak_eq2, b.peak_eq2);
+            assert_eq!(a.decomposition, b.decomposition);
+        }
+    }
+
+    #[test]
+    fn infeasible_budget_names_the_component() {
+        let g = chain_graph(&[10; 9]);
+        let ctx = PlanContext::bare(&g, 0);
+        let err =
+            plan_decomposed(&req(BudgetSpec::Bytes(5)), &ctx, small_cfg()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("infeasible"), "{msg}");
+        assert!(msg.contains("component"), "{msg}");
+    }
+
+    #[test]
+    fn registered_behind_the_planner_trait() {
+        let g = chain_graph(&[10; 40]);
+        let p = planner_for(PlannerId::Decomposed);
+        assert_eq!(p.id(), PlannerId::Decomposed);
+        let plan = p.plan(&req(BudgetSpec::MinFeasible), &PlanContext::bare(&g, 0)).unwrap();
+        assert_eq!(plan.kind, PlannerKind::Decomposed);
+        let info = plan.decomposition.unwrap();
+        assert_eq!(info.components, 2, "40 nodes at the default 32-node target split once");
+        assert_eq!(info.sizes, vec![32, 8]);
+    }
+}

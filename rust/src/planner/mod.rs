@@ -2,7 +2,7 @@
 //!
 //! The extensible surface is the [`Planner`] **trait**: every in-tree
 //! algorithm family ([`ExactDpPlanner`], [`ApproxDpPlanner`],
-//! [`ChenPlanner`], [`ExhaustivePlanner`]) implements
+//! [`ChenPlanner`], [`ExhaustivePlanner`], [`DecomposedPlanner`]) implements
 //! `plan(&PlanRequest, &PlanContext) -> Result<Plan>` and is addressed by
 //! a typed [`PlannerId`] through the trait-object registry
 //! [`planner_for`]. New families (e.g. re-forwarding divide-and-conquer)
@@ -31,11 +31,13 @@
 //! the paper (the DP optimizes Eq. 2; Table 1 reports simulator numbers).
 
 mod chen;
+mod decomposed;
 mod dfs;
 mod dp;
 mod strategy;
 
-pub use chen::{chen_plan, chen_segmentation, ChenPlan};
+pub use chen::{chen_plan, chen_plan_with, chen_segmentation, chen_segmentation_with, ChenPlan};
+pub use decomposed::{ComponentCache, ComponentCacheStats, DecomposedPlanner, DecompositionInfo};
 pub use dfs::exhaustive_search;
 pub use dp::{DpContext, DpSolution};
 pub use strategy::{singleton_chain, whole_graph_chain, LowerSetChain, SegmentCost};
@@ -43,8 +45,9 @@ pub use strategy::{singleton_chain, whole_graph_chain, LowerSetChain, SegmentCos
 use crate::anyhow::{anyhow, bail, Result};
 use crate::fmt_bytes;
 
-use crate::graph::{enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, Graph};
+use crate::graph::{enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, Graph, NodeSet};
 use crate::sim::{simulate, SimMode, SimOptions};
+use crate::util::pool::WorkerPool;
 
 /// Optimization direction for Algorithm 1's final selection (line 15).
 #[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
@@ -73,6 +76,8 @@ pub enum PlannerKind {
     ApproxDp,
     Chen,
     Exhaustive,
+    /// Divide-and-conquer plan stitched from per-component solves.
+    Decomposed,
     Vanilla,
 }
 
@@ -83,6 +88,7 @@ impl PlannerKind {
             PlannerKind::ApproxDp => "ApproxDP",
             PlannerKind::Chen => "Chen's",
             PlannerKind::Exhaustive => "Exhaustive",
+            PlannerKind::Decomposed => "Decomposed",
             PlannerKind::Vanilla => "Vanilla",
         }
     }
@@ -103,11 +109,20 @@ pub enum PlannerId {
     Chen,
     /// The DFS oracle (§4.1; tiny graphs only).
     Exhaustive,
+    /// Divide-and-conquer: split at gate vertices (biconnected
+    /// decomposition), solve each component through the
+    /// exact→approx→Chen ladder, stitch at the cuts.
+    Decomposed,
 }
 
 impl PlannerId {
-    pub const ALL: [PlannerId; 4] =
-        [PlannerId::ExactDp, PlannerId::ApproxDp, PlannerId::Chen, PlannerId::Exhaustive];
+    pub const ALL: [PlannerId; 5] = [
+        PlannerId::ExactDp,
+        PlannerId::ApproxDp,
+        PlannerId::Chen,
+        PlannerId::Exhaustive,
+        PlannerId::Decomposed,
+    ];
 
     /// Human-readable label, matching [`PlannerKind::label`].
     pub fn label(self) -> &'static str {
@@ -121,17 +136,19 @@ impl PlannerId {
             PlannerId::ApproxDp => "approx",
             PlannerId::Chen => "chen",
             PlannerId::Exhaustive => "exhaustive",
+            PlannerId::Decomposed => "decomposed",
         }
     }
 
-    /// Parse a CLI value (`exact|approx|chen|exhaustive`).
+    /// Parse a CLI value (`exact|approx|chen|exhaustive|decomposed`).
     pub fn parse(s: &str) -> Result<PlannerId> {
         match s.to_ascii_lowercase().as_str() {
             "exact" => Ok(PlannerId::ExactDp),
             "approx" => Ok(PlannerId::ApproxDp),
             "chen" => Ok(PlannerId::Chen),
             "exhaustive" => Ok(PlannerId::Exhaustive),
-            other => bail!("bad planner '{other}' (exact|approx|chen|exhaustive)"),
+            "decomposed" => Ok(PlannerId::Decomposed),
+            other => bail!("bad planner '{other}' (exact|approx|chen|exhaustive|decomposed)"),
         }
     }
 
@@ -143,7 +160,10 @@ impl PlannerId {
         match self {
             PlannerId::ExactDp | PlannerId::Exhaustive => Some(Family::Exact),
             PlannerId::ApproxDp => Some(Family::Approx),
-            PlannerId::Chen => None,
+            // Chen needs no DP context; the decomposed planner builds its
+            // own per-component families (never the whole-graph lattice —
+            // avoiding that is the point).
+            PlannerId::Chen | PlannerId::Decomposed => None,
         }
     }
 
@@ -155,6 +175,7 @@ impl PlannerId {
             PlannerId::ApproxDp => PlannerKind::ApproxDp,
             PlannerId::Chen => PlannerKind::Chen,
             PlannerId::Exhaustive => PlannerKind::Exhaustive,
+            PlannerId::Decomposed => PlannerKind::Decomposed,
         }
     }
 }
@@ -242,9 +263,46 @@ pub struct PlanContext<'a> {
     /// Whether `dp` really holds the full lattice (`false` = degraded to
     /// the pruned family under the enumeration cap).
     pub exact_family: bool,
-    /// Resolved activation budget in bytes (0 for planners that ignore
-    /// budgets, i.e. Chen's sweep).
+    /// Resolved activation budget in bytes (0 for planners that resolve
+    /// budgets themselves: Chen's sweep, the decomposed planner).
     pub budget: u64,
+    /// Worker pool the decomposed planner shards per-component work
+    /// across (`None` = use the process-global pool).
+    pub pool: Option<&'a WorkerPool>,
+    /// Per-component plan cache, keyed by subgraph fingerprint (`None`
+    /// = plan without component caching).
+    pub components: Option<&'a ComponentCache>,
+    /// Precomputed articulation points of the skeleton, as a set (`None`
+    /// = planners that need them compute them). [`crate::session::PlanSession`]
+    /// caches this so Chen's budget sweep and the decomposed planner
+    /// share one computation.
+    pub arts: Option<&'a NodeSet>,
+}
+
+impl<'a> PlanContext<'a> {
+    /// A minimal context: just the graph and a resolved budget; no DP
+    /// context, pool, component cache, or cached articulation set.
+    pub fn bare(graph: &'a Graph, budget: u64) -> PlanContext<'a> {
+        PlanContext {
+            graph,
+            dp: None,
+            exact_family: false,
+            budget,
+            pool: None,
+            components: None,
+            arts: None,
+        }
+    }
+
+    /// The same context with a DP family attached.
+    pub fn with_dp(
+        graph: &'a Graph,
+        dp: &'a DpContext,
+        exact_family: bool,
+        budget: u64,
+    ) -> PlanContext<'a> {
+        PlanContext { dp: Some(dp), exact_family, ..PlanContext::bare(graph, budget) }
+    }
 }
 
 /// A planning algorithm family, addressable as a trait object.
@@ -265,6 +323,7 @@ pub fn planner_for(id: PlannerId) -> &'static dyn Planner {
         PlannerId::ApproxDp => &ApproxDpPlanner,
         PlannerId::Chen => &ChenPlanner,
         PlannerId::Exhaustive => &ExhaustivePlanner,
+        PlannerId::Decomposed => &DecomposedPlanner,
     }
 }
 
@@ -328,7 +387,13 @@ impl Planner for ChenPlanner {
     fn plan(&self, req: &PlanRequest, ctx: &PlanContext<'_>) -> Result<Plan> {
         let g = ctx.graph;
         let opts = SimOptions { mode: req.sim_mode, include_params: true };
-        let p = chen_plan(g, |c| simulate(g, c, opts).peak_total)?;
+        let score = |c: &LowerSetChain| simulate(g, c, opts).peak_total;
+        // Reuse the caller's cached articulation set when present (the
+        // budget sweep used to recompute it once per candidate budget).
+        let p = match ctx.arts {
+            Some(arts) => chen_plan_with(g, arts, score)?,
+            None => chen_plan(g, score)?,
+        };
         let overhead = p.chain.overhead(g);
         let peak_eq2 = p.chain.peak_mem(g);
         Ok(Plan {
@@ -338,6 +403,7 @@ impl Planner for ChenPlanner {
             budget: p.segment_budget,
             overhead,
             peak_eq2,
+            decomposition: None,
         })
     }
 }
@@ -365,6 +431,7 @@ impl Planner for ExhaustivePlanner {
             budget: ctx.budget,
             overhead,
             peak_eq2,
+            decomposition: None,
         })
     }
 }
@@ -382,6 +449,9 @@ pub struct Plan {
     pub overhead: u64,
     /// Analytic peak memory (Eq. 2), activations only, bytes.
     pub peak_eq2: u64,
+    /// Per-component statistics when the plan came from the decomposed
+    /// planner (`None` for whole-graph planners).
+    pub decomposition: Option<DecompositionInfo>,
 }
 
 impl Plan {
@@ -393,7 +463,15 @@ impl Plan {
         budget: u64,
     ) -> Plan {
         let peak_eq2 = sol.chain.peak_mem(g);
-        Plan { chain: sol.chain, kind, objective, budget, overhead: sol.overhead, peak_eq2 }
+        Plan {
+            chain: sol.chain,
+            kind,
+            objective,
+            budget,
+            overhead: sol.overhead,
+            peak_eq2,
+            decomposition: None,
+        }
     }
 }
 
@@ -405,22 +483,18 @@ impl Plan {
 /// so in the returned plan's `kind`).
 pub fn exact_dp(g: &Graph, budget: u64, objective: Objective) -> Result<Plan> {
     let (ctx, exact) = exact_context(g);
-    let req = PlanRequest { budget: BudgetSpec::Bytes(budget), ..PlanRequest::new(PlannerId::ExactDp, objective) };
-    ExactDpPlanner.plan(
-        &req,
-        &PlanContext { graph: g, dp: Some(&ctx), exact_family: exact, budget },
-    )
+    let base = PlanRequest::new(PlannerId::ExactDp, objective);
+    let req = PlanRequest { budget: BudgetSpec::Bytes(budget), ..base };
+    ExactDpPlanner.plan(&req, &PlanContext::with_dp(g, &ctx, exact, budget))
 }
 
 /// Approximate DP (§4.3) under memory budget `budget`. Thin shim over
 /// [`ApproxDpPlanner`].
 pub fn approx_dp(g: &Graph, budget: u64, objective: Objective) -> Result<Plan> {
     let ctx = DpContext::new(g, pruned_lower_sets(g));
-    let req = PlanRequest { budget: BudgetSpec::Bytes(budget), ..PlanRequest::new(PlannerId::ApproxDp, objective) };
-    ApproxDpPlanner.plan(
-        &req,
-        &PlanContext { graph: g, dp: Some(&ctx), exact_family: false, budget },
-    )
+    let base = PlanRequest::new(PlannerId::ApproxDp, objective);
+    let req = PlanRequest { budget: BudgetSpec::Bytes(budget), ..base };
+    ApproxDpPlanner.plan(&req, &PlanContext::with_dp(g, &ctx, false, budget))
 }
 
 /// Family selector for [`min_feasible_budget`] / [`plan_at_min_budget`].

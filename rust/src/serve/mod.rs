@@ -70,6 +70,10 @@ pub struct ServeConfig {
     pub read_timeout: Duration,
     /// Capacity of the shared compiled-plan LRU.
     pub cache_capacity: usize,
+    /// Optional byte cap on the shared compiled-plan LRU (`--cache-bytes`):
+    /// approximate resident bytes, evicting least-recently-used first.
+    /// `None` = entry-count bound only.
+    pub cache_bytes: Option<u64>,
     /// Maximum live sessions in the registry (LRU beyond that).
     pub max_sessions: usize,
     /// Per-request caps enforced by the [`Router`].
@@ -85,6 +89,7 @@ impl Default for ServeConfig {
             max_request_bytes: 1 << 20,
             read_timeout: Duration::from_secs(30),
             cache_capacity: 256,
+            cache_bytes: None,
             max_sessions: 64,
             router: RouterConfig::default(),
         }
@@ -150,7 +155,7 @@ impl Server {
             .with_context(|| format!("binding {}", cfg.addr))?;
         listener.set_nonblocking(true).context("setting listener nonblocking")?;
         let local_addr = listener.local_addr().context("reading bound address")?;
-        let cache = PlanCache::shared(cfg.cache_capacity.max(1));
+        let cache = PlanCache::shared_with_bytes(cfg.cache_capacity.max(1), cfg.cache_bytes);
         let registry = SessionRegistry::new(cfg.max_sessions.max(1), cache);
         let metrics = Arc::new(ServeMetrics::new());
         let router = Arc::new(Router::new(registry, metrics.clone(), cfg.router));
@@ -446,6 +451,8 @@ FLAGS:
   --max-request-bytes N   request line size cap (default 1048576)
   --read-timeout-ms N     per-connection idle/stall timeout (default 30000)
   --cache-capacity N      shared compiled-plan LRU capacity (default 256)
+  --cache-bytes BYTES     byte cap on the shared plan LRU, e.g. 256MiB
+                          (default: unbounded; entries evict LRU-first)
   --max-sessions N        live sessions kept in the registry (default 64)
   --max-budget BYTES      largest budget a request may name (default 64GiB)
   --max-graph-nodes N     largest accepted graph (default 4096)
@@ -474,6 +481,7 @@ pub fn cmd_serve(args: &[String]) -> Result<()> {
             "--max-request-bytes" => cfg.max_request_bytes = parse_num(a, val()?)?,
             "--read-timeout-ms" => cfg.read_timeout = Duration::from_millis(parse_num(a, val()?)?),
             "--cache-capacity" => cfg.cache_capacity = parse_num(a, val()?)?,
+            "--cache-bytes" => cfg.cache_bytes = Some(crate::parse_bytes(val()?)?),
             "--max-sessions" => cfg.max_sessions = parse_num(a, val()?)?,
             "--max-budget" => cfg.router.max_budget_bytes = crate::parse_bytes(val()?)?,
             "--max-graph-nodes" => cfg.router.max_graph_nodes = parse_num(a, val()?)?,

@@ -202,7 +202,7 @@ impl Router {
         let budget = self.budget_spec(req)?;
         let r = PlanRequest { planner, budget, objective, sim_mode };
         let (cp, cache_hit) = session.plan_tracked(&r).map_err(|e| reject("plan-failed", e))?;
-        Ok(ok_reply("plan")
+        let mut reply = ok_reply("plan")
             .set("fingerprint", cp.fingerprint.to_string().into())
             .set("planner", cp.plan.kind.label().into())
             .set("objective", objective.label().into())
@@ -213,7 +213,17 @@ impl Router {
             .set("predicted_peak", cp.program.predicted_peak().into())
             .set("measured_peak", cp.report.peak_bytes.into())
             .set("peak_total", cp.report.peak_total.into())
-            .set("cache_hit", cache_hit.into()))
+            .set("cache_hit", cache_hit.into());
+        if let Some(info) = &cp.plan.decomposition {
+            reply = reply.set(
+                "decomposition",
+                Json::obj()
+                    .set("components", info.components.into())
+                    .set("cut_vertices", info.cut_vertices.into())
+                    .set("cache_hits", info.cache_hits.into()),
+            );
+        }
+        Ok(reply)
     }
 
     /// A `plan` request addresses its graph by `fingerprint` (from a
@@ -396,6 +406,7 @@ impl Router {
 
     fn stats(&self) -> Json {
         let cs = self.registry.cache().stats();
+        let comp = self.registry.component_cache().stats();
         let agg = self.registry.aggregate_stats();
         let m = &*self.metrics;
         let latency = match m.latency.percentiles() {
@@ -423,7 +434,15 @@ impl Router {
                     .set("misses", cs.misses.into())
                     .set("evictions", cs.evictions.into())
                     .set("entries", cs.entries.into())
+                    .set("bytes", cs.bytes.into())
                     .set("hit_rate", cs.hit_rate().into()),
+            )
+            .set(
+                "component_cache",
+                Json::obj()
+                    .set("entries", comp.entries.into())
+                    .set("hits", comp.hits.into())
+                    .set("misses", comp.misses.into()),
             )
             .set("session_totals", session_json(&agg))
             .set("latency_us", latency)
@@ -548,14 +567,29 @@ mod tests {
         let reply = ok(&p);
         assert_eq!(reply.get("objective").as_str(), Some("mc"));
         assert!(reply.get("measured_peak").as_u64().unwrap() > 0);
+        assert_eq!(reply.get("decomposition"), &Json::Null, "whole-graph plans carry none");
+
+        // A decomposed plan reports its per-component shape.
+        let d = rt.route_line(r#"{"cmd":"plan","network":"unet","planner":"decomposed"}"#);
+        let dreply = ok(&d);
+        assert_eq!(dreply.get("planner").as_str(), Some("Decomposed"));
+        let info = dreply.get("decomposition");
+        assert!(info.get("components").as_u64().unwrap() >= 1);
+        assert!(info.get("cache_hits").as_u64().is_some());
 
         let s = rt.route_line(r#"{"cmd":"stats"}"#);
         let reply = ok(&s);
         assert_eq!(reply.get("sessions").as_u64(), Some(1));
         let cache = reply.get("cache");
-        assert_eq!(cache.get("misses").as_u64(), Some(1));
-        assert_eq!(cache.get("entries").as_u64(), Some(1));
+        assert_eq!(cache.get("misses").as_u64(), Some(2));
+        assert_eq!(cache.get("entries").as_u64(), Some(2));
+        assert!(cache.get("bytes").as_u64().unwrap() > 0);
         assert!(cache.get("hit_rate").as_f64().is_some());
+        let comp = reply.get("component_cache");
+        assert!(comp.get("entries").as_u64().unwrap() >= 1);
+        let totals = reply.get("session_totals");
+        assert!(totals.get("components").as_u64().unwrap() >= 1);
+        assert!(totals.get("component_cache_hits").as_u64().is_some());
         // The router itself records no latency (the connection loop
         // does), so the ring is empty here.
         assert_eq!(reply.get("latency_us"), &Json::Null);

@@ -27,31 +27,44 @@
 //! program against a permuted labeling would break the
 //! observed-equals-predicted accounting.
 //!
-//! [`SessionStats`] (`hits` / `misses` / `families_built`) is the
-//! observable evidence of the amortization, reported by `repro train
-//! --stats` and the JSON reports next to the allocator pool counters.
+//! The decomposed planner adds a second amortization level: its
+//! per-component plans live in a [`ComponentCache`] keyed by *subgraph*
+//! fingerprint, so two different graphs sharing a tower (or one graph
+//! re-planned after editing a single branch) rebuild only the components
+//! that actually changed. Sessions own a private component cache by
+//! default; [`SessionRegistry`] hands every session one shared cache.
+//!
+//! [`SessionStats`] (`hits` / `misses` / `families_built` /
+//! `components` / `component_cache_hits`) is the observable evidence of
+//! the amortization, reported by `repro train --stats` and the JSON
+//! reports next to the allocator pool counters.
 
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::anyhow::{bail, Result};
-use crate::exec::OpProgram;
+use crate::exec::{OpProgram, Step};
 use crate::fmt_bytes;
 use crate::graph::{
-    enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, Graph, GraphFingerprint,
+    articulation_points, enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, Graph,
+    GraphFingerprint, NodeSet,
 };
 use crate::planner::{
-    planner_for, BudgetSpec, DpContext, Family, Plan, PlanContext, PlanRequest,
+    planner_for, BudgetSpec, ComponentCache, DpContext, Family, Plan, PlanContext,
+    PlanRequest, PlannerId,
 };
 use crate::sim::{
-    apply_liveness, canonical_trace, measure, vanilla_trace, SimMode, SimOptions, SimReport,
-    Trace,
+    apply_liveness, canonical_trace, measure, vanilla_trace, Event, SimMode, SimOptions,
+    SimReport, Trace,
 };
 use crate::util::pool::WorkerPool;
 
 /// Default capacity of a session's private [`PlanCache`].
 pub const DEFAULT_CACHE_CAPACITY: usize = 128;
+
+/// Default capacity (entries) of a session's private [`ComponentCache`].
+pub const DEFAULT_COMPONENT_CACHE_CAPACITY: usize = 256;
 
 /// Counters describing how much work a session amortized.
 #[derive(Clone, Copy, Default, PartialEq, Eq, Debug)]
@@ -63,6 +76,12 @@ pub struct SessionStats {
     /// Lower-set families (and their DP contexts) actually constructed —
     /// at most one per [`Family`] per session, however many requests ran.
     pub families_built: u64,
+    /// Per-component subproblems the decomposed planner stitched across
+    /// this session's cache misses (0 unless `--planner decomposed` ran).
+    pub components: u64,
+    /// Of those components, how many were served from the
+    /// [`ComponentCache`] instead of being solved from scratch.
+    pub component_cache_hits: u64,
 }
 
 /// Wall-clock the session spent on planner work — kept *separate* from
@@ -101,14 +120,40 @@ pub struct CompiledPlan {
     pub program: OpProgram,
 }
 
+impl CompiledPlan {
+    /// Approximate resident size of this compiled plan in bytes — the
+    /// accounting unit of the cache's `--cache-bytes` cap. Counts the
+    /// bulk owned storage (chain bitsets, trace events, program steps);
+    /// deliberately ignores small fixed-size headers, so it is an
+    /// estimate, not an allocator-exact figure. Deterministic for a
+    /// given plan, which is all the eviction policy needs.
+    pub fn approx_bytes(&self) -> u64 {
+        let header = std::mem::size_of::<CompiledPlan>() as u64;
+        let chain: u64 = self
+            .plan
+            .chain
+            .lower_sets()
+            .iter()
+            .map(|s| (s.words().len() * std::mem::size_of::<u64>()) as u64)
+            .sum();
+        let events = (self.trace.events.len() * std::mem::size_of::<Event>()) as u64;
+        let steps = (self.program.steps.len() * std::mem::size_of::<Step>()) as u64;
+        header + chain + events + steps
+    }
+}
+
 struct CacheEntry {
     value: Arc<CompiledPlan>,
     last_used: u64,
+    /// Memoized [`CompiledPlan::approx_bytes`] (so eviction can subtract
+    /// without re-walking the plan).
+    bytes: u64,
 }
 
 struct CacheInner {
     map: HashMap<(GraphFingerprint, PlanRequest), CacheEntry>,
     tick: u64,
+    bytes: u64,
     hits: u64,
     misses: u64,
     evictions: u64,
@@ -123,10 +168,13 @@ pub struct CacheStats {
     pub hits: u64,
     /// Lookups that found nothing (the caller compiled and inserted).
     pub misses: u64,
-    /// Entries evicted by the LRU policy.
+    /// Entries evicted by the LRU policy (entry-count or byte cap).
     pub evictions: u64,
     /// Live entries at snapshot time.
     pub entries: usize,
+    /// Approximate resident bytes of the live entries
+    /// (Σ [`CompiledPlan::approx_bytes`]).
+    pub bytes: u64,
 }
 
 impl CacheStats {
@@ -146,20 +194,38 @@ impl CacheStats {
 /// default; share one across sessions with [`PlanSession::with_cache`]
 /// to serve repeated requests for the same (or isomorphic) graph from
 /// different entry points.
+///
+/// Bounded two ways: by entry count (`capacity`) and, optionally, by
+/// approximate resident bytes (`max_bytes`, the `--cache-bytes` flag) —
+/// compiled plans for large graphs carry their whole trace and program,
+/// so an entry-count cap alone lets a few thousand-node plans dwarf a
+/// hundred toy ones. Both caps evict least-recently-used first.
 pub struct PlanCache {
     capacity: usize,
+    max_bytes: Option<u64>,
     inner: Mutex<CacheInner>,
 }
 
 impl PlanCache {
-    /// A cache holding at most `capacity` compiled plans (≥ 1).
+    /// A cache holding at most `capacity` compiled plans (≥ 1), with no
+    /// byte cap.
     pub fn new(capacity: usize) -> PlanCache {
+        PlanCache::with_bytes(capacity, None)
+    }
+
+    /// A cache bounded by `capacity` entries *and* (when `Some`) by
+    /// `max_bytes` approximate resident bytes. A single entry larger
+    /// than the byte cap is still admitted (alone) — refusing it would
+    /// make large graphs uncacheable rather than merely lonely.
+    pub fn with_bytes(capacity: usize, max_bytes: Option<u64>) -> PlanCache {
         assert!(capacity >= 1, "cache capacity must be positive");
         PlanCache {
             capacity,
+            max_bytes,
             inner: Mutex::new(CacheInner {
                 map: HashMap::new(),
                 tick: 0,
+                bytes: 0,
                 hits: 0,
                 misses: 0,
                 evictions: 0,
@@ -167,9 +233,14 @@ impl PlanCache {
         }
     }
 
-    /// Shared handle with the given capacity.
+    /// Shared handle with the given capacity (no byte cap).
     pub fn shared(capacity: usize) -> Arc<PlanCache> {
         Arc::new(PlanCache::new(capacity))
+    }
+
+    /// Shared handle bounded by entries and (optionally) bytes.
+    pub fn shared_with_bytes(capacity: usize, max_bytes: Option<u64>) -> Arc<PlanCache> {
+        Arc::new(PlanCache::with_bytes(capacity, max_bytes))
     }
 
     /// Number of cached plans.
@@ -189,6 +260,7 @@ impl PlanCache {
             misses: inner.misses,
             evictions: inner.evictions,
             entries: inner.map.len(),
+            bytes: inner.bytes,
         }
     }
 
@@ -224,17 +296,28 @@ impl PlanCache {
             existing.last_used = tick;
             return existing.value.clone();
         }
-        if inner.map.len() >= self.capacity {
-            // Evict the least-recently-used entry (linear scan: the cache
-            // is small and insertion is the cold path by construction).
-            if let Some(evict) =
+        let bytes = value.approx_bytes();
+        // Evict least-recently-used entries (linear scan: the cache is
+        // small and insertion is the cold path by construction) until
+        // both the entry cap and the byte cap admit the newcomer. The
+        // byte loop stops at an empty map, so an oversized single entry
+        // is admitted alone rather than rejected.
+        while inner.map.len() >= self.capacity
+            || (!inner.map.is_empty()
+                && self.max_bytes.is_some_and(|cap| inner.bytes + bytes > cap))
+        {
+            let Some(evict) =
                 inner.map.iter().min_by_key(|(_, e)| e.last_used).map(|(k, _)| *k)
-            {
-                inner.map.remove(&evict);
+            else {
+                break;
+            };
+            if let Some(e) = inner.map.remove(&evict) {
+                inner.bytes -= e.bytes;
                 inner.evictions += 1;
             }
         }
-        inner.map.insert(key, CacheEntry { value: value.clone(), last_used: tick });
+        inner.map.insert(key, CacheEntry { value: value.clone(), last_used: tick, bytes });
+        inner.bytes += bytes;
         value
     }
 }
@@ -252,6 +335,10 @@ struct Inner {
     exact: Option<FamilySlot>,
     approx: Option<FamilySlot>,
     vanilla: HashMap<SimMode, Arc<OpProgram>>,
+    /// Lazily computed articulation set of the skeleton, shared by the
+    /// Chen budget sweep and the decomposed planner (one Tarjan pass per
+    /// session, however many requests need it).
+    arts: Option<Arc<NodeSet>>,
     stats: SessionStats,
     timing: SessionTiming,
 }
@@ -267,6 +354,7 @@ pub struct PlanSession {
     fingerprint: GraphFingerprint,
     limit: EnumerationLimit,
     cache: Arc<PlanCache>,
+    components: Arc<ComponentCache>,
     pool: Arc<WorkerPool>,
     inner: Mutex<Inner>,
 }
@@ -310,9 +398,20 @@ impl PlanSession {
             fingerprint,
             limit,
             cache,
+            components: Arc::new(ComponentCache::new(DEFAULT_COMPONENT_CACHE_CAPACITY)),
             pool,
             inner: Mutex::new(Inner::default()),
         }
+    }
+
+    /// Replace the session's private [`ComponentCache`] with a shared
+    /// one (builder-style, applied at construction). Component-cache
+    /// keys carry the *subgraph* fingerprint, so sessions over different
+    /// graphs that share a tower reuse each other's per-component plans
+    /// — [`SessionRegistry`] wires every session it creates this way.
+    pub fn share_components(mut self, components: Arc<ComponentCache>) -> PlanSession {
+        self.components = components;
+        self
     }
 
     /// The graph this session plans.
@@ -333,6 +432,26 @@ impl PlanSession {
     /// The cache this session serves from.
     pub fn cache(&self) -> &Arc<PlanCache> {
         &self.cache
+    }
+
+    /// The per-component plan cache the decomposed planner writes into.
+    pub fn component_cache(&self) -> &Arc<ComponentCache> {
+        &self.components
+    }
+
+    /// The articulation points of the graph's undirected skeleton, as a
+    /// set — computed once (Tarjan) and cached; the Chen sweep and the
+    /// decomposed planner both plan against it.
+    pub fn articulation_set(&self) -> Arc<NodeSet> {
+        let mut inner = self.inner.lock().unwrap();
+        if inner.arts.is_none() {
+            let mut s = NodeSet::empty(self.graph.len());
+            for v in articulation_points(&self.graph) {
+                s.insert(v);
+            }
+            inner.arts = Some(Arc::new(s));
+        }
+        inner.arts.as_ref().unwrap().clone()
     }
 
     /// Snapshot of the amortization counters.
@@ -468,10 +587,27 @@ impl PlanSession {
             }
             None => (None, false, 0),
         };
+        let arts = match req.planner {
+            PlannerId::Chen | PlannerId::Decomposed => Some(self.articulation_set()),
+            _ => None,
+        };
         let plan = planner_for(req.planner).plan(
             req,
-            &PlanContext { graph: g, dp: dp.as_deref(), exact_family, budget },
+            &PlanContext {
+                graph: g,
+                dp: dp.as_deref(),
+                exact_family,
+                budget,
+                pool: Some(&self.pool),
+                components: Some(&self.components),
+                arts: arts.as_deref(),
+            },
         )?;
+        if let Some(info) = &plan.decomposition {
+            let mut inner = self.inner.lock().unwrap();
+            inner.stats.components += info.components as u64;
+            inner.stats.component_cache_hits += info.cache_hits as u64;
+        }
         // One trace drives everything downstream: the simulator report,
         // the strict-ablation peak, and the executable program all view
         // the same event stream, so "observed == predicted" stays an
@@ -529,6 +665,7 @@ pub struct SessionRegistry {
     capacity: usize,
     limit: EnumerationLimit,
     cache: Arc<PlanCache>,
+    components: Arc<ComponentCache>,
     inner: Mutex<RegistryInner>,
 }
 
@@ -551,6 +688,7 @@ impl SessionRegistry {
             capacity,
             limit,
             cache,
+            components: Arc::new(ComponentCache::new(DEFAULT_COMPONENT_CACHE_CAPACITY)),
             inner: Mutex::new(RegistryInner { map: HashMap::new(), tick: 0 }),
         }
     }
@@ -559,6 +697,13 @@ impl SessionRegistry {
     /// from.
     pub fn cache(&self) -> &Arc<PlanCache> {
         &self.cache
+    }
+
+    /// The shared per-component plan cache every registered session's
+    /// decomposed planner writes into — keyed by subgraph fingerprint,
+    /// so distinct clients' models that share a tower share its plan.
+    pub fn component_cache(&self) -> &Arc<ComponentCache> {
+        &self.components
     }
 
     /// Number of live sessions.
@@ -604,8 +749,10 @@ impl SessionRegistry {
                 inner.map.remove(&evict);
             }
         }
-        let session =
-            Arc::new(PlanSession::with_cache(graph, self.limit, self.cache.clone()));
+        let session = Arc::new(
+            PlanSession::with_cache(graph, self.limit, self.cache.clone())
+                .share_components(self.components.clone()),
+        );
         inner.map.insert(
             fingerprint,
             RegistryEntry { session: session.clone(), last_used: tick },
@@ -624,6 +771,8 @@ impl SessionRegistry {
             total.hits += s.hits;
             total.misses += s.misses;
             total.families_built += s.families_built;
+            total.components += s.components;
+            total.component_cache_hits += s.component_cache_hits;
         }
         total
     }
@@ -675,7 +824,78 @@ mod tests {
         let a = s.plan(&req()).unwrap();
         let b = s.plan(&req()).unwrap();
         assert!(Arc::ptr_eq(&a, &b));
-        assert_eq!(s.stats(), SessionStats { hits: 1, misses: 1, families_built: 1 });
+        assert_eq!(
+            s.stats(),
+            SessionStats { hits: 1, misses: 1, families_built: 1, ..SessionStats::default() }
+        );
+    }
+
+    #[test]
+    fn byte_cap_evicts_by_resident_size() {
+        // A 1-byte cap forces every insert to evict whatever else lives
+        // in the cache (oversized entries are admitted alone), while the
+        // entry cap alone would have kept all three.
+        let cache = PlanCache::shared_with_bytes(8, Some(1));
+        let s = session_on(diamond(), &cache);
+        let min_b = s.min_feasible_budget(Family::Exact);
+        for delta in 0..3u64 {
+            let r = PlanRequest { budget: BudgetSpec::Bytes(min_b + delta), ..req() };
+            let p = s.plan(&r).unwrap();
+            assert!(p.approx_bytes() > 0);
+            assert_eq!(cache.len(), 1, "byte cap admits at most one oversized entry");
+        }
+        let cs = cache.stats();
+        assert_eq!(cs.entries, 1);
+        assert_eq!(cs.evictions, 2);
+        assert!(cs.bytes > 1, "the lone survivor's bytes are accounted");
+
+        // A generous byte cap changes nothing relative to entry-only LRU.
+        let roomy = PlanCache::shared_with_bytes(8, Some(1 << 30));
+        let s2 = session_on(diamond(), &roomy);
+        let mut expect_bytes = 0;
+        for delta in 0..3u64 {
+            let r = PlanRequest { budget: BudgetSpec::Bytes(min_b + delta), ..req() };
+            expect_bytes += s2.plan(&r).unwrap().approx_bytes();
+        }
+        let cs2 = roomy.stats();
+        assert_eq!(cs2.entries, 3);
+        assert_eq!(cs2.evictions, 0);
+        assert_eq!(cs2.bytes, expect_bytes, "stats.bytes = Σ approx_bytes of live entries");
+    }
+
+    #[test]
+    fn component_cache_shared_across_sessions_reuses_towers() {
+        // Two different graphs — uniform chains of 40 and 48 nodes —
+        // decompose into 32-node units whose leading tower is
+        // structurally identical. With a shared ComponentCache the
+        // second session reuses the first's solved tower.
+        let comp = Arc::new(ComponentCache::new(64));
+        let mk = |n: usize| {
+            PlanSession::with_cache(
+                chain_graph(&vec![8u64; n]),
+                EnumerationLimit::default(),
+                PlanCache::shared(DEFAULT_CACHE_CAPACITY),
+            )
+            .share_components(comp.clone())
+        };
+        let (a, b) = (mk(40), mk(48));
+        let r = PlanRequest::new(PlannerId::Decomposed, Objective::MinOverhead);
+        let pa = a.plan(&r).unwrap();
+        assert_eq!(a.stats().components, 2, "40 nodes coalesce into [32, 8]");
+        assert_eq!(a.stats().component_cache_hits, 0, "cold cache");
+        let pb = b.plan(&r).unwrap();
+        assert!(pb.plan.decomposition.is_some());
+        assert_eq!(b.stats().components, 2, "48 nodes coalesce into [32, 16]");
+        assert_eq!(b.stats().component_cache_hits, 1, "the 32-node tower is shared");
+        let cs = comp.stats();
+        assert_eq!(cs.entries, 3, "32-, 8- and 16-node units");
+        assert_eq!((cs.hits, cs.misses), (1, 3));
+        // A repeated request is a compiled-plan cache hit: no new
+        // component work, counters unchanged.
+        let pa2 = a.plan(&r).unwrap();
+        assert!(Arc::ptr_eq(&pa, &pa2));
+        assert_eq!(a.stats().components, 2);
+        assert_eq!(comp.stats().hits, 1);
     }
 
     #[test]

@@ -28,18 +28,30 @@
 //!    which never exceeds the no-liveness peak, which never exceeds the
 //!    vanilla peak — for every planner family × random DAGs — while the
 //!    gradients stay bit-identical to vanilla.
+//! 6. **Decomposition is invisible to correctness.** Stitched
+//!    decomposed plans on random block–cut DAGs behave like any other
+//!    planner's output (bit-exact gradients, observed == predicted ≤
+//!    vanilla peak), match whole-graph exact DP where the lattice is
+//!    small enough to cross-check, and come out identical — chains,
+//!    decomposition reports, and session counters — at any worker
+//!    thread count.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use recompute::coordinator::train::{bits_equal, grad_maps_equal, train_zoo_model, BudgetSpec};
 use recompute::exec::{DagTask, DagTrainer, GradMap, OpProgram, StepReport, TrainConfig};
+use recompute::graph::{EnumerationLimit, GraphBuilder, NodeId, OpKind};
 use recompute::models::executable::{distinct_act_sizes, recost, recost_profiled};
 use recompute::planner::{
-    chen_plan, exhaustive_search, plan_at_min_budget, Family, LowerSetChain, Objective,
+    chen_plan, exact_dp, exhaustive_search, plan_at_min_budget, Family, LowerSetChain, Objective,
+    PlanRequest, PlannerId,
 };
 use recompute::runtime::{Backend, HostTensor, NativeBackend};
+use recompute::session::{PlanCache, PlanSession};
 use recompute::sim::{canonical_trace, measure, SimMode, SimOptions};
 use recompute::testutil::{chain_graph, diamond, random_dag};
+use recompute::util::pool::WorkerPool;
 use recompute::util::rng::Pcg32;
 use recompute::Graph;
 
@@ -401,4 +413,156 @@ fn chain_schedule_error_is_actionable_for_zoo_graphs() {
     let msg = ChainSchedule::from_chain(&g, &plan.chain).unwrap_err().to_string();
     assert!(msg.contains("fan-in"), "degree in message: {msg}");
     assert!(msg.contains("DAG executor"), "remediation in message: {msg}");
+}
+
+/// Random block–cut DAG: `blocks` stacked units, each fanning a random
+/// number of parallel chains out of the previous merge and joining them
+/// at a fresh merge node. Every merge is an articulation-point gate, so
+/// the decomposed planner gets real components to split and stitch.
+fn random_block_dag(rng: &mut Pcg32, blocks: u32) -> Graph {
+    let mut b = GraphBuilder::new("blockcut", 1);
+    let mut prev = b.add_raw("in", OpKind::Other, u64::from(rng.range(1, 8)), 1, &[]);
+    for blk in 0..blocks {
+        let branches = rng.range(2, 4);
+        let len = rng.range(3, 6);
+        let mut tails: Vec<NodeId> = Vec::new();
+        for br in 0..branches {
+            let mut cur = prev;
+            for i in 0..len {
+                let name = format!("b{blk}/c{br}/n{i}");
+                cur = b.add_raw(name, OpKind::Other, u64::from(rng.range(1, 16)), 1, &[cur]);
+            }
+            tails.push(cur);
+        }
+        let merge_mem = u64::from(rng.range(1, 8));
+        prev = b.add_raw(format!("b{blk}/merge"), OpKind::Other, merge_mem, 1, &tails);
+    }
+    b.build()
+}
+
+#[test]
+fn decomposed_plans_hold_invariants_on_random_block_cut_dags() {
+    // The decomposed planner is a *planner*, not a new executor: its
+    // stitched chains must satisfy every invariant the other families
+    // do. The generated graphs exceed the 32-node coalescing target, so
+    // every plan here really is stitched across ≥ 2 components.
+    let mut rng = Pcg32::seeded(0xb10c);
+    for case in 0..4u32 {
+        let blocks = rng.range(5, 8);
+        let base = random_block_dag(&mut rng, blocks);
+        let g = recost(&base, BATCH, WIDTH);
+        let (x, targets) = batch_xy(&g, &mut rng);
+
+        let vanilla_prog = OpProgram::vanilla(&g, SimMode::Strict).unwrap();
+        let rv = run_one(&g, &vanilla_prog, &x, &targets);
+        let base_grads = rv.grads.as_ref().unwrap();
+
+        let session = PlanSession::new(g.clone());
+        let cp = session
+            .plan(&PlanRequest::new(PlannerId::Decomposed, Objective::MinOverhead))
+            .unwrap();
+        let info = cp.plan.decomposition.as_ref().unwrap();
+        assert!(info.components >= 2, "case {case}: {} nodes must split: {info:?}", g.len());
+
+        let label = format!("decomposed case {case}");
+        let r = run_one(&g, &cp.program, &x, &targets);
+        assert_trajectory_matches(&label, &g, &cp.program, &r);
+        assert_eq!(r.observed_peak, cp.report.peak_bytes, "[{label}] observed == predicted");
+        assert!(
+            r.observed_peak <= rv.observed_peak,
+            "[{label}] stitched peak {} must not exceed vanilla {}",
+            r.observed_peak,
+            rv.observed_peak
+        );
+        assert_eq!(rv.loss.to_bits(), r.loss.to_bits(), "[{label}] loss diverged");
+        assert_grads_bitwise(&label, case, base_grads, r.grads.as_ref().unwrap());
+    }
+}
+
+#[test]
+fn decomposed_matches_whole_graph_exact_dp_where_crosscheckable() {
+    let mut rng = Pcg32::seeded(0xdec0);
+    // (a) Below the coalescing target the planner collapses to a single
+    // exact-DP component — the whole-graph optimum, bit for bit, at the
+    // same minimal feasible budget and for both objectives.
+    for case in 0..6u32 {
+        let n = rng.range(6, 12);
+        let base = random_dag(&mut rng, n);
+        let session = PlanSession::new(base.clone());
+        for obj in [Objective::MinOverhead, Objective::MaxOverhead] {
+            let cp = session.plan(&PlanRequest::new(PlannerId::Decomposed, obj)).unwrap();
+            let info = cp.plan.decomposition.as_ref().unwrap();
+            assert_eq!(info.components, 1, "case {case}: {n} nodes stay one unit");
+            let exact = plan_at_min_budget(&base, Family::Exact, obj).unwrap();
+            assert_eq!(cp.plan.overhead, exact.overhead, "case {case} {obj:?}: overhead");
+            assert_eq!(cp.plan.budget, exact.budget, "case {case} {obj:?}: budget");
+        }
+    }
+    // (b) Multi-component chains: at a generous budget the stitched
+    // plan reaches the whole-graph optimum, and at its own realized
+    // min-feasible budget exact DP can only do as well or better.
+    for case in 0..4u32 {
+        let len = rng.range(40, 72);
+        let mems: Vec<u64> = (0..len).map(|_| u64::from(rng.range(1, 20))).collect();
+        let g = chain_graph(&mems);
+        let session = PlanSession::new(g.clone());
+        let generous = g.total_mem() * 4;
+        let req = PlanRequest {
+            planner: PlannerId::Decomposed,
+            budget: BudgetSpec::Bytes(generous),
+            objective: Objective::MinOverhead,
+            sim_mode: SimMode::Liveness,
+        };
+        let cp = session.plan(&req).unwrap();
+        let info = cp.plan.decomposition.as_ref().unwrap();
+        assert!(info.components >= 2, "case {case}: {len} nodes must split: {info:?}");
+        let exact = exact_dp(&g, generous, Objective::MinOverhead).unwrap();
+        assert_eq!(cp.plan.overhead, exact.overhead, "case {case}: generous-budget optimum");
+
+        let tight = session
+            .plan(&PlanRequest::new(PlannerId::Decomposed, Objective::MinOverhead))
+            .unwrap();
+        let lb = exact_dp(&g, tight.plan.budget, Objective::MinOverhead).unwrap();
+        assert!(
+            lb.overhead <= tight.plan.overhead,
+            "case {case}: exact optimum {} must lower-bound stitched {}",
+            lb.overhead,
+            tight.plan.overhead
+        );
+    }
+}
+
+#[test]
+fn decomposed_planning_is_identical_at_any_thread_count() {
+    // REPRO_THREADS must not leak into plans or accounting: the same
+    // workload on 1-thread and 4-thread pools yields identical chains,
+    // decomposition reports, and session counters — including the
+    // component-cache hit/miss split, which is why the solver probes
+    // its cache sequentially before fanning out.
+    let mut rng = Pcg32::seeded(0x7d5);
+    let base = random_block_dag(&mut rng, 6);
+    let session_for = |threads: usize| {
+        PlanSession::with_pool(
+            base.clone(),
+            EnumerationLimit::default(),
+            PlanCache::shared(64),
+            Arc::new(WorkerPool::with_threads(threads)),
+        )
+    };
+    let (one, four) = (session_for(1), session_for(4));
+    let mut frac = PlanRequest::new(PlannerId::Decomposed, Objective::MinOverhead);
+    frac.budget = BudgetSpec::Frac(0.5);
+    for req in [
+        PlanRequest::new(PlannerId::Decomposed, Objective::MinOverhead),
+        PlanRequest::new(PlannerId::Decomposed, Objective::MaxOverhead),
+        frac,
+    ] {
+        let a = one.plan(&req).unwrap();
+        let b = four.plan(&req).unwrap();
+        assert_eq!(a.plan.chain.lower_sets(), b.plan.chain.lower_sets(), "{req:?}");
+        assert_eq!(a.plan.overhead, b.plan.overhead, "{req:?}");
+        assert_eq!(a.plan.peak_eq2, b.plan.peak_eq2, "{req:?}");
+        assert_eq!(a.plan.decomposition, b.plan.decomposition, "{req:?}");
+    }
+    assert_eq!(one.stats(), four.stats(), "session counters must be thread-count invariant");
 }

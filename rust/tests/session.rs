@@ -30,7 +30,7 @@ fn same_request_twice_is_one_hit_and_bit_identical() {
     assert!(Arc::ptr_eq(&first, &second), "a cache hit returns the same compiled plan");
     assert_eq!(
         session.stats(),
-        SessionStats { hits: 1, misses: 1, families_built: 1 }
+        SessionStats { hits: 1, misses: 1, families_built: 1, ..SessionStats::default() }
     );
 
     // Determinism across *sessions*: an independent session over an
@@ -134,7 +134,10 @@ fn shared_cache_serves_repeated_traces_across_sessions() {
     let s2 = PlanSession::with_cache(retrace, EnumerationLimit::default(), cache.clone());
     let b = s2.plan(&req).unwrap();
     assert!(Arc::ptr_eq(&a, &b));
-    assert_eq!(s2.stats(), SessionStats { hits: 1, misses: 0, families_built: 0 });
+    assert_eq!(
+        s2.stats(),
+        SessionStats { hits: 1, misses: 0, families_built: 0, ..SessionStats::default() }
+    );
 }
 
 #[test]
