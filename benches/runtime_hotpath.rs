@@ -12,6 +12,8 @@
 //! BENCH_QUICK=1 cargo bench --bench runtime_hotpath   # CI smoke: fewer reps
 //! ```
 
+use std::sync::Arc;
+
 use recompute::bench::{bench, bench_report_json, BenchStats};
 use recompute::exec::{ChainSchedule, DagTask, DagTrainer, OpProgram, TowerTrainer, TrainConfig};
 use recompute::models::executable::recost_profiled;
@@ -19,6 +21,8 @@ use recompute::models::{mlp_tower, zoo};
 use recompute::planner::{build_context, Family, Objective};
 use recompute::runtime::backend::gemm;
 use recompute::runtime::{Backend, MemoryPool, NativeBackend};
+use recompute::serve::{Router, RouterConfig, ServeMetrics};
+use recompute::session::{PlanCache, SessionRegistry};
 use recompute::sim::{canonical_trace, measure, SimMode, SimOptions};
 
 /// `BENCH_QUICK=1` scales every (warmup, iters) pair down for the CI
@@ -177,6 +181,57 @@ fn main() {
         recompute::fmt_bytes(pool.high_water_bytes),
     );
     assert!(pool.reuses > 0, "liveness churn must recycle buffers");
+
+    // -- serve daemon dispatch (lazy scan + spliced bytes vs eager tree) ----
+    // An in-process Router, plan cache pre-warmed with the U-Net plan so
+    // every dispatch below is a warm hit. Each iteration routes
+    // `SERVE_BATCH` request lines and serializes every reply into a
+    // reused buffer — the same work `serve_connection` does per line,
+    // minus the socket. The `_fast` names take the production lazy path
+    // (`route_line`: field scan, reply spliced from the entry's
+    // pre-serialized summary bytes); the `_eager` names force the
+    // pre-rewrite pipeline (`route_line_eager`: full tree parse, reply
+    // tree rebuilt and re-serialized per request).
+    const SERVE_BATCH: usize = 64;
+    let rt = Router::new(
+        SessionRegistry::new(8, PlanCache::shared(64)),
+        Arc::new(ServeMetrics::new()),
+        RouterConfig::default(),
+    );
+    let plan_line = r#"{"cmd":"plan","network":"unet"}"#;
+    let warm = rt.route_line(plan_line);
+    assert_eq!(warm.reply_json().get("ok").as_bool(), Some(true), "warm-up plan must compile");
+    let ping_line = r#"{"cmd":"ping","id":7}"#;
+    let mut out = String::with_capacity(1024);
+    let mut dispatch = |line: &str, eager: bool| {
+        let mut bytes = 0usize;
+        for _ in 0..SERVE_BATCH {
+            let routed =
+                if eager { rt.route_line_eager(line) } else { rt.route_line(line) };
+            out.clear();
+            routed.reply.write_line(&mut out);
+            bytes += out.len();
+        }
+        bytes
+    };
+    let plan_eager =
+        run_bench("serve_plan_warm_eager", 5, 30, || dispatch(plan_line, true));
+    let plan_fast = run_bench("serve_plan_warm_fast", 5, 30, || dispatch(plan_line, false));
+    let ping_eager = run_bench("serve_ping_eager", 5, 30, || dispatch(ping_line, true));
+    let ping_fast = run_bench("serve_ping_fast", 5, 30, || dispatch(ping_line, false));
+    println!(
+        "  serve warm-plan fast path {:.1}× vs eager, ping {:.1}×  ({} dispatches/iter)",
+        plan_eager.median.as_secs_f64() / plan_fast.median.as_secs_f64().max(1e-12),
+        ping_eager.median.as_secs_f64() / ping_fast.median.as_secs_f64().max(1e-12),
+        SERVE_BATCH,
+    );
+    record(plan_eager);
+    record(plan_fast);
+    record(ping_eager);
+    record(ping_fast);
+    record(run_bench("serve_stats_dispatch", 5, 30, || {
+        dispatch(r#"{"cmd":"stats"}"#, false)
+    }));
 
     drop(record);
     let doc = bench_report_json("runtime", &collected);

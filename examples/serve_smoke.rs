@@ -20,6 +20,11 @@
 //!     answered before the server hangs up;
 //!   * `stats` reflects the traffic: cache hits > 0, ordered latency
 //!     percentiles, and at least the stats request itself in flight;
+//!   * 100 warm plan requests against one fingerprint come back
+//!     byte-identical (the zero-copy fast path serves stored summary
+//!     bytes), an id-carrying request differs only by its spliced
+//!     envelope, and the daemon's `fast_path_hits` / byte counters
+//!     account for the traffic;
 //!   * with `--shutdown`, the daemon acknowledges and stops.
 
 use std::io::{BufRead, BufReader, Write};
@@ -54,6 +59,19 @@ impl Client {
         self.writer.write_all(b"\n")?;
         self.writer.flush()?;
         self.recv()
+    }
+
+    /// Send one line and return the raw reply line, newline included —
+    /// for byte-level assertions about the zero-copy fast path.
+    fn send_raw(&mut self, line: &str) -> Result<String> {
+        self.writer.write_all(line.as_bytes())?;
+        self.writer.write_all(b"\n")?;
+        self.writer.flush()?;
+        let mut reply = String::new();
+        if self.reader.read_line(&mut reply)? == 0 {
+            bail!("server closed the connection");
+        }
+        Ok(reply)
     }
 
     fn recv(&mut self) -> Result<Json> {
@@ -174,6 +192,65 @@ fn hostile_corpus(addr: &str) -> Result<()> {
     Ok(())
 }
 
+/// Hammer one fingerprint with 100 warm plan requests and hold the
+/// daemon to the fast-path contract: identical requests draw
+/// byte-identical reply lines (stored summary bytes, spliced envelope),
+/// an id only changes the envelope, and the `fast_path_hits` counter
+/// accounts for every warm hit.
+fn warm_fast_path(addr: &str) -> Result<()> {
+    const WARM: usize = 100;
+    let mut c = Client::connect(addr)?;
+    let graph = Json::parse(&diamond().to_json())?;
+    let upload = Json::obj().set("cmd", "graph_upload".into()).set("graph", graph);
+    let up = c.send(&upload.to_string())?;
+    expect_ok(&up, "graph_upload")?;
+    let fp = up
+        .get("fingerprint")
+        .as_str()
+        .ok_or_else(|| anyhow!("upload reply without a fingerprint"))?
+        .to_string();
+    let plan = format!(r#"{{"cmd":"plan","fingerprint":"{fp}"}}"#);
+
+    // The first request may compile (cache_hit:false); every line after
+    // it is a warm hit and must be byte-for-byte the same reply.
+    let _first = c.send_raw(&plan)?;
+    let baseline = c.send_raw(&plan)?;
+    if Json::parse(baseline.trim())?.get("cache_hit").as_bool() != Some(true) {
+        bail!("second identical plan request must be a cache hit: {baseline:?}");
+    }
+    for i in 0..WARM - 1 {
+        let reply = c.send_raw(&plan)?;
+        if reply != baseline {
+            bail!("warm reply {i} diverged:\n  {baseline:?}\nvs\n  {reply:?}");
+        }
+    }
+    // An id-carrying request is the same stored bytes with the id
+    // spliced into the envelope — removing it restores the baseline.
+    let with_id = c.send_raw(&format!(r#"{{"cmd":"plan","fingerprint":"{fp}","id":"smoke"}}"#))?;
+    if with_id.replace(r#""id":"smoke","#, "") != baseline {
+        bail!("id must only change the envelope:\n  {baseline:?}\nvs\n  {with_id:?}");
+    }
+
+    let stats = c.send(r#"{"cmd":"stats"}"#)?;
+    expect_ok(&stats, "stats")?;
+    let fast_hits = stats.get("fast_path_hits").as_u64().unwrap_or(0);
+    if fast_hits < WARM as u64 {
+        bail!("expected ≥{WARM} fast-path hits, daemon counted {fast_hits}");
+    }
+    let (bin, bout) = (
+        stats.get("bytes_in").as_u64().unwrap_or(0),
+        stats.get("bytes_out").as_u64().unwrap_or(0),
+    );
+    if bin == 0 || bout == 0 {
+        bail!("byte counters must move: bytes_in={bin} bytes_out={bout}");
+    }
+    println!(
+        "  warm fast path: {WARM} byte-identical replies, {fast_hits} fast-path hits, \
+         {bin}B in / {bout}B out"
+    );
+    Ok(())
+}
+
 /// The daemon's own accounting must reflect what we just did to it.
 fn check_stats(addr: &str) -> Result<()> {
     let mut c = Client::connect(addr)?;
@@ -225,6 +302,7 @@ fn main() -> Result<()> {
         hammer_clients(&addr)?;
         hostile.join().map_err(|_| anyhow!("hostile-corpus thread panicked"))?
     })?;
+    warm_fast_path(&addr)?;
     check_stats(&addr)?;
     if args.iter().any(|a| a == "--shutdown") {
         let bye = Client::connect(&addr)?.send(r#"{"cmd":"shutdown"}"#)?;

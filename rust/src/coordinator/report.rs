@@ -3,6 +3,7 @@
 
 use crate::exec::TrainReport;
 use crate::fmt_bytes;
+use crate::planner::DecompositionInfo;
 use crate::runtime::PoolStats;
 use crate::session::{SessionStats, SessionTiming};
 use crate::util::json::Json;
@@ -62,6 +63,22 @@ pub fn pool_summary(p: &PoolStats) -> String {
         100.0 * p.reuse_ratio(),
         fmt_bytes(p.high_water_bytes),
     )
+}
+
+/// Machine-readable rendering of a decomposed plan's full per-component
+/// statistics (`plan --json`; the serve protocol carries the compact
+/// 3-field variant from [`crate::session::CompiledPlan::summary_json`]).
+pub fn decomposition_json(info: &DecompositionInfo) -> Json {
+    Json::obj()
+        .set("components", info.components.into())
+        .set("cut_vertices", info.cut_vertices.into())
+        .set("cache_hits", info.cache_hits.into())
+        .set("sizes", Json::Arr(info.sizes.iter().map(|&s| Json::from(s)).collect()))
+        .set(
+            "family_sizes",
+            Json::Arr(info.family_sizes.iter().map(|&s| Json::from(s)).collect()),
+        )
+        .set("kinds", Json::Arr(info.kinds.iter().map(|k| Json::from(k.label())).collect()))
 }
 
 /// Serialize the plan-session amortization counters.

@@ -37,14 +37,15 @@ use recompute::anyhow::{anyhow, bail, Context, Result};
 
 use recompute::bench::tables;
 use recompute::coordinator;
-use recompute::coordinator::report::{session_json, session_summary, timing_summary};
+use recompute::coordinator::report::{
+    decomposition_json, session_json, session_summary, timing_summary,
+};
 use recompute::graph::Graph;
 use recompute::{fmt_bytes, parse_budget};
 use recompute::models::zoo;
 use recompute::planner::{BudgetSpec, Family, Objective, PlanRequest, PlannerId};
 use recompute::session::PlanSession;
 use recompute::sim::{simulate_vanilla, SimMode, SimOptions};
-use recompute::util::json::Json;
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -275,31 +276,26 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
     let cache_hit = session.stats().hits > before.hits;
 
     if json_out {
-        let mut j = Json::obj()
+        // The canonical summary (shared with the serve daemon's `plan`
+        // reply) plus the CLI-only context fields.
+        let mut j = cp
+            .summary_json()
             .set("network", g.name.as_str().into())
             .set("nodes", (g.len() as u64).into())
-            .set("fingerprint", format!("{}", cp.fingerprint).into())
             .set("requested_planner", req.planner.label().into())
-            .set("planner", cp.plan.kind.label().into())
-            .set("objective", objective.label().into())
-            .set("sim", mode.label().into())
-            .set("budget_bytes", cp.plan.budget.into())
-            .set("k_segments", (cp.plan.chain.k() as u64).into())
-            .set("overhead", cp.plan.overhead.into())
             .set(
                 "overhead_pct",
                 (100.0 * cp.plan.overhead as f64 / g.total_time() as f64).into(),
             )
             .set("peak_eq2", cp.plan.peak_eq2.into())
-            .set("predicted_peak", cp.program.predicted_peak().into())
-            .set("measured_peak", cp.report.peak_bytes.into())
-            .set("peak_total", cp.report.peak_total.into())
             .set("peak_strict", cp.peak_strict.into())
             .set("vanilla_peak", vanilla.peak_total.into())
             .set("recompute_count", cp.program.recompute_count.into())
             .set("cache_hit", cache_hit.into())
             .set("session", session_json(&session.stats()));
         if let Some(info) = &cp.plan.decomposition {
+            // Replace the summary's compact decomposition with the full
+            // per-component rendering.
             j = j.set("decomposition", decomposition_json(info));
         }
         println!("{}", j.to_string_pretty());
@@ -356,24 +352,6 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
         print_plan_stats(&session);
     }
     Ok(())
-}
-
-/// Machine-readable rendering of a decomposed plan's per-component
-/// statistics (`plan --json`, mirrored by the serve protocol).
-fn decomposition_json(info: &recompute::planner::DecompositionInfo) -> Json {
-    Json::obj()
-        .set("components", info.components.into())
-        .set("cut_vertices", info.cut_vertices.into())
-        .set("cache_hits", info.cache_hits.into())
-        .set("sizes", Json::Arr(info.sizes.iter().map(|&s| Json::from(s)).collect()))
-        .set(
-            "family_sizes",
-            Json::Arr(info.family_sizes.iter().map(|&s| Json::from(s)).collect()),
-        )
-        .set(
-            "kinds",
-            Json::Arr(info.kinds.iter().map(|k| Json::from(k.label())).collect()),
-        )
 }
 
 /// `plan --stats`: the session's amortization counters, the planner

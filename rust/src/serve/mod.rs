@@ -10,6 +10,17 @@
 //! a cache hit for every other client asking for the same (isomorphic)
 //! graph and request.
 //!
+//! The hot path is allocation-shy end to end: requests are framed by
+//! incremental newline scanning over one persistent per-connection
+//! accumulator (no per-line `Vec`), routed through the lazy-JSON
+//! dispatcher (see [`protocol`] — `ping`/`stats` and every `plan`
+//! request answer without building a request tree), and replies are
+//! serialized into one reusable buffer and written with a single
+//! vectored syscall; warm `plan` cache hits splice pre-serialized
+//! summary bytes instead of re-serializing. [`ServeMetrics`] counts
+//! `bytes_in`/`bytes_out`/`fast_path_hits` so the fast path shows up in
+//! `stats`, not just in latency.
+//!
 //! Hardening, because the listener faces arbitrary bytes:
 //!
 //! - **admission control** — a global in-flight request cap
@@ -17,10 +28,11 @@
 //!   ([`ServeConfig::max_connections`]); refused work gets a structured
 //!   `busy` reply, not a hang;
 //! - **bounded reads** — request lines are capped at
-//!   [`ServeConfig::max_request_bytes`] (the read itself is bounded via
-//!   `Read::take`, so an endless line cannot exhaust memory), and a
-//!   connection idle past [`ServeConfig::read_timeout`] is told so and
-//!   closed;
+//!   [`ServeConfig::max_request_bytes`] (complete lines are processed
+//!   before the socket is read again, so resident memory stays bounded
+//!   by the cap plus one read chunk even against an endless line), and
+//!   a connection idle past [`ServeConfig::read_timeout`] is told so
+//!   and closed;
 //! - **total replies** — malformed JSON, invalid UTF-8, unknown
 //!   commands, out-of-cap requests and even handler panics all come back
 //!   as `{"ok": false, "error": {...}}`; the daemon never answers a
@@ -40,10 +52,10 @@
 pub mod protocol;
 pub mod stats;
 
-pub use protocol::{error_reply, Routed, Router, RouterConfig};
+pub use protocol::{error_reply, ReplyBody, Routed, Router, RouterConfig};
 pub use stats::{LatencyPercentiles, LatencyRing, ServeMetrics, LATENCY_RING_CAPACITY};
 
-use std::io::{BufRead, BufReader, Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
@@ -51,7 +63,6 @@ use std::time::{Duration, Instant};
 
 use crate::anyhow::{anyhow, bail, Context, Result};
 use crate::session::{PlanCache, SessionRegistry};
-use crate::util::json::Json;
 
 /// Daemon configuration: where to listen and the resource caps.
 #[derive(Clone, Debug)]
@@ -259,15 +270,102 @@ fn refuse(mut stream: TcpStream) {
     let _ = stream.write_all(s.as_bytes());
 }
 
-fn write_reply(w: &mut TcpStream, reply: &Json) -> std::io::Result<()> {
-    let mut s = reply.to_string();
-    s.push('\n');
-    w.write_all(s.as_bytes())?;
+/// Write `a` then `b` as one vectored write (retrying partial writes),
+/// then flush — the reply body and its newline leave in a single
+/// syscall instead of being copied into a combined buffer first.
+/// (`write_all_vectored` is unstable, hence the manual loop.)
+fn write_all_vectored2(w: &mut TcpStream, a: &[u8], b: &[u8]) -> std::io::Result<()> {
+    let (mut wrote_a, mut wrote_b) = (0usize, 0usize);
+    while wrote_a < a.len() || wrote_b < b.len() {
+        let bufs = [IoSlice::new(&a[wrote_a..]), IoSlice::new(&b[wrote_b..])];
+        let n = w.write_vectored(&bufs)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::WriteZero,
+                "socket accepted no reply bytes",
+            ));
+        }
+        let from_a = n.min(a.len() - wrote_a);
+        wrote_a += from_a;
+        wrote_b += n - from_a;
+    }
     w.flush()
 }
 
-/// One connection's request loop: read a bounded line, route it, write
-/// the reply, repeat until EOF / idle timeout / shutdown.
+/// Serialize one reply into the connection's reusable buffer and write
+/// it with its trailing newline. `Raw` replies append pre-serialized
+/// bytes; `Tree` replies serialize into the same buffer — either way no
+/// per-reply `String` is allocated once the buffer has grown.
+fn write_reply(
+    w: &mut TcpStream,
+    out: &mut String,
+    reply: &ReplyBody,
+    metrics: &ServeMetrics,
+) -> std::io::Result<()> {
+    out.clear();
+    reply.write_line(out);
+    metrics.bytes_out.fetch_add(out.len() as u64 + 1, Ordering::Relaxed);
+    write_all_vectored2(w, out.as_bytes(), b"\n")
+}
+
+fn write_error(
+    w: &mut TcpStream,
+    out: &mut String,
+    metrics: &ServeMetrics,
+    code: &str,
+    msg: &str,
+) -> std::io::Result<()> {
+    write_reply(w, out, &ReplyBody::Tree(error_reply(code, msg)), metrics)
+}
+
+/// What [`handle_line`] tells the connection loop to do next.
+enum LineOutcome {
+    Continue,
+    Shutdown,
+}
+
+/// Route one framed request line and write its reply.
+fn handle_line(
+    raw: &[u8],
+    router: &Router,
+    metrics: &ServeMetrics,
+    writer: &mut TcpStream,
+    reply_buf: &mut String,
+    lim: &ConnLimits,
+) -> std::io::Result<LineOutcome> {
+    let Ok(line) = std::str::from_utf8(raw) else {
+        metrics.record(Duration::ZERO, true);
+        write_error(writer, reply_buf, metrics, "bad-utf8", "request line is not valid UTF-8")?;
+        return Ok(LineOutcome::Continue);
+    };
+    if !metrics.try_admit(lim.max_inflight) {
+        metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        write_error(
+            writer,
+            reply_buf,
+            metrics,
+            "busy",
+            "server is at its in-flight request limit; retry shortly",
+        )?;
+        return Ok(LineOutcome::Continue);
+    }
+    let t0 = Instant::now();
+    let routed = router.route_line(line);
+    metrics.release();
+    metrics.record(t0.elapsed(), routed.is_error);
+    write_reply(writer, reply_buf, &routed.reply, metrics)?;
+    Ok(if routed.shutdown { LineOutcome::Shutdown } else { LineOutcome::Continue })
+}
+
+/// One connection's request loop: incremental newline framing over a
+/// persistent read accumulator, one reusable reply buffer, vectored
+/// reply writes. Repeat until EOF / idle timeout / shutdown.
+///
+/// Framing invariants: complete lines are processed (and drained from
+/// the accumulator) before the socket is read again, so whenever a read
+/// happens the accumulator holds at most one partial line — which keeps
+/// resident memory bounded by `max_request_bytes` + one read chunk even
+/// against a client that pipelines or never sends a newline.
 fn serve_connection(
     stream: TcpStream,
     router: &Router,
@@ -279,117 +377,130 @@ fn serve_connection(
     // thread can observe shutdown and the idle deadline.
     stream.set_read_timeout(Some(lim.poll))?;
     let mut writer = stream.try_clone()?;
-    let mut reader = BufReader::new(stream);
+    let mut reader = stream;
+    // Persistent per-connection buffers, reused for every request.
+    let mut acc: Vec<u8> = Vec::with_capacity(4096);
+    let mut reply_buf = String::with_capacity(1024);
+    let mut chunk = [0u8; 16 * 1024];
+    // `acc[..searched]` is known newline-free (no rescans on retry).
+    let mut searched = 0usize;
+    let mut at_eof = false;
+    let mut deadline = Instant::now() + lim.idle;
     loop {
-        let mut buf: Vec<u8> = Vec::new();
-        let deadline = Instant::now() + lim.idle;
-        loop {
-            if stop.load(Ordering::SeqCst) {
+        // Frame and process every complete line already buffered.
+        while let Some(off) = acc[searched..].iter().position(|&b| b == b'\n') {
+            let nl = searched + off;
+            // The line's content is acc[..nl] (lines always start at 0:
+            // processed lines are drained). Content + '\n' over the cap
+            // is refused exactly like the pre-rework reader, which
+            // buffered at most cap+1 bytes of line+newline.
+            if nl + 1 > lim.max_request_bytes {
+                return oversize(&mut reader, &mut writer, &mut reply_buf, metrics, &lim);
+            }
+            let mut end = nl;
+            while end > 0 && acc[end - 1] == b'\r' {
+                end -= 1;
+            }
+            if end > 0 {
+                match handle_line(&acc[..end], router, metrics, &mut writer, &mut reply_buf, &lim)?
+                {
+                    LineOutcome::Continue => {}
+                    LineOutcome::Shutdown => {
+                        stop.store(true, Ordering::SeqCst);
+                        return Ok(());
+                    }
+                }
+            }
+            acc.drain(..=nl);
+            searched = 0;
+            deadline = Instant::now() + lim.idle;
+        }
+        // No complete line buffered: the accumulator is one (possibly
+        // empty) partial line, all of it known newline-free.
+        searched = acc.len();
+        if acc.len() > lim.max_request_bytes {
+            return oversize(&mut reader, &mut writer, &mut reply_buf, metrics, &lim);
+        }
+        if at_eof {
+            if acc.is_empty() {
                 return Ok(());
             }
-            // Cap the read at one byte past the limit: a line that fills
-            // the whole allowance is over-long, detected below without
-            // ever buffering more than `max_request_bytes + 1` bytes.
-            let allowance = (lim.max_request_bytes + 1).saturating_sub(buf.len());
-            if allowance == 0 {
-                break;
+            // Final unterminated line.
+            let mut end = acc.len();
+            while end > 0 && acc[end - 1] == b'\r' {
+                end -= 1;
             }
-            match (&mut reader).take(allowance as u64).read_until(b'\n', &mut buf) {
-                // EOF: a clean close between requests, or a final
-                // unterminated line to process.
-                Ok(0) => {
-                    if buf.is_empty() {
-                        return Ok(());
-                    }
-                    break;
-                }
-                Ok(_) => {
-                    if buf.last() == Some(&b'\n') {
-                        break;
-                    }
-                    // No newline yet: the `take` allowance ran out (next
-                    // iteration flags the oversize) or EOF follows.
-                }
-                // Timeout expiry — note `read_until` has already
-                // appended any bytes it got before the timeout, so
-                // partial requests accumulate across retries.
-                Err(e)
-                    if matches!(
-                        e.kind(),
-                        std::io::ErrorKind::WouldBlock
-                            | std::io::ErrorKind::TimedOut
-                            | std::io::ErrorKind::Interrupted
-                    ) =>
+            if end > 0 {
+                if let LineOutcome::Shutdown =
+                    handle_line(&acc[..end], router, metrics, &mut writer, &mut reply_buf, &lim)?
                 {
-                    if Instant::now() >= deadline {
-                        let msg = if buf.is_empty() {
-                            "connection idle past the server's read timeout"
-                        } else {
-                            "request stalled mid-line past the server's read timeout"
-                        };
-                        let _ = write_reply(&mut writer, &error_reply("idle-timeout", msg));
-                        return Ok(());
-                    }
-                }
-                Err(e) => return Err(e),
-            }
-        }
-        if buf.len() > lim.max_request_bytes {
-            // The line framing can't be trusted past the cap (we'd have
-            // to skip unbounded bytes to resync), so reply and close.
-            metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            let reply = error_reply(
-                "request-too-large",
-                &format!("request exceeds {} bytes", lim.max_request_bytes),
-            );
-            let _ = write_reply(&mut writer, &reply);
-            // Drain whatever the client already sent before closing:
-            // dropping a socket with unread receive data turns the close
-            // into an RST, which can destroy the reply in flight.
-            let mut sink = [0u8; 4096];
-            let mut drained = 0usize;
-            loop {
-                match reader.read(&mut sink) {
-                    Ok(0) | Err(_) => break,
-                    Ok(n) => {
-                        drained += n;
-                        // Bounded courtesy: a firehose client gets cut off.
-                        if drained > lim.max_request_bytes {
-                            break;
-                        }
-                    }
+                    stop.store(true, Ordering::SeqCst);
                 }
             }
             return Ok(());
         }
-        while matches!(buf.last(), Some(&b'\n') | Some(&b'\r')) {
-            buf.pop();
-        }
-        if buf.is_empty() {
-            continue;
-        }
-        let Ok(line) = std::str::from_utf8(&buf) else {
-            metrics.record(Duration::ZERO, true);
-            write_reply(&mut writer, &error_reply("bad-utf8", "request line is not valid UTF-8"))?;
-            continue;
-        };
-        if !metrics.try_admit(lim.max_inflight) {
-            metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            let reply =
-                error_reply("busy", "server is at its in-flight request limit; retry shortly");
-            write_reply(&mut writer, &reply)?;
-            continue;
-        }
-        let t0 = Instant::now();
-        let routed = router.route_line(line);
-        metrics.release();
-        metrics.record(t0.elapsed(), routed.is_error);
-        write_reply(&mut writer, &routed.reply)?;
-        if routed.shutdown {
-            stop.store(true, Ordering::SeqCst);
+        if stop.load(Ordering::SeqCst) {
             return Ok(());
+        }
+        match reader.read(&mut chunk) {
+            Ok(0) => at_eof = true,
+            Ok(n) => {
+                metrics.bytes_in.fetch_add(n as u64, Ordering::Relaxed);
+                acc.extend_from_slice(&chunk[..n]);
+            }
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) =>
+            {
+                if Instant::now() >= deadline {
+                    let msg = if acc.is_empty() {
+                        "connection idle past the server's read timeout"
+                    } else {
+                        "request stalled mid-line past the server's read timeout"
+                    };
+                    let _ = write_error(&mut writer, &mut reply_buf, metrics, "idle-timeout", msg);
+                    return Ok(());
+                }
+            }
+            Err(e) => return Err(e),
         }
     }
+}
+
+/// Refuse an over-long request line and close: past the cap the framing
+/// can't be trusted (resyncing would mean skipping unbounded bytes).
+fn oversize(
+    reader: &mut TcpStream,
+    writer: &mut TcpStream,
+    reply_buf: &mut String,
+    metrics: &ServeMetrics,
+    lim: &ConnLimits,
+) -> std::io::Result<()> {
+    metrics.rejected.fetch_add(1, Ordering::Relaxed);
+    let msg = format!("request exceeds {} bytes", lim.max_request_bytes);
+    let _ = write_error(writer, reply_buf, metrics, "request-too-large", &msg);
+    // Drain whatever the client already sent before closing: dropping a
+    // socket with unread receive data turns the close into an RST,
+    // which can destroy the reply in flight.
+    let mut sink = [0u8; 4096];
+    let mut drained = 0usize;
+    loop {
+        match reader.read(&mut sink) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                drained += n;
+                // Bounded courtesy: a firehose client gets cut off.
+                if drained > lim.max_request_bytes {
+                    break;
+                }
+            }
+        }
+    }
+    Ok(())
 }
 
 /// Zero-dependency SIGINT latch: a C `signal` handler that flips an

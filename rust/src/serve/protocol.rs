@@ -4,11 +4,33 @@
 //! Every reply is an object with `"ok": true` plus command-specific
 //! fields, or `"ok": false` with a structured
 //! `{"error": {"code": …, "msg": …}}`. The router never panics outward:
-//! requests are parsed by the hardened [`Json::parse`] (depth-limited,
-//! positioned errors), every handler returns typed rejections, and the
-//! dispatch is wrapped in `catch_unwind` as a last line of defense, so a
-//! bug in a handler degrades to an `"internal"` error reply instead of a
-//! dead connection.
+//! requests are validated by the lazy scanner (same hardened grammar as
+//! [`Json::parse`]: depth-limited, positioned errors), every handler
+//! returns typed rejections, and the dispatch is wrapped in
+//! `catch_unwind` as a last line of defense, so a bug in a handler
+//! degrades to an `"internal"` error reply instead of a dead connection.
+//!
+//! ## The fast path
+//!
+//! [`Router::route_line`] never builds a request tree unless it has to.
+//! [`scan_fields`] validates the whole line and extracts the top-level
+//! protocol fields (`cmd`, `id`, the `plan` addressing/knob fields)
+//! without allocating; `ping`, `stats`, `shutdown`, malformed input and
+//! — crucially — every `plan` request are answered straight from the
+//! scan. Only the full-body commands (`graph_upload`, `train`) fall
+//! back to [`Json::parse`], and since the scanner accepts exactly what
+//! the tree parser accepts, that fallback cannot change the error
+//! surface.
+//!
+//! On the reply side, `plan` responses are [`ReplyBody::Raw`]: the
+//! per-request envelope (`ok`, `reply`, `id`, `cache_hit`) is written
+//! by [`RawJson`] and the plan summary is spliced in byte-for-byte from
+//! [`CompiledPlan::summary_bytes`] — serialized once at compile time,
+//! reused verbatim on every cache hit. Cache-hit raw replies bump
+//! [`ServeMetrics::fast_path_hits`] so the zero-copy path is
+//! observable. [`Router::route_line_eager`] preserves the previous
+//! tree-parse/tree-serialize pipeline for benchmarks and differential
+//! tests.
 //!
 //! Commands (the `"cmd"` field):
 //!
@@ -21,12 +43,17 @@
 //! | `stats`        | —                                                   |
 //! | `shutdown`     | —                                                   |
 //!
+//! Every command additionally accepts an optional `id` (string or
+//! number), echoed back verbatim on the reply — including error
+//! replies, whenever the request was well-formed enough to carry one.
+//!
 //! The router multiplexes every client onto one [`SessionRegistry`]
 //! (fingerprint-keyed sessions over one shared plan cache), which is
 //! what makes the daemon an amortizer: two clients uploading isomorphic
 //! relabelings of a graph plan against the same session, and the second
 //! identical request is a cache hit whoever sent the first.
 
+use std::borrow::Cow;
 use std::panic::AssertUnwindSafe;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
@@ -39,9 +66,10 @@ use crate::exec::TrainConfig;
 use crate::graph::{Graph, GraphFingerprint};
 use crate::models::zoo;
 use crate::planner::{BudgetSpec, Objective, PlanRequest, PlannerId};
-use crate::session::{PlanSession, SessionRegistry};
+use crate::session::{CompiledPlan, PlanSession, SessionRegistry};
 use crate::sim::SimMode;
-use crate::util::json::Json;
+use crate::util::json::{Json, RawJson};
+use crate::util::json_lazy::{scan_fields, LazyValue};
 use crate::{fmt_bytes, parse_bytes};
 
 use super::stats::ServeMetrics;
@@ -75,14 +103,54 @@ impl Default for RouterConfig {
     }
 }
 
+/// One reply, in whichever representation the handler produced it.
+///
+/// `Tree` replies are built field-by-field ([`Json::obj`]) and
+/// serialized on write; `Raw` replies are already-serialized lines
+/// (the zero-copy `plan` path: envelope via [`RawJson`], summary
+/// spliced from [`CompiledPlan::summary_bytes`]). The connection loop
+/// appends either into its reusable output buffer without an extra
+/// allocation.
+pub enum ReplyBody {
+    Tree(Json),
+    Raw(String),
+}
+
+impl ReplyBody {
+    /// Materialize the reply as a tree (tests and stats introspection;
+    /// `Raw` lines always parse — they were produced by this module).
+    pub fn to_json(&self) -> Json {
+        match self {
+            ReplyBody::Tree(j) => j.clone(),
+            ReplyBody::Raw(s) => Json::parse(s).unwrap_or(Json::Null),
+        }
+    }
+
+    /// Append the compact serialized reply (no trailing newline) to an
+    /// existing buffer — the connection loop's reuse point.
+    pub fn write_line(&self, out: &mut String) {
+        match self {
+            ReplyBody::Tree(j) => j.write_compact_into(out),
+            ReplyBody::Raw(s) => out.push_str(s),
+        }
+    }
+}
+
 /// One routed request's outcome.
 pub struct Routed {
-    /// The JSON reply to write back (always exactly one object).
-    pub reply: Json,
+    /// The reply to write back (always exactly one JSON object).
+    pub reply: ReplyBody,
     /// The request asked the daemon to shut down.
     pub shutdown: bool,
     /// The reply is an `"ok": false` error.
     pub is_error: bool,
+}
+
+impl Routed {
+    /// The reply as a tree (tests; the hot path never calls this).
+    pub fn reply_json(&self) -> Json {
+        self.reply.to_json()
+    }
 }
 
 /// A typed rejection: becomes the `{"code", "msg"}` of an error reply.
@@ -104,6 +172,161 @@ pub fn error_reply(code: &str, msg: &str) -> Json {
 
 fn ok_reply(cmd: &str) -> Json {
     Json::obj().set("ok", true.into()).set("reply", cmd.into())
+}
+
+/// The top-level fields the lazy scan extracts from every request line:
+/// dispatch (`cmd`), the reply envelope (`id`), and the full `plan`
+/// request surface — so a `plan` never needs the tree parser.
+const SCAN_KEYS: [&str; 10] = [
+    "cmd",
+    "id",
+    "fingerprint",
+    "network",
+    "batch",
+    "planner",
+    "objective",
+    "sim",
+    "budget",
+    "budget_frac",
+];
+const F_CMD: usize = 0;
+const F_ID: usize = 1;
+const F_FINGERPRINT: usize = 2;
+const F_NETWORK: usize = 3;
+const F_BATCH: usize = 4;
+const F_PLANNER: usize = 5;
+const F_OBJECTIVE: usize = 6;
+const F_SIM: usize = 7;
+const F_BUDGET: usize = 8;
+const F_BUDGET_FRAC: usize = 9;
+
+/// One request field, abstracted over where it came from — a scanned
+/// [`LazyValue`] or an eager [`Json`] tree — so the `plan` handlers are
+/// written once and shared by both paths. `Null` means *absent or
+/// literal null*, exactly like [`Json::get`]'s sentinel; `Container`
+/// only needs to exist as a variant (every `plan` field that may be a
+/// container is an error case).
+enum Field<'a> {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(Cow<'a, str>),
+    Container,
+}
+
+impl<'a> Field<'a> {
+    fn from_lazy(v: &Option<LazyValue<'a>>) -> Field<'a> {
+        match v {
+            None | Some(LazyValue::Null) => Field::Null,
+            Some(LazyValue::Bool(b)) => Field::Bool(*b),
+            Some(LazyValue::Num(n)) => Field::Num(*n),
+            Some(LazyValue::Str(s)) => Field::Str(s.clone()),
+            Some(LazyValue::Container(_)) => Field::Container,
+        }
+    }
+
+    fn from_json(v: &'a Json) -> Field<'a> {
+        match v {
+            Json::Null => Field::Null,
+            Json::Bool(b) => Field::Bool(*b),
+            Json::Num(n) => Field::Num(*n),
+            Json::Str(s) => Field::Str(Cow::Borrowed(s)),
+            Json::Arr(_) | Json::Obj(_) => Field::Container,
+        }
+    }
+
+    fn as_str(&self) -> Option<&str> {
+        match self {
+            Field::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    fn as_f64(&self) -> Option<f64> {
+        match self {
+            Field::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Mirror of [`Json::as_u64`].
+    fn as_u64(&self) -> Option<u64> {
+        match self {
+            Field::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    fn is_null(&self) -> bool {
+        matches!(self, Field::Null)
+    }
+}
+
+/// The `plan` request surface, extracted once from either path.
+struct PlanFields<'a> {
+    fingerprint: Field<'a>,
+    network: Field<'a>,
+    batch: Field<'a>,
+    planner: Field<'a>,
+    objective: Field<'a>,
+    sim: Field<'a>,
+    budget: Field<'a>,
+    budget_frac: Field<'a>,
+}
+
+impl<'a> PlanFields<'a> {
+    fn from_scan(fields: &[Option<LazyValue<'a>>; SCAN_KEYS.len()]) -> PlanFields<'a> {
+        PlanFields {
+            fingerprint: Field::from_lazy(&fields[F_FINGERPRINT]),
+            network: Field::from_lazy(&fields[F_NETWORK]),
+            batch: Field::from_lazy(&fields[F_BATCH]),
+            planner: Field::from_lazy(&fields[F_PLANNER]),
+            objective: Field::from_lazy(&fields[F_OBJECTIVE]),
+            sim: Field::from_lazy(&fields[F_SIM]),
+            budget: Field::from_lazy(&fields[F_BUDGET]),
+            budget_frac: Field::from_lazy(&fields[F_BUDGET_FRAC]),
+        }
+    }
+
+    fn from_req(req: &'a Json) -> PlanFields<'a> {
+        PlanFields {
+            fingerprint: Field::from_json(req.get("fingerprint")),
+            network: Field::from_json(req.get("network")),
+            batch: Field::from_json(req.get("batch")),
+            planner: Field::from_json(req.get("planner")),
+            objective: Field::from_json(req.get("objective")),
+            sim: Field::from_json(req.get("sim")),
+            budget: Field::from_json(req.get("budget")),
+            budget_frac: Field::from_json(req.get("budget_frac")),
+        }
+    }
+}
+
+/// The request's correlation `id`, owned for the reply: echoed back
+/// when it is a string or number, treated as absent otherwise.
+fn request_id(v: &Option<LazyValue<'_>>) -> Option<Json> {
+    match v {
+        Some(LazyValue::Str(s)) => Some(Json::Str(s.clone().into_owned())),
+        Some(LazyValue::Num(n)) => Some(Json::Num(*n)),
+        _ => None,
+    }
+}
+
+fn request_id_json(req: &Json) -> Option<Json> {
+    match req.get("id") {
+        Json::Str(s) => Some(Json::Str(s.clone())),
+        Json::Num(n) => Some(Json::Num(*n)),
+        _ => None,
+    }
+}
+
+fn attach_id(reply: Json, id: Option<&Json>) -> Json {
+    match id {
+        Some(id) => reply.set("id", id.clone()),
+        None => reply,
+    }
 }
 
 /// The daemon's request dispatcher. Owns the cross-client
@@ -128,35 +351,102 @@ impl Router {
     }
 
     /// Route one request line to a reply. Total: every input — hostile
-    /// bytes included — produces exactly one JSON reply object.
+    /// bytes included — produces exactly one JSON reply object. This is
+    /// the lazy fast path; see the module docs for what avoids parsing.
     pub fn route_line(&self, line: &str) -> Routed {
         let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| self.dispatch(line)));
-        let (reply, shutdown, is_error) = match outcome {
-            Ok(Ok((reply, shutdown))) => (reply, shutdown, false),
-            Ok(Err(r)) => (error_reply(r.code, &r.msg), false, true),
-            Err(_) => (error_reply("internal", "request handler panicked"), false, true),
-        };
-        Routed { reply, shutdown, is_error }
+        match outcome {
+            Ok(routed) => routed,
+            Err(_) => Routed {
+                reply: ReplyBody::Tree(error_reply("internal", "request handler panicked")),
+                shutdown: false,
+                is_error: true,
+            },
+        }
     }
 
-    fn dispatch(&self, line: &str) -> Result<(Json, bool), Reject> {
-        let req = Json::parse(line).map_err(|e| reject("bad-json", e))?;
-        let cmd = req
-            .get("cmd")
-            .as_str()
-            .ok_or_else(|| reject("bad-request", "missing string field 'cmd'"))?;
-        match cmd {
-            "ping" => Ok((ok_reply("pong"), false)),
-            "graph_upload" => self.graph_upload(&req).map(|j| (j, false)),
-            "plan" => self.plan(&req).map(|j| (j, false)),
-            "train" => self.train(&req).map(|j| (j, false)),
-            "stats" => Ok((self.stats(), false)),
-            "shutdown" => Ok((ok_reply("shutting down"), true)),
+    /// The pre-lazy pipeline: full tree parse in, tree reply out.
+    /// Behaviorally identical to [`Router::route_line`] (same accepted
+    /// inputs, same reply fields); kept for benchmarks (the honest
+    /// "before" measurement) and the differential tests that hold the
+    /// two paths to agreement.
+    pub fn route_line_eager(&self, line: &str) -> Routed {
+        let outcome = std::panic::catch_unwind(AssertUnwindSafe(|| self.dispatch_eager(line)));
+        match outcome {
+            Ok(routed) => routed,
+            Err(_) => Routed {
+                reply: ReplyBody::Tree(error_reply("internal", "request handler panicked")),
+                shutdown: false,
+                is_error: true,
+            },
+        }
+    }
+
+    fn dispatch(&self, line: &str) -> Routed {
+        let fields = match scan_fields(line, &SCAN_KEYS) {
+            Ok(f) => f,
+            // Malformed input carries no trustworthy id to echo.
+            Err(e) => return error_routed("bad-json", &e.to_string(), None),
+        };
+        let id = request_id(&fields[F_ID]);
+        let cmd = match fields[F_CMD].as_ref().and_then(|v| v.as_str()) {
+            Some(c) => c,
+            None => {
+                return error_routed("bad-request", "missing string field 'cmd'", id.as_ref())
+            }
+        };
+        let res: Result<(ReplyBody, bool), Reject> = match cmd {
+            "ping" => Ok((ReplyBody::Tree(ok_reply("pong")), false)),
+            "stats" => Ok((ReplyBody::Tree(self.stats()), false)),
+            "shutdown" => Ok((ReplyBody::Tree(ok_reply("shutting down")), true)),
+            "plan" => {
+                let f = PlanFields::from_scan(&fields);
+                self.plan_fast(&f, id.as_ref()).map(|b| (b, false))
+            }
+            // Full-body commands fall back to the tree parser. The scan
+            // already validated the document, so this cannot introduce
+            // new parse failures.
+            "graph_upload" => Json::parse(line)
+                .map_err(|e| reject("bad-json", e))
+                .and_then(|req| self.graph_upload(&req))
+                .map(|j| (ReplyBody::Tree(j), false)),
+            "train" => Json::parse(line)
+                .map_err(|e| reject("bad-json", e))
+                .and_then(|req| self.train(&req))
+                .map(|j| (ReplyBody::Tree(j), false)),
             other => Err(reject(
                 "unknown-cmd",
                 format!("unknown command '{other}' (ping|graph_upload|plan|train|stats|shutdown)"),
             )),
-        }
+        };
+        finish_routed(res, id.as_ref())
+    }
+
+    fn dispatch_eager(&self, line: &str) -> Routed {
+        let req = match Json::parse(line) {
+            Ok(r) => r,
+            Err(e) => return error_routed("bad-json", &e.to_string(), None),
+        };
+        let id = request_id_json(&req);
+        let cmd = match req.get("cmd").as_str() {
+            Some(c) => c,
+            None => {
+                return error_routed("bad-request", "missing string field 'cmd'", id.as_ref())
+            }
+        };
+        let res: Result<(ReplyBody, bool), Reject> = match cmd {
+            "ping" => Ok((ReplyBody::Tree(ok_reply("pong")), false)),
+            "stats" => Ok((ReplyBody::Tree(self.stats()), false)),
+            "shutdown" => Ok((ReplyBody::Tree(ok_reply("shutting down")), true)),
+            "plan" => self.plan_eager(&req).map(|j| (ReplyBody::Tree(j), false)),
+            "graph_upload" => self.graph_upload(&req).map(|j| (ReplyBody::Tree(j), false)),
+            "train" => self.train(&req).map(|j| (ReplyBody::Tree(j), false)),
+            other => Err(reject(
+                "unknown-cmd",
+                format!("unknown command '{other}' (ping|graph_upload|plan|train|stats|shutdown)"),
+            )),
+        };
+        finish_routed(res, id.as_ref())
     }
 
     // ---- graph_upload ---------------------------------------------------
@@ -188,49 +478,61 @@ impl Router {
 
     // ---- plan -----------------------------------------------------------
 
-    fn plan(&self, req: &Json) -> Result<Json, Reject> {
-        let session = self.resolve_session(req)?;
-        let planner = match req.get("planner").as_str() {
+    /// Resolve and compile (or cache-hit) one `plan` request — the
+    /// logic shared by the fast and eager reply builders.
+    fn plan_common(&self, f: &PlanFields<'_>) -> Result<(Arc<CompiledPlan>, bool), Reject> {
+        let session = self.resolve_session(f)?;
+        let planner = match f.planner.as_str() {
             None => PlannerId::ApproxDp,
             Some(s) => PlannerId::parse(s).map_err(|e| reject("bad-request", e))?,
         };
-        let objective = parse_objective(req.get("objective").as_str().unwrap_or("tc"))?;
-        let sim_mode = match req.get("sim").as_str() {
+        let objective = parse_objective(f.objective.as_str().unwrap_or("tc"))?;
+        let sim_mode = match f.sim.as_str() {
             None => SimMode::Liveness,
             Some(s) => SimMode::parse(s).map_err(|e| reject("bad-request", e))?,
         };
-        let budget = self.budget_spec(req)?;
+        let budget = self.budget_spec(f)?;
         let r = PlanRequest { planner, budget, objective, sim_mode };
-        let (cp, cache_hit) = session.plan_tracked(&r).map_err(|e| reject("plan-failed", e))?;
-        let mut reply = ok_reply("plan")
-            .set("fingerprint", cp.fingerprint.to_string().into())
-            .set("planner", cp.plan.kind.label().into())
-            .set("objective", objective.label().into())
-            .set("sim", sim_mode.label().into())
-            .set("budget_bytes", cp.plan.budget.into())
-            .set("k_segments", (cp.plan.chain.k() as u64).into())
-            .set("overhead", cp.plan.overhead.into())
-            .set("predicted_peak", cp.program.predicted_peak().into())
-            .set("measured_peak", cp.report.peak_bytes.into())
-            .set("peak_total", cp.report.peak_total.into())
-            .set("cache_hit", cache_hit.into());
-        if let Some(info) = &cp.plan.decomposition {
-            reply = reply.set(
-                "decomposition",
-                Json::obj()
-                    .set("components", info.components.into())
-                    .set("cut_vertices", info.cut_vertices.into())
-                    .set("cache_hits", info.cache_hits.into()),
-            );
+        session.plan_tracked(&r).map_err(|e| reject("plan-failed", e))
+    }
+
+    /// The zero-copy `plan` reply: envelope written by [`RawJson`], the
+    /// summary spliced verbatim from the plan's pre-serialized bytes.
+    fn plan_fast(&self, f: &PlanFields<'_>, id: Option<&Json>) -> Result<ReplyBody, Reject> {
+        let (cp, cache_hit) = self.plan_common(f)?;
+        if cache_hit {
+            self.metrics.fast_path_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        let mut w = RawJson::with_capacity(cp.summary_bytes.len() + 64);
+        w.field_bool("ok", true);
+        w.field_str("reply", "plan");
+        if let Some(id) = id {
+            w.field("id", id);
+        }
+        w.field_bool("cache_hit", cache_hit);
+        w.splice_bytes(&cp.summary_bytes);
+        Ok(ReplyBody::Raw(w.finish()))
+    }
+
+    /// The tree-built `plan` reply (the pre-lazy pipeline): same fields
+    /// as [`Router::plan_fast`], rebuilt and re-serialized per request.
+    fn plan_eager(&self, req: &Json) -> Result<Json, Reject> {
+        let f = PlanFields::from_req(req);
+        let (cp, cache_hit) = self.plan_common(&f)?;
+        let mut reply = ok_reply("plan").set("cache_hit", cache_hit.into());
+        if let Json::Obj(fields) = cp.summary_json() {
+            for (k, v) in fields {
+                reply = reply.set(&k, v);
+            }
         }
         Ok(reply)
     }
 
     /// A `plan` request addresses its graph by `fingerprint` (from a
     /// prior `graph_upload` — possibly another client's: fingerprints
-    /// are relabeling-invariant) or by zoo `network` name (+ `batch`).
-    fn resolve_session(&self, req: &Json) -> Result<Arc<PlanSession>, Reject> {
-        if let Some(h) = req.get("fingerprint").as_str() {
+    /// are relabeling-invariant) or by zoo `network` name (+`batch`).
+    fn resolve_session(&self, f: &PlanFields<'_>) -> Result<Arc<PlanSession>, Reject> {
+        if let Some(h) = f.fingerprint.as_str() {
             let fp = u64::from_str_radix(h.trim(), 16).map_err(|_| {
                 reject("bad-request", format!("bad fingerprint '{h}' (expected hex digits)"))
             })?;
@@ -241,15 +543,16 @@ impl Router {
                 )
             });
         }
-        if let Some(name) = req.get("network").as_str() {
+        if let Some(name) = f.network.as_str() {
             let e = zoo::find(name)
                 .ok_or_else(|| reject("unknown-network", format!("unknown zoo network '{name}'")))?;
-            let batch = match req.get("batch") {
-                Json::Null => e.batch,
-                b => b
+            let batch = if f.batch.is_null() {
+                e.batch
+            } else {
+                f.batch
                     .as_u64()
                     .filter(|&b| b >= 1)
-                    .ok_or_else(|| reject("bad-request", "'batch' must be a positive integer"))?,
+                    .ok_or_else(|| reject("bad-request", "'batch' must be a positive integer"))?
             };
             if batch > self.cfg.max_batch {
                 return Err(reject(
@@ -275,13 +578,12 @@ impl Router {
 
     /// `budget` (string like `"512KiB"`, or an integer byte count) /
     /// `budget_frac` → [`BudgetSpec`], capped at the server's limit.
-    fn budget_spec(&self, req: &Json) -> Result<BudgetSpec, Reject> {
-        let b = req.get("budget");
-        let spec = match b {
-            Json::Null => match req.get("budget_frac") {
-                Json::Null => BudgetSpec::MinFeasible,
-                f => match f.as_f64() {
-                    Some(f) if f.is_finite() && (0.0..=1.0).contains(&f) => BudgetSpec::Frac(f),
+    fn budget_spec(&self, f: &PlanFields<'_>) -> Result<BudgetSpec, Reject> {
+        let spec = match &f.budget {
+            Field::Null => match &f.budget_frac {
+                Field::Null => BudgetSpec::MinFeasible,
+                v => match v.as_f64() {
+                    Some(x) if x.is_finite() && (0.0..=1.0).contains(&x) => BudgetSpec::Frac(x),
                     _ => {
                         return Err(reject(
                             "bad-request",
@@ -290,10 +592,10 @@ impl Router {
                     }
                 },
             },
-            Json::Str(s) => {
+            Field::Str(s) => {
                 BudgetSpec::Bytes(parse_bytes(s).map_err(|e| reject("bad-request", e))?)
             }
-            Json::Num(_) => BudgetSpec::Bytes(b.as_u64().ok_or_else(|| {
+            Field::Num(_) => BudgetSpec::Bytes(f.budget.as_u64().ok_or_else(|| {
                 reject("bad-request", "numeric 'budget' must be a non-negative integer byte count")
             })?),
             _ => {
@@ -359,7 +661,8 @@ impl Router {
             None => SimMode::Liveness,
             Some(s) => SimMode::parse(s).map_err(|e| reject("bad-request", e))?,
         };
-        let budget = self.budget_spec(req)?;
+        let f = PlanFields::from_req(req);
+        let budget = self.budget_spec(&f)?;
         let cfg = TrainConfig { layers: 0, steps, lr, seed: 7, log_every: 0 };
         let cmp = train_zoo_model_in(
             Some(&self.registry),
@@ -423,6 +726,9 @@ impl Router {
             .set("requests", m.requests.load(Ordering::Relaxed).into())
             .set("errors", m.errors.load(Ordering::Relaxed).into())
             .set("rejected", m.rejected.load(Ordering::Relaxed).into())
+            .set("bytes_in", m.bytes_in.load(Ordering::Relaxed).into())
+            .set("bytes_out", m.bytes_out.load(Ordering::Relaxed).into())
+            .set("fast_path_hits", m.fast_path_hits.load(Ordering::Relaxed).into())
             .set("inflight", (m.inflight.load(Ordering::SeqCst) as u64).into())
             .set("connections", (m.connections.load(Ordering::SeqCst) as u64).into())
             .set("connections_total", m.connections_total.load(Ordering::Relaxed).into())
@@ -446,6 +752,28 @@ impl Router {
             )
             .set("session_totals", session_json(&agg))
             .set("latency_us", latency)
+    }
+}
+
+fn error_routed(code: &'static str, msg: &str, id: Option<&Json>) -> Routed {
+    Routed {
+        reply: ReplyBody::Tree(attach_id(error_reply(code, msg), id)),
+        shutdown: false,
+        is_error: true,
+    }
+}
+
+fn finish_routed(res: Result<(ReplyBody, bool), Reject>, id: Option<&Json>) -> Routed {
+    match res {
+        Ok((body, shutdown)) => {
+            let reply = match body {
+                // Raw replies already spliced their id.
+                ReplyBody::Tree(t) => ReplyBody::Tree(attach_id(t, id)),
+                raw => raw,
+            };
+            Routed { reply, shutdown, is_error: false }
+        }
+        Err(r) => error_routed(r.code, &r.msg, id),
     }
 }
 
@@ -483,16 +811,18 @@ mod tests {
         )
     }
 
-    fn ok(r: &Routed) -> &Json {
-        assert!(!r.is_error, "expected ok reply, got {}", r.reply.to_string());
-        assert_eq!(r.reply.get("ok").as_bool(), Some(true));
-        &r.reply
+    fn ok(r: &Routed) -> Json {
+        let j = r.reply_json();
+        assert!(!r.is_error, "expected ok reply, got {}", j.to_string());
+        assert_eq!(j.get("ok").as_bool(), Some(true));
+        j
     }
 
     fn err_code(r: &Routed) -> String {
-        assert!(r.is_error, "expected error reply, got {}", r.reply.to_string());
-        assert_eq!(r.reply.get("ok").as_bool(), Some(false));
-        r.reply.get("error").get("code").as_str().unwrap_or_default().to_string()
+        let j = r.reply_json();
+        assert!(r.is_error, "expected error reply, got {}", j.to_string());
+        assert_eq!(j.get("ok").as_bool(), Some(false));
+        j.get("error").get("code").as_str().unwrap_or_default().to_string()
     }
 
     #[test]
@@ -519,21 +849,22 @@ mod tests {
         };
         let a = up(&diamond());
         let fp = ok(&a).get("fingerprint").as_str().unwrap().to_string();
-        assert_eq!(a.reply.get("reused").as_bool(), Some(false));
+        assert_eq!(ok(&a).get("reused").as_bool(), Some(false));
         // The isomorphic relabeling lands on the same session.
         let b = up(&diamond_relabeled());
         assert_eq!(ok(&b).get("fingerprint").as_str(), Some(fp.as_str()));
-        assert_eq!(b.reply.get("reused").as_bool(), Some(true));
+        assert_eq!(ok(&b).get("reused").as_bool(), Some(true));
         assert_eq!(rt.registry().len(), 1);
 
         // Plan by fingerprint: first is a miss, repeat is a cache hit.
         let plan_line = format!(r#"{{"cmd":"plan","fingerprint":"{fp}","planner":"exact"}}"#);
         let p1 = rt.route_line(&plan_line);
         assert_eq!(ok(&p1).get("cache_hit").as_bool(), Some(false));
-        assert!(p1.reply.get("k_segments").as_u64().unwrap() >= 1);
+        assert!(ok(&p1).get("k_segments").as_u64().unwrap() >= 1);
         let p2 = rt.route_line(&plan_line);
         assert_eq!(ok(&p2).get("cache_hit").as_bool(), Some(true));
-        assert_eq!(p1.reply.get("budget_bytes").as_u64(), p2.reply.get("budget_bytes").as_u64());
+        assert!(matches!(p2.reply, ReplyBody::Raw(_)), "plan replies are pre-serialized");
+        assert_eq!(ok(&p1).get("budget_bytes").as_u64(), ok(&p2).get("budget_bytes").as_u64());
     }
 
     #[test]
@@ -552,11 +883,13 @@ mod tests {
             (r#"{"cmd":"plan","network":"unet","budget":"1B"}"#.into(), "plan-failed"),
             (r#"{"cmd":"plan","network":"unet","budget":"65GiB"}"#.into(), "budget-cap"),
             (r#"{"cmd":"plan","network":"unet","budget_frac":7}"#.into(), "bad-request"),
+            (r#"{"cmd":"plan","network":"unet","budget":[1]}"#.into(), "bad-request"),
             (r#"{"cmd":"plan","network":"unet","batch":0}"#.into(), "bad-request"),
             (r#"{"cmd":"plan","network":"unet","batch":99999999}"#.into(), "request-cap"),
             (r#"{"cmd":"plan","network":"unet","objective":"zz"}"#.into(), "bad-request"),
         ] {
-            assert_eq!(err_code(&rt.route_line(&line)), code, "{line}");
+            assert_eq!(err_code(&rt.route_line(&line)), code, "lazy {line}");
+            assert_eq!(err_code(&rt.route_line_eager(&line)), code, "eager {line}");
         }
     }
 
@@ -590,10 +923,14 @@ mod tests {
         let totals = reply.get("session_totals");
         assert!(totals.get("components").as_u64().unwrap() >= 1);
         assert!(totals.get("component_cache_hits").as_u64().is_some());
-        // The router itself records no latency (the connection loop
-        // does), so the ring is empty here.
+        // The router saw no daemon traffic (the connection loop owns
+        // the counters), so the I/O and latency figures are all zero.
         assert_eq!(reply.get("latency_us"), &Json::Null);
         assert_eq!(reply.get("requests").as_u64(), Some(0));
+        assert_eq!(reply.get("bytes_in").as_u64(), Some(0));
+        assert_eq!(reply.get("bytes_out").as_u64(), Some(0));
+        // Both plans above were compile misses, not fast-path hits.
+        assert_eq!(reply.get("fast_path_hits").as_u64(), Some(0));
     }
 
     #[test]
@@ -602,5 +939,94 @@ mod tests {
         let r = rt.route_line(r#"{"cmd":"shutdown"}"#);
         assert!(ok(&r).get("ok").as_bool().unwrap());
         assert!(r.shutdown);
+    }
+
+    #[test]
+    fn lazy_and_eager_paths_agree_reply_for_reply() {
+        // Two fresh routers (so cache state matches call-for-call): every
+        // line must produce the same reply tree through both pipelines.
+        let lazy = router();
+        let eager = router();
+        for line in [
+            r#"{"cmd":"ping"}"#,
+            r#"{"cmd":"ping","id":"c-1"}"#,
+            r#"{"cmd":"plan","network":"unet"}"#,
+            r#"{"cmd":"plan","network":"unet"}"#, // repeat: cache hit both sides
+            r#"{"cmd":"plan","network":"unet","planner":"decomposed","id":7}"#,
+            r#"{"cmd":"plan","network":"unet","budget_frac":0.5,"objective":"mc"}"#,
+            r#"{"cmd":"plan","network":"unet","budget":"1GiB","sim":"strict"}"#,
+            r#"{"cmd":"plan"}"#,
+            r#"{"cmd":"plan","id":"oops","network":"nosuchnet"}"#,
+            r#"{"cmd":"warp","id":3}"#,
+            r#"{"nope":1}"#,
+            "not json",
+        ] {
+            let a = lazy.route_line(line);
+            let b = eager.route_line_eager(line);
+            assert_eq!(a.reply_json(), b.reply_json(), "{line}");
+            assert_eq!(a.is_error, b.is_error, "{line}");
+        }
+    }
+
+    #[test]
+    fn request_ids_echo_on_every_reply_shape() {
+        let rt = router();
+        // Tree ok reply.
+        let r = rt.route_line(r#"{"cmd":"ping","id":"abc"}"#);
+        assert_eq!(ok(&r).get("id").as_str(), Some("abc"));
+        // Raw plan reply (spliced envelope), both miss and hit.
+        let m = rt.route_line(r#"{"cmd":"plan","network":"unet","id":41}"#);
+        assert_eq!(ok(&m).get("id").as_u64(), Some(41));
+        let h = rt.route_line(r#"{"cmd":"plan","network":"unet","id":42}"#);
+        assert_eq!(ok(&h).get("id").as_u64(), Some(42));
+        assert_eq!(ok(&h).get("cache_hit").as_bool(), Some(true));
+        // Error reply.
+        let e = rt.route_line(r#"{"cmd":"warp","id":"x"}"#);
+        assert_eq!(err_code(&e), "unknown-cmd");
+        assert_eq!(e.reply_json().get("id").as_str(), Some("x"));
+        // Non-scalar ids are treated as absent, not echoed.
+        let n = rt.route_line(r#"{"cmd":"ping","id":[1]}"#);
+        assert_eq!(ok(&n).get("id"), &Json::Null);
+    }
+
+    #[test]
+    fn fast_path_hits_count_raw_cache_hits() {
+        let metrics = Arc::new(ServeMetrics::new());
+        let rt = Router::new(
+            SessionRegistry::new(8, PlanCache::shared(64)),
+            metrics.clone(),
+            RouterConfig::default(),
+        );
+        let line = r#"{"cmd":"plan","network":"unet"}"#;
+        let miss = rt.route_line(line);
+        assert_eq!(ok(&miss).get("cache_hit").as_bool(), Some(false));
+        assert_eq!(metrics.fast_path_hits.load(Ordering::Relaxed), 0, "misses don't count");
+        for _ in 0..3 {
+            let hit = rt.route_line(line);
+            assert_eq!(ok(&hit).get("cache_hit").as_bool(), Some(true));
+        }
+        assert_eq!(metrics.fast_path_hits.load(Ordering::Relaxed), 3);
+        // The eager pipeline serves the same hits without the counter.
+        let eager_hit = rt.route_line_eager(line);
+        assert_eq!(ok(&eager_hit).get("cache_hit").as_bool(), Some(true));
+        assert_eq!(metrics.fast_path_hits.load(Ordering::Relaxed), 3);
+    }
+
+    #[test]
+    fn warm_raw_replies_are_byte_identical() {
+        let rt = router();
+        let line = r#"{"cmd":"plan","network":"unet"}"#;
+        let first = rt.route_line(line); // miss: compiles + pre-serializes
+        let raw = |r: &Routed| match &r.reply {
+            ReplyBody::Raw(s) => s.clone(),
+            ReplyBody::Tree(_) => panic!("plan replies are raw"),
+        };
+        let hit1 = raw(&rt.route_line(line));
+        let hit2 = raw(&rt.route_line(line));
+        assert_eq!(hit1, hit2, "identical requests serve identical bytes");
+        assert_ne!(raw(&first), hit1, "only cache_hit differs");
+        // With an id, the reply is the hit plus the spliced id field.
+        let with_id = raw(&rt.route_line(r#"{"cmd":"plan","network":"unet","id":"z"}"#));
+        assert_eq!(with_id.replace(r#""id":"z","#, ""), hit1);
     }
 }

@@ -92,6 +92,14 @@ pub struct ServeMetrics {
     pub errors: AtomicU64,
     /// Requests (or connections) refused by admission control.
     pub rejected: AtomicU64,
+    /// Request bytes read off client sockets (including framing and
+    /// lines later rejected).
+    pub bytes_in: AtomicU64,
+    /// Reply bytes written back to clients (including the newline).
+    pub bytes_out: AtomicU64,
+    /// `plan` cache hits answered by splicing the pre-serialized
+    /// summary bytes — the zero-copy fast path's observability hook.
+    pub fast_path_hits: AtomicU64,
     /// Requests currently being processed.
     pub inflight: AtomicUsize,
     /// Currently open connections.
@@ -108,6 +116,9 @@ impl ServeMetrics {
             requests: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            bytes_in: AtomicU64::new(0),
+            bytes_out: AtomicU64::new(0),
+            fast_path_hits: AtomicU64::new(0),
             inflight: AtomicUsize::new(0),
             connections: AtomicUsize::new(0),
             connections_total: AtomicU64::new(0),

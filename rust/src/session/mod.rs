@@ -58,6 +58,7 @@ use crate::sim::{
     apply_liveness, canonical_trace, measure, vanilla_trace, Event, SimMode, SimOptions,
     SimReport, Trace,
 };
+use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
 
 /// Default capacity of a session's private [`PlanCache`].
@@ -118,6 +119,14 @@ pub struct CompiledPlan {
     pub trace: Trace,
     /// Ready-to-run executable program for [`crate::exec::DagTrainer`].
     pub program: OpProgram,
+    /// Pre-serialized reply summary: the fields of
+    /// [`CompiledPlan::summary_json`] as a compact `"key":value,…`
+    /// fragment (outer braces stripped). Serialized **once** here at
+    /// compile time so the serve daemon's cache hits splice stored
+    /// bytes into their reply envelope instead of rebuilding and
+    /// re-serializing the summary tree per request. Counted by
+    /// [`CompiledPlan::approx_bytes`].
+    pub summary_bytes: Arc<[u8]>,
 }
 
 impl CompiledPlan {
@@ -138,7 +147,44 @@ impl CompiledPlan {
             .sum();
         let events = (self.trace.events.len() * std::mem::size_of::<Event>()) as u64;
         let steps = (self.program.steps.len() * std::mem::size_of::<Step>()) as u64;
-        header + chain + events + steps
+        let summary = self.summary_bytes.len() as u64;
+        header + chain + events + steps + summary
+    }
+
+    /// The canonical machine-readable summary of this plan — the exact
+    /// field set the serve daemon's `plan` reply carries (minus the
+    /// per-request envelope: `ok`/`reply`/`id`/`cache_hit`), and the
+    /// core `repro plan --json` builds its richer document on.
+    pub fn summary_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("fingerprint", self.fingerprint.to_string().into())
+            .set("planner", self.plan.kind.label().into())
+            .set("objective", self.request.objective.label().into())
+            .set("sim", self.request.sim_mode.label().into())
+            .set("budget_bytes", self.plan.budget.into())
+            .set("k_segments", (self.plan.chain.k() as u64).into())
+            .set("overhead", self.plan.overhead.into())
+            .set("predicted_peak", self.program.predicted_peak().into())
+            .set("measured_peak", self.report.peak_bytes.into())
+            .set("peak_total", self.report.peak_total.into());
+        if let Some(info) = &self.plan.decomposition {
+            j = j.set(
+                "decomposition",
+                Json::obj()
+                    .set("components", info.components.into())
+                    .set("cut_vertices", info.cut_vertices.into())
+                    .set("cache_hits", info.cache_hits.into()),
+            );
+        }
+        j
+    }
+
+    /// Serialize [`CompiledPlan::summary_json`] once into the braceless
+    /// fragment stored as [`CompiledPlan::summary_bytes`].
+    fn summary_fragment(&self) -> Arc<[u8]> {
+        let s = self.summary_json().to_string();
+        // A compact object is always "{…}"; keep just the field list.
+        Arc::from(s[1..s.len() - 1].as_bytes())
     }
 }
 
@@ -627,7 +673,7 @@ impl PlanSession {
             report.peak_bytes,
             "program and simulator must agree on the peak"
         );
-        Ok(CompiledPlan {
+        let mut cp = CompiledPlan {
             request: *req,
             fingerprint: self.fingerprint,
             plan,
@@ -635,7 +681,12 @@ impl PlanSession {
             peak_strict,
             trace,
             program,
-        })
+            summary_bytes: Arc::from(&b""[..]),
+        };
+        // Serialize the reply summary exactly once per compilation; every
+        // cache hit after this splices these bytes verbatim.
+        cp.summary_bytes = cp.summary_fragment();
+        Ok(cp)
     }
 }
 
@@ -861,6 +912,55 @@ mod tests {
         assert_eq!(cs2.entries, 3);
         assert_eq!(cs2.evictions, 0);
         assert_eq!(cs2.bytes, expect_bytes, "stats.bytes = Σ approx_bytes of live entries");
+    }
+
+    #[test]
+    fn summary_bytes_count_toward_residency_without_reordering_eviction() {
+        // Regression for the pre-serialized reply summary: it is real
+        // resident memory, so `approx_bytes` must count it — but adding
+        // it must not change which entry the byte/entry caps evict.
+        let cache = PlanCache::shared_with_bytes(2, Some(1 << 30));
+        let s = session_on(diamond(), &cache);
+        let min_b = s.min_feasible_budget(Family::Exact);
+        let plan_at = |delta: u64| {
+            let r = PlanRequest { budget: BudgetSpec::Bytes(min_b + delta), ..req() };
+            s.plan(&r).unwrap()
+        };
+
+        let p0 = plan_at(0);
+        assert!(!p0.summary_bytes.is_empty(), "summary serialized at compile time");
+        assert!(
+            p0.approx_bytes() > p0.summary_bytes.len() as u64,
+            "approx_bytes counts the summary on top of the plan storage"
+        );
+        // The stored fragment is the braceless body of `summary_json`:
+        // re-wrapping it must reproduce the tree exactly.
+        let wrapped = format!("{{{}}}", std::str::from_utf8(&p0.summary_bytes).unwrap());
+        assert_eq!(Json::parse(&wrapped).unwrap(), p0.summary_json());
+
+        let p1 = plan_at(1);
+        assert_eq!(cache.stats().bytes, p0.approx_bytes() + p1.approx_bytes());
+
+        // Third insert against the 2-entry cap: the least-recently-used
+        // entry (delta 0) goes, exactly as before summaries existed.
+        let _p2 = plan_at(2);
+        assert_eq!(cache.stats().entries, 2);
+        assert_eq!(cache.stats().evictions, 1);
+        let again1 = plan_at(1);
+        assert!(Arc::ptr_eq(&p1, &again1), "delta-1 entry survived the eviction");
+        let again0 = plan_at(0);
+        assert!(!Arc::ptr_eq(&p0, &again0), "delta-0 was the LRU victim: recompiled");
+
+        // The oversized-single-entry rule still holds with the summary
+        // included: a cap below one entry's size admits it alone.
+        let tiny = PlanCache::shared_with_bytes(8, Some(p0.approx_bytes() - 1));
+        let s2 = session_on(diamond(), &tiny);
+        let q0 = s2.plan(&PlanRequest { budget: BudgetSpec::Bytes(min_b), ..req() }).unwrap();
+        assert!(q0.approx_bytes() >= p0.approx_bytes(), "same plan, same resident size");
+        assert_eq!(tiny.len(), 1, "oversized entry admitted alone");
+        s2.plan(&PlanRequest { budget: BudgetSpec::Bytes(min_b + 1), ..req() }).unwrap();
+        assert_eq!(tiny.len(), 1, "next insert evicts the oversized resident");
+        assert_eq!(tiny.stats().evictions, 1);
     }
 
     #[test]

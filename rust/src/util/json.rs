@@ -137,6 +137,12 @@ impl Json {
         s
     }
 
+    /// Compact serialization appended to an existing buffer — the
+    /// allocation-free path the serve loop and [`RawJson`] use.
+    pub fn write_compact_into(&self, out: &mut String) {
+        self.write(out, None, 0);
+    }
+
     /// Pretty serialization with 2-space indent.
     pub fn to_string_pretty(&self) -> String {
         let mut s = String::new();
@@ -198,7 +204,7 @@ impl Json {
     // ---- parsing -----------------------------------------------------------
 
     pub fn parse(input: &str) -> Result<Json, JsonError> {
-        let mut p = Parser { b: input.as_bytes(), pos: 0, depth: 0 };
+        let mut p = Parser::new(input);
         p.skip_ws();
         let v = p.value()?;
         p.skip_ws();
@@ -206,6 +212,85 @@ impl Json {
             return Err(p.err("trailing characters"));
         }
         Ok(v)
+    }
+}
+
+/// Incremental single-line JSON *object* writer that can splice
+/// pre-serialized fragments between tree-built fields — the zero-copy
+/// reply path of the serve daemon. The caller is responsible for
+/// splicing only valid `"key":value[,…]` fragments (the daemon's come
+/// from [`Json::write_compact_into`] with the outer braces stripped);
+/// fields built through [`RawJson::field`] are escaped properly.
+pub struct RawJson {
+    buf: String,
+}
+
+impl RawJson {
+    /// An empty object writer (`{` already emitted).
+    pub fn obj() -> RawJson {
+        RawJson::with_capacity(64)
+    }
+
+    /// An empty object writer with a pre-sized buffer.
+    pub fn with_capacity(cap: usize) -> RawJson {
+        let mut buf = String::with_capacity(cap.max(2));
+        buf.push('{');
+        RawJson { buf }
+    }
+
+    fn sep(&mut self) {
+        if self.buf.len() > 1 {
+            self.buf.push(',');
+        }
+    }
+
+    /// Append one `"key":value` field, serializing `v` compactly.
+    pub fn field(&mut self, key: &str, v: &Json) {
+        self.sep();
+        write_escaped(&mut self.buf, key);
+        self.buf.push(':');
+        v.write_compact_into(&mut self.buf);
+    }
+
+    /// Append one boolean field without building a [`Json`] value.
+    pub fn field_bool(&mut self, key: &str, v: bool) {
+        self.sep();
+        write_escaped(&mut self.buf, key);
+        self.buf.push(':');
+        self.buf.push_str(if v { "true" } else { "false" });
+    }
+
+    /// Append one string field without building a [`Json`] value.
+    pub fn field_str(&mut self, key: &str, v: &str) {
+        self.sep();
+        write_escaped(&mut self.buf, key);
+        self.buf.push(':');
+        write_escaped(&mut self.buf, v);
+    }
+
+    /// Splice a pre-serialized `"key":value[,…]` fragment verbatim
+    /// (empty fragments are a no-op). This is the zero-copy step:
+    /// the fragment's fields were serialized once when their source
+    /// was built and are reused byte-for-byte on every reply.
+    pub fn splice(&mut self, fragment: &str) {
+        if fragment.is_empty() {
+            return;
+        }
+        self.sep();
+        self.buf.push_str(fragment);
+    }
+
+    /// Like [`RawJson::splice`] for fragments stored as bytes (the
+    /// serve cache stores `Arc<[u8]>`). Invalid UTF-8 — impossible for
+    /// fragments this module produced — is dropped rather than spliced.
+    pub fn splice_bytes(&mut self, fragment: &[u8]) {
+        self.splice(std::str::from_utf8(fragment).unwrap_or(""));
+    }
+
+    /// Close the object and return the serialized line.
+    pub fn finish(mut self) -> String {
+        self.buf.push('}');
+        self.buf
     }
 }
 
@@ -282,22 +367,38 @@ fn write_escaped(out: &mut String, s: &str) {
     out.push('"');
 }
 
-struct Parser<'a> {
-    b: &'a [u8],
-    pos: usize,
+/// The recursive-descent parser behind [`Json::parse`]. Crate-visible
+/// (not `pub`) so the lazy scanner in [`crate::util::json_lazy`] can
+/// reuse the exact same grammar decisions — depth cap, number syntax,
+/// escape handling, error positions — via skip-variants of these
+/// methods; the two must accept and reject *identical* inputs.
+pub(crate) struct Parser<'a> {
+    pub(crate) b: &'a [u8],
+    pub(crate) pos: usize,
     /// Current container nesting depth, capped at [`MAX_DEPTH`].
-    depth: usize,
+    pub(crate) depth: usize,
 }
 
 impl<'a> Parser<'a> {
-    fn err(&self, msg: &str) -> JsonError {
+    /// A parser positioned at the start of `input`.
+    pub(crate) fn new(input: &'a str) -> Parser<'a> {
+        Parser::new_at(input, 0)
+    }
+
+    /// A parser positioned at byte `pos` of `input` — used by the lazy
+    /// scanner to re-decode a validated span (e.g. an escaped string).
+    pub(crate) fn new_at(input: &'a str, pos: usize) -> Parser<'a> {
+        Parser { b: input.as_bytes(), pos, depth: 0 }
+    }
+
+    pub(crate) fn err(&self, msg: &str) -> JsonError {
         JsonError { msg: msg.to_string(), pos: self.pos }
     }
 
     /// Enter one level of container nesting, erroring past [`MAX_DEPTH`]
     /// — the guard that keeps hostile `[[[[…` input from overflowing the
     /// recursive-descent stack.
-    fn descend(&mut self) -> Result<(), JsonError> {
+    pub(crate) fn descend(&mut self) -> Result<(), JsonError> {
         self.depth += 1;
         if self.depth > MAX_DEPTH {
             return Err(self.err("nesting too deep"));
@@ -305,18 +406,18 @@ impl<'a> Parser<'a> {
         Ok(())
     }
 
-    fn skip_ws(&mut self) {
+    pub(crate) fn skip_ws(&mut self) {
         while self.pos < self.b.len() && matches!(self.b[self.pos], b' ' | b'\t' | b'\n' | b'\r')
         {
             self.pos += 1;
         }
     }
 
-    fn peek(&self) -> Option<u8> {
+    pub(crate) fn peek(&self) -> Option<u8> {
         self.b.get(self.pos).copied()
     }
 
-    fn expect(&mut self, c: u8) -> Result<(), JsonError> {
+    pub(crate) fn expect(&mut self, c: u8) -> Result<(), JsonError> {
         if self.peek() == Some(c) {
             self.pos += 1;
             Ok(())
@@ -325,7 +426,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn literal(&mut self, lit: &str, v: Json) -> Result<Json, JsonError> {
+    pub(crate) fn literal(&mut self, lit: &str, v: Json) -> Result<Json, JsonError> {
         if self.b[self.pos..].starts_with(lit.as_bytes()) {
             self.pos += lit.len();
             Ok(v)
@@ -405,7 +506,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn string(&mut self) -> Result<String, JsonError> {
+    pub(crate) fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut out = String::new();
         loop {
@@ -458,7 +559,7 @@ impl<'a> Parser<'a> {
         }
     }
 
-    fn number(&mut self) -> Result<Json, JsonError> {
+    pub(crate) fn number(&mut self) -> Result<Json, JsonError> {
         let start = self.pos;
         if self.peek() == Some(b'-') {
             self.pos += 1;
@@ -716,6 +817,37 @@ mod tests {
     fn duplicate_keys_last_wins() {
         let v = Json::parse(r#"{"a": 1, "a": 2}"#).unwrap();
         assert_eq!(v.get("a").as_u64(), Some(2));
+    }
+
+    #[test]
+    fn rawjson_splices_fragments_between_fields() {
+        let summary = Json::obj().set("k_segments", 4u64.into()).set("overhead", 17u64.into());
+        let s = summary.to_string();
+        let fragment = &s[1..s.len() - 1]; // strip the outer braces
+        let mut w = RawJson::with_capacity(64);
+        w.field_bool("ok", true);
+        w.field_str("reply", "plan");
+        w.field("id", &Json::Num(7.0));
+        w.splice(fragment);
+        let back = Json::parse(&w.finish()).unwrap();
+        assert_eq!(back.get("ok").as_bool(), Some(true));
+        assert_eq!(back.get("reply").as_str(), Some("plan"));
+        assert_eq!(back.get("id").as_u64(), Some(7));
+        assert_eq!(back.get("k_segments").as_u64(), Some(4));
+        assert_eq!(back.get("overhead").as_u64(), Some(17));
+    }
+
+    #[test]
+    fn rawjson_empty_object_escaping_and_byte_fragments() {
+        assert_eq!(RawJson::obj().finish(), "{}");
+        let mut w = RawJson::obj();
+        w.splice(""); // no-op, must not emit a stray comma
+        w.field_str("a\"b", "x\ny");
+        let back = Json::parse(&w.finish()).unwrap();
+        assert_eq!(back.get("a\"b").as_str(), Some("x\ny"));
+        let mut w = RawJson::obj();
+        w.splice_bytes(br#""n":1"#);
+        assert_eq!(w.finish(), r#"{"n":1}"#);
     }
 
     #[test]

@@ -1,0 +1,468 @@
+//! Lazy, validating JSON field scanner — the serve daemon's request
+//! fast path.
+//!
+//! [`scan_fields`] walks a document with the *same grammar* as
+//! [`Json::parse`] (same depth cap, number syntax, escape rules,
+//! trailing-character check — it literally reuses the eager parser's
+//! internals for literals, numbers and re-decoding) but builds no tree:
+//! containers are skipped, strings are skipped with a span recorded, and
+//! only the requested top-level fields come back, borrowed from the
+//! input wherever no unescaping is needed. On the daemon's hot path
+//! (`{"cmd":"plan","fingerprint":…}`) that means zero allocation per
+//! request instead of a `BTreeMap` per object and a `String` per key.
+//!
+//! The one contract that makes the scanner safe to put in front of the
+//! tree parser: **it accepts exactly the inputs [`Json::parse`]
+//! accepts**. A document the scanner validates can be handed to the
+//! eager parser later (the `graph_upload` fallback) without changing
+//! the error surface, and the differential fuzz suite in
+//! `tests/json_hostile.rs` holds the two to that agreement — including
+//! duplicate-key last-wins, lone-surrogate replacement, and the
+//! [`MAX_DEPTH`] nesting cap.
+
+use std::borrow::Cow;
+
+use super::json::{Json, JsonError, Parser};
+
+/// One extracted top-level field, borrowed from the request line where
+/// possible. `Container` carries the raw span of an array/object value
+/// (validated but unparsed) so callers that need the tree can parse
+/// just that slice.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LazyValue<'a> {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(Cow<'a, str>),
+    Container(&'a str),
+}
+
+impl<'a> LazyValue<'a> {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            LazyValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            LazyValue::Num(n) => Some(*n),
+            _ => None,
+        }
+    }
+
+    /// Mirror of [`Json::as_u64`]: non-negative integral numbers up to
+    /// 2^53 (the f64 exactness boundary).
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            LazyValue::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= 2f64.powi(53) => {
+                Some(*n as u64)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            LazyValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    pub fn is_null(&self) -> bool {
+        matches!(self, LazyValue::Null)
+    }
+
+    /// Materialize this field as a [`Json`] value. Containers parse
+    /// their recorded span — infallible in practice because the scan
+    /// already validated it (`Json::Null` on the impossible failure).
+    pub fn to_json(&self) -> Json {
+        match self {
+            LazyValue::Null => Json::Null,
+            LazyValue::Bool(b) => Json::Bool(*b),
+            LazyValue::Num(n) => Json::Num(*n),
+            LazyValue::Str(s) => Json::Str(s.clone().into_owned()),
+            LazyValue::Container(src) => Json::parse(src).unwrap_or(Json::Null),
+        }
+    }
+}
+
+/// Validate `input` as one JSON document and extract the named
+/// top-level object fields without building a tree.
+///
+/// Returns one slot per `wanted` name: `None` when the document's top
+/// level is not an object or the key is absent, `Some` with the last
+/// occurrence's value otherwise (duplicate keys: last wins, matching
+/// [`Json::parse`]'s `BTreeMap` insert). Errors on exactly the inputs
+/// [`Json::parse`] errors on.
+pub fn scan_fields<'a, const N: usize>(
+    input: &'a str,
+    wanted: &[&str; N],
+) -> Result<[Option<LazyValue<'a>>; N], JsonError> {
+    let mut out: [Option<LazyValue<'a>>; N] = std::array::from_fn(|_| None);
+    let mut p = Parser::new(input);
+    p.skip_ws();
+    if p.peek() == Some(b'{') {
+        scan_top_object(&mut p, input, wanted, &mut out)?;
+    } else {
+        skip_value(&mut p)?;
+    }
+    p.skip_ws();
+    if p.pos != p.b.len() {
+        return Err(p.err("trailing characters"));
+    }
+    Ok(out)
+}
+
+/// What one skipped value was — enough to build a [`LazyValue`] without
+/// having allocated anything during the skip.
+enum Skipped {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str { start: usize, end: usize, escaped: bool },
+    Container,
+}
+
+/// Skip one value, validating with the eager parser's exact grammar.
+/// Literals and numbers reuse [`Parser::literal`] / [`Parser::number`]
+/// directly (both allocation-free); strings and containers get skip
+/// variants that make the same accept/reject decisions.
+fn skip_value(p: &mut Parser<'_>) -> Result<Skipped, JsonError> {
+    match p.peek() {
+        Some(b'n') => p.literal("null", Json::Null).map(|_| Skipped::Null),
+        Some(b't') => p.literal("true", Json::Bool(true)).map(|_| Skipped::Bool(true)),
+        Some(b'f') => p.literal("false", Json::Bool(false)).map(|_| Skipped::Bool(false)),
+        Some(b'"') => {
+            let (start, end, escaped) = skip_string(p)?;
+            Ok(Skipped::Str { start, end, escaped })
+        }
+        Some(b'[') => skip_array(p).map(|_| Skipped::Container),
+        Some(b'{') => skip_object(p).map(|_| Skipped::Container),
+        Some(c) if c == b'-' || c.is_ascii_digit() => {
+            let n = match p.number()? {
+                Json::Num(n) => n,
+                _ => 0.0, // Parser::number only returns Json::Num
+            };
+            Ok(Skipped::Num(n))
+        }
+        Some(_) => Err(p.err("unexpected character")),
+        None => Err(p.err("unexpected end of input")),
+    }
+}
+
+/// Skip a string, returning `(content_start, content_end, escaped)` —
+/// the span between the quotes and whether any escape occurred (when
+/// not, the raw span *is* the decoded string and can be borrowed).
+/// Validates escapes exactly like [`Parser::string`], including the
+/// truncated-`\u` and bad-hex checks, without decoding.
+fn skip_string(p: &mut Parser<'_>) -> Result<(usize, usize, bool), JsonError> {
+    p.expect(b'"')?;
+    let start = p.pos;
+    let mut escaped = false;
+    loop {
+        match p.peek() {
+            None => return Err(p.err("unterminated string")),
+            Some(b'"') => {
+                let end = p.pos;
+                p.pos += 1;
+                return Ok((start, end, escaped));
+            }
+            Some(b'\\') => {
+                escaped = true;
+                p.pos += 1;
+                match p.peek() {
+                    Some(b'"' | b'\\' | b'/' | b'n' | b't' | b'r' | b'b' | b'f') => {}
+                    Some(b'u') => {
+                        if p.pos + 4 >= p.b.len() {
+                            return Err(p.err("truncated \\u escape"));
+                        }
+                        let hex = std::str::from_utf8(&p.b[p.pos + 1..p.pos + 5])
+                            .map_err(|_| p.err("bad \\u escape"))?;
+                        u32::from_str_radix(hex, 16).map_err(|_| p.err("bad \\u escape"))?;
+                        p.pos += 4;
+                    }
+                    _ => return Err(p.err("bad escape")),
+                }
+                p.pos += 1;
+            }
+            Some(_) => {
+                // Fast-forward to the next delimiter. Multi-byte UTF-8
+                // sequences cannot contain the ASCII bytes '"' or '\\',
+                // so byte stepping accepts exactly what the eager
+                // parser's char stepping accepts.
+                while p.pos < p.b.len() && !matches!(p.b[p.pos], b'"' | b'\\') {
+                    p.pos += 1;
+                }
+            }
+        }
+    }
+}
+
+fn skip_array(p: &mut Parser<'_>) -> Result<(), JsonError> {
+    p.expect(b'[')?;
+    p.descend()?;
+    p.skip_ws();
+    if p.peek() == Some(b']') {
+        p.pos += 1;
+        p.depth -= 1;
+        return Ok(());
+    }
+    loop {
+        p.skip_ws();
+        skip_value(p)?;
+        p.skip_ws();
+        match p.peek() {
+            Some(b',') => p.pos += 1,
+            Some(b']') => {
+                p.pos += 1;
+                p.depth -= 1;
+                return Ok(());
+            }
+            _ => return Err(p.err("expected ',' or ']'")),
+        }
+    }
+}
+
+fn skip_object(p: &mut Parser<'_>) -> Result<(), JsonError> {
+    p.expect(b'{')?;
+    p.descend()?;
+    p.skip_ws();
+    if p.peek() == Some(b'}') {
+        p.pos += 1;
+        p.depth -= 1;
+        return Ok(());
+    }
+    loop {
+        p.skip_ws();
+        skip_string(p)?;
+        p.skip_ws();
+        p.expect(b':')?;
+        p.skip_ws();
+        skip_value(p)?;
+        p.skip_ws();
+        match p.peek() {
+            Some(b',') => p.pos += 1,
+            Some(b'}') => {
+                p.pos += 1;
+                p.depth -= 1;
+                return Ok(());
+            }
+            _ => return Err(p.err("expected ',' or '}'")),
+        }
+    }
+}
+
+/// [`skip_object`] for the top level, additionally matching keys
+/// against `wanted` and recording matched values.
+fn scan_top_object<'a, const N: usize>(
+    p: &mut Parser<'a>,
+    input: &'a str,
+    wanted: &[&str; N],
+    out: &mut [Option<LazyValue<'a>>; N],
+) -> Result<(), JsonError> {
+    p.expect(b'{')?;
+    p.descend()?;
+    p.skip_ws();
+    if p.peek() == Some(b'}') {
+        p.pos += 1;
+        p.depth -= 1;
+        return Ok(());
+    }
+    loop {
+        p.skip_ws();
+        let (kstart, kend, kescaped) = skip_string(p)?;
+        let slot = match_key(input, wanted, kstart, kend, kescaped);
+        p.skip_ws();
+        p.expect(b':')?;
+        p.skip_ws();
+        let vstart = p.pos;
+        let sk = skip_value(p)?;
+        let vend = p.pos;
+        if let Some(i) = slot {
+            // Duplicate keys: the later value wins, like the eager
+            // parser's map insert.
+            out[i] = Some(lazy_value(input, sk, vstart, vend));
+        }
+        p.skip_ws();
+        match p.peek() {
+            Some(b',') => p.pos += 1,
+            Some(b'}') => {
+                p.pos += 1;
+                p.depth -= 1;
+                return Ok(());
+            }
+            _ => return Err(p.err("expected ',' or '}'")),
+        }
+    }
+}
+
+fn match_key<const N: usize>(
+    input: &str,
+    wanted: &[&str; N],
+    start: usize,
+    end: usize,
+    escaped: bool,
+) -> Option<usize> {
+    if !escaped {
+        let raw = &input[start..end];
+        return wanted.iter().position(|w| *w == raw);
+    }
+    // Escaped key (rare for protocol traffic): decode through the eager
+    // string parser — skip_string already validated the span.
+    let mut sp = Parser::new_at(input, start - 1);
+    let decoded = sp.string().ok()?;
+    wanted.iter().position(|w| *w == decoded)
+}
+
+fn lazy_value(input: &str, sk: Skipped, vstart: usize, vend: usize) -> LazyValue<'_> {
+    match sk {
+        Skipped::Null => LazyValue::Null,
+        Skipped::Bool(b) => LazyValue::Bool(b),
+        Skipped::Num(n) => LazyValue::Num(n),
+        Skipped::Str { start, end, escaped: false } => {
+            LazyValue::Str(Cow::Borrowed(&input[start..end]))
+        }
+        Skipped::Str { start, escaped: true, .. } => {
+            let mut sp = Parser::new_at(input, start - 1);
+            // skip_string validated the span; decoding cannot fail.
+            LazyValue::Str(Cow::Owned(sp.string().unwrap_or_default()))
+        }
+        Skipped::Container => LazyValue::Container(&input[vstart..vend]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::MAX_DEPTH;
+
+    fn scan1<'a>(input: &'a str, key: &str) -> Option<LazyValue<'a>> {
+        let [v] = scan_fields(input, &[key]).unwrap();
+        v
+    }
+
+    #[test]
+    fn extracts_scalars_without_allocation() {
+        let line = r#"{"cmd":"plan","batch":32,"deep":{"cmd":"nested"},"flag":true,"n":null}"#;
+        let [cmd, batch, flag, n, missing] =
+            scan_fields(line, &["cmd", "batch", "flag", "n", "nope"]).unwrap();
+        let cmd = cmd.unwrap();
+        assert_eq!(cmd.as_str(), Some("plan"));
+        assert!(matches!(cmd, LazyValue::Str(Cow::Borrowed(_))), "unescaped strings borrow");
+        assert_eq!(batch.unwrap().as_u64(), Some(32));
+        assert_eq!(flag.unwrap().as_bool(), Some(true));
+        assert!(n.unwrap().is_null());
+        assert!(missing.is_none(), "absent key stays None");
+        // The nested object's "cmd" must NOT shadow the top-level one.
+        assert_eq!(scan1(line, "deep").unwrap(), LazyValue::Container(r#"{"cmd":"nested"}"#));
+    }
+
+    #[test]
+    fn escaped_keys_and_values_decode_like_the_eager_parser() {
+        let line = r#"{"c\u006dd":"a\nb","plain":"caf\u00e9"}"#;
+        let eager = Json::parse(line).unwrap();
+        assert_eq!(scan1(line, "cmd").unwrap().as_str(), eager.get("cmd").as_str());
+        assert_eq!(scan1(line, "plain").unwrap().as_str(), Some("café"));
+        // Lone surrogates degrade to the replacement char, both paths.
+        let lone = r#"{"s":"\ud800"}"#;
+        assert_eq!(scan1(lone, "s").unwrap().as_str(), Json::parse(lone).unwrap().get("s").as_str());
+    }
+
+    #[test]
+    fn duplicate_keys_last_wins() {
+        let line = r#"{"a":1,"a":2,"a":"three"}"#;
+        assert_eq!(scan1(line, "a").unwrap().as_str(), Some("three"));
+        assert_eq!(Json::parse(line).unwrap().get("a").as_str(), Some("three"));
+    }
+
+    #[test]
+    fn non_object_top_level_validates_with_no_fields() {
+        for doc in ["[1,2,3]", "\"str\"", "42", "true", "null"] {
+            let [v] = scan_fields(doc, &["cmd"]).unwrap();
+            assert!(v.is_none(), "{doc}");
+        }
+    }
+
+    #[test]
+    fn rejects_exactly_what_the_eager_parser_rejects() {
+        for src in [
+            "",
+            "   ",
+            "{",
+            "}",
+            "[",
+            "[1,]",
+            "[1 2]",
+            "{\"a\":}",
+            "{\"a\" 1}",
+            "{a: 1}",
+            "{\"a\": 1,}",
+            "nul",
+            "tru",
+            "falsy",
+            "'single'",
+            "\"unterminated",
+            "\"bad escape \\q\"",
+            "\"trunc \\u00",
+            "01x",
+            "- 1",
+            "+1",
+            "NaN",
+            "Infinity",
+            "[1] extra",
+            "{\"a\": 1} {\"b\": 2}",
+            "{\"a\":1}x",
+        ] {
+            assert_eq!(
+                scan_fields(src, &["a"]).is_err(),
+                Json::parse(src).is_err(),
+                "disagreement on {src:?}"
+            );
+            assert!(scan_fields(src, &["a"]).is_err(), "should reject: {src:?}");
+        }
+    }
+
+    #[test]
+    fn depth_limit_matches_the_eager_parser() {
+        let ok = "[".repeat(MAX_DEPTH) + "1" + &"]".repeat(MAX_DEPTH);
+        assert!(scan_fields(&ok, &["a"]).is_ok());
+        let deep = "[".repeat(MAX_DEPTH + 1) + "1" + &"]".repeat(MAX_DEPTH + 1);
+        let e = scan_fields(&deep, &["a"]).unwrap_err();
+        assert!(e.to_string().contains("nesting too deep"), "{e}");
+        assert!(scan_fields(&"[".repeat(200_000), &["a"]).is_err());
+        assert!(scan_fields(&"{\"a\":".repeat(200_000), &["a"]).is_err());
+        // The wanted value itself may be a deep container — the span
+        // comes back raw and parses to the same tree.
+        let nested = format!("{{\"a\":{ok}}}");
+        let v = scan1(&nested, "a").unwrap();
+        assert_eq!(v.to_json(), Json::parse(&nested).unwrap().get("a").clone());
+    }
+
+    #[test]
+    fn number_semantics_mirror_json() {
+        for (doc, want) in [
+            (r#"{"n":7}"#, Some(7u64)),
+            (r#"{"n":-7}"#, None),
+            (r#"{"n":7.5}"#, None),
+            (r#"{"n":-0.0}"#, Some(0)),
+            (r#"{"n":1e3}"#, Some(1000)),
+            (r#"{"n":18014398509481984}"#, None),
+        ] {
+            let lazy = scan1(doc, "n").unwrap().as_u64();
+            assert_eq!(lazy, want, "{doc}");
+            assert_eq!(lazy, Json::parse(doc).unwrap().get("n").as_u64(), "{doc}");
+        }
+        assert_eq!(scan1(r#"{"n":2.5e10}"#, "n").unwrap().as_f64(), Some(2.5e10));
+    }
+
+    #[test]
+    fn whitespace_and_to_json_roundtrip() {
+        let line = " \t\r\n { \"a\" : [ 1 , {\"b\": \"x\"} ] , \"c\" : \"d\" } \n";
+        let [a, c] = scan_fields(line, &["a", "c"]).unwrap();
+        let eager = Json::parse(line).unwrap();
+        assert_eq!(a.unwrap().to_json(), eager.get("a").clone());
+        assert_eq!(c.unwrap().to_json(), eager.get("c").clone());
+    }
+}

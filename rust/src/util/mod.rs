@@ -5,6 +5,8 @@
 //!
 //! - [`json`] — JSON value model + parser + serializer (graph files, the
 //!   AOT artifact manifest, configs, reports).
+//! - [`json_lazy`] — validating field scanner over the same grammar,
+//!   building no tree (the serve daemon's request fast path).
 //! - [`pool`] — zero-dependency worker pool with deterministic indexed
 //!   maps (the threaded planner's substrate).
 //! - [`rng`] — deterministic PCG32 generator (synthetic data, random-DAG
@@ -12,6 +14,7 @@
 //! - [`table`] — plain-text table rendering for the paper-style reports.
 
 pub mod json;
+pub mod json_lazy;
 pub mod pool;
 pub mod rng;
 pub mod table;

@@ -1,17 +1,23 @@
-//! Fuzz-style hostile-input corpus against the two byte-facing surfaces:
-//! the hardened JSON parser (`util::json`) and the serve request router.
+//! Fuzz-style hostile-input corpus against the three byte-facing
+//! surfaces: the hardened JSON parser (`util::json`), the lazy field
+//! scanner (`util::json_lazy`) that fronts it in the serve daemon, and
+//! the serve request router.
 //!
 //! A seeded generator mutates valid seed documents — truncation, byte
 //! flips (mangled UTF-8 included, fed through lossy replacement since
-//! both surfaces take `&str`), noise insertion, slice duplication — plus
-//! hand-picked pathologies (deep nesting, over-long inputs, NUL bytes,
-//! lone surrogates). The invariants under test:
+//! all three surfaces take `&str`), noise insertion, slice duplication —
+//! plus hand-picked pathologies (deep nesting, over-long inputs, NUL
+//! bytes, lone surrogates). The invariants under test:
 //!
 //! - `Json::parse` never panics: every input returns `Ok` or a
 //!   positioned `JsonError`;
+//! - `scan_fields` agrees with `Json::parse` on **every** input —
+//!   same accept/reject decision, same extracted field values, no
+//!   panics, and error positions that never point past the input;
 //! - `Router::route_line` is total: every input produces exactly one
 //!   reply object with an `"ok"` bool, and error replies carry a
-//!   structured `{"code", "msg"}`.
+//!   structured `{"code", "msg"}` — and the lazy dispatch agrees with
+//!   the eager pipeline reply-for-reply.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::Arc;
@@ -20,6 +26,7 @@ use recompute::serve::{Router, RouterConfig, ServeMetrics};
 use recompute::session::{PlanCache, SessionRegistry};
 use recompute::testutil::diamond;
 use recompute::util::json::Json;
+use recompute::util::json_lazy::scan_fields;
 use recompute::util::rng::Pcg32;
 
 fn router() -> Router {
@@ -40,6 +47,25 @@ fn seeds() -> Vec<String> {
         r#"{"cmd":"plan","network":"unet","budget":"512KiB","objective":"tc"}"#.to_string(),
         r#"{"cmd":"stats"}"#.to_string(),
         r#"[1,2.5,-3e7,true,false,null,"café \"quoted\"",{"k":[{}]}]"#.to_string(),
+    ]
+}
+
+/// Hand-picked pathologies: deep nesting, NUL bytes, lone surrogates,
+/// escaped keys, duplicate keys, huge strings.
+fn pathologies() -> Vec<String> {
+    vec![
+        "[".repeat(100_000),
+        format!("{}1", r#"{"a":"#.repeat(50_000)),
+        format!("{}{}", "[".repeat(10_000), "]".repeat(10_000)),
+        "\u{0}\u{0}\u{0}".to_string(),
+        "{\"cmd\":\"\u{0}embedded nul\u{0}\"}".to_string(),
+        r#"{"cmd":"\ud800"}"#.to_string(),
+        r#"{"cmd":"𐀀","id":"\udfff"}"#.to_string(),
+        r#"{"cmd":"ping","id":1e308,"x":[{"cmd":"nested"}]}"#.to_string(),
+        r#"{"cmd":"plan","cmd":null,"cmd":"ping"}"#.to_string(),
+        format!(r#"{{"cmd":"{}"}}"#, "x".repeat(1 << 20)),
+        r#""trunc \u00"#.to_string(),
+        r#"{"cmd" :  "ping" , "id":"A\t"}  "#.to_string(),
     ]
 }
 
@@ -82,6 +108,44 @@ fn mutate(rng: &mut Pcg32, s: &str) -> String {
     String::from_utf8_lossy(&b).into_owned()
 }
 
+/// The serve router's scan surface, as seen by the differential check.
+const PROTO_KEYS: [&str; 6] = ["cmd", "id", "fingerprint", "network", "budget", "graph"];
+
+/// Feed one input to both the eager parser and the lazy scanner and
+/// hold them to full agreement: same accept/reject, same extracted
+/// field values, in-bounds error positions, no panics.
+fn assert_parsers_agree(input: &str) {
+    let eager = catch_unwind(AssertUnwindSafe(|| Json::parse(input)))
+        .unwrap_or_else(|_| panic!("eager parser panicked on {} bytes", input.len()));
+    let lazy = catch_unwind(AssertUnwindSafe(|| scan_fields(input, &PROTO_KEYS)))
+        .unwrap_or_else(|_| panic!("lazy scanner panicked on {} bytes", input.len()));
+    match (eager, lazy) {
+        (Ok(tree), Ok(fields)) => {
+            for (key, lv) in PROTO_KEYS.iter().zip(fields.iter()) {
+                let want = tree.get(key);
+                match lv {
+                    // Scanner slot empty: absent key or non-object top
+                    // level — both read as Null through `Json::get`.
+                    None => assert_eq!(want, &Json::Null, "key {key} on {input:?}"),
+                    Some(v) => assert_eq!(&v.to_json(), want, "key {key} on {input:?}"),
+                }
+            }
+        }
+        (Err(e), Err(l)) => {
+            // Positioned errors must stay inside the input — neither
+            // parser ever claims to have read past what it was given.
+            assert!(e.pos <= input.len(), "eager pos {} past {} bytes", e.pos, input.len());
+            assert!(l.pos <= input.len(), "lazy pos {} past {} bytes", l.pos, input.len());
+        }
+        (eager, lazy) => panic!(
+            "accept/reject disagreement on {:?}…: eager_ok={} lazy_ok={}",
+            input.chars().take(120).collect::<String>(),
+            eager.is_ok(),
+            lazy.is_ok()
+        ),
+    }
+}
+
 #[test]
 fn corpus_generator_is_deterministic() {
     let (mut a, mut b) = (Pcg32::seeded(99), Pcg32::seeded(99));
@@ -109,6 +173,25 @@ fn mutated_corpus_never_panics_the_json_parser() {
 }
 
 #[test]
+fn lazy_scanner_agrees_with_the_eager_parser_on_the_whole_corpus() {
+    // Every seed line verbatim…
+    for s in seeds() {
+        assert_parsers_agree(&s);
+    }
+    // …every hand-picked pathology…
+    for p in pathologies() {
+        assert_parsers_agree(&p);
+    }
+    // …and a fresh seeded mutation stream.
+    let seeds = seeds();
+    let mut rng = Pcg32::seeded(0x1a27);
+    for _ in 0..600 {
+        let seed = &seeds[rng.below(seeds.len() as u32) as usize];
+        assert_parsers_agree(&mutate(&mut rng, seed));
+    }
+}
+
+#[test]
 fn mutated_corpus_gets_structured_replies_from_the_router() {
     let rt = router();
     let seeds = seeds();
@@ -118,14 +201,54 @@ fn mutated_corpus_gets_structured_replies_from_the_router() {
         let line = mutate(&mut rng, seed);
         let outcome = catch_unwind(AssertUnwindSafe(|| rt.route_line(&line)));
         let routed = outcome.unwrap_or_else(|_| panic!("round {round} panicked on {line:?}"));
-        let ok = routed.reply.get("ok").as_bool();
-        assert!(ok.is_some(), "round {round}: reply without 'ok': {}", routed.reply.to_string());
+        let reply = routed.reply_json();
+        let ok = reply.get("ok").as_bool();
+        assert!(ok.is_some(), "round {round}: reply without 'ok': {}", reply.to_string());
         assert_eq!(ok == Some(false), routed.is_error);
         if routed.is_error {
-            let code = routed.reply.get("error").get("code").as_str().unwrap_or("");
+            let code = reply.get("error").get("code").as_str().unwrap_or("");
             assert!(!code.is_empty(), "round {round}: error reply without a code");
         }
         assert!(!routed.shutdown, "mutations never form a shutdown command");
+    }
+}
+
+/// Strip the fields that legitimately differ between two router
+/// instances answering the same request stream (wall-clock uptime; the
+/// fast-path counter only the lazy pipeline increments).
+fn scrub(mut j: Json) -> Json {
+    if let Json::Obj(ref mut o) = j {
+        o.remove("uptime_ms");
+        o.remove("fast_path_hits");
+    }
+    j
+}
+
+#[test]
+fn lazy_and_eager_router_pipelines_agree_on_the_mutated_corpus() {
+    // Two routers fed the identical line sequence — one through the
+    // lazy dispatch, one through the eager tree pipeline — must produce
+    // the same replies, including on hostile input.
+    let (lazy_rt, eager_rt) = (router(), router());
+    let seeds = seeds();
+    let mut rng = Pcg32::seeded(0x0dd5);
+    for round in 0..300 {
+        let seed = &seeds[rng.below(seeds.len() as u32) as usize];
+        let line = mutate(&mut rng, seed);
+        let a = lazy_rt.route_line(&line);
+        let b = eager_rt.route_line_eager(&line);
+        assert_eq!(
+            scrub(a.reply_json()),
+            scrub(b.reply_json()),
+            "round {round} disagrees on {line:?}"
+        );
+        assert_eq!(a.is_error, b.is_error, "round {round}");
+    }
+    // The pathologies too (all rejected or answered identically).
+    for line in pathologies() {
+        let a = lazy_rt.route_line(&line);
+        let b = eager_rt.route_line_eager(&line);
+        assert_eq!(scrub(a.reply_json()), scrub(b.reply_json()), "{} bytes", line.len());
     }
 }
 
@@ -138,9 +261,10 @@ fn deep_nesting_is_rejected_not_overflowed() {
     let closed = format!("{}{}", "[".repeat(10_000), "]".repeat(10_000));
     for hostile in [&arrays, &objects, &mixed, &closed] {
         assert!(Json::parse(hostile).is_err(), "depth limit must reject {} bytes", hostile.len());
+        assert!(scan_fields(hostile, &["cmd"]).is_err(), "scanner must also reject");
         let routed = rt.route_line(hostile);
         assert!(routed.is_error);
-        assert_eq!(routed.reply.get("error").get("code").as_str(), Some("bad-json"));
+        assert_eq!(routed.reply_json().get("error").get("code").as_str(), Some("bad-json"));
     }
 }
 
@@ -164,8 +288,9 @@ fn overlong_and_malformed_inputs_never_panic() {
     for input in &cases {
         let parse = catch_unwind(AssertUnwindSafe(|| Json::parse(input).map(drop)));
         assert!(parse.is_ok(), "parser panicked on {} bytes", input.len());
+        assert_parsers_agree(input);
         let routed = catch_unwind(AssertUnwindSafe(|| rt.route_line(input)))
             .unwrap_or_else(|_| panic!("router panicked on {} bytes", input.len()));
-        assert!(routed.reply.get("ok").as_bool().is_some());
+        assert!(routed.reply_json().get("ok").as_bool().is_some());
     }
 }

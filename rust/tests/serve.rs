@@ -137,6 +137,15 @@ fn concurrent_isomorphic_clients_share_one_plan_cache() {
         lat.get("p99_us").as_u64().unwrap(),
     );
     assert!(p50 <= p90 && p90 <= p99 && p99 <= lat.get("max_us").as_u64().unwrap());
+    // Byte counters move in both directions, and every client's second
+    // plan request was a warm hit served by the zero-copy fast path.
+    assert!(stats.get("bytes_in").as_u64().unwrap() > 0, "{}", stats.to_string());
+    assert!(stats.get("bytes_out").as_u64().unwrap() > 0);
+    assert!(
+        stats.get("fast_path_hits").as_u64().unwrap() >= CLIENTS as u64,
+        "{}",
+        stats.to_string()
+    );
 
     handle.shutdown();
     join.join().unwrap().unwrap();
