@@ -12,6 +12,7 @@
 
 use std::sync::Arc;
 
+use recompute::analysis::{audit_plan, PlanAudit};
 use recompute::bench::{bench, bench_report_json, time_once, BenchStats};
 use recompute::graph::{
     enumerate_lower_sets, pruned_lower_sets, EnumerationLimit, GraphBuilder, NodeId, NodeSet,
@@ -229,6 +230,47 @@ fn main() {
     );
     collected.push(whole);
     collected.push(dec);
+
+    println!("\n== static schedule audit overhead (analysis::audit_plan) ==");
+    // The session runs the auditor on every compile; these entries pin
+    // the sweep's cost to a sliver of the compile it guards — the
+    // assertion below is the "<5% of compile time" budget from the
+    // correctness-tooling roadmap item, enforced on every bench run.
+    for (name, g) in [
+        ("audit_resnet50", zoo::find("resnet50").expect("zoo model").build_batch(4)),
+        ("audit_block_stack_992", recompute::models::block_stack(30, 2, 16, 4)),
+    ] {
+        let session = PlanSession::new(g);
+        let req = PlanRequest::new(PlannerId::ApproxDp, Objective::MinOverhead);
+        let (cp, compile) = time_once(|| session.plan(&req).unwrap());
+        let g = session.graph();
+        let stats = bench(name, 1, iters.max(3), || {
+            let rep = audit_plan(&PlanAudit {
+                graph: g,
+                chain: &cp.plan.chain,
+                trace: &cp.trace,
+                mode: cp.request.sim_mode,
+                budget: Some(cp.plan.budget),
+                predicted_peak: Some(cp.report.peak_bytes),
+                program_peak: Some(cp.program.predicted_peak()),
+            });
+            assert!(rep.is_clean(), "{name}: a healthy compile must audit clean");
+            rep.static_peak
+        });
+        println!("{}", stats.summary());
+        println!(
+            "  audit/compile {:.2}%  ({} events)",
+            100.0 * stats.median.as_secs_f64() / compile.as_secs_f64().max(1e-9),
+            cp.audit.events
+        );
+        assert!(
+            stats.median.as_secs_f64() < 0.05 * compile.as_secs_f64(),
+            "{name}: audit must stay under 5% of compile time \
+             (audit {:?} vs compile {compile:?})",
+            stats.median
+        );
+        collected.push(stats);
+    }
 
     let doc = bench_report_json("planner", &collected);
     std::fs::write("BENCH_planner.json", doc.to_string_pretty())

@@ -11,7 +11,9 @@
 //!     `{name, iters, min_ms, median_ms, mean_ms, max_ms}` with positive
 //!     finite timings and `iters ≥ 1`;
 //!   * the `planner` suite must keep at least one `decomposed_*` result
-//!     — the divide-and-conquer section must not silently drop out;
+//!     — the divide-and-conquer section must not silently drop out —
+//!     and at least one `audit_*` result — the static-auditor overhead
+//!     guard must not silently drop out;
 //!   * the `runtime` suite must keep at least one `serve_*` result —
 //!     the daemon-dispatch section (lazy fast path vs eager pipeline)
 //!     must not silently drop out.
@@ -87,6 +89,9 @@ fn main() -> Result<()> {
     // depends on.
     if fresh_suite == "planner" && !fresh_names.iter().any(|n| n.starts_with("decomposed_")) {
         bail!("planner suite lost its decomposed_* results — keep the divide-and-conquer section");
+    }
+    if fresh_suite == "planner" && !fresh_names.iter().any(|n| n.starts_with("audit_")) {
+        bail!("planner suite lost its audit_* results — keep the static-auditor overhead guard");
     }
     if fresh_suite == "runtime" && !fresh_names.iter().any(|n| n.starts_with("serve_")) {
         bail!("runtime suite lost its serve_* results — keep the daemon-dispatch section");

@@ -1,0 +1,896 @@
+//! Static schedule auditor: dataflow verification over traces and plans.
+//!
+//! The paper's safety argument — every discarded tensor is recomputed
+//! before its next use, and the predicted peak bounds the budget — is
+//! checked here *statically*, without executing anything. The auditor is
+//! an abstract interpretation of a [`Trace`]: one sweep over the event
+//! stream tracks every buffer through the lifetime lattice
+//! `unallocated → live → freed` and emits a structured [`Diagnostic`]
+//! for each transition the canonical strategy forbids. A second pass
+//! ([`audit_chain`]) checks the plan itself: lower-set chain invariants
+//! and checkpoint coverage (each segment's backward reads must be served
+//! by boundaries cached in earlier segments). [`audit_plan`] composes
+//! both and cross-checks the statically recomputed peak against the
+//! simulator's prediction, the compiled program's prediction, and the
+//! requested budget.
+//!
+//! Every finding carries a stable rule code (the [`Rule`] table below);
+//! the same codes appear in release-build executor checks
+//! ([`crate::exec`] live-byte accounting), in `repro audit` output, in
+//! `plan --json` summaries, and in the serve daemon's `audit-failed`
+//! rejections — one vocabulary for schedule defects across the stack.
+//!
+//! | code | rule | severity | meaning |
+//! |------|------|----------|---------|
+//! | A001 | use-after-free | error | read of a freed buffer |
+//! | A002 | double-free | error | free of a freed or never-allocated buffer |
+//! | A003 | alloc-over-live | error | allocation of an already-live buffer |
+//! | A004 | leak-at-exit | error | buffer still live when the step ends |
+//! | A005 | liveness-free-placement | warning | free not at its buffer's last-use op group |
+//! | A006 | use-before-alloc | error | read of a buffer never materialized |
+//! | A007 | recompute-gap | error | read of a recomputed value before its recompute ran |
+//! | A008 | backprop-order | error | backward op without its gradient, or duplicated/missing backward |
+//! | A009 | chain-invariant | error | chain is not a strictly increasing lower-set chain ending at V |
+//! | A010 | checkpoint-coverage | error | segment backward read not covered by cached boundaries |
+//! | A011 | peak-mismatch | error | static peak disagrees with simulator/program prediction |
+//! | A012 | budget-exceeded | error | analytic (Eq. 2) peak exceeds the requested budget |
+//! | A013 | live-underflow | error | freeing more bytes than are live |
+
+use std::collections::HashMap;
+
+use crate::anyhow::{bail, Result};
+use crate::graph::{Graph, NodeSet};
+use crate::planner::LowerSetChain;
+use crate::sim::{Buffer, Event, SimMode, Trace};
+use crate::util::json::Json;
+
+/// Prefix of every audit-rejection error message. The serve daemon and
+/// the CLI match on this to map audit failures to their own error
+/// surface (`audit-failed`) instead of a generic plan failure.
+pub const AUDIT_FAILED_PREFIX: &str = "schedule audit failed";
+
+/// Graph name that triggers deliberate stitch corruption in the
+/// decomposed planner — a test hook so integration tests (and the serve
+/// acceptance gate) can observe a real `audit-failed` rejection end to
+/// end. Production graphs never carry this name.
+pub const FAULT_INJECT_GRAPH: &str = "audit-fault-inject";
+
+/// How bad a diagnostic is. `Error` findings make a plan unusable;
+/// `Warning` findings are pessimizations (escalated by `--deny-audit`).
+#[derive(Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Debug)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// The stable rule-code table (see the module docs for the full list).
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+pub enum Rule {
+    UseAfterFree,
+    DoubleFree,
+    AllocOverLive,
+    LeakAtExit,
+    LivenessFreePlacement,
+    UseBeforeAlloc,
+    RecomputeGap,
+    BackpropOrder,
+    ChainInvariant,
+    CheckpointCoverage,
+    PeakMismatch,
+    BudgetExceeded,
+    LiveUnderflow,
+}
+
+impl Rule {
+    /// Every rule, in code order (for `repro audit --rules` and docs).
+    pub const ALL: [Rule; 13] = [
+        Rule::UseAfterFree,
+        Rule::DoubleFree,
+        Rule::AllocOverLive,
+        Rule::LeakAtExit,
+        Rule::LivenessFreePlacement,
+        Rule::UseBeforeAlloc,
+        Rule::RecomputeGap,
+        Rule::BackpropOrder,
+        Rule::ChainInvariant,
+        Rule::CheckpointCoverage,
+        Rule::PeakMismatch,
+        Rule::BudgetExceeded,
+        Rule::LiveUnderflow,
+    ];
+
+    /// Stable machine code (`A001`…): never renumbered, safe to match on.
+    pub fn code(self) -> &'static str {
+        match self {
+            Rule::UseAfterFree => "A001",
+            Rule::DoubleFree => "A002",
+            Rule::AllocOverLive => "A003",
+            Rule::LeakAtExit => "A004",
+            Rule::LivenessFreePlacement => "A005",
+            Rule::UseBeforeAlloc => "A006",
+            Rule::RecomputeGap => "A007",
+            Rule::BackpropOrder => "A008",
+            Rule::ChainInvariant => "A009",
+            Rule::CheckpointCoverage => "A010",
+            Rule::PeakMismatch => "A011",
+            Rule::BudgetExceeded => "A012",
+            Rule::LiveUnderflow => "A013",
+        }
+    }
+
+    /// Kebab-case rule name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Rule::UseAfterFree => "use-after-free",
+            Rule::DoubleFree => "double-free",
+            Rule::AllocOverLive => "alloc-over-live",
+            Rule::LeakAtExit => "leak-at-exit",
+            Rule::LivenessFreePlacement => "liveness-free-placement",
+            Rule::UseBeforeAlloc => "use-before-alloc",
+            Rule::RecomputeGap => "recompute-gap",
+            Rule::BackpropOrder => "backprop-order",
+            Rule::ChainInvariant => "chain-invariant",
+            Rule::CheckpointCoverage => "checkpoint-coverage",
+            Rule::PeakMismatch => "peak-mismatch",
+            Rule::BudgetExceeded => "budget-exceeded",
+            Rule::LiveUnderflow => "live-underflow",
+        }
+    }
+
+    /// One-line description (rule table rendering).
+    pub fn describe(self) -> &'static str {
+        match self {
+            Rule::UseAfterFree => "read of a freed buffer",
+            Rule::DoubleFree => "free of a freed or never-allocated buffer",
+            Rule::AllocOverLive => "allocation of an already-live buffer",
+            Rule::LeakAtExit => "buffer still live when the step ends",
+            Rule::LivenessFreePlacement => {
+                "free not placed at its buffer's last-use op group (liveness mode)"
+            }
+            Rule::UseBeforeAlloc => "read of a buffer that was never materialized",
+            Rule::RecomputeGap => "read of a recomputed value before its recompute ran",
+            Rule::BackpropOrder => {
+                "backward op without its gradient, or duplicated/missing backward"
+            }
+            Rule::ChainInvariant => {
+                "chain is not a strictly increasing lower-set chain ending at V"
+            }
+            Rule::CheckpointCoverage => {
+                "segment backward read not covered by boundaries cached earlier"
+            }
+            Rule::PeakMismatch => "static peak disagrees with simulator/program prediction",
+            Rule::BudgetExceeded => "analytic (Eq. 2) peak exceeds the requested budget",
+            Rule::LiveUnderflow => "freeing more bytes than are live",
+        }
+    }
+
+    /// The severity this rule fires at.
+    pub fn severity(self) -> Severity {
+        match self {
+            Rule::LivenessFreePlacement => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+}
+
+/// One audit finding: a rule violation anchored to the trace event (or
+/// chain position) that exhibits it.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub severity: Severity,
+    /// Index into `Trace::events` (`None` for chain/summary findings).
+    pub event_index: Option<usize>,
+    /// Op group of the offending event (`Trace::op_of`).
+    pub op: Option<u32>,
+    /// The buffer involved, when the finding concerns one.
+    pub buffer: Option<Buffer>,
+    pub message: String,
+}
+
+impl Diagnostic {
+    fn new(rule: Rule, message: String) -> Diagnostic {
+        Diagnostic {
+            rule,
+            severity: rule.severity(),
+            event_index: None,
+            op: None,
+            buffer: None,
+            message,
+        }
+    }
+
+    fn at(rule: Rule, event: usize, op: u32, buffer: Buffer, message: String) -> Diagnostic {
+        Diagnostic {
+            event_index: Some(event),
+            op: Some(op),
+            buffer: Some(buffer),
+            ..Diagnostic::new(rule, message)
+        }
+    }
+
+    /// `fwd(v12)#1` / `grad(v3)` — id-based, stable without the graph.
+    fn buffer_label(buffer: Buffer) -> String {
+        match buffer {
+            Buffer::Fwd { node, gen } => format!("fwd(v{})#{gen}", node.0),
+            Buffer::Grad { node } => format!("grad(v{})", node.0),
+        }
+    }
+
+    /// One table row: `A001 error  ev 123 op 45 fwd(v3)#0  message`.
+    pub fn render(&self) -> String {
+        let ev = self.event_index.map_or("-".to_string(), |i| i.to_string());
+        let op = self.op.map_or("-".to_string(), |o| o.to_string());
+        let buf = self.buffer.map_or("-".to_string(), Diagnostic::buffer_label);
+        format!(
+            "{} {:<7} {:>6} {:>5} {:<14} {}",
+            self.rule.code(),
+            self.severity.label(),
+            ev,
+            op,
+            buf,
+            self.message
+        )
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj()
+            .set("rule", Json::Str(self.rule.code().to_string()))
+            .set("name", Json::Str(self.rule.name().to_string()))
+            .set("severity", Json::Str(self.severity.label().to_string()))
+            .set("message", Json::Str(self.message.clone()));
+        if let Some(i) = self.event_index {
+            j = j.set("event", Json::from_u64(i as u64));
+        }
+        if let Some(o) = self.op {
+            j = j.set("op", Json::from_u64(u64::from(o)));
+        }
+        if let Some(b) = self.buffer {
+            j = j.set("buffer", Json::Str(Diagnostic::buffer_label(b)));
+        }
+        j
+    }
+}
+
+/// Result of one audit: the findings plus the sweep's own accounting.
+#[derive(Clone, Debug, Default)]
+pub struct AuditReport {
+    /// Findings in discovery order (trace sweep, then chain, then
+    /// summary cross-checks).
+    pub diagnostics: Vec<Diagnostic>,
+    /// Peak live activation+gradient bytes recomputed by the sweep —
+    /// independent of (and compared against) the simulator's fold.
+    pub static_peak: u64,
+    /// Trace events swept.
+    pub events: usize,
+}
+
+impl AuditReport {
+    /// No findings at all.
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    pub fn error_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Error).count()
+    }
+
+    pub fn warning_count(&self) -> usize {
+        self.diagnostics.iter().filter(|d| d.severity == Severity::Warning).count()
+    }
+
+    /// `true` if any diagnostic fired at a severity that blocks the plan
+    /// (`Error` always; `Warning` too when `deny_warnings`).
+    pub fn is_blocked(&self, deny_warnings: bool) -> bool {
+        self.error_count() > 0 || (deny_warnings && self.warning_count() > 0)
+    }
+
+    /// Turn findings into a hard failure. Error messages start with
+    /// [`AUDIT_FAILED_PREFIX`] and lead with the first blocking finding,
+    /// so callers (serve, CLI) can both match and display them.
+    pub fn gate(&self, deny_warnings: bool) -> Result<()> {
+        if !self.is_blocked(deny_warnings) {
+            return Ok(());
+        }
+        let first = self
+            .diagnostics
+            .iter()
+            .find(|d| d.severity == Severity::Error || deny_warnings)
+            .unwrap_or_else(|| &self.diagnostics[0]);
+        bail!(
+            "{AUDIT_FAILED_PREFIX}: {} {}: {} ({} error(s), {} warning(s))",
+            first.rule.code(),
+            first.rule.name(),
+            first.message,
+            self.error_count(),
+            self.warning_count()
+        )
+    }
+
+    /// `clean` / `3 errors, 1 warning` — for summaries and stats lines.
+    pub fn verdict(&self) -> String {
+        if self.is_clean() {
+            "clean".to_string()
+        } else {
+            format!("{} errors, {} warnings", self.error_count(), self.warning_count())
+        }
+    }
+
+    /// The diagnostic table (header + one row per finding).
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "{:<4} {:<7} {:>6} {:>5} {:<14} message\n",
+            "rule", "sev", "event", "op", "buffer"
+        ));
+        for d in &self.diagnostics {
+            out.push_str(&d.render());
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Machine-readable report (`repro audit --json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("clean", Json::Bool(self.is_clean()))
+            .set("errors", Json::from_u64(self.error_count() as u64))
+            .set("warnings", Json::from_u64(self.warning_count() as u64))
+            .set("events", Json::from_u64(self.events as u64))
+            .set("static_peak", Json::from_u64(self.static_peak))
+            .set("diagnostics", Json::Arr(self.diagnostics.iter().map(Diagnostic::to_json).collect()))
+    }
+
+    /// Resident-size estimate (plan-cache byte accounting).
+    pub fn approx_bytes(&self) -> usize {
+        std::mem::size_of::<AuditReport>()
+            + self
+                .diagnostics
+                .iter()
+                .map(|d| std::mem::size_of::<Diagnostic>() + d.message.len())
+                .sum::<usize>()
+    }
+}
+
+/// Everything [`audit_plan`] cross-checks a compiled plan against.
+pub struct PlanAudit<'a> {
+    pub graph: &'a Graph,
+    pub chain: &'a LowerSetChain,
+    /// The mode-rewritten trace the program was compiled from.
+    pub trace: &'a Trace,
+    pub mode: SimMode,
+    /// Activation budget the plan was solved under (`None` for planners
+    /// that resolve budgets internally, e.g. Chen's per-segment sweep).
+    pub budget: Option<u64>,
+    /// The simulator's predicted activation peak for the same mode.
+    pub predicted_peak: Option<u64>,
+    /// The compiled program's predicted peak.
+    pub program_peak: Option<u64>,
+}
+
+/// Audit a compiled plan end to end: trace sweep + chain checks +
+/// peak/budget cross-checks. This is what `PlanSession` runs on every
+/// compile.
+pub fn audit_plan(a: &PlanAudit<'_>) -> AuditReport {
+    let mut rep = audit_trace(a.graph, a.trace, a.mode);
+    rep.diagnostics.extend(audit_chain(a.graph, a.chain.lower_sets()));
+    if let Some(p) = a.predicted_peak {
+        if p != rep.static_peak {
+            rep.diagnostics.push(Diagnostic::new(
+                Rule::PeakMismatch,
+                format!(
+                    "static sweep peak {} B != simulator prediction {} B",
+                    rep.static_peak, p
+                ),
+            ));
+        }
+    }
+    if let Some(p) = a.program_peak {
+        if p != rep.static_peak {
+            rep.diagnostics.push(Diagnostic::new(
+                Rule::PeakMismatch,
+                format!(
+                    "static sweep peak {} B != compiled program prediction {} B",
+                    rep.static_peak, p
+                ),
+            ));
+        }
+    }
+    if let Some(b) = a.budget {
+        let eq2 = a.chain.peak_mem(a.graph);
+        if eq2 > b {
+            rep.diagnostics.push(Diagnostic::new(
+                Rule::BudgetExceeded,
+                format!("analytic (Eq. 2) peak {eq2} B exceeds the requested budget {b} B"),
+            ));
+        }
+    }
+    rep
+}
+
+/// Per-buffer lifetime state tracked by the sweep.
+#[derive(Clone, Copy)]
+enum Life {
+    Live { bytes: u64 },
+    Freed,
+}
+
+/// The abstract-interpretation sweep: one pass over the event stream,
+/// tracking every buffer through `unallocated → live → freed` and the
+/// running live-byte total. Never panics — structurally broken traces
+/// produce diagnostics, not aborts (unlike the simulator's fold, whose
+/// asserts are the *dynamic* counterpart of these rules).
+pub fn audit_trace(g: &Graph, tr: &Trace, mode: SimMode) -> AuditReport {
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    let mut state: HashMap<Buffer, Life> = HashMap::new();
+    let mut live_bytes = 0u64;
+    let mut static_peak = 0u64;
+    let n = g.len() as usize;
+    let mut backpropped = vec![false; n];
+    let op_at = |i: usize| tr.op_of.get(i).copied().unwrap_or(0);
+    if tr.events.len() != tr.op_of.len() {
+        diags.push(Diagnostic::new(
+            Rule::ChainInvariant,
+            format!(
+                "trace op_of length {} does not parallel its {} events",
+                tr.op_of.len(),
+                tr.events.len()
+            ),
+        ));
+    }
+
+    for (i, ev) in tr.events.iter().enumerate() {
+        let op = op_at(i);
+        match *ev {
+            Event::Alloc { buffer, bytes, .. } => {
+                match state.get(&buffer) {
+                    Some(Life::Live { .. }) => diags.push(Diagnostic::at(
+                        Rule::AllocOverLive,
+                        i,
+                        op,
+                        buffer,
+                        format!("{} allocated while already live", label(g, buffer)),
+                    )),
+                    // A freed buffer may be re-materialized only as a new
+                    // generation; same-generation realloc is a strategy bug.
+                    Some(Life::Freed) => diags.push(Diagnostic::at(
+                        Rule::AllocOverLive,
+                        i,
+                        op,
+                        buffer,
+                        format!("{} re-allocated after being freed", label(g, buffer)),
+                    )),
+                    None => {}
+                }
+                state.insert(buffer, Life::Live { bytes });
+                live_bytes = live_bytes.saturating_add(bytes);
+                if live_bytes > static_peak {
+                    static_peak = live_bytes;
+                }
+            }
+            Event::Use { buffer } => match state.get(&buffer) {
+                Some(Life::Live { .. }) => {}
+                Some(Life::Freed) => diags.push(Diagnostic::at(
+                    Rule::UseAfterFree,
+                    i,
+                    op,
+                    buffer,
+                    format!("{} read after it was freed", label(g, buffer)),
+                )),
+                None => {
+                    let (rule, what) = match buffer {
+                        Buffer::Fwd { gen: 1, .. } => (
+                            Rule::RecomputeGap,
+                            "read before its recomputation ran",
+                        ),
+                        _ => (Rule::UseBeforeAlloc, "read before it was ever allocated"),
+                    };
+                    diags.push(Diagnostic::at(
+                        rule,
+                        i,
+                        op,
+                        buffer,
+                        format!("{} {what}", label(g, buffer)),
+                    ));
+                }
+            },
+            Event::Free { buffer } => match state.get(&buffer).copied() {
+                Some(Life::Live { bytes }) => {
+                    if bytes > live_bytes {
+                        diags.push(Diagnostic::at(
+                            Rule::LiveUnderflow,
+                            i,
+                            op,
+                            buffer,
+                            format!(
+                                "freeing {bytes} B of {} with only {live_bytes} B live",
+                                label(g, buffer)
+                            ),
+                        ));
+                    }
+                    live_bytes = live_bytes.saturating_sub(bytes);
+                    state.insert(buffer, Life::Freed);
+                }
+                Some(Life::Freed) => diags.push(Diagnostic::at(
+                    Rule::DoubleFree,
+                    i,
+                    op,
+                    buffer,
+                    format!("{} freed twice", label(g, buffer)),
+                )),
+                None => diags.push(Diagnostic::at(
+                    Rule::DoubleFree,
+                    i,
+                    op,
+                    buffer,
+                    format!("{} freed but never allocated", label(g, buffer)),
+                )),
+            },
+            Event::Backprop { node } => {
+                let grad = Buffer::Grad { node };
+                if !matches!(state.get(&grad), Some(Life::Live { .. })) {
+                    diags.push(Diagnostic::at(
+                        Rule::BackpropOrder,
+                        i,
+                        op,
+                        grad,
+                        format!(
+                            "backprop of {} before its gradient exists",
+                            node_name(g, node)
+                        ),
+                    ));
+                }
+                match backpropped.get_mut(node.0 as usize) {
+                    Some(seen) if *seen => diags.push(Diagnostic::at(
+                        Rule::BackpropOrder,
+                        i,
+                        op,
+                        grad,
+                        format!("{} backpropped twice", node_name(g, node)),
+                    )),
+                    Some(seen) => *seen = true,
+                    None => diags.push(Diagnostic::new(
+                        Rule::BackpropOrder,
+                        format!("backprop of out-of-range node v{}", node.0),
+                    )),
+                }
+            }
+        }
+    }
+
+    // Exit checks: everything freed, every node backpropped.
+    let mut leaked: Vec<Buffer> = state
+        .iter()
+        .filter_map(|(b, l)| matches!(l, Life::Live { .. }).then_some(*b))
+        .collect();
+    leaked.sort_by_key(|b| match *b {
+        Buffer::Fwd { node, gen } => (0u8, node.0, gen),
+        Buffer::Grad { node } => (1u8, node.0, 0),
+    });
+    for buffer in leaked {
+        let mut d = Diagnostic::new(
+            Rule::LeakAtExit,
+            format!("{} still live at end of step", label(g, buffer)),
+        );
+        d.buffer = Some(buffer);
+        diags.push(d);
+    }
+    for (v, seen) in backpropped.iter().enumerate() {
+        if !seen {
+            diags.push(Diagnostic::new(
+                Rule::BackpropOrder,
+                format!("{} never backpropped", g.node(crate::graph::NodeId(v as u32)).name),
+            ));
+        }
+    }
+
+    if mode == SimMode::Liveness {
+        check_liveness_placement(tr, g, &mut diags);
+    }
+
+    AuditReport { diagnostics: diags, static_peak, events: tr.events.len() }
+}
+
+/// `SimMode::Liveness` last-use semantics: every free must sit at the
+/// end of the op group containing its buffer's last materialization or
+/// read — the exact placement [`crate::sim::apply_liveness`] produces.
+/// Re-derives that placement independently and flags divergences: a free
+/// in a *later* group holds memory longer than the priced schedule
+/// (warning); a free before its own group's last non-free event would
+/// pull a kernel input out from under the op (also flagged here; actual
+/// premature frees surface as A001 use-after-free in the sweep).
+fn check_liveness_placement(tr: &Trace, g: &Graph, diags: &mut Vec<Diagnostic>) {
+    let mut last_op: HashMap<Buffer, u32> = HashMap::new();
+    let mut group_end: HashMap<u32, usize> = HashMap::new();
+    for (i, (ev, &op)) in tr.events.iter().zip(&tr.op_of).enumerate() {
+        match *ev {
+            Event::Alloc { buffer, .. } | Event::Use { buffer } => {
+                last_op.insert(buffer, op);
+                group_end.insert(op, i);
+            }
+            Event::Backprop { .. } => {
+                group_end.insert(op, i);
+            }
+            Event::Free { .. } => {}
+        }
+    }
+    for (i, (ev, &op)) in tr.events.iter().zip(&tr.op_of).enumerate() {
+        let Event::Free { buffer } = *ev else { continue };
+        let Some(&want) = last_op.get(&buffer) else { continue };
+        if op != want {
+            diags.push(Diagnostic::at(
+                Rule::LivenessFreePlacement,
+                i,
+                op,
+                buffer,
+                format!(
+                    "{} freed in op group {op}, but its last use is in group {want}",
+                    label(g, buffer)
+                ),
+            ));
+        } else if group_end.get(&op).is_some_and(|&end| i < end) {
+            diags.push(Diagnostic::at(
+                Rule::LivenessFreePlacement,
+                i,
+                op,
+                buffer,
+                format!("{} freed mid-op, before group {op} completed", label(g, buffer)),
+            ));
+        }
+    }
+}
+
+/// Chain checks over raw lower sets (so corrupted chains that
+/// [`LowerSetChain::new`] would reject can still be diagnosed):
+/// structural invariants (A009) and checkpoint coverage (A010) — for
+/// every segment `V_i = L_i \ L_{i-1}`, each predecessor read from
+/// outside the segment must be a boundary node cached by an earlier
+/// segment, i.e. in `∪_{j<i} ∂(L_j)`. For valid chains coverage is a
+/// theorem; for corrupted ones this pinpoints exactly which backward
+/// read would hit a discarded, never-recomputed value.
+pub fn audit_chain(g: &Graph, sets: &[NodeSet]) -> Vec<Diagnostic> {
+    let n = g.len();
+    let mut diags: Vec<Diagnostic> = Vec::new();
+    if sets.is_empty() {
+        diags.push(Diagnostic::new(Rule::ChainInvariant, "empty chain".to_string()));
+        return diags;
+    }
+    if sets.iter().any(|s| s.capacity() != n) {
+        diags.push(Diagnostic::new(
+            Rule::ChainInvariant,
+            format!("chain sets not over {n} nodes"),
+        ));
+        return diags;
+    }
+    let mut prev = NodeSet::empty(n);
+    for (i, l) in sets.iter().enumerate() {
+        if !g.is_lower_set(l) {
+            diags.push(Diagnostic::new(
+                Rule::ChainInvariant,
+                format!("L_{} is not a lower set", i + 1),
+            ));
+        }
+        if !prev.is_strict_subset(l) {
+            diags.push(Diagnostic::new(
+                Rule::ChainInvariant,
+                format!("L_{} does not strictly contain L_{}", i + 1, i),
+            ));
+        }
+        prev = l.clone();
+    }
+    if sets[sets.len() - 1].len() != n {
+        diags.push(Diagnostic::new(
+            Rule::ChainInvariant,
+            format!("chain does not end at V (last set has {} of {n} nodes)", prev.len()),
+        ));
+    }
+
+    // Checkpoint coverage. `cached` = ∪_{j<i} ∂(L_j) while segment i is
+    // checked; boundaries are computed on the given sets directly, so
+    // the check degrades gracefully on invalid chains.
+    let mut cached = NodeSet::empty(n);
+    let mut prev = NodeSet::empty(n);
+    for (i, l) in sets.iter().enumerate() {
+        let mut seg = l.clone();
+        seg.subtract(&prev);
+        for v in seg.iter() {
+            for &p in g.preds(v) {
+                if !seg.contains(p) && !cached.contains(p) {
+                    diags.push(Diagnostic::new(
+                        Rule::CheckpointCoverage,
+                        format!(
+                            "segment {} backward reads fwd({}) which no earlier segment caches",
+                            i + 1,
+                            g.node(p).name
+                        ),
+                    ));
+                }
+            }
+        }
+        cached.union_with(&g.boundary(l));
+        prev = l.clone();
+    }
+    diags
+}
+
+/// Node name with an id fallback for out-of-range corrupted events.
+fn node_name(g: &Graph, node: crate::graph::NodeId) -> String {
+    if node.0 < g.len() {
+        g.node(node).name.clone()
+    } else {
+        format!("v{}", node.0)
+    }
+}
+
+fn label(g: &Graph, buffer: Buffer) -> String {
+    match buffer {
+        Buffer::Fwd { node, gen } if (node.0 as usize) < g.len() as usize => {
+            format!("fwd({})#{gen}", g.node(node).name)
+        }
+        Buffer::Grad { node } if (node.0 as usize) < g.len() as usize => {
+            format!("grad({})", g.node(node).name)
+        }
+        Buffer::Fwd { node, gen } => format!("fwd(v{})#{gen}", node.0),
+        Buffer::Grad { node } => format!("grad(v{})", node.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::{plan_at_min_budget, Family, Objective};
+    use crate::sim::{apply_liveness, canonical_trace, vanilla_trace};
+    use crate::testutil::{chain_graph, random_dag};
+    use crate::util::rng::Pcg32;
+
+    fn codes(diags: &[Diagnostic]) -> Vec<&'static str> {
+        diags.iter().map(|d| d.rule.code()).collect()
+    }
+
+    #[test]
+    fn clean_on_canonical_and_vanilla_traces() {
+        let mut rng = Pcg32::seeded(90);
+        for _ in 0..10 {
+            let n = rng.range(4, 12);
+            let g = random_dag(&mut rng, n);
+            let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+            let raw = canonical_trace(&g, &plan.chain);
+            assert!(audit_trace(&g, &raw, SimMode::Strict).is_clean());
+            let rewritten = apply_liveness(&raw);
+            assert!(audit_trace(&g, &rewritten, SimMode::Liveness).is_clean());
+            let v = vanilla_trace(&g);
+            assert!(audit_trace(&g, &v, SimMode::Strict).is_clean());
+        }
+    }
+
+    #[test]
+    fn static_peak_matches_simulator() {
+        use crate::sim::{measure, SimOptions};
+        let mut rng = Pcg32::seeded(91);
+        for _ in 0..10 {
+            let n = rng.range(4, 12);
+            let g = random_dag(&mut rng, n);
+            let plan = plan_at_min_budget(&g, Family::Approx, Objective::MaxOverhead).unwrap();
+            let raw = canonical_trace(&g, &plan.chain);
+            for mode in [SimMode::Liveness, SimMode::Strict] {
+                let folded = match mode {
+                    SimMode::Liveness => apply_liveness(&raw),
+                    SimMode::Strict => raw.clone(),
+                };
+                let rep = audit_trace(&g, &folded, mode);
+                let sim = measure(&g, &raw, SimOptions { mode, include_params: false });
+                assert!(rep.is_clean(), "{:?}", rep.diagnostics);
+                assert_eq!(rep.static_peak, sim.peak_bytes, "{mode:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn rule_codes_are_unique_and_stable() {
+        let mut seen = std::collections::HashSet::new();
+        for r in Rule::ALL {
+            assert!(seen.insert(r.code()), "duplicate code {}", r.code());
+            assert!(r.code().starts_with('A'));
+            assert_eq!(r.code().len(), 4);
+        }
+        // Pinned: these codes are documented and matched externally.
+        assert_eq!(Rule::UseAfterFree.code(), "A001");
+        assert_eq!(Rule::LeakAtExit.code(), "A004");
+        assert_eq!(Rule::ChainInvariant.code(), "A009");
+        assert_eq!(Rule::LiveUnderflow.code(), "A013");
+    }
+
+    #[test]
+    fn dropped_free_is_a_leak() {
+        let g = chain_graph(&[1, 2, 3, 4]);
+        let mut tr = apply_liveness(&vanilla_trace(&g));
+        let idx = tr
+            .events
+            .iter()
+            .position(|e| matches!(e, Event::Free { .. }))
+            .expect("a free to drop");
+        tr.events.remove(idx);
+        tr.op_of.remove(idx);
+        let rep = audit_trace(&g, &tr, SimMode::Strict);
+        assert!(codes(&rep.diagnostics).contains(&"A004"), "{:?}", rep.diagnostics);
+    }
+
+    #[test]
+    fn duplicated_free_is_a_double_free() {
+        let g = chain_graph(&[1, 2, 3, 4]);
+        let mut tr = apply_liveness(&vanilla_trace(&g));
+        let idx = tr
+            .events
+            .iter()
+            .position(|e| matches!(e, Event::Free { .. }))
+            .expect("a free to duplicate");
+        let (ev, op) = (tr.events[idx], tr.op_of[idx]);
+        tr.events.insert(idx + 1, ev);
+        tr.op_of.insert(idx + 1, op);
+        let rep = audit_trace(&g, &tr, SimMode::Strict);
+        assert!(codes(&rep.diagnostics).contains(&"A002"), "{:?}", rep.diagnostics);
+    }
+
+    #[test]
+    fn chain_checks_accept_valid_and_reject_shrunk_sets() {
+        let mut rng = Pcg32::seeded(92);
+        for _ in 0..8 {
+            let n = rng.range(5, 12);
+            let g = random_dag(&mut rng, n);
+            let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+            let sets = plan.chain.lower_sets().to_vec();
+            assert!(audit_chain(&g, &sets).is_empty());
+            if sets.len() < 2 {
+                continue;
+            }
+            // Shrink a checkpoint set: remove one retained node from every
+            // set before the last — its consumers' backward reads lose
+            // their cache.
+            let mut bad = sets.clone();
+            let victim = bad[0].iter().next().unwrap();
+            for l in bad.iter_mut().take(sets.len() - 1) {
+                l.remove(victim);
+            }
+            let diags = audit_chain(&g, &bad);
+            assert!(!diags.is_empty(), "shrunk chain must not audit clean");
+            assert!(
+                codes(&diags).iter().any(|c| *c == "A009" || *c == "A010"),
+                "{diags:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn gate_formats_a_matchable_error() {
+        let g = chain_graph(&[1, 2]);
+        let mut tr = apply_liveness(&vanilla_trace(&g));
+        let idx =
+            tr.events.iter().position(|e| matches!(e, Event::Free { .. })).unwrap();
+        tr.events.remove(idx);
+        tr.op_of.remove(idx);
+        let rep = audit_trace(&g, &tr, SimMode::Strict);
+        let err = rep.gate(false).unwrap_err().to_string();
+        assert!(err.starts_with(AUDIT_FAILED_PREFIX), "{err}");
+        assert!(err.contains("A004"), "{err}");
+        assert!(rep.gate(false).is_err());
+    }
+
+    #[test]
+    fn report_json_is_parseable() {
+        let g = chain_graph(&[1, 2, 3]);
+        let tr = apply_liveness(&vanilla_trace(&g));
+        let rep = audit_trace(&g, &tr, SimMode::Liveness);
+        let j = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(j.get("clean").as_bool(), Some(true));
+        assert_eq!(j.get("errors").as_u64(), Some(0));
+    }
+}

@@ -20,6 +20,7 @@
 
 use std::time::Instant;
 
+use crate::analysis::Rule;
 use crate::anyhow::{bail, Context, Result};
 
 use crate::runtime::{Backend, KernelStat, NativeBackend, PoolStats};
@@ -178,9 +179,23 @@ impl<B: Backend> TowerTrainer<B> {
         self.peak_bytes = self.peak_bytes.max(self.live_bytes);
     }
 
-    fn free(&mut self, bytes: u64) {
-        debug_assert!(self.live_bytes >= bytes);
+    /// Release live-byte accounting. Underflow is the executor-side
+    /// analogue of the static auditor's [`Rule::LiveUnderflow`] — it was
+    /// a `debug_assert`, but carries the same rule code as a hard error
+    /// in release builds now so a miscounted schedule can never silently
+    /// report a bogus peak.
+    fn free(&mut self, bytes: u64) -> Result<()> {
+        if self.live_bytes < bytes {
+            bail!(
+                "{} {}: freeing {} bytes with only {} live",
+                Rule::LiveUnderflow.code(),
+                Rule::LiveUnderflow.name(),
+                bytes,
+                self.live_bytes
+            );
+        }
         self.live_bytes -= bytes;
+        Ok(())
     }
 
     /// One training step under `sched`. Returns (loss, recompute_count).
@@ -218,7 +233,7 @@ impl<B: Backend> TowerTrainer<B> {
                     .context("layer_fwd output")?;
                 self.alloc(act_bytes);
                 if h.take().is_some() {
-                    self.free(act_bytes); // intermediate dropped
+                    self.free(act_bytes)?; // intermediate dropped
                 }
                 h = Some(out);
             }
@@ -239,7 +254,7 @@ impl<B: Backend> TowerTrainer<B> {
         // strategy discards non-boundary values, so we drop it and let the
         // backward pass recompute from the last checkpoint.
         if h.take().is_some() {
-            self.free(act_bytes);
+            self.free(act_bytes)?;
         }
 
         // --- backward: segments in reverse -------------------------------
@@ -321,16 +336,26 @@ impl<B: Backend> TowerTrainer<B> {
             //    checkpoint — backward below no longer needs them.
             let n_interior = acts.len().saturating_sub(1); // first aliases ckpt/x
             drop(acts);
-            self.free(n_interior as u64 * act_bytes);
+            self.free(n_interior as u64 * act_bytes)?;
             if seg.start > 0 && ckpt[seg.start].take().is_some() {
-                self.free(act_bytes);
+                self.free(act_bytes)?;
             }
         }
         // The gradient flowing below layer 0 is w.r.t. the input — dropped.
         if gh.take().is_some() {
-            self.free(act_bytes);
+            self.free(act_bytes)?;
         }
-        debug_assert_eq!(self.live_bytes, 0, "step leaked activation bytes");
+        // Executor-side analogue of the auditor's leak-at-exit sweep
+        // ([`Rule::LeakAtExit`]) — promoted from a debug_assert so release
+        // builds refuse to report a peak off a leaky step.
+        if self.live_bytes != 0 {
+            bail!(
+                "{} {}: step leaked {} activation bytes",
+                Rule::LeakAtExit.code(),
+                Rule::LeakAtExit.name(),
+                self.live_bytes
+            );
+        }
         Ok((loss_val, recomputes))
     }
 

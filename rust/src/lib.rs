@@ -48,6 +48,11 @@
 //!   following a recomputation plan exactly as the canonical strategy
 //!   prescribes, with measured live-byte accounting cross-checked against
 //!   the simulator.
+//! - [`analysis`] — the static schedule auditor: an abstract
+//!   interpretation of a trace's event stream (per-buffer lifetime
+//!   states) plus chain/coverage/budget cross-checks, emitting
+//!   stable-coded [`analysis::Diagnostic`]s; every `CompiledPlan` is
+//!   audited at compile time and the daemon rejects plans that fail.
 //! - [`serve`] — the plan-serving daemon behind `repro serve`: a
 //!   zero-dependency newline-delimited-JSON-over-TCP listener that
 //!   multiplexes many concurrent clients onto one shared
@@ -108,6 +113,12 @@
 //! assert_eq!(session.stats().hits, 1);
 //! ```
 
+// The auditor, the serving layer and the session cache are the modules
+// that stand between a defective schedule and a client — they hold the
+// repo's hardest lint bar: no unwrap/expect outside tests (clippy.toml
+// sets `allow-unwrap-in-tests`/`allow-expect-in-tests`).
+#[deny(clippy::unwrap_used, clippy::expect_used)]
+pub mod analysis;
 pub mod anyhow;
 pub mod bench;
 pub mod coordinator;
@@ -116,7 +127,9 @@ pub mod graph;
 pub mod models;
 pub mod planner;
 pub mod runtime;
+#[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod serve;
+#[deny(clippy::unwrap_used, clippy::expect_used)]
 pub mod session;
 pub mod sim;
 pub mod util;

@@ -22,6 +22,13 @@
 //!    `REPRO_THREADS` — plans are bit-identical at any thread count;
 //!    `--stats` prints the session counters + planner wall-time).
 //! - `plan --graph FILE.json …` — plan a user-supplied graph.
+//! - `audit --network NAME [--planner P] [--sim M] [--budget B]
+//!    [--json] [--deny-audit]` — compile a plan and print the static
+//!    schedule auditor's findings (see `recompute::analysis`): the
+//!    dataflow sweep that proves the compiled schedule frees what it
+//!    allocates, never touches freed buffers, and lands exactly on the
+//!    simulator's predicted peak. `--deny-audit` escalates warnings to
+//!    hard errors (non-zero exit).
 //! - `train …` — run the real training executor (see `exec`) on the
 //!   pure-Rust native backend by default, or PJRT with `--features xla`;
 //!   `repro train --help` for its flags.
@@ -105,6 +112,7 @@ fn run(args: &[String]) -> Result<()> {
             Ok(())
         }
         "plan" => cmd_plan(&flags),
+        "audit" => cmd_audit(&flags),
         "experiment" => cmd_experiment(&flags),
         "export" => cmd_export(&flags),
         "train" => coordinator::cli::cmd_train(&args[1..]),
@@ -133,6 +141,11 @@ fn print_usage() {
                 [--family exact|approx] [--chen]  (back-compat aliases)\n\
                 [--sim liveness|strict] [--json] [--threads N] [--stats]\n\
            plan --graph FILE.json [...]  plan a user-supplied graph JSON\n\
+           audit --network N [--batch B] [--budget GB|512KiB]\n\
+                [--planner exact|approx|chen|exhaustive|decomposed]\n\
+                [--objective tc|mc] [--sim liveness|strict]\n\
+                [--json] [--deny-audit]\n\
+                                         static schedule audit of a compiled plan\n\
            experiment --config F.json [--csv out.csv]  declarative sweep runner\n\
            export --network N --out F    dump a zoo graph as JSON\n\
            train [flags]                 real training with a recompute plan\n\
@@ -350,6 +363,83 @@ fn cmd_plan(flags: &Flags) -> Result<()> {
     }
     if stats_out {
         print_plan_stats(&session);
+    }
+    Ok(())
+}
+
+/// `repro audit` — compile a plan exactly like `cmd_plan` would, then
+/// print the static schedule auditor's report instead of the schedule.
+///
+/// The session runs the auditor on every compile, so this command is a
+/// thin lens over [`recompute::session::CompiledPlan::audit`]; a plan
+/// with audit *errors* never reaches us (the session refuses to cache
+/// it), so the table below shows warnings on an admitted plan, or
+/// `clean`. With `--deny-audit` even warnings abort the compile and the
+/// command exits non-zero with the offending rule code in the message.
+fn cmd_audit(flags: &Flags) -> Result<()> {
+    if let Some(t) = flags.parse::<usize>("--threads")? {
+        recompute::util::pool::set_global_threads(t);
+    }
+    let g: Graph = if let Some(path) = flags.get("--graph") {
+        Graph::from_json_file(std::path::Path::new(path))?
+    } else if let Some(name) = flags.get("--network").or_else(|| flags.get("--model")) {
+        let e = zoo::find(name).ok_or_else(|| anyhow!("unknown network {name}"))?;
+        let batch = flags.parse::<u64>("--batch")?.unwrap_or(e.batch);
+        e.build_batch(batch)
+    } else {
+        bail!("audit needs --network NAME or --graph FILE.json");
+    };
+
+    let objective = match flags.get("--objective").unwrap_or("tc") {
+        "tc" => Objective::MinOverhead,
+        "mc" => Objective::MaxOverhead,
+        o => bail!("bad --objective {o} (tc|mc)"),
+    };
+    let mode = SimMode::parse(flags.get("--sim").unwrap_or("liveness"))?;
+    let planner = PlannerId::parse(flags.get("--planner").unwrap_or("approx"))?;
+    let budget_spec = match flags.get("--budget") {
+        Some(s) => BudgetSpec::Bytes(parse_budget(s)?),
+        None => BudgetSpec::MinFeasible,
+    };
+    let json_out = flags.has("--json");
+
+    let session = PlanSession::new(g);
+    session.set_deny_audit(flags.has("--deny-audit"));
+    let g = session.graph();
+
+    let req =
+        PlanRequest { budget: budget_spec, sim_mode: mode, ..PlanRequest::new(planner, objective) };
+    let cp = session.plan(&req)?;
+
+    if json_out {
+        let j = cp
+            .audit
+            .to_json()
+            .set("network", g.name.as_str().into())
+            .set("planner", cp.plan.kind.label().into())
+            .set("sim", mode.label().into())
+            .set("segments", (cp.plan.chain.k() as u64).into())
+            .set("peak_bytes", cp.report.peak_bytes.into());
+        println!("{}", j.to_string_pretty());
+        return Ok(());
+    }
+
+    println!(
+        "audit {} — planner {} sim {} k={} events={}: {}",
+        g.name,
+        cp.plan.kind.label(),
+        mode.label(),
+        cp.plan.chain.k(),
+        cp.audit.events,
+        cp.audit.verdict()
+    );
+    println!(
+        "static peak {} (simulator predicted {})",
+        fmt_bytes(cp.audit.static_peak),
+        fmt_bytes(cp.report.peak_bytes)
+    );
+    if !cp.audit.is_clean() {
+        print!("{}", cp.audit.render_table());
     }
     Ok(())
 }

@@ -554,6 +554,42 @@ fn plan_decomposed(req: &PlanRequest, ctx: &PlanContext<'_>, cfg: DecomposeCfg) 
         }
         prefix = global_sets.last().expect("non-empty local chain").clone();
     }
+
+    // Deliberate corruption hook: a graph named
+    // [`crate::analysis::FAULT_INJECT_GRAPH`] gets one checkpoint node
+    // dropped from every stitched set but the last, so integration
+    // tests (and the serve acceptance gate) can watch the audit below
+    // reject a defective stitch end to end. Real graphs never carry
+    // this name.
+    if g.name == crate::analysis::FAULT_INJECT_GRAPH && global_sets.len() >= 2 {
+        // Bind the victim before mutating: the scrutinee of an `if let`
+        // would keep the iterator's borrow alive across the loop body.
+        let victim = global_sets[0].iter().next();
+        if let Some(victim) = victim {
+            let last = global_sets.len() - 1;
+            for l in &mut global_sets[..last] {
+                l.remove(victim);
+            }
+        }
+    }
+
+    // Rule-backed stitch audit: the same A009/A010 diagnostics the
+    // compile-time auditor emits, run on the raw stitched sets *before*
+    // the checked constructor — so a stitching defect reports which
+    // invariant broke (and which backward read lost its checkpoint)
+    // instead of a bare constructor error.
+    let stitch_diags = crate::analysis::audit_chain(g, &global_sets);
+    if let Some(first) = stitch_diags.first() {
+        bail!(
+            "{}: {} {}: {} (stitched chain of {}, {} finding(s))",
+            crate::analysis::AUDIT_FAILED_PREFIX,
+            first.rule.code(),
+            first.rule.name(),
+            first.message,
+            g.name,
+            stitch_diags.len()
+        );
+    }
     let chain = LowerSetChain::new(g, global_sets)?;
     let overhead = chain.overhead(g);
     let peak_eq2 = chain.peak_mem(g);
@@ -561,9 +597,11 @@ fn plan_decomposed(req: &PlanRequest, ctx: &PlanContext<'_>, cfg: DecomposeCfg) 
         (Some(b), false) => {
             if peak_eq2 > b {
                 bail!(
-                    "decomposed plan for {} exceeds budget {}: stitched Eq. 2 peak {}",
+                    "decomposed plan for {} exceeds budget {} ({} {}): stitched Eq. 2 peak {}",
                     g.name,
                     fmt_bytes(b),
+                    crate::analysis::Rule::BudgetExceeded.code(),
+                    crate::analysis::Rule::BudgetExceeded.name(),
                     fmt_bytes(peak_eq2)
                 );
             }

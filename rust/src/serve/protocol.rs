@@ -493,7 +493,19 @@ impl Router {
         };
         let budget = self.budget_spec(f)?;
         let r = PlanRequest { planner, budget, objective, sim_mode };
-        session.plan_tracked(&r).map_err(|e| reject("plan-failed", e))
+        session.plan_tracked(&r).map_err(|e| {
+            let msg = e.to_string();
+            // The static schedule auditor rejected the compiled plan:
+            // surface it as its own error code (and counter) so clients
+            // and operators can tell a broken schedule from an
+            // infeasible request.
+            if msg.starts_with(crate::analysis::AUDIT_FAILED_PREFIX) {
+                self.metrics.audit_failed.fetch_add(1, Ordering::Relaxed);
+                reject("audit-failed", msg)
+            } else {
+                reject("plan-failed", msg)
+            }
+        })
     }
 
     /// The zero-copy `plan` reply: envelope written by [`RawJson`], the
@@ -729,6 +741,7 @@ impl Router {
             .set("bytes_in", m.bytes_in.load(Ordering::Relaxed).into())
             .set("bytes_out", m.bytes_out.load(Ordering::Relaxed).into())
             .set("fast_path_hits", m.fast_path_hits.load(Ordering::Relaxed).into())
+            .set("audit_failed", m.audit_failed.load(Ordering::Relaxed).into())
             .set("inflight", (m.inflight.load(Ordering::SeqCst) as u64).into())
             .set("connections", (m.connections.load(Ordering::SeqCst) as u64).into())
             .set("connections_total", m.connections_total.load(Ordering::Relaxed).into())

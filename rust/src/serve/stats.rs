@@ -8,8 +8,15 @@
 //! slot write, no allocation after construction.
 
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard, PoisonError};
 use std::time::Duration;
+
+/// Poison-tolerant lock: the ring's samples stay coherent across an
+/// unwound holder, so recover the guard instead of cascading panics
+/// through every connection thread.
+fn lock(m: &Mutex<Ring>) -> MutexGuard<'_, Ring> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Number of most-recent request latencies the ring retains.
 pub const LATENCY_RING_CAPACITY: usize = 4096;
@@ -49,7 +56,7 @@ impl LatencyRing {
     /// Record one request latency (saturating to whole microseconds).
     pub fn record(&self, latency: Duration) {
         let us = u64::try_from(latency.as_micros()).unwrap_or(u64::MAX);
-        let mut r = self.ring.lock().unwrap();
+        let mut r = lock(&self.ring);
         if r.buf.len() < r.cap {
             r.buf.push(us);
         } else {
@@ -62,7 +69,7 @@ impl LatencyRing {
     /// Nearest-rank p50/p90/p99/max over the current window, or `None`
     /// when no requests have been recorded yet.
     pub fn percentiles(&self) -> Option<LatencyPercentiles> {
-        let mut sorted = self.ring.lock().unwrap().buf.clone();
+        let mut sorted = lock(&self.ring).buf.clone();
         if sorted.is_empty() {
             return None;
         }
@@ -77,7 +84,7 @@ impl LatencyRing {
             p50_us: nearest_rank(0.50),
             p90_us: nearest_rank(0.90),
             p99_us: nearest_rank(0.99),
-            max_us: *sorted.last().unwrap(),
+            max_us: sorted.last().copied().unwrap_or(0),
         })
     }
 }
@@ -100,6 +107,10 @@ pub struct ServeMetrics {
     /// `plan` cache hits answered by splicing the pre-serialized
     /// summary bytes — the zero-copy fast path's observability hook.
     pub fast_path_hits: AtomicU64,
+    /// `plan` requests rejected because the static schedule auditor
+    /// ([`crate::analysis`]) found the compiled plan defective — the
+    /// `audit-failed` error code's counter.
+    pub audit_failed: AtomicU64,
     /// Requests currently being processed.
     pub inflight: AtomicUsize,
     /// Currently open connections.
@@ -119,6 +130,7 @@ impl ServeMetrics {
             bytes_in: AtomicU64::new(0),
             bytes_out: AtomicU64::new(0),
             fast_path_hits: AtomicU64::new(0),
+            audit_failed: AtomicU64::new(0),
             inflight: AtomicUsize::new(0),
             connections: AtomicUsize::new(0),
             connections_total: AtomicU64::new(0),

@@ -40,9 +40,11 @@
 //! reports next to the allocator pool counters.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
 use std::time::{Duration, Instant};
 
+use crate::analysis::{audit_plan, AuditReport, PlanAudit};
 use crate::anyhow::{bail, Result};
 use crate::exec::{OpProgram, Step};
 use crate::fmt_bytes;
@@ -52,7 +54,7 @@ use crate::graph::{
 };
 use crate::planner::{
     planner_for, BudgetSpec, ComponentCache, DpContext, Family, Plan, PlanContext,
-    PlanRequest, PlannerId,
+    PlanRequest, PlannerId, PlannerKind,
 };
 use crate::sim::{
     apply_liveness, canonical_trace, measure, vanilla_trace, Event, SimMode, SimOptions,
@@ -60,6 +62,16 @@ use crate::sim::{
 };
 use crate::util::json::Json;
 use crate::util::pool::WorkerPool;
+
+/// Mutex acquisition that survives a poisoned lock: a thread that
+/// panicked while holding a cache or session mutex must not cascade
+/// into every other connection sharing it — the guarded state is plain
+/// counter/map bookkeeping that stays coherent across an unwound
+/// holder, so recovering the guard is strictly better than poisoning
+/// the whole daemon.
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
 
 /// Default capacity of a session's private [`PlanCache`].
 pub const DEFAULT_CACHE_CAPACITY: usize = 128;
@@ -119,6 +131,12 @@ pub struct CompiledPlan {
     pub trace: Trace,
     /// Ready-to-run executable program for [`crate::exec::DagTrainer`].
     pub program: OpProgram,
+    /// Static schedule audit ([`crate::analysis::audit_plan`]) of the
+    /// compiled trace + chain, run once at compile time and cached with
+    /// the plan. Plans with audit *errors* never get this far — compile
+    /// fails with [`crate::analysis::AUDIT_FAILED_PREFIX`] — so a cached
+    /// report carries at most warnings (and none under `--deny-audit`).
+    pub audit: AuditReport,
     /// Pre-serialized reply summary: the fields of
     /// [`CompiledPlan::summary_json`] as a compact `"key":value,…`
     /// fragment (outer braces stripped). Serialized **once** here at
@@ -148,7 +166,7 @@ impl CompiledPlan {
         let events = (self.trace.events.len() * std::mem::size_of::<Event>()) as u64;
         let steps = (self.program.steps.len() * std::mem::size_of::<Step>()) as u64;
         let summary = self.summary_bytes.len() as u64;
-        header + chain + events + steps + summary
+        header + chain + events + steps + summary + self.audit.approx_bytes() as u64
     }
 
     /// The canonical machine-readable summary of this plan — the exact
@@ -166,7 +184,8 @@ impl CompiledPlan {
             .set("overhead", self.plan.overhead.into())
             .set("predicted_peak", self.program.predicted_peak().into())
             .set("measured_peak", self.report.peak_bytes.into())
-            .set("peak_total", self.report.peak_total.into());
+            .set("peak_total", self.report.peak_total.into())
+            .set("audit", self.audit.verdict().into());
         if let Some(info) = &self.plan.decomposition {
             j = j.set(
                 "decomposition",
@@ -291,7 +310,7 @@ impl PlanCache {
 
     /// Number of cached plans.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        lock(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -300,7 +319,7 @@ impl PlanCache {
 
     /// Snapshot of the cache-level counters (see [`CacheStats`]).
     pub fn stats(&self) -> CacheStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock(&self.inner);
         CacheStats {
             hits: inner.hits,
             misses: inner.misses,
@@ -311,7 +330,7 @@ impl PlanCache {
     }
 
     fn get(&self, key: &(GraphFingerprint, PlanRequest)) -> Option<Arc<CompiledPlan>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         let hit = inner.map.get_mut(key).map(|e| {
@@ -335,7 +354,7 @@ impl PlanCache {
         key: (GraphFingerprint, PlanRequest),
         value: Arc<CompiledPlan>,
     ) -> Arc<CompiledPlan> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(existing) = inner.map.get_mut(&key) {
@@ -402,6 +421,8 @@ pub struct PlanSession {
     cache: Arc<PlanCache>,
     components: Arc<ComponentCache>,
     pool: Arc<WorkerPool>,
+    /// `--deny-audit`: escalate audit warnings to compile failures.
+    deny_audit: AtomicBool,
     inner: Mutex<Inner>,
 }
 
@@ -446,8 +467,21 @@ impl PlanSession {
             cache,
             components: Arc::new(ComponentCache::new(DEFAULT_COMPONENT_CACHE_CAPACITY)),
             pool,
+            deny_audit: AtomicBool::new(false),
             inner: Mutex::new(Inner::default()),
         }
+    }
+
+    /// Escalate static-audit warnings to hard compile failures (the
+    /// `--deny-audit` flag). Audit *errors* always fail compilation;
+    /// this additionally blocks warning-severity findings.
+    pub fn set_deny_audit(&self, deny: bool) {
+        self.deny_audit.store(deny, Ordering::Relaxed);
+    }
+
+    /// Whether audit warnings are currently escalated to errors.
+    pub fn deny_audit(&self) -> bool {
+        self.deny_audit.load(Ordering::Relaxed)
     }
 
     /// Replace the session's private [`ComponentCache`] with a shared
@@ -489,25 +523,27 @@ impl PlanSession {
     /// set — computed once (Tarjan) and cached; the Chen sweep and the
     /// decomposed planner both plan against it.
     pub fn articulation_set(&self) -> Arc<NodeSet> {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.arts.is_none() {
-            let mut s = NodeSet::empty(self.graph.len());
-            for v in articulation_points(&self.graph) {
-                s.insert(v);
-            }
-            inner.arts = Some(Arc::new(s));
+        let mut inner = lock(&self.inner);
+        if let Some(a) = &inner.arts {
+            return a.clone();
         }
-        inner.arts.as_ref().unwrap().clone()
+        let mut s = NodeSet::empty(self.graph.len());
+        for v in articulation_points(&self.graph) {
+            s.insert(v);
+        }
+        let arts = Arc::new(s);
+        inner.arts = Some(arts.clone());
+        arts
     }
 
     /// Snapshot of the amortization counters.
     pub fn stats(&self) -> SessionStats {
-        self.inner.lock().unwrap().stats
+        lock(&self.inner).stats
     }
 
     /// Snapshot of the planner wall-clock spent so far (`--stats`).
     pub fn timing(&self) -> SessionTiming {
-        self.inner.lock().unwrap().timing
+        lock(&self.inner).timing
     }
 
     /// The worker pool planner work runs on.
@@ -518,7 +554,7 @@ impl PlanSession {
     /// The lazily built DP context for `family` (and whether it really
     /// is the exact lattice). Constructed at most once per family.
     pub fn family_context(&self, family: Family) -> (Arc<DpContext>, bool) {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         let Inner { exact, approx, stats, timing, .. } = &mut *inner;
         let slot = match family {
             Family::Exact => exact,
@@ -554,8 +590,11 @@ impl PlanSession {
             timing.family_build += t0.elapsed();
             *slot = Some(FamilySlot { ctx: Arc::new(ctx), exact: is_exact, min_budget: None });
         }
-        let s = slot.as_ref().unwrap();
-        (s.ctx.clone(), s.exact)
+        match slot.as_ref() {
+            Some(s) => (s.ctx.clone(), s.exact),
+            // Filled on the miss path directly above.
+            None => unreachable!("family slot populated before read"),
+        }
     }
 
     /// The minimal feasible budget `B*` for `family`, computed once and
@@ -564,7 +603,7 @@ impl PlanSession {
     pub fn min_feasible_budget(&self, family: Family) -> u64 {
         let (ctx, _) = self.family_context(family);
         {
-            let inner = self.inner.lock().unwrap();
+            let inner = lock(&self.inner);
             let slot = match family {
                 Family::Exact => inner.exact.as_ref(),
                 Family::Approx => inner.approx.as_ref(),
@@ -574,7 +613,7 @@ impl PlanSession {
             }
         }
         let b = ctx.min_feasible_budget();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         let slot = match family {
             Family::Exact => inner.exact.as_mut(),
             Family::Approx => inner.approx.as_mut(),
@@ -589,12 +628,12 @@ impl PlanSession {
     /// once per mode and shared — the baseline every comparison run
     /// reuses instead of recompiling per CLI mode.
     pub fn vanilla_program(&self, mode: SimMode) -> Result<Arc<OpProgram>> {
-        if let Some(p) = self.inner.lock().unwrap().vanilla.get(&mode) {
+        if let Some(p) = lock(&self.inner).vanilla.get(&mode) {
             return Ok(p.clone());
         }
         let prog =
             Arc::new(OpProgram::from_trace(&self.graph, &vanilla_trace(&self.graph), mode)?);
-        self.inner.lock().unwrap().vanilla.insert(mode, prog.clone());
+        lock(&self.inner).vanilla.insert(mode, prog.clone());
         Ok(prog)
     }
 
@@ -613,13 +652,13 @@ impl PlanSession {
     pub fn plan_tracked(&self, req: &PlanRequest) -> Result<(Arc<CompiledPlan>, bool)> {
         let key = (self.fingerprint, *req);
         if let Some(hit) = self.cache.get(&key) {
-            self.inner.lock().unwrap().stats.hits += 1;
+            lock(&self.inner).stats.hits += 1;
             return Ok((hit, true));
         }
-        self.inner.lock().unwrap().stats.misses += 1;
+        lock(&self.inner).stats.misses += 1;
         let t0 = Instant::now();
         let compiled = Arc::new(self.compile(req)?);
-        self.inner.lock().unwrap().timing.compile += t0.elapsed();
+        lock(&self.inner).timing.compile += t0.elapsed();
         Ok((self.cache.insert(key, compiled), false))
     }
 
@@ -650,7 +689,7 @@ impl PlanSession {
             },
         )?;
         if let Some(info) = &plan.decomposition {
-            let mut inner = self.inner.lock().unwrap();
+            let mut inner = lock(&self.inner);
             inner.stats.components += info.components as u64;
             inner.stats.component_cache_hits += info.cache_hits as u64;
         }
@@ -673,6 +712,26 @@ impl PlanSession {
             report.peak_bytes,
             "program and simulator must agree on the peak"
         );
+        // Static schedule audit (see [`crate::analysis`]): verify the
+        // exact event stream the program was compiled from before the
+        // plan is cached or served. Chen's `plan.budget` is the winning
+        // *per-segment* sweep budget (and vanilla has none), so the
+        // global budget-fit rule only applies to the DP planners.
+        let budget_bound = match plan.kind {
+            PlannerKind::Chen | PlannerKind::Vanilla => None,
+            _ if plan.budget > 0 => Some(plan.budget),
+            _ => None,
+        };
+        let audit = audit_plan(&PlanAudit {
+            graph: g,
+            chain: &plan.chain,
+            trace: &trace,
+            mode: req.sim_mode,
+            budget: budget_bound,
+            predicted_peak: Some(report.peak_bytes),
+            program_peak: Some(program.predicted_peak()),
+        });
+        audit.gate(self.deny_audit())?;
         let mut cp = CompiledPlan {
             request: *req,
             fingerprint: self.fingerprint,
@@ -681,6 +740,7 @@ impl PlanSession {
             peak_strict,
             trace,
             program,
+            audit,
             summary_bytes: Arc::from(&b""[..]),
         };
         // Serialize the reply summary exactly once per compilation; every
@@ -759,7 +819,7 @@ impl SessionRegistry {
 
     /// Number of live sessions.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().map.len()
+        lock(&self.inner).map.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -769,7 +829,7 @@ impl SessionRegistry {
     /// The session for `fingerprint`, if one is registered (bumps its
     /// LRU recency).
     pub fn get(&self, fingerprint: GraphFingerprint) -> Option<Arc<PlanSession>> {
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         inner.map.get_mut(&fingerprint).map(|e| {
@@ -786,7 +846,7 @@ impl SessionRegistry {
     /// capacity.
     pub fn get_or_insert(&self, graph: Graph) -> (Arc<PlanSession>, bool) {
         let fingerprint = graph.fingerprint();
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = lock(&self.inner);
         inner.tick += 1;
         let tick = inner.tick;
         if let Some(e) = inner.map.get_mut(&fingerprint) {
@@ -815,7 +875,7 @@ impl SessionRegistry {
     /// session (evicted sessions take their counters with them; the
     /// shared cache's [`PlanCache::stats`] is the durable aggregate).
     pub fn aggregate_stats(&self) -> SessionStats {
-        let inner = self.inner.lock().unwrap();
+        let inner = lock(&self.inner);
         let mut total = SessionStats::default();
         for e in inner.map.values() {
             let s = e.session.stats();
@@ -830,7 +890,7 @@ impl SessionRegistry {
 
     /// Fingerprints of the live sessions (unordered).
     pub fn fingerprints(&self) -> Vec<GraphFingerprint> {
-        self.inner.lock().unwrap().map.keys().copied().collect()
+        lock(&self.inner).map.keys().copied().collect()
     }
 }
 

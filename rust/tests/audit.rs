@@ -1,0 +1,287 @@
+//! Static schedule auditor integration suite (ISSUE 10 acceptance).
+//!
+//! Two halves:
+//!
+//! - **Silence on health**: every zoo network × planner × sim mode
+//!   compiles to a plan whose audit report is completely clean — the
+//!   auditor never cries wolf on schedules the planners actually emit.
+//! - **Mutation kill-list**: seeded corruptions of a known-good trace or
+//!   chain (dropped free, duplicated free, use hoisted above its alloc,
+//!   shrunken checkpoint set, inflated peak prediction, impossible
+//!   budget) are each caught with their exact stable rule code, and a
+//!   corrupted decomposed stitch is rejected end to end — session error,
+//!   serve `audit-failed` reply, CLI exit — never a panic or a silent
+//!   success.
+
+use std::sync::Arc;
+
+use recompute::analysis::{
+    audit_chain, audit_plan, audit_trace, AuditReport, PlanAudit, Rule, AUDIT_FAILED_PREFIX,
+    FAULT_INJECT_GRAPH,
+};
+use recompute::models::zoo;
+use recompute::planner::{
+    plan_at_min_budget, Family, Objective, PlanRequest, PlannerId,
+};
+use recompute::serve::{Router, RouterConfig, ServeMetrics};
+use recompute::session::{PlanCache, PlanSession, SessionRegistry};
+use recompute::sim::{apply_liveness, canonical_trace, Event, SimMode, Trace};
+use recompute::testutil::chain_graph;
+use recompute::util::json::Json;
+use recompute::util::rng::Pcg32;
+use recompute::Graph;
+
+/// Codes of every diagnostic in a report.
+fn codes(rep: &AuditReport) -> Vec<&'static str> {
+    rep.diagnostics.iter().map(|d| d.rule.code()).collect()
+}
+
+/// A known-good plan + liveness trace over a seeded DAG, the substrate
+/// every mutation below corrupts.
+fn healthy_fixture() -> (Graph, Trace) {
+    let mut rng = Pcg32::seeded(0x5eed_a0d1);
+    let g = recompute::testutil::random_dag(&mut rng, 24);
+    let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+    let tr = apply_liveness(&canonical_trace(&g, &plan.chain));
+    let rep = audit_trace(&g, &tr, SimMode::Liveness);
+    assert!(rep.is_clean(), "fixture must start healthy: {:?}", codes(&rep));
+    (g, tr)
+}
+
+// ---------------------------------------------------------------------
+// Silence on health: full zoo × planner × mode.
+// ---------------------------------------------------------------------
+
+#[test]
+fn every_zoo_planner_mode_combination_audits_clean() {
+    for e in zoo::TABLE1 {
+        // Batch 1 keeps byte values small; planning difficulty (and the
+        // audited event stream's shape) depends only on the structure.
+        let session = PlanSession::new(e.build_batch(1));
+        for planner in
+            [PlannerId::ExactDp, PlannerId::ApproxDp, PlannerId::Chen, PlannerId::Decomposed]
+        {
+            for mode in [SimMode::Liveness, SimMode::Strict] {
+                let req = PlanRequest {
+                    sim_mode: mode,
+                    ..PlanRequest::new(planner, Objective::MinOverhead)
+                };
+                let cp = session
+                    .plan(&req)
+                    .unwrap_or_else(|err| panic!("{} {planner:?} {mode:?}: {err}", e.name));
+                assert!(
+                    cp.audit.is_clean(),
+                    "{} {planner:?} {mode:?}: {:?}",
+                    e.name,
+                    codes(&cp.audit)
+                );
+                assert!(cp.audit.events > 0, "audit must have swept the trace");
+            }
+        }
+    }
+}
+
+#[test]
+fn deny_audit_mode_still_admits_clean_plans() {
+    let session = PlanSession::new(zoo::find("U-Net").unwrap().build_batch(1));
+    session.set_deny_audit(true);
+    assert!(session.deny_audit());
+    let cp = session
+        .plan(&PlanRequest::new(PlannerId::ApproxDp, Objective::MaxOverhead))
+        .expect("a clean plan passes even with warnings escalated");
+    assert_eq!(cp.audit.verdict(), "clean");
+}
+
+// ---------------------------------------------------------------------
+// Mutation kill-list: every seeded corruption caught, exact rule codes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn dropping_a_free_is_reported_as_a_leak() {
+    let (g, mut tr) = healthy_fixture();
+    let i = tr.events.iter().position(|e| matches!(e, Event::Free { .. })).unwrap();
+    tr.events.remove(i);
+    tr.op_of.remove(i);
+    let rep = audit_trace(&g, &tr, SimMode::Liveness);
+    assert!(codes(&rep).contains(&"A004"), "dropped free must leak: {:?}", codes(&rep));
+}
+
+#[test]
+fn duplicating_a_free_is_reported_as_a_double_free() {
+    let (g, mut tr) = healthy_fixture();
+    let i = tr.events.iter().position(|e| matches!(e, Event::Free { .. })).unwrap();
+    let (ev, op) = (tr.events[i], tr.op_of[i]);
+    tr.events.insert(i + 1, ev);
+    tr.op_of.insert(i + 1, op);
+    let rep = audit_trace(&g, &tr, SimMode::Liveness);
+    assert!(codes(&rep).contains(&"A002"), "{:?}", codes(&rep));
+}
+
+#[test]
+fn hoisting_a_use_above_its_alloc_is_reported() {
+    let (g, mut tr) = healthy_fixture();
+    // Swap the first Alloc with the first Use of the same buffer (the
+    // op_of entries travel with their events): the read now precedes
+    // the materialization in program order.
+    let ia = tr.events.iter().position(|e| matches!(e, Event::Alloc { .. })).unwrap();
+    let Event::Alloc { buffer, .. } = tr.events[ia] else { unreachable!() };
+    let iu = tr
+        .events
+        .iter()
+        .position(|e| matches!(e, Event::Use { buffer: b } if *b == buffer))
+        .expect("the allocated buffer is read somewhere");
+    assert!(iu > ia);
+    tr.events.swap(ia, iu);
+    tr.op_of.swap(ia, iu);
+    let rep = audit_trace(&g, &tr, SimMode::Liveness);
+    assert!(codes(&rep).contains(&"A006"), "{:?}", codes(&rep));
+}
+
+#[test]
+fn shrinking_a_checkpoint_set_breaks_the_chain_rules() {
+    let mut rng = Pcg32::seeded(0xc0ffee);
+    let g = recompute::testutil::random_dag(&mut rng, 24);
+    let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+    let good = plan.chain.lower_sets();
+    assert!(audit_chain(&g, good).is_empty(), "healthy chain must be silent");
+    assert!(good.len() >= 2, "need an interior set to corrupt");
+
+    let mut bad = good.to_vec();
+    let victim = bad[0].iter().next().unwrap();
+    for l in bad.iter_mut().take(good.len() - 1) {
+        l.remove(victim);
+    }
+    let diags = audit_chain(&g, &bad);
+    assert!(!diags.is_empty(), "shrunken checkpoint set must be flagged");
+    assert!(
+        diags.iter().all(|d| matches!(d.rule, Rule::ChainInvariant | Rule::CheckpointCoverage)),
+        "only chain rules may fire: {:?}",
+        diags.iter().map(|d| d.rule.code()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn inflated_peak_prediction_and_tight_budget_are_cross_checked() {
+    let mut rng = Pcg32::seeded(0xfeed);
+    let g = recompute::testutil::random_dag(&mut rng, 20);
+    let plan = plan_at_min_budget(&g, Family::Exact, Objective::MinOverhead).unwrap();
+    let tr = apply_liveness(&canonical_trace(&g, &plan.chain));
+    let truth = audit_trace(&g, &tr, SimMode::Liveness).static_peak;
+
+    // An inflated simulator prediction is a peak mismatch…
+    let rep = audit_plan(&PlanAudit {
+        graph: &g,
+        chain: &plan.chain,
+        trace: &tr,
+        mode: SimMode::Liveness,
+        budget: None,
+        predicted_peak: Some(truth + 1),
+        program_peak: Some(truth),
+    });
+    assert_eq!(codes(&rep), vec!["A011"]);
+
+    // …and a budget below the analytic peak is a budget violation.
+    let eq2 = plan.chain.peak_mem(&g);
+    let rep = audit_plan(&PlanAudit {
+        graph: &g,
+        chain: &plan.chain,
+        trace: &tr,
+        mode: SimMode::Liveness,
+        budget: Some(eq2 - 1),
+        predicted_peak: Some(truth),
+        program_peak: Some(truth),
+    });
+    assert_eq!(codes(&rep), vec!["A012"]);
+}
+
+// ---------------------------------------------------------------------
+// End-to-end rejection of a corrupted stitched chain.
+// ---------------------------------------------------------------------
+
+/// A chain long enough that the decomposed planner stitches several
+/// global sets — the fault hook needs at least two.
+fn fault_graph() -> Graph {
+    let mut g = chain_graph(&[64; 24]);
+    g.name = FAULT_INJECT_GRAPH.to_string();
+    g
+}
+
+#[test]
+fn corrupted_stitch_is_rejected_by_the_session_with_a_rule_code() {
+    let session = PlanSession::new(fault_graph());
+    let err = session
+        .plan(&PlanRequest::new(PlannerId::Decomposed, Objective::MinOverhead))
+        .unwrap_err()
+        .to_string();
+    assert!(err.starts_with(AUDIT_FAILED_PREFIX), "{err}");
+    assert!(err.contains("A0"), "must cite a stable rule code: {err}");
+
+    // The same graph planned whole (no stitching) stays admissible:
+    // the corruption hook lives in the decomposed stitcher only.
+    let cp = session
+        .plan(&PlanRequest::new(PlannerId::ExactDp, Objective::MinOverhead))
+        .expect("whole-graph planning of the fault graph is clean");
+    assert!(cp.audit.is_clean());
+}
+
+#[test]
+fn serve_rejects_a_corrupted_stitch_with_audit_failed() {
+    let rt = Router::new(
+        SessionRegistry::new(4, PlanCache::shared(16)),
+        Arc::new(ServeMetrics::new()),
+        RouterConfig::default(),
+    );
+    let up = Json::obj()
+        .set("cmd", "graph_upload".into())
+        .set("graph", Json::parse(&fault_graph().to_json()).unwrap())
+        .to_string();
+    let r = rt.route_line(&up);
+    let j = r.reply_json();
+    assert_eq!(j.get("ok").as_bool(), Some(true), "{}", j.to_string());
+    let fp = j.get("fingerprint").as_str().unwrap().to_string();
+
+    for eager in [false, true] {
+        let line = format!(r#"{{"cmd":"plan","fingerprint":"{fp}","planner":"decomposed"}}"#);
+        let r = if eager { rt.route_line_eager(&line) } else { rt.route_line(&line) };
+        let j = r.reply_json();
+        assert!(r.is_error, "corrupted stitch must be refused: {}", j.to_string());
+        assert_eq!(j.get("error").get("code").as_str(), Some("audit-failed"));
+        let msg = j.get("error").get("msg").as_str().unwrap_or_default();
+        assert!(msg.contains("A0"), "reply must carry the rule code: {msg}");
+    }
+
+    // The rejection is visible in `stats`.
+    let s = rt.route_line(r#"{"cmd":"stats"}"#).reply_json();
+    assert_eq!(s.get("audit_failed").as_u64(), Some(2));
+
+    // A healthy plan on the same router still succeeds afterwards.
+    let okp = rt.route_line(r#"{"cmd":"plan","network":"unet","planner":"decomposed"}"#);
+    assert!(!okp.is_error, "{}", okp.reply_json().to_string());
+}
+
+// ---------------------------------------------------------------------
+// CLI surface: `repro audit`.
+// ---------------------------------------------------------------------
+
+#[test]
+fn cli_audit_reports_clean_and_supports_json() {
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["audit", "--network", "unet", "--planner", "decomposed"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let text = String::from_utf8_lossy(&out.stdout);
+    assert!(text.contains("clean"), "{text}");
+    assert!(text.contains("static peak"), "{text}");
+
+    let out = std::process::Command::new(env!("CARGO_BIN_EXE_repro"))
+        .args(["audit", "--network", "unet", "--json", "--deny-audit"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "{}", String::from_utf8_lossy(&out.stderr));
+    let j = Json::parse(String::from_utf8_lossy(&out.stdout).trim()).unwrap();
+    assert_eq!(j.get("clean").as_bool(), Some(true));
+    assert_eq!(j.get("errors").as_u64(), Some(0));
+    assert!(j.get("static_peak").as_u64().unwrap() > 0);
+    assert_eq!(j.get("network").as_str(), Some("unet"));
+}
